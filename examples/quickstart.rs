@@ -1,0 +1,65 @@
+//! Quickstart: the TT-matrix API in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Decomposes a dense matrix into TT format at several rank caps, shows
+//! the compression/accuracy trade-off of §3, applies the layer to a batch
+//! (eq. 5), and demonstrates TT arithmetic + rounding.
+
+use tensornet::tensor::Tensor;
+use tensornet::tt::{TtMatrix, TtShape};
+use tensornet::util::bench::print_table;
+use tensornet::util::rng::Rng;
+
+fn main() -> tensornet::Result<()> {
+    let mut rng = Rng::new(42);
+
+    println!("== 1. a TT-structured 1024x1024 matrix (modes 4^5 x 4^5)");
+    let shape = TtShape::uniform(&[4; 5], &[4; 5], 8)?;
+    let tt = TtMatrix::random(&shape, &mut rng)?;
+    println!("   {}", tt.shape());
+    println!(
+        "   dense would need {} params; TT stores {} ({}x compression)\n",
+        tt.shape().dense_params(),
+        tt.num_params(),
+        tt.compression() as u64
+    );
+
+    println!("== 2. TT-SVD: compress an arbitrary dense matrix (rank sweep)");
+    let w = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    let mut rows = Vec::new();
+    for rank in [1usize, 2, 4, 8, 16, 32] {
+        let approx = TtMatrix::from_dense(&w, &[4; 4], &[4; 4], Some(rank), 0.0)?;
+        rows.push(vec![
+            rank.to_string(),
+            approx.num_params().to_string(),
+            format!("{:.1}", approx.compression()),
+            format!("{:.4}", approx.rel_error_vs(&w)?),
+        ]);
+    }
+    print_table(
+        "TT-SVD of a random 256x256 matrix",
+        &["rank cap", "params", "compression", "rel. error"],
+        &rows,
+    );
+
+    println!("== 3. the TT-layer product y = Wx (paper eq. 5)");
+    let x = Tensor::randn(&[4, 1024], 1.0, &mut rng);
+    let y = tt.matvec(&x)?;
+    println!("   x: {:?} -> y: {:?} (one GEMM per core, O(d r^2 m max(M,N)))\n", x.shape(), y.shape());
+
+    println!("== 4. TT arithmetic increases ranks; rounding recompresses");
+    let sum = tt.add(&tt)?;
+    println!("   ranks of W + W: {:?}", sum.shape().ranks());
+    let rounded = sum.round(None, 1e-9)?;
+    println!("   after round(eps=1e-9): {:?}", rounded.shape().ranks());
+    let mut two_w = tt.to_dense()?;
+    two_w.scale(2.0);
+    println!("   reconstruction error vs 2W: {:.2e}\n", rounded.rel_error_vs(&two_w)?);
+
+    println!("== 5. single elements without densifying: W(17, 923)");
+    println!("   = {:.6}  (O(d r^2) core-chain product)", tt.element(17, 923)?);
+    Ok(())
+}

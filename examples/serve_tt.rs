@@ -1,0 +1,56 @@
+//! Serving demo (Table 3's serving framing): run the AOT TT-layer and the
+//! dense baseline behind the dynamic batcher, fire a concurrent workload,
+//! and report latency/throughput per model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_tt -- [requests] [clients]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensornet::coordinator::{BatchPolicy, PjrtExecutor, Server, ServerConfig};
+use tensornet::util::rng::Rng;
+
+fn main() -> tensornet::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    for (model, dim) in [("tt_layer", 1024usize), ("fc_mnist", 1024)] {
+        println!("\n== model '{model}': {n_requests} requests from {clients} clients");
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 32, max_delay: Duration::from_millis(2) },
+            ..Default::default()
+        };
+        let server = Arc::new(Server::start(cfg, || PjrtExecutor::new("artifacts"))?);
+        // warmup compiles the artifact
+        let _ = server.infer(model, vec![0.0; dim])?;
+
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let server = server.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(c as u64);
+                    for _ in 0..n_requests / clients {
+                        let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(1.0)).collect();
+                        server.infer(model, x).expect("inference");
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let st = server.stats();
+        println!("  throughput: {:.0} req/s", (st.completed.get() - 1) as f64 / wall);
+        println!("  e2e   {}", st.e2e.summary());
+        println!("  exec  {}", st.exec.summary());
+        println!("  queue {}", st.queue.summary());
+        println!("  mean batch {:.1} rows", st.mean_batch_size());
+    }
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! E6 — Table 2: vgg-16/19 compression factors (exact arithmetic over the
+//! published architectures) plus the proxy accuracy ordering.
+//!
+//! ```bash
+//! cargo run --release --example vgg_compression              # compression only
+//! cargo run --release --example vgg_compression -- --accuracy
+//! ```
+
+use tensornet::experiments::run_table2;
+use tensornet::util::bench::print_table;
+
+fn main() -> tensornet::Result<()> {
+    let accuracy = std::env::args().any(|a| a == "--accuracy");
+    let full = std::env::args().any(|a| a == "--full");
+    let rows = run_table2(!full, accuracy, false)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.arch.clone(),
+                format!("{:.0}", r.layer_compression),
+                format!("{:.1}", r.vgg16_compression),
+                format!("{:.1}", r.vgg19_compression),
+                if r.proxy_error.is_nan() { "-".into() } else { format!("{:.3}", r.proxy_error) },
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 2 (paper: TT4 50972 / TT2 194622 / TT1 713614; nets 3.9/3.5, two layers 7.4/6)",
+        &["architecture", "layer compr.", "vgg16 compr.", "vgg19 compr.", "proxy err"],
+        &table,
+    );
+    if !accuracy {
+        println!("(re-run with --accuracy for the proxy error ordering)");
+    }
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! E5 — §6.2.1: the 262 144-hidden-unit wide & shallow TensorNet.
+//!
+//! ```bash
+//! cargo run --release --example wide_shallow            # quick
+//! cargo run --release --example wide_shallow -- --full  # longer training
+//! ```
+
+use tensornet::experiments::run_wide;
+
+fn main() -> tensornet::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let r = run_wide(!full, true)?;
+    println!(
+        "\nThe dense equivalent of the two TT weight matrices would hold {} parameters;\n\
+         the TensorNet trains {} ({}x fewer) and still learns (error {:.3} -> {:.3}).",
+        r.dense_equivalent,
+        r.total_params,
+        r.dense_equivalent / r.total_params.max(1),
+        r.initial_error,
+        r.test_error
+    );
+    Ok(())
+}

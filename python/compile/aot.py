@@ -1,0 +1,295 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* + weight blobs.
+
+Run once at build time (``make artifacts``).  Emits, per artifact:
+
+* ``<name>.hlo.txt``     — HLO text of the jitted computation.  Text, not
+  ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+  ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
+  (see /opt/xla-example/README.md).
+* weights blobs ``<group>.weights.bin`` — little-endian f32 concatenation of
+  the parameters in manifest order, loaded once by the rust runtime and kept
+  as device buffers.
+* ``manifest.json`` — input/output specs, weight layouts, batch sizes.
+
+Weights are *arguments* of the HLO entry, never constants: one artifact
+serves any checkpoint and the HLO text stays small (the vgg-fc6 dense
+baseline alone would otherwise inline 411 MB of constants).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import TtShape, mnist_tt_shape, prod, vgg_fc6_tt_shape
+
+SEED = 20150407  # fixed: artifacts are reproducible bit-for-bit
+MNIST_BATCHES = (1, 32)
+VGG_BATCHES = (1, 100)  # Table 3 measures batch 1 and batch 100
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x: jnp.ndarray) -> Dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_fn(fn, example_args: Sequence[jnp.ndarray]) -> Tuple[str, List[Dict]]:
+    """Jit + lower ``fn`` at the example args; returns (hlo_text, out_specs)."""
+    jitted = jax.jit(fn)
+    lowered = jitted.lower(*example_args)
+    outs = jax.eval_shape(fn, *example_args)
+    flat_outs, _ = jax.tree_util.tree_flatten(outs)
+    out_specs = [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in flat_outs]
+    return to_hlo_text(lowered), out_specs
+
+
+# ---------------------------------------------------------------------------
+# Weight blobs
+# ---------------------------------------------------------------------------
+
+
+def write_weights(path: str, params: Dict[str, jnp.ndarray]) -> List[Dict]:
+    """Write params (sorted by name) as LE f32; return the layout table."""
+    layout = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name in sorted(params.keys()):
+            arr = np.asarray(params[name], dtype=np.float32)
+            f.write(arr.astype("<f4").tobytes())
+            layout.append(
+                {"name": name, "shape": list(arr.shape), "offset": offset, "len": int(arr.size)}
+            )
+            offset += int(arr.size)
+    return layout
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders
+# ---------------------------------------------------------------------------
+
+
+def build_all(outdir: str, only: Sequence[str] | None = None) -> Dict:
+    os.makedirs(outdir, exist_ok=True)
+    key = jax.random.PRNGKey(SEED)
+    k_tn, k_fc, k_vgg = jax.random.split(key, 3)
+
+    manifest: Dict = {"seed": SEED, "artifacts": [], "weight_groups": {}}
+
+    def want(name: str) -> bool:
+        return only is None or any(name.startswith(p) for p in only)
+
+    def emit(name: str, hlo: str, inputs: List[Dict], out_specs: List[Dict], group: str | None):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "hlo": f"{name}.hlo.txt",
+                "inputs": inputs,
+                "outputs": out_specs,
+                "weight_group": group,
+            }
+        )
+        print(f"  wrote {path} ({len(hlo)} chars)")
+
+    # --- MNIST TensorNet ---------------------------------------------------
+    tn_params = model.init_tensornet_mnist(k_tn, rank=8)
+    tn_order = model.param_order(tn_params)
+    if want("tensornet") or want("tt_layer") or want("train_step"):
+        layout = write_weights(os.path.join(outdir, "tensornet_mnist.weights.bin"), tn_params)
+        manifest["weight_groups"]["tensornet_mnist"] = {
+            "file": "tensornet_mnist.weights.bin",
+            "layout": layout,
+        }
+
+    shape = mnist_tt_shape(8)
+    cores = model.tt_cores_of(tn_params)
+
+    if want("tt_layer"):
+        for b in MNIST_BATCHES:
+            x = jnp.zeros((b, shape.n_total), jnp.float32)
+
+            def tt_fwd(*args):
+                *cs, bias, xx = args
+                return (model.tt_layer_forward(cs, bias, xx),)
+
+            args = (*cores, tn_params["tt_bias"], x)
+            hlo, outs = lower_fn(tt_fwd, args)
+            inputs = [
+                {"name": f"core_{i}", **spec_of(c), "source": "weights"}
+                for i, c in enumerate(cores)
+            ]
+            inputs.append({"name": "tt_bias", **spec_of(tn_params["tt_bias"]), "source": "weights"})
+            inputs.append({"name": "x", **spec_of(x), "source": "runtime"})
+            emit(f"tt_layer_b{b}", hlo, inputs, outs, "tensornet_mnist")
+
+    if want("tensornet_mnist"):
+        for b in MNIST_BATCHES:
+            x = jnp.zeros((b, shape.n_total), jnp.float32)
+
+            def net_fwd(*args):
+                ps = model.args_to_params(tn_order, args[:-1])
+                return (model.tensornet_mnist_forward(ps, args[-1]),)
+
+            args = (*model.params_to_args(tn_params), x)
+            hlo, outs = lower_fn(net_fwd, args)
+            inputs = [
+                {"name": n, **spec_of(tn_params[n]), "source": "weights"} for n in tn_order
+            ]
+            inputs.append({"name": "x", **spec_of(x), "source": "runtime"})
+            emit(f"tensornet_mnist_b{b}", hlo, inputs, outs, "tensornet_mnist")
+
+    if want("train_step"):
+        b = 32
+        x = jnp.zeros((b, shape.n_total), jnp.float32)
+        labels = jnp.zeros((b,), jnp.int32)
+        lr = jnp.zeros((), jnp.float32)
+        vel = {k: jnp.zeros_like(v) for k, v in tn_params.items()}
+
+        nparams = len(tn_order)
+
+        def step(*args):
+            ps = model.args_to_params(tn_order, args[:nparams])
+            vs = model.args_to_params(tn_order, args[nparams : 2 * nparams])
+            xx, yy, lrr = args[2 * nparams :]
+            new_p, new_v, loss = model.sgd_momentum_step(ps, vs, xx, yy, lrr)
+            return (
+                *model.params_to_args(new_p),
+                *model.params_to_args(new_v),
+                loss,
+            )
+
+        args = (
+            *model.params_to_args(tn_params),
+            *model.params_to_args(vel),
+            x,
+            labels,
+            lr,
+        )
+        hlo, outs = lower_fn(step, args)
+        inputs = [{"name": n, **spec_of(tn_params[n]), "source": "weights"} for n in tn_order]
+        inputs += [
+            {"name": f"vel_{n}", **spec_of(vel[n]), "source": "state"} for n in tn_order
+        ]
+        inputs += [
+            {"name": "x", **spec_of(x), "source": "runtime"},
+            {"name": "labels", **spec_of(labels), "source": "runtime"},
+            {"name": "lr", **spec_of(lr), "source": "runtime"},
+        ]
+        emit("train_step_b32", hlo, inputs, outs, "tensornet_mnist")
+
+    # --- dense MNIST baseline ----------------------------------------------
+    if want("fc_mnist"):
+        fc_params = model.init_fc_mnist(k_fc)
+        fc_order = model.param_order(fc_params)
+        layout = write_weights(os.path.join(outdir, "fc_mnist.weights.bin"), fc_params)
+        manifest["weight_groups"]["fc_mnist"] = {
+            "file": "fc_mnist.weights.bin",
+            "layout": layout,
+        }
+        for b in MNIST_BATCHES:
+            x = jnp.zeros((b, 1024), jnp.float32)
+
+            def fc_fwd(*args):
+                ps = model.args_to_params(fc_order, args[:-1])
+                return (model.fc_mnist_forward(ps, args[-1]),)
+
+            args = (*model.params_to_args(fc_params), x)
+            hlo, outs = lower_fn(fc_fwd, args)
+            inputs = [
+                {"name": n, **spec_of(fc_params[n]), "source": "weights"} for n in fc_order
+            ]
+            inputs.append({"name": "x", **spec_of(x), "source": "runtime"})
+            emit(f"fc_mnist_b{b}", hlo, inputs, outs, "fc_mnist")
+
+    # --- vgg fc6 (Table 3): TT rank-4 vs dense ------------------------------
+    vshape = vgg_fc6_tt_shape(4)
+    if want("vgg_fc6_tt"):
+        vcores = model.init_tt_cores(k_vgg, vshape)
+        vbias = jnp.zeros((vshape.m_total,), jnp.float32)
+        vparams = {f"core_{i}": c for i, c in enumerate(vcores)}
+        vparams["tt_bias"] = vbias
+        layout = write_weights(os.path.join(outdir, "vgg_fc6_tt.weights.bin"), vparams)
+        manifest["weight_groups"]["vgg_fc6_tt"] = {
+            "file": "vgg_fc6_tt.weights.bin",
+            "layout": layout,
+        }
+        for b in VGG_BATCHES:
+            x = jnp.zeros((b, vshape.n_total), jnp.float32)
+
+            def vtt_fwd(*args):
+                *cs, bias, xx = args
+                return (model.vgg_fc6_tt_forward(cs, bias, xx),)
+
+            args = (*vcores, vbias, x)
+            hlo, outs = lower_fn(vtt_fwd, args)
+            inputs = [
+                {"name": f"core_{i}", **spec_of(c), "source": "weights"}
+                for i, c in enumerate(vcores)
+            ]
+            inputs.append({"name": "tt_bias", **spec_of(vbias), "source": "weights"})
+            inputs.append({"name": "x", **spec_of(x), "source": "runtime"})
+            emit(f"vgg_fc6_tt_b{b}", hlo, inputs, outs, "vgg_fc6_tt")
+
+    if want("vgg_fc6_fc"):
+        # Dense baseline: weights are a runtime arg the rust side synthesizes
+        # (writing a 411 MB blob to the repo serves no purpose).
+        for b in VGG_BATCHES:
+            x = jnp.zeros((b, vshape.n_total), jnp.float32)
+            w = jnp.zeros((vshape.m_total, vshape.n_total), jnp.float32)
+            bias = jnp.zeros((vshape.m_total,), jnp.float32)
+
+            def vfc_fwd(w_, bias_, xx):
+                return (model.vgg_fc6_dense_forward(w_, bias_, xx),)
+
+            hlo, outs = lower_fn(vfc_fwd, (w, bias, x))
+            inputs = [
+                {"name": "w", **spec_of(w), "source": "synthesize"},
+                {"name": "bias", **spec_of(bias), "source": "synthesize"},
+                {"name": "x", **spec_of(x), "source": "runtime"},
+            ]
+            emit(f"vgg_fc6_fc_b{b}", hlo, inputs, outs, None)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {os.path.join(outdir, 'manifest.json')}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        nargs="*",
+        default=None,
+        help="artifact name prefixes to (re)build; default all",
+    )
+    args = ap.parse_args()
+    build_all(args.outdir, args.only)
+
+
+if __name__ == "__main__":
+    main()

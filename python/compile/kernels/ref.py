@@ -1,0 +1,62 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the TT-layer.
+
+Everything here is deliberately naive and allocation-heavy: dense
+reconstruction of the TT-matrix, einsum contractions, plain ``jnp.dot``.
+These are the ground truth the optimized paths are tested against; they are
+never lowered into artifacts.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference GEMM with f32 accumulation (oracle for the Pallas kernel)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def tt_full_matrix(cores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Densify a TT-matrix: returns ``W`` of shape ``(M, N)``.
+
+    Row-major index convention: row multi-index ``(i_1, ..., i_d)`` with
+    ``i_d`` fastest, matching ``reshape`` in C order on both sides of the
+    stack (DESIGN.md section 6).
+    """
+    r0, m, n, r1 = cores[0].shape
+    assert r0 == 1, "boundary rank must be 1"
+    acc = cores[0].reshape(m, n, r1)  # (M_acc, N_acc, r)
+    for core in cores[1:]:
+        r0, m, n, r1 = core.shape
+        ma, na, _ = acc.shape
+        # (Ma, Na, r0) x (r0, m, n, r1) -> (Ma, m, Na, n, r1)
+        acc = jnp.einsum("xyr,rmns->xmyns", acc, core).reshape(ma * m, na * n, r1)
+    assert acc.shape[2] == 1, "boundary rank must be 1"
+    return acc[:, :, 0]
+
+
+def tt_matvec_ref(cores: Sequence[jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """``y = W x`` for a batch ``x`` of shape ``(B, N)`` via densification."""
+    w = tt_full_matrix(cores)
+    return x @ w.T
+
+
+def tt_layer_ref(
+    cores: Sequence[jnp.ndarray], bias: jnp.ndarray, x: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference TT-layer: densify, matvec, add bias."""
+    return tt_matvec_ref(cores, x) + bias
+
+
+def tt_contract_step_ref(z: jnp.ndarray, core: jnp.ndarray) -> jnp.ndarray:
+    """One core contraction as a plain einsum.
+
+    ``z``    — ``(rows, r0 * n)`` with the K axis ordered ``(r0, n)``.
+    ``core`` — ``(r0, m, n, r1)``.
+    Returns ``(rows, m * r1)``.
+    """
+    r0, m, n, r1 = core.shape
+    z3 = z.reshape(z.shape[0], r0, n)
+    return jnp.einsum("zrn,rmns->zms", z3, core).reshape(z.shape[0], m * r1)

@@ -1,0 +1,175 @@
+"""L1 Pallas kernel: the TT-layer's per-core contraction GEMM.
+
+The TT forward pass (paper eq. 5) is a chain of ``d`` contractions; each one
+is expressed as a single GEMM
+
+    out[rows, m*r1] = z[rows, r0*n] @ core_mat[r0*n, m*r1]
+
+where ``rows = B * M_done * N_rest`` (batch x produced row-modes x remaining
+col-modes).  On TPU this is exactly the MXU-shaped problem: a tall-skinny
+panel times a small dense matrix, streamed HBM->VMEM one row panel per grid
+step (DESIGN.md section Hardware-Adaptation).  The CUDA version in the paper
+looped tiny per-sample matmuls over thread blocks; here the whole batch
+shares one systolic pass per core.
+
+The kernel is a tiled matmul with the full contraction axis resident in VMEM
+(K = r0*n is small for every shape the paper uses: <= 64 for rank-8 MNIST,
+<= 32 for rank-4 vgg).  Grid = (rows / BM, cols / BN); accumulation in f32
+regardless of input dtype.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO which the rust runtime runs.
+On a real TPU the same code compiles natively (drop the flag).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM-friendly tile: 256 x 128 f32 output tile (128 KiB) plus the
+# A-panel (256 x K) and B (K x 128) operands stays well under 16 MiB VMEM for
+# every K used by the paper's shapes.
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """out-tile = a-panel @ b-panel, f32 accumulation on the MXU."""
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tiled Pallas GEMM ``a @ b`` with f32 accumulation.
+
+    ``a``: (rows, K), ``b``: (K, cols).  Inputs are zero-padded up to tile
+    multiples (padding contributes zeros to the accumulation, so the result
+    is exact) and the output is sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {a.shape} x {b.shape}")
+    rows, k = a.shape
+    k2, cols = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+
+    bm = min(block_m, _ceil_to(rows, 8))
+    bn = min(block_n, _ceil_to(cols, 8))
+    rows_p = _ceil_to(rows, bm)
+    cols_p = _ceil_to(cols, bn)
+    a_p = jnp.pad(a, ((0, rows_p - rows), (0, 0))) if rows_p != rows else a
+    b_p = jnp.pad(b, ((0, 0), (0, cols_p - cols))) if cols_p != cols else b
+
+    grid = (rows_p // bm, cols_p // bn)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, cols_p), a.dtype),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:rows, :cols]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper.
+#
+# pallas_call (interpret mode included) has no reverse-mode rule, so the
+# training graph needs an explicit VJP.  The backward of C = A @ B is two
+# more GEMMs — dA = g @ B^T, dB = A^T @ g — which we also run through the
+# Pallas kernel, so the AOT'd train step is Pallas end-to-end.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul_ad(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable tiled Pallas GEMM (default block geometry)."""
+    return matmul(a, b)
+
+
+def _matmul_ad_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_ad_bwd(res, g):
+    a, b = res
+    da = matmul(g, b.T)
+    db = matmul(a.T, g)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+matmul_ad.defvjp(_matmul_ad_fwd, _matmul_ad_bwd)
+
+
+def core_to_matrix(core: jnp.ndarray) -> jnp.ndarray:
+    """Flatten a TT core ``(r0, m, n, r1)`` to the GEMM operand
+    ``(r0*n, m*r1)`` with the K axis ordered ``(r0, n)``."""
+    r0, m, n, r1 = core.shape
+    return core.transpose(0, 2, 1, 3).reshape(r0 * n, m * r1)
+
+
+def tt_contract_step(
+    z: jnp.ndarray,
+    core: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> jnp.ndarray:
+    """One TT core contraction: ``(rows, r0*n) -> (rows, m*r1)``.
+
+    The ``use_pallas=False`` path is the same math through ``jnp.dot`` —
+    used for A/B testing and for shapes too small to be worth tiling.
+    """
+    cmat = core_to_matrix(core)
+    if use_pallas:
+        if (block_m, block_n) == (DEFAULT_BLOCK_M, DEFAULT_BLOCK_N):
+            return matmul_ad(z, cmat)  # differentiable path for training
+        return matmul(z, cmat, block_m=block_m, block_n=block_n)
+    return jnp.dot(z, cmat, preferred_element_type=jnp.float32).astype(z.dtype)
+
+
+def vmem_footprint_bytes(
+    rows_block: int, k: int, cols_block: int, dtype_bytes: int = 4
+) -> int:
+    """Static VMEM footprint of one grid step (A panel + B + f32 out tile).
+
+    Used by the perf report (EXPERIMENTS.md section Perf) to estimate TPU
+    residency: interpret-mode wall-clock is meaningless, the block geometry
+    is what transfers to hardware.
+    """
+    a_bytes = rows_block * k * dtype_bytes
+    b_bytes = k * cols_block * dtype_bytes
+    o_bytes = rows_block * cols_block * 4  # f32 accumulator
+    return a_bytes + b_bytes + o_bytes
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, tile: int = 128) -> float:
+    """Fraction of MXU tiles doing useful work for an (m,k)x(k,n) GEMM.
+
+    The 128x128 systolic array processes ceil-padded tiles; utilization is
+    real FLOPs over padded FLOPs.  Reported per core contraction in the perf
+    pass."""
+    pad = lambda x: _ceil_to(max(x, 1), tile)
+    return (m * k * n) / float(pad(m) * pad(k) * pad(n))

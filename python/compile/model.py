@@ -1,0 +1,225 @@
+"""L2: the TensorNet compute graphs in JAX.
+
+Defines the TT-layer forward sweep (calling the L1 Pallas kernel), the full
+MNIST TensorNet / dense-MLP baselines, the vgg-fc6-sized layers for Table 3,
+and the SGD-with-momentum training step (paper section 6.4: momentum 0.9,
+L2 weight 0.0005, Gaussian init).
+
+Gradients come from ``jax.grad`` through the contraction chain.  Reverse-mode
+AD over the per-core GEMM sweep computes exactly the paper's section-5
+dynamic program: the saved forward intermediates are the left partial
+products ``P-``, the cotangent sweep builds the right partials ``P+``, and
+each core's gradient is assembled as a GEMM — ``dL/dW`` (size MxN) is never
+materialized.
+
+Everything here runs at build time only; ``aot.py`` lowers jitted versions
+of these functions to HLO text for the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import tt_contract
+from .shapes import TtShape, mnist_tt_shape, prod, tt_shape, vgg_fc6_tt_shape
+
+Params = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# TT-layer forward
+# ---------------------------------------------------------------------------
+
+
+def tt_layer_forward(
+    cores: Sequence[jnp.ndarray],
+    bias: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """TT-layer ``y = W x + b`` (paper eq. 5) as a chain of GEMMs.
+
+    ``x``: ``(B, N)``; returns ``(B, M)``.  Invariant maintained over the
+    sweep (DESIGN.md section 6): after contracting cores ``1..k`` the state
+    tensor has shape ``(B, M_done, N_rest, r_k)`` where ``M_done = m_1..m_k``
+    and ``N_rest = n_{k+1}..n_d``; each step is one call into the L1 kernel.
+    """
+    b = x.shape[0]
+    ns = [int(c.shape[2]) for c in cores]
+    n_total = prod(ns)
+    if x.shape[1] != n_total:
+        raise ValueError(f"input dim {x.shape[1]} != prod(ns) = {n_total}")
+
+    z = x.reshape(b, 1, n_total, 1)  # (B, M_done=1, N_rest=N, r=1)
+    for core in cores:
+        r0, m, n, r1 = core.shape
+        _, m_done, nr, r = z.shape
+        assert r == r0, f"rank chain broken: state r={r}, core r0={r0}"
+        rest = nr // n
+        # (B, M, n*rest, r0) -> (B, M, rest, r0, n): K axis ordered (r0, n)
+        z5 = z.reshape(b, m_done, n, rest, r0).transpose(0, 1, 3, 4, 2)
+        a = z5.reshape(b * m_done * rest, r0 * n)
+        out = tt_contract.tt_contract_step(a, core, use_pallas=use_pallas)
+        # (B, M, rest, m, r1) -> (B, M*m, rest, r1)
+        z = (
+            out.reshape(b, m_done, rest, m, r1)
+            .transpose(0, 1, 3, 2, 4)
+            .reshape(b, m_done * m, rest, r1)
+        )
+    y = z.reshape(b, -1)
+    return y + bias
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (paper section 6.4: Gaussian noise)
+# ---------------------------------------------------------------------------
+
+
+def init_tt_cores(key: jax.Array, shape: TtShape, dtype=jnp.float32) -> List[jnp.ndarray]:
+    std = shape.init_std()
+    keys = jax.random.split(key, shape.d)
+    return [
+        (std * jax.random.normal(keys[k], shape.core_shape(k))).astype(dtype)
+        for k in range(shape.d)
+    ]
+
+
+def init_dense(key: jax.Array, n_in: int, n_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    std = float(np.sqrt(2.0 / n_in))
+    return (std * jax.random.normal(key, (n_out, n_in))).astype(dtype)
+
+
+def init_tensornet_mnist(key: jax.Array, rank: int = 8, n_classes: int = 10) -> Params:
+    """TT(1024->1024, 4^5/4^5, rank r) -> ReLU -> FC(1024->10)."""
+    shape = mnist_tt_shape(rank)
+    k_tt, k_fc = jax.random.split(key)
+    params: Params = {}
+    for i, core in enumerate(init_tt_cores(k_tt, shape)):
+        params[f"core_{i}"] = core
+    params["tt_bias"] = jnp.zeros((shape.m_total,), jnp.float32)
+    params["fc_w"] = init_dense(k_fc, shape.m_total, n_classes)
+    params["fc_b"] = jnp.zeros((n_classes,), jnp.float32)
+    return params
+
+
+def init_fc_mnist(key: jax.Array, hidden: int = 1024, n_in: int = 1024, n_classes: int = 10) -> Params:
+    """Dense baseline: FC(1024->1024) -> ReLU -> FC(1024->10)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": init_dense(k1, n_in, hidden),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": init_dense(k2, hidden, n_classes),
+        "b2": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def tt_cores_of(params: Params) -> List[jnp.ndarray]:
+    out = []
+    i = 0
+    while f"core_{i}" in params:
+        out.append(params[f"core_{i}"])
+        i += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+
+def tensornet_mnist_forward(params: Params, x: jnp.ndarray, *, use_pallas: bool = True) -> jnp.ndarray:
+    """Logits of the MNIST TensorNet (TT -> ReLU -> FC)."""
+    h = tt_layer_forward(tt_cores_of(params), params["tt_bias"], x, use_pallas=use_pallas)
+    h = jax.nn.relu(h)
+    return h @ params["fc_w"].T + params["fc_b"]
+
+
+def fc_mnist_forward(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits of the dense baseline MLP."""
+    h = jax.nn.relu(x @ params["w1"].T + params["b1"])
+    return h @ params["w2"].T + params["b2"]
+
+
+def vgg_fc6_tt_forward(
+    cores: Sequence[jnp.ndarray], bias: jnp.ndarray, x: jnp.ndarray, *, use_pallas: bool = True
+) -> jnp.ndarray:
+    """The 25088->4096 TT-layer of Table 3 (rank 4, shapes of section 6.3)."""
+    return tt_layer_forward(cores, bias, x, use_pallas=use_pallas)
+
+
+def vgg_fc6_dense_forward(w: jnp.ndarray, bias: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense 25088->4096 baseline of Table 3."""
+    return x @ w.T + bias
+
+
+# ---------------------------------------------------------------------------
+# Loss + training step (SGD with momentum, paper section 6.4)
+# ---------------------------------------------------------------------------
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax CE; ``labels`` are integer class ids ``(B,)``."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def l2_penalty(params: Params) -> jnp.ndarray:
+    return sum(jnp.sum(v * v) for v in params.values())
+
+
+def tensornet_loss(params: Params, x: jnp.ndarray, labels: jnp.ndarray, *, use_pallas: bool = True) -> jnp.ndarray:
+    logits = tensornet_mnist_forward(params, x, use_pallas=use_pallas)
+    return softmax_cross_entropy(logits, labels) + WEIGHT_DECAY * l2_penalty(params)
+
+
+def sgd_momentum_step(
+    params: Params,
+    velocity: Params,
+    x: jnp.ndarray,
+    labels: jnp.ndarray,
+    lr: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+) -> Tuple[Params, Params, jnp.ndarray]:
+    """One SGD+momentum step on the TensorNet.  Returns (params', vel', loss).
+
+    ``v' = mu v - lr g;  p' = p + v'`` — the classic MatConvNet update the
+    paper trains with.  Lowered whole into ``train_step.hlo.txt`` so the rust
+    driver can run training without python.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: tensornet_loss(p, x, labels, use_pallas=use_pallas)
+    )(params)
+    new_v = {k: MOMENTUM * velocity[k] - lr * grads[k] for k in params}
+    new_p = {k: params[k] + new_v[k] for k in params}
+    return new_p, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# Canonical parameter ordering for the AOT boundary.
+#
+# HLO entry computations take positional args; the rust runtime needs a
+# stable order.  We sort keys lexicographically — core_0..core_4, fc_b, fc_w,
+# tt_bias — and record the order in the artifact manifest.
+# ---------------------------------------------------------------------------
+
+
+def param_order(params: Params) -> List[str]:
+    return sorted(params.keys())
+
+
+def params_to_args(params: Params) -> Tuple[jnp.ndarray, ...]:
+    return tuple(params[k] for k in param_order(params))
+
+
+def args_to_params(names: Sequence[str], args: Sequence[jnp.ndarray]) -> Params:
+    return dict(zip(names, args))

@@ -1,0 +1,155 @@
+"""TT shape bookkeeping shared by the kernels, the model and the AOT pipeline.
+
+A TT-matrix ``W`` of size ``M x N`` with ``M = prod(ms)`` and ``N = prod(ns)``
+is stored as ``d`` cores, core ``k`` having shape
+``(r[k], ms[k], ns[k], r[k+1])`` with ``r[0] == r[d] == 1``.
+
+Index mapping convention (documented in DESIGN.md section 6): **row-major**
+(C order) on both the rust and the jax side.  The paper uses MATLAB
+column-major reshapes; section 3.1 of the paper notes the bijection is a free
+choice, and using the native order of both runtimes keeps the two
+implementations bit-identical without extra permutes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+
+def prod(xs: Sequence[int]) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+@dataclass(frozen=True)
+class TtShape:
+    """Static description of one TT-matrix."""
+
+    ms: Tuple[int, ...]  # row mode sizes, M = prod(ms)
+    ns: Tuple[int, ...]  # col mode sizes, N = prod(ns)
+    ranks: Tuple[int, ...]  # length d+1, ranks[0] == ranks[d] == 1
+
+    def __post_init__(self) -> None:
+        if len(self.ms) != len(self.ns):
+            raise ValueError(f"ms/ns length mismatch: {self.ms} vs {self.ns}")
+        if len(self.ranks) != len(self.ms) + 1:
+            raise ValueError(f"need d+1 ranks, got {self.ranks}")
+        if self.ranks[0] != 1 or self.ranks[-1] != 1:
+            raise ValueError("boundary TT-ranks must be 1")
+        if any(m <= 0 for m in self.ms + self.ns + self.ranks):
+            raise ValueError("all mode sizes and ranks must be positive")
+
+    @property
+    def d(self) -> int:
+        return len(self.ms)
+
+    @property
+    def m_total(self) -> int:
+        return prod(self.ms)
+
+    @property
+    def n_total(self) -> int:
+        return prod(self.ns)
+
+    def core_shape(self, k: int) -> Tuple[int, int, int, int]:
+        return (self.ranks[k], self.ms[k], self.ns[k], self.ranks[k + 1])
+
+    def core_shapes(self) -> List[Tuple[int, int, int, int]]:
+        return [self.core_shape(k) for k in range(self.d)]
+
+    def num_params(self) -> int:
+        """Parameters of the TT cores (excludes bias)."""
+        return sum(prod(s) for s in self.core_shapes())
+
+    def dense_params(self) -> int:
+        return self.m_total * self.n_total
+
+    def compression(self) -> float:
+        """Dense-matrix params / TT params — the paper's per-layer ratio."""
+        return self.dense_params() / self.num_params()
+
+    def max_rank(self) -> int:
+        return max(self.ranks)
+
+    def init_std(self) -> float:
+        """Per-core stddev so the reconstructed W has He-style variance.
+
+        An element of W is a sum over ``prod(ranks[1:d])`` rank paths of
+        products of d independent core entries.  With per-core variance v,
+        ``Var W = (prod inner ranks) * v**d``; solving for
+        ``Var W = 2 / N`` gives the formula below.
+        """
+        paths = prod(self.ranks[1:-1])
+        target = 2.0 / float(self.n_total)
+        return (target / paths) ** (1.0 / (2.0 * self.d))
+
+
+def uniform_ranks(d: int, r: int) -> Tuple[int, ...]:
+    """Ranks (1, r, r, ..., r, 1) as used throughout the paper's tables."""
+    if d < 1:
+        raise ValueError("d must be >= 1")
+    return tuple([1] + [r] * (d - 1) + [1])
+
+
+def tt_shape(ms: Sequence[int], ns: Sequence[int], r: int) -> TtShape:
+    """Uniform-rank TT shape — the ``TT<r>`` notation of Table 2."""
+    return TtShape(tuple(ms), tuple(ns), uniform_ranks(len(ms), r))
+
+
+# ---------------------------------------------------------------------------
+# The concrete shapes used by the paper's experiments (DESIGN.md section 5).
+# ---------------------------------------------------------------------------
+
+#: MNIST 1024x1024 TT-layer, balanced reshape 4^5 / 4^5 (Fig. 1 best curve).
+MNIST_MS = (4, 4, 4, 4, 4)
+MNIST_NS = (4, 4, 4, 4, 4)
+
+#: vgg fc6: 25088 -> 4096, the paper's reshape (section 6.3).
+VGG_FC6_NS = (2, 7, 8, 8, 7, 4)  # input 25088
+VGG_FC6_MS = (4, 4, 4, 4, 4, 4)  # output 4096
+
+#: CIFAR-10 tail: 3072 -> 262144 and 262144 -> 4096 (section 6.2.1).
+WIDE_IN_NS = (4, 4, 4, 4, 4, 3)  # 3072
+WIDE_HIDDEN = (8, 8, 8, 8, 8, 8)  # 262144
+WIDE_OUT_MS = (4, 4, 4, 4, 4, 4)  # 4096
+
+
+def mnist_tt_shape(r: int = 8) -> TtShape:
+    return tt_shape(MNIST_MS, MNIST_NS, r)
+
+
+def vgg_fc6_tt_shape(r: int = 4) -> TtShape:
+    return tt_shape(VGG_FC6_MS, VGG_FC6_NS, r)
+
+
+def balanced_factorization(n: int, d: int) -> Tuple[int, ...]:
+    """Factor ``n`` into ``d`` integer modes as evenly as possible.
+
+    Greedy: repeatedly split off the most balanced factor.  Raises if ``n``
+    has fewer than ``d`` prime factors (counted with multiplicity).
+    """
+    factors: List[int] = []
+    m = n
+    p = 2
+    while p * p <= m:
+        while m % p == 0:
+            factors.append(p)
+            m //= p
+        p += 1
+    if m > 1:
+        factors.append(m)
+    if len(factors) < d:
+        raise ValueError(f"{n} has only {len(factors)} prime factors, need {d}")
+    factors.sort(reverse=True)
+    modes = [1] * d
+    for f in factors:
+        # attach to the currently-smallest mode
+        i = min(range(d), key=lambda j: modes[j])
+        modes[i] *= f
+    modes.sort()
+    assert prod(modes) == n
+    return tuple(modes)

@@ -1,0 +1,96 @@
+"""AOT pipeline checks: manifest consistency, weight blobs, HLO text shape.
+
+Execution-level equivalence (HLO run by PJRT == jnp reference) is covered on
+the rust side (rust/tests/runtime_artifacts.rs), which exercises the actual
+production loader.  Here we validate everything that can go wrong at build
+time: argument ordering, weight layout offsets, shape bookkeeping.
+"""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.shapes import mnist_tt_shape, prod
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    outdir = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_all(str(outdir), only=["tt_layer", "fc_mnist"])
+    return str(outdir), manifest
+
+
+def test_manifest_lists_artifacts(built):
+    outdir, manifest = built
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert {"tt_layer_b1", "tt_layer_b32", "fc_mnist_b1", "fc_mnist_b32"} <= names
+    for art in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(outdir, art["hlo"]))
+
+
+def test_hlo_text_is_parseable_text(built):
+    outdir, manifest = built
+    for art in manifest["artifacts"]:
+        text = open(os.path.join(outdir, art["hlo"])).read()
+        assert "ENTRY" in text and "HloModule" in text
+        # every runtime input appears as a parameter of the entry computation
+        assert text.count("parameter(") >= len(art["inputs"])
+
+
+def test_weight_blob_matches_layout(built):
+    outdir, manifest = built
+    group = manifest["weight_groups"]["tensornet_mnist"]
+    blob = open(os.path.join(outdir, group["file"]), "rb").read()
+    total = sum(e["len"] for e in group["layout"])
+    assert len(blob) == 4 * total
+    # offsets are contiguous and sorted by name
+    names = [e["name"] for e in group["layout"]]
+    assert names == sorted(names)
+    off = 0
+    for e in group["layout"]:
+        assert e["offset"] == off
+        assert e["len"] == prod(e["shape"]) if e["shape"] else 1
+        off += e["len"]
+
+
+def test_weight_blob_values_roundtrip(built):
+    """Blob decodes back to the exact initialization (same seed)."""
+    outdir, manifest = built
+    params = model.init_tensornet_mnist(
+        jax.random.split(jax.random.PRNGKey(aot.SEED), 3)[0], rank=8
+    )
+    group = manifest["weight_groups"]["tensornet_mnist"]
+    blob = np.frombuffer(open(os.path.join(outdir, group["file"]), "rb").read(), "<f4")
+    for e in group["layout"]:
+        got = blob[e["offset"] : e["offset"] + e["len"]].reshape(e["shape"])
+        want = np.asarray(params[e["name"]])
+        np.testing.assert_array_equal(got, want, err_msg=e["name"])
+
+
+def test_input_specs_match_model_shapes(built):
+    _, manifest = built
+    shape = mnist_tt_shape(8)
+    art = next(a for a in manifest["artifacts"] if a["name"] == "tt_layer_b32")
+    by_name = {i["name"]: i for i in art["inputs"]}
+    for k in range(shape.d):
+        assert tuple(by_name[f"core_{k}"]["shape"]) == shape.core_shape(k)
+    assert by_name["x"]["shape"] == [32, shape.n_total]
+    assert by_name["x"]["source"] == "runtime"
+    assert art["outputs"][0]["shape"] == [32, shape.m_total]
+
+
+def test_sources_are_valid(built):
+    _, manifest = built
+    for art in manifest["artifacts"]:
+        for i in art["inputs"]:
+            assert i["source"] in ("weights", "runtime", "state", "synthesize")
+        # at least one runtime input (the request payload)
+        assert any(i["source"] == "runtime" for i in art["inputs"])

@@ -1,0 +1,151 @@
+"""L1 correctness: the Pallas GEMM / TT-contraction kernel vs the jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; every property asserts allclose against
+``kernels.ref``.  This is the CORE correctness signal of the compile path —
+if these pass, the HLO the rust runtime executes computes the same numbers
+as the reference math.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, tt_contract
+from compile.shapes import TtShape, tt_shape, uniform_ranks
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5), jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+# ---------------------------------------------------------------------------
+# Pallas tiled GEMM vs jnp.dot
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    k=st.integers(1, 48),
+    cols=st.integers(1, 200),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref_f32(rows, k, cols, seed):
+    a = rand(seed, (rows, k))
+    b = rand(seed + 1, (k, cols))
+    got = tt_contract.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL[jnp.float32])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(1, 128),
+    k=st.integers(1, 32),
+    cols=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref_bf16(rows, k, cols, seed):
+    a = rand(seed, (rows, k), jnp.bfloat16)
+    b = rand(seed + 1, (k, cols), jnp.bfloat16)
+    got = tt_contract.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[jnp.bfloat16]
+    )
+
+
+@pytest.mark.parametrize("block_m,block_n", [(8, 8), (32, 16), (256, 128), (512, 512)])
+def test_matmul_block_shape_invariance(block_m, block_n):
+    """Result must not depend on the tiling choice (perf knob only)."""
+    a = rand(7, (190, 24))
+    b = rand(8, (24, 70))
+    got = tt_contract.matmul(a, b, block_m=block_m, block_n=block_n)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    a = rand(0, (4, 5))
+    b = rand(1, (6, 7))
+    with pytest.raises(Exception):
+        tt_contract.matmul(a, b)
+
+
+def test_matmul_identity():
+    a = rand(3, (37, 11))
+    eye = jnp.eye(11, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(tt_contract.matmul(a, eye)), np.asarray(a), rtol=1e-6, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# TT core contraction step
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 200),
+    r0=st.integers(1, 8),
+    m=st.integers(1, 8),
+    n=st.integers(1, 8),
+    r1=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_contract_step_matches_einsum(rows, r0, m, n, r1, seed):
+    z = rand(seed, (rows, r0 * n))
+    core = rand(seed + 1, (r0, m, n, r1))
+    got = tt_contract.tt_contract_step(z, core, use_pallas=True)
+    want = ref.tt_contract_step_ref(z, core)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_contract_step_pallas_vs_dot_paths_agree():
+    z = rand(11, (96, 4 * 6))
+    core = rand(12, (4, 5, 6, 3))
+    a = tt_contract.tt_contract_step(z, core, use_pallas=True)
+    b = tt_contract.tt_contract_step(z, core, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_core_to_matrix_layout():
+    """K axis must be ordered (r0, n) and the output axis (m, r1)."""
+    r0, m, n, r1 = 2, 3, 4, 5
+    core = jnp.arange(r0 * m * n * r1, dtype=jnp.float32).reshape(r0, m, n, r1)
+    cmat = tt_contract.core_to_matrix(core)
+    assert cmat.shape == (r0 * n, m * r1)
+    # element (a0*n + j, i*r1 + a1) == core[a0, i, j, a1]
+    for a0 in range(r0):
+        for i in range(m):
+            for j in range(n):
+                for a1 in range(r1):
+                    assert cmat[a0 * n + j, i * r1 + a1] == core[a0, i, j, a1]
+
+
+# ---------------------------------------------------------------------------
+# VMEM / MXU static estimators (perf-pass plumbing)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_footprint_default_blocks_fit():
+    # the default tile with the largest K the paper's shapes produce
+    k = 8 * 8  # rank 8 x mode 8
+    fp = tt_contract.vmem_footprint_bytes(
+        tt_contract.DEFAULT_BLOCK_M, k, tt_contract.DEFAULT_BLOCK_N
+    )
+    assert fp < 16 * 1024 * 1024, "default tile must fit VMEM"
+
+
+def test_mxu_utilization_bounds():
+    u = tt_contract.mxu_utilization_estimate(256, 32, 128)
+    assert 0.0 < u <= 1.0
+    assert tt_contract.mxu_utilization_estimate(128, 128, 128) == 1.0

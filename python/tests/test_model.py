@@ -1,0 +1,192 @@
+"""L2 correctness: TT-layer sweep vs dense reconstruction; training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.shapes import TtShape, mnist_tt_shape, tt_shape, uniform_ranks, vgg_fc6_tt_shape
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_cores(key, shape: TtShape):
+    return model.init_tt_cores(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# TT-layer forward == dense reconstruction
+# ---------------------------------------------------------------------------
+
+SHAPE_CASES = [
+    tt_shape((2, 3), (4, 5), 3),
+    tt_shape((4, 4, 4), (4, 4, 4), 2),
+    tt_shape((2, 2, 2, 2), (3, 3, 3, 3), 4),
+    TtShape((3, 5, 2), (2, 5, 3), (1, 4, 2, 1)),  # non-uniform ranks
+    tt_shape((7,), (9,), 1),  # d=1 degenerate: plain dense matrix
+]
+
+
+@pytest.mark.parametrize("shape", SHAPE_CASES, ids=lambda s: f"{s.ms}x{s.ns}r{s.max_rank()}")
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_tt_layer_matches_dense(shape, use_pallas):
+    cores = make_cores(1, shape)
+    bias = jax.random.normal(jax.random.PRNGKey(2), (shape.m_total,))
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, shape.n_total))
+    got = model.tt_layer_forward(cores, bias, x, use_pallas=use_pallas)
+    want = ref.tt_layer_ref(cores, bias, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(1, 4),
+    r=st.integers(1, 5),
+    batch=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+    data=st.data(),
+)
+def test_tt_layer_matches_dense_hypothesis(d, r, batch, seed, data):
+    ms = tuple(data.draw(st.integers(1, 5)) for _ in range(d))
+    ns = tuple(data.draw(st.integers(1, 5)) for _ in range(d))
+    shape = tt_shape(ms, ns, r)
+    cores = make_cores(seed, shape)
+    bias = jnp.zeros((shape.m_total,))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, shape.n_total))
+    got = model.tt_layer_forward(cores, bias, x, use_pallas=False)
+    want = ref.tt_layer_ref(cores, bias, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_tt_layer_rejects_wrong_input_dim():
+    shape = tt_shape((2, 2), (3, 3), 2)
+    cores = make_cores(0, shape)
+    with pytest.raises(ValueError):
+        model.tt_layer_forward(cores, jnp.zeros(4), jnp.zeros((1, 7)))
+
+
+def test_tt_layer_linearity():
+    """The TT-layer is affine: f(ax+by) - f(0) == a(f(x)-f(0)) + b(f(y)-f(0))."""
+    shape = tt_shape((2, 3, 2), (3, 2, 3), 3)
+    cores = make_cores(5, shape)
+    bias = jax.random.normal(jax.random.PRNGKey(6), (shape.m_total,))
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, shape.n_total))
+    y = jax.random.normal(jax.random.PRNGKey(8), (1, shape.n_total))
+    f = lambda v: model.tt_layer_forward(cores, bias, v, use_pallas=False)
+    f0 = f(jnp.zeros_like(x))
+    lhs = f(2.0 * x - 3.0 * y) - f0
+    rhs = 2.0 * (f(x) - f0) - 3.0 * (f(y) - f0)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (paper's headline numbers are exact arithmetic)
+# ---------------------------------------------------------------------------
+
+
+def test_mnist_param_count_rank8():
+    # 4^5 x 4^5, ranks (1,8,8,8,8,1): cores 4*4*(1*8 + 8*8*3 + 8*1) = 3328
+    s = mnist_tt_shape(8)
+    assert s.num_params() == 16 * (8 + 64 + 64 + 64 + 8) == 3328
+    assert s.dense_params() == 1024 * 1024
+
+
+def test_vgg_fc6_rank2_compression_matches_table2():
+    """Table 2 row TT2: 25088x4096 -> 528 params, ratio 194622."""
+    s = tt_shape((4, 4, 4, 4, 4, 4), (2, 7, 8, 8, 7, 4), 2)
+    assert s.num_params() == 528
+    assert int(round(s.dense_params() / s.num_params())) == 194621 or (
+        abs(s.compression() - 194622) / 194622 < 0.01
+    )
+
+
+def test_vgg_fc6_rank1_compression_matches_table2():
+    """Table 2 row TT1: compression 713614 -> params = round(MN/713614) = 144."""
+    s = tt_shape((4, 4, 4, 4, 4, 4), (2, 7, 8, 8, 7, 4), 1)
+    assert s.num_params() == 144
+    assert abs(s.compression() - 713614) / 713614 < 0.01
+
+
+def test_hashednet_comparison_param_counts():
+    """Section 6.1: both layers TT, rank 8 vs rank 6 (paper: 12602 / 7698).
+
+    The paper does not print the reshape it used for the second (1024->10)
+    layer, so the exact totals are not recoverable; what IS reproducible:
+    rank-8 strictly more params than rank-6, both in the low thousands
+    (HashedNet needed 12720 at 64x compression), and network compression
+    far above HashedNet's factor 64.
+    """
+    totals = {}
+    dense_total = 1024 * 1024 + 1024 + 1024 * 10 + 10
+    for r in (8, 6):
+        l1 = tt_shape((4, 4, 4, 4, 4), (4, 4, 4, 4, 4), r)
+        l2 = tt_shape((10, 1, 1, 1, 1), (4, 4, 4, 4, 4), r)
+        totals[r] = l1.num_params() + 1024 + l2.num_params() + 10
+    assert totals[8] > totals[6]
+    assert 2_000 < totals[6] < totals[8] < 13_000
+    assert dense_total / totals[8] > 64  # beats HashedNet's compression factor
+
+
+# ---------------------------------------------------------------------------
+# Training step
+# ---------------------------------------------------------------------------
+
+
+def _toy_batch(key, n=1024, b=16):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    x = jax.random.normal(k1, (b, n))
+    y = jax.random.randint(k2, (b,), 0, 10)
+    return x, y
+
+
+def test_train_step_decreases_loss_on_fixed_batch():
+    params = model.init_tensornet_mnist(jax.random.PRNGKey(0), rank=4)
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    x, y = _toy_batch(1)
+    lr = jnp.float32(0.05)
+    loss0 = model.tensornet_loss(params, x, y, use_pallas=False)
+    step = jax.jit(lambda p, v: model.sgd_momentum_step(p, v, x, y, lr, use_pallas=False))
+    for _ in range(25):
+        params, vel, loss = step(params, vel)
+    assert float(loss) < float(loss0), (float(loss0), float(loss))
+
+
+def test_train_step_shapes_preserved():
+    params = model.init_tensornet_mnist(jax.random.PRNGKey(0), rank=2)
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    x, y = _toy_batch(2, b=4)
+    new_p, new_v, loss = model.sgd_momentum_step(params, vel, x, y, jnp.float32(0.01), use_pallas=False)
+    for k in params:
+        assert new_p[k].shape == params[k].shape
+        assert new_v[k].shape == params[k].shape
+    assert loss.shape == ()
+
+
+def test_grads_flow_to_all_cores():
+    params = model.init_tensornet_mnist(jax.random.PRNGKey(3), rank=2)
+    x, y = _toy_batch(4, b=4)
+    grads = jax.grad(lambda p: model.tensornet_loss(p, x, y, use_pallas=False))(params)
+    for k, g in grads.items():
+        assert float(jnp.max(jnp.abs(g))) > 0.0, f"zero gradient for {k}"
+
+
+def test_softmax_ce_matches_manual():
+    logits = jnp.array([[2.0, 0.5, -1.0], [0.0, 0.0, 0.0]])
+    labels = jnp.array([0, 2])
+    got = model.softmax_cross_entropy(logits, labels)
+    p0 = np.exp(2.0) / (np.exp(2.0) + np.exp(0.5) + np.exp(-1.0))
+    want = (-np.log(p0) - np.log(1.0 / 3.0)) / 2.0
+    np.testing.assert_allclose(float(got), want, rtol=1e-6)
+
+
+def test_param_order_roundtrip():
+    params = model.init_tensornet_mnist(jax.random.PRNGKey(0), rank=2)
+    order = model.param_order(params)
+    args = model.params_to_args(params)
+    back = model.args_to_params(order, args)
+    assert set(back) == set(params)
+    for k in params:
+        assert back[k] is params[k]

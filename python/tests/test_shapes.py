@@ -1,0 +1,85 @@
+"""Shape bookkeeping: param counts, compression ratios, factorizations."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.shapes import (
+    TtShape,
+    balanced_factorization,
+    prod,
+    tt_shape,
+    uniform_ranks,
+    vgg_fc6_tt_shape,
+)
+
+
+def test_uniform_ranks():
+    assert uniform_ranks(1, 7) == (1, 1)[:2]
+    assert uniform_ranks(3, 5) == (1, 5, 5, 1)
+    with pytest.raises(ValueError):
+        uniform_ranks(0, 3)
+
+
+def test_ttshape_validation():
+    with pytest.raises(ValueError):
+        TtShape((2, 2), (2,), (1, 2, 1))
+    with pytest.raises(ValueError):
+        TtShape((2, 2), (2, 2), (1, 2, 2))  # wrong length
+    with pytest.raises(ValueError):
+        TtShape((2, 2), (2, 2), (2, 2, 1))  # boundary != 1
+    with pytest.raises(ValueError):
+        TtShape((2, 0), (2, 2), (1, 2, 1))
+
+
+def test_num_params_formula():
+    s = TtShape((2, 3, 4), (5, 6, 7), (1, 3, 2, 1))
+    want = 1 * 2 * 5 * 3 + 3 * 3 * 6 * 2 + 2 * 4 * 7 * 1
+    assert s.num_params() == want
+    assert s.dense_params() == 24 * 210
+
+
+def test_vgg_fc6_shape_dims():
+    s = vgg_fc6_tt_shape(4)
+    assert s.n_total == 25088
+    assert s.m_total == 4096
+    assert s.d == 6
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(1, 5),
+    r=st.integers(1, 6),
+    data=st.data(),
+)
+def test_compression_consistency(d, r, data):
+    ms = tuple(data.draw(st.integers(1, 6)) for _ in range(d))
+    ns = tuple(data.draw(st.integers(1, 6)) for _ in range(d))
+    s = tt_shape(ms, ns, r)
+    assert s.num_params() > 0
+    assert abs(s.compression() * s.num_params() - s.dense_params()) < 1e-6 * s.dense_params() + 1e-9
+
+
+def test_init_std_gives_unit_scale():
+    s = tt_shape((4, 4, 4, 4, 4), (4, 4, 4, 4, 4), 8)
+    v = s.init_std()
+    # Var W = paths * v^(2d) should equal 2/N
+    paths = prod(s.ranks[1:-1])
+    var_w = paths * v ** (2 * s.d)
+    assert abs(var_w - 2.0 / 1024.0) < 1e-9
+
+
+@pytest.mark.parametrize(
+    "n,d",
+    [(1024, 5), (4096, 6), (3072, 6), (262144, 6), (25088, 6), (60, 3)],
+)
+def test_balanced_factorization(n, d):
+    modes = balanced_factorization(n, d)
+    assert len(modes) == d
+    assert prod(modes) == n
+    # balance: max/min mode ratio is bounded for these friendly sizes
+    assert max(modes) <= 16 * max(1, min(modes))
+
+
+def test_balanced_factorization_rejects_primes():
+    with pytest.raises(ValueError):
+        balanced_factorization(13, 2)

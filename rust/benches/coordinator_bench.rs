@@ -1,0 +1,58 @@
+//! Coordinator throughput/latency vs batching policy (echo backend, so
+//! this isolates coordination overhead from model compute).
+//!
+//! Run: `cargo bench --bench coordinator_bench` (QUICK=1 to shorten).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tensornet::coordinator::{BatchPolicy, EchoExecutor, Server, ServerConfig};
+use tensornet::util::bench::print_table;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let n_requests: usize = if quick { 2_000 } else { 20_000 };
+    let clients = 8usize;
+    let dim = 64usize;
+
+    let mut rows = Vec::new();
+    for (max_batch, delay_us) in [(1usize, 0u64), (8, 200), (32, 500), (32, 2000), (128, 2000)] {
+        let cfg = ServerConfig {
+            policy: BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_micros(delay_us),
+            },
+            queue_capacity: 4096,
+            batch_queue_capacity: 16,
+        };
+        let server = Arc::new(
+            Server::start(cfg, move || Ok(EchoExecutor { dim, scale: 1.0 })).unwrap(),
+        );
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                let server = server.clone();
+                s.spawn(move || {
+                    let x = vec![1.0f32; dim];
+                    for _ in 0..n_requests / clients {
+                        server.infer("m", x.clone()).unwrap();
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let st = server.stats();
+        rows.push(vec![
+            max_batch.to_string(),
+            format!("{delay_us}"),
+            format!("{:.0}", st.completed.get() as f64 / wall),
+            format!("{:.1}", st.mean_batch_size()),
+            format!("{:.0}", st.e2e.quantile_us(0.5)),
+            format!("{:.0}", st.e2e.quantile_us(0.99)),
+        ]);
+    }
+    print_table(
+        "coordinator: batching policy sweep (echo backend, 8 clients)",
+        &["max_batch", "max_delay (µs)", "req/s", "mean batch", "p50 (µs)", "p99 (µs)"],
+        &rows,
+    );
+}

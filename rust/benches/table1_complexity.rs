@@ -1,0 +1,89 @@
+//! E3 — Table 1: asymptotic complexity of the TT layer vs the dense FC
+//! layer.  Measures forward and backward wall-clock across layer sizes
+//! M = N in {256, 1024, 4096} at fixed d-ish mode structure and rank, and
+//! fits the growth exponent in N: FC must scale ~quadratically (O(MN) =
+//! O(N^2)), TT ~linearly (O(d r^2 m max(M,N))).
+//!
+//! Run: `cargo bench --bench table1_complexity` (QUICK=1 to shorten).
+
+use tensornet::nn::{Dense, Layer, TtLinear};
+use tensornet::tensor::Tensor;
+use tensornet::tt::TtShape;
+use tensornet::util::bench::{black_box, print_table, Bencher};
+use tensornet::util::rng::Rng;
+
+struct Case {
+    n: usize,
+    modes: Vec<usize>,
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let rank = 8usize;
+    let batch = 16usize;
+    let cases = [
+        Case { n: 256, modes: vec![4; 4] },
+        Case { n: 1024, modes: vec![4; 5] },
+        Case { n: 4096, modes: vec![4; 6] },
+    ];
+
+    let mut rows = Vec::new();
+    let mut tt_fwd_ms = Vec::new();
+    let mut fc_fwd_ms = Vec::new();
+    let mut tt_bwd_ms = Vec::new();
+    let mut fc_bwd_ms = Vec::new();
+
+    for case in &cases {
+        let mut rng = Rng::new(case.n as u64);
+        let n = case.n;
+        let shape = TtShape::uniform(&case.modes, &case.modes, rank).unwrap();
+        let mut tt = TtLinear::new(&shape, &mut rng).unwrap();
+        let mut fc = Dense::new(n, n, &mut rng);
+        let x = Tensor::randn(&[batch, n], 1.0, &mut rng);
+        let g = Tensor::randn(&[batch, n], 1.0, &mut rng);
+
+        let m_tt_f = bencher.run(&format!("TT  fwd  {n}x{n} r{rank} b{batch}"), || {
+            black_box(tt.forward(&x, false).unwrap());
+        });
+        let m_fc_f = bencher.run(&format!("FC  fwd  {n}x{n} b{batch}"), || {
+            black_box(fc.forward(&x, false).unwrap());
+        });
+        let m_tt_b = bencher.run(&format!("TT  f+b  {n}x{n} r{rank} b{batch}"), || {
+            let _ = tt.forward(&x, true).unwrap();
+            black_box(tt.backward(&g).unwrap());
+            tt.zero_grads();
+        });
+        let m_fc_b = bencher.run(&format!("FC  f+b  {n}x{n} b{batch}"), || {
+            let _ = fc.forward(&x, true).unwrap();
+            black_box(fc.backward(&g).unwrap());
+            fc.zero_grads();
+        });
+
+        tt_fwd_ms.push(m_tt_f.mean_ms());
+        fc_fwd_ms.push(m_fc_f.mean_ms());
+        tt_bwd_ms.push(m_tt_b.mean_ms());
+        fc_bwd_ms.push(m_fc_b.mean_ms());
+        rows.push(vec![
+            format!("{n}"),
+            format!("{:.3}", m_tt_f.mean_ms()),
+            format!("{:.3}", m_fc_f.mean_ms()),
+            format!("{:.3}", m_tt_b.mean_ms()),
+            format!("{:.3}", m_fc_b.mean_ms()),
+            format!("{}", shape.num_params()),
+            format!("{}", n * n),
+        ]);
+    }
+
+    print_table(
+        "Table 1 — measured time (ms) and parameter storage",
+        &["N=M", "TT fwd", "FC fwd", "TT f+b", "FC f+b", "TT params", "FC params"],
+        &rows,
+    );
+
+    // growth exponents between N=1024 and N=4096 (factor 4 in N)
+    let exp = |a: f64, b: f64| (b / a).log2() / 2.0; // log_4
+    println!("growth exponent in N (1024 -> 4096; FC expects ~2, TT expects ~1):");
+    println!("  TT fwd: {:.2}   FC fwd: {:.2}", exp(tt_fwd_ms[1], tt_fwd_ms[2]), exp(fc_fwd_ms[1], fc_fwd_ms[2]));
+    println!("  TT f+b: {:.2}   FC f+b: {:.2}", exp(tt_bwd_ms[1], tt_bwd_ms[2]), exp(fc_bwd_ms[1], fc_bwd_ms[2]));
+}

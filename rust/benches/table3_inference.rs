@@ -1,0 +1,33 @@
+//! E7 — Table 3: 25088 -> 4096 inference, dense vs TT rank-4, batch 1 and
+//! 100 — the native hot paths.  (The PJRT serving path is exercised by
+//! `examples/serve_tt.rs`; the artifact executables measure the same
+//! computation through XLA.)
+//!
+//! Run: `cargo bench --bench table3_inference` (QUICK=1 to shorten).
+
+use tensornet::experiments::run_table3;
+use tensornet::util::bench::print_table;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let rows = run_table3(quick, false).expect("table3");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kind.clone(),
+                r.batch.to_string(),
+                format!("{:.3} ms", r.mean_ms),
+                format!("{:.3} MB", r.mem_bytes as f64 / 1048576.0),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 3 — 25088x4096: paper CPU FC 16.1/97.2 ms, TT 1.2/94.7 ms (b1/b100); mem 392 vs 0.766 MB",
+        &["layer", "batch", "mean time", "fwd memory"],
+        &table,
+    );
+    let b1 = rows[0].mean_ms / rows[1].mean_ms;
+    let b100 = rows[2].mean_ms / rows[3].mean_ms;
+    println!("FC/TT speedup: batch1 {b1:.1}x (paper 13.4x), batch100 {b100:.2}x (paper 1.03x)");
+}

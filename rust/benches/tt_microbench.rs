@@ -1,0 +1,56 @@
+//! Micro-benchmarks of the TT substrate: decomposition, rounding, matvec,
+//! arithmetic — the profile that drives the §Perf optimization loop.
+//!
+//! Run: `cargo bench --bench tt_microbench` (QUICK=1 to shorten).
+
+use tensornet::tensor::Tensor;
+use tensornet::tt::{MatvecScratch, TtMatrix, TtShape};
+use tensornet::util::bench::{black_box, Bencher};
+use tensornet::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut rng = Rng::new(1);
+
+    // --- matvec across the paper's shapes --------------------------------
+    for (label, ms, ns, r, batch) in [
+        ("mnist 1024x1024 r8 b1", vec![4usize; 5], vec![4usize; 5], 8usize, 1usize),
+        ("mnist 1024x1024 r8 b32", vec![4; 5], vec![4; 5], 8, 32),
+        ("vgg 4096x25088 r4 b1", vec![4; 6], vec![2, 7, 8, 8, 7, 4], 4, 1),
+        ("wide 262144x3072 r8 b1", vec![8; 6], vec![4, 4, 4, 4, 4, 3], 8, 1),
+    ] {
+        let shape = TtShape::uniform(&ms, &ns, r).unwrap();
+        let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+        let x = Tensor::randn(&[batch, shape.n_total()], 1.0, &mut rng);
+        let mut scratch = MatvecScratch::default();
+        bencher.run(&format!("matvec {label}"), || {
+            black_box(tt.matvec_with(&x, &mut scratch).unwrap());
+        });
+    }
+
+    // --- TT-SVD + rounding -----------------------------------------------
+    let w = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    bencher.run("tt-svd 256x256 (4^4) rank cap 8", || {
+        black_box(TtMatrix::from_dense(&w, &[4; 4], &[4; 4], Some(8), 0.0).unwrap());
+    });
+
+    let shape = TtShape::uniform(&[4; 5], &[4; 5], 8).unwrap();
+    let a = TtMatrix::random(&shape, &mut rng).unwrap();
+    let doubled = a.add(&a).unwrap();
+    bencher.run("round 1024x1024 r16 -> r8", || {
+        black_box(doubled.round(Some(8), 0.0).unwrap());
+    });
+
+    // --- arithmetic --------------------------------------------------------
+    let b = TtMatrix::random(&shape, &mut rng).unwrap();
+    bencher.run("add 1024x1024 r8+r8", || {
+        black_box(a.add(&b).unwrap());
+    });
+    bencher.run("dot 1024x1024 r8·r8", || {
+        black_box(a.dot(&b).unwrap());
+    });
+    bencher.run("to_dense 1024x1024 r8", || {
+        black_box(a.to_dense().unwrap());
+    });
+}

@@ -1,0 +1,150 @@
+//! Experiment configuration (S9 in DESIGN.md).
+//!
+//! A minimal `key = value` config-file format (serde/TOML are unavailable
+//! offline) layered under CLI flags: CLI > file > defaults.  Sections are
+//! flattened with dots: `train.lr = 0.05`.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Flat key-value configuration with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    /// Parse `key = value` lines; `#` starts a comment; `[section]`
+    /// headers prefix following keys with `section.`.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected 'key = value', got '{raw}'", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::Config(format!("{}: {e}", path.as_ref().display())))?;
+        Config::parse(&text)
+    }
+
+    /// Overlay `other` on top of `self` (other wins).
+    pub fn overlay(mut self, other: &Config) -> Config {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| Error::Config(format!("{key}: bad integer '{v}'")))
+            }
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| Error::Config(format!("{key}: bad number '{v}'"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(Error::Config(format!("{key}: bad bool '{v}'"))),
+        }
+    }
+
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim().parse().map_err(|_| Error::Config(format!("{key}: bad int '{x}'")))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_comments() {
+        let cfg = Config::parse(
+            "# experiment\nseed = 7\n[train]\nlr = 0.05 # step size\nbatch = 32\n[model]\nranks = 1,2,4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_usize("seed", 0).unwrap(), 7);
+        assert_eq!(cfg.get_f64("train.lr", 0.0).unwrap(), 0.05);
+        assert_eq!(cfg.get_usize("train.batch", 0).unwrap(), 32);
+        assert_eq!(cfg.get_usize_list("model.ranks", &[]).unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn overlay_wins() {
+        let base = Config::parse("a = 1\nb = 2").unwrap();
+        let top = Config::parse("b = 3").unwrap();
+        let merged = base.overlay(&top);
+        assert_eq!(merged.get_usize("a", 0).unwrap(), 1);
+        assert_eq!(merged.get_usize("b", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(Config::parse("not a kv line").is_err());
+        let cfg = Config::parse("x = abc").unwrap();
+        assert!(cfg.get_usize("x", 0).is_err());
+        assert!(cfg.get_bool("x", false).is_err());
+        assert_eq!(cfg.get_bool("missing", true).unwrap(), true);
+    }
+}

@@ -1,0 +1,160 @@
+//! Dynamic batching: group waiting requests up to `max_batch`, never
+//! holding the first request longer than `max_delay`.
+//!
+//! The decision logic lives in the pure [`BatchAssembler`] (unit- and
+//! property-tested without threads or clocks); the thread loop in
+//! `server.rs` just feeds it wall-clock events.
+
+use crate::coordinator::request::InferRequest;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch for one model.
+#[derive(Debug)]
+pub struct Batch {
+    pub model: String,
+    pub requests: Vec<InferRequest>,
+    pub formed_at: Instant,
+}
+
+/// Pure batching state machine.  Requests for different models never share
+/// a batch; each model keys its own pending group.
+#[derive(Debug)]
+pub struct BatchAssembler {
+    policy: BatchPolicy,
+    pending: Vec<InferRequest>, // all same model
+}
+
+impl BatchAssembler {
+    pub fn new(policy: BatchPolicy) -> Self {
+        BatchAssembler { policy, pending: Vec::new() }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Offer a request at time `now`.  Returns a full batch if this
+    /// request completed one (or if it belongs to a different model than
+    /// the pending group, which flushes the group first — in that case the
+    /// request is queued for the next batch).
+    pub fn push(&mut self, req: InferRequest, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        if let Some(first) = self.pending.first() {
+            if first.model != req.model {
+                out.push(self.flush(now).expect("non-empty pending"));
+            }
+        }
+        self.pending.push(req);
+        if self.pending.len() >= self.policy.max_batch {
+            out.push(self.flush(now).expect("full batch"));
+        }
+        out
+    }
+
+    /// Deadline of the currently-pending group (first-request arrival +
+    /// max_delay), if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.pending.first().map(|r| r.enqueued + self.policy.max_delay)
+    }
+
+    /// Flush if `now` has passed the pending group's deadline.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        match self.deadline() {
+            Some(d) if now >= d => self.flush(now),
+            _ => None,
+        }
+    }
+
+    /// Unconditionally emit whatever is pending (shutdown path).
+    pub fn flush(&mut self, now: Instant) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let requests = std::mem::take(&mut self.pending);
+        Some(Batch { model: requests[0].model.clone(), requests, formed_at: now })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, model: &str, t: Instant) -> InferRequest {
+        let (tx, _rx) = channel();
+        InferRequest { id, model: model.into(), input: vec![0.0], enqueued: t, reply: tx }
+    }
+
+    fn policy(max_batch: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_delay: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut a = BatchAssembler::new(policy(3, 100));
+        let t = Instant::now();
+        assert!(a.push(req(1, "tt", t), t).is_empty());
+        assert!(a.push(req(2, "tt", t), t).is_empty());
+        let batches = a.push(req(3, "tt", t), t);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 3);
+        assert_eq!(a.pending_len(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes() {
+        let mut a = BatchAssembler::new(policy(10, 5));
+        let t0 = Instant::now();
+        a.push(req(1, "tt", t0), t0);
+        assert!(a.poll(t0).is_none()); // too early
+        let late = t0 + Duration::from_millis(6);
+        let b = a.poll(late).expect("deadline passed");
+        assert_eq!(b.requests.len(), 1);
+        assert!(a.poll(late).is_none()); // nothing left
+    }
+
+    #[test]
+    fn model_switch_flushes_group() {
+        let mut a = BatchAssembler::new(policy(10, 100));
+        let t = Instant::now();
+        a.push(req(1, "tt", t), t);
+        a.push(req(2, "tt", t), t);
+        let batches = a.push(req(3, "fc", t), t);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].model, "tt");
+        assert_eq!(batches[0].requests.len(), 2);
+        assert_eq!(a.pending_len(), 1); // the fc request waits
+    }
+
+    #[test]
+    fn fifo_within_batch() {
+        let mut a = BatchAssembler::new(policy(4, 100));
+        let t = Instant::now();
+        for id in 1..=3 {
+            a.push(req(id, "tt", t), t);
+        }
+        let b = a.flush(t).unwrap();
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_flush_is_none() {
+        let mut a = BatchAssembler::new(policy(4, 1));
+        assert!(a.flush(Instant::now()).is_none());
+        assert!(a.deadline().is_none());
+    }
+}

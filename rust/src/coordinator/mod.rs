@@ -1,0 +1,29 @@
+//! Serving coordinator (S8 in DESIGN.md).
+//!
+//! Table 3 of the paper is a *serving* measurement — per-request latency
+//! of a TT-layer vs its dense counterpart at batch 1 and batch 100.  This
+//! module is the production driver around that: a request router over
+//! model variants, a dynamic batcher (max-batch / max-delay policy, the
+//! vLLM-style knobs), a thread-confined executor that owns the PJRT
+//! artifacts, bounded queues for backpressure, and latency histograms.
+//!
+//! Thread model (no async runtime in the offline build — plain OS threads
+//! and channels, which is the right shape for CPU inference anyway):
+//!
+//! ```text
+//! caller ── bounded queue ──► batcher thread ──► executor thread ──► reply
+//!              (admission)      (max_batch /        (owns PJRT,
+//!                                max_delay)          not Send)
+//! ```
+
+mod batcher;
+mod request;
+mod router;
+mod server;
+mod worker;
+
+pub use batcher::{Batch, BatchAssembler, BatchPolicy};
+pub use request::{InferRequest, InferResponse};
+pub use router::{choose_variant, Router};
+pub use server::{Server, ServerConfig, ServerStats};
+pub use worker::{BatchExecutor, EchoExecutor, PjrtExecutor};

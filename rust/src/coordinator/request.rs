@@ -1,0 +1,30 @@
+//! Request / response types crossing the coordinator's queues.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// One inference request: a feature vector bound for `model`.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    /// logical model name, e.g. "tt" or "fc" (the router picks the
+    /// concrete artifact variant)
+    pub model: String,
+    pub input: Vec<f32>,
+    pub enqueued: Instant,
+    /// per-request reply channel (`Err` carries a failure message)
+    pub reply: Sender<Result<InferResponse, String>>,
+}
+
+/// The response delivered back to the caller.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// time spent waiting in queues (admission + batching)
+    pub queue_us: u64,
+    /// artifact execution time of the whole batch
+    pub exec_us: u64,
+    /// how many requests shared the batch
+    pub batch_size: usize,
+}

@@ -1,0 +1,390 @@
+//! The serving front-end: admission queue → batcher thread → executor
+//! thread → per-request replies, with latency/throughput metrics.
+
+use crate::coordinator::batcher::{Batch, BatchAssembler, BatchPolicy};
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::worker::BatchExecutor;
+use crate::error::{Error, Result};
+use crate::metrics::{Counter, Histogram, Meter};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server wiring knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    /// admission queue bound — beyond this, `try_infer` rejects
+    /// (backpressure instead of unbounded memory growth)
+    pub queue_capacity: usize,
+    /// bound on formed batches waiting for the executor
+    pub batch_queue_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { policy: BatchPolicy::default(), queue_capacity: 1024, batch_queue_capacity: 8 }
+    }
+}
+
+/// Shared serving metrics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub e2e: Histogram,
+    pub exec: Histogram,
+    pub queue: Histogram,
+    pub completed: Counter,
+    pub rejected: Counter,
+    pub errors: Counter,
+    pub throughput: Meter,
+    pub batches: Counter,
+    pub batched_rows: Counter,
+}
+
+impl ServerStats {
+    /// Mean rows per executed batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_rows.get() as f64 / b as f64
+        }
+    }
+}
+
+/// A running coordinator.  Dropping (or calling [`Server::shutdown`])
+/// closes the admission queue, drains in-flight work and joins threads.
+pub struct Server {
+    tx: Option<SyncSender<InferRequest>>,
+    next_id: AtomicU64,
+    stats: Arc<ServerStats>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the batcher + executor threads.  `make_executor` runs *on*
+    /// the executor thread (PJRT handles are not `Send`, so the executor
+    /// must be constructed there).
+    pub fn start<E, F>(cfg: ServerConfig, make_executor: F) -> Result<Server>
+    where
+        E: BatchExecutor,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_capacity);
+        let (btx, brx) = sync_channel::<Batch>(cfg.batch_queue_capacity);
+        let stats = Arc::new(ServerStats::default());
+
+        let policy = cfg.policy;
+        let batcher = std::thread::Builder::new()
+            .name("tn-batcher".into())
+            .spawn(move || batcher_loop(rx, btx, policy))
+            .map_err(|e| Error::Coordinator(format!("spawn batcher: {e}")))?;
+
+        let stats_exec = stats.clone();
+        let executor = std::thread::Builder::new()
+            .name("tn-executor".into())
+            .spawn(move || {
+                let mut exec = match make_executor() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // fail every batch that arrives
+                        let msg = format!("executor init failed: {e}");
+                        for batch in brx.iter() {
+                            fail_batch(batch, &msg, &stats_exec);
+                        }
+                        return;
+                    }
+                };
+                executor_loop(brx, &mut exec, &stats_exec);
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn executor: {e}")))?;
+
+        Ok(Server {
+            tx: Some(tx),
+            next_id: AtomicU64::new(1),
+            stats,
+            threads: vec![batcher, executor],
+        })
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Blocking inference: enqueue and wait for the reply.
+    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<InferResponse> {
+        let (reply_tx, reply_rx) = channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model: model.to_string(),
+            input,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        self.tx
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("server shut down".into()))?
+            .send(req)
+            .map_err(|_| Error::Coordinator("admission queue closed".into()))?;
+        match reply_rx.recv() {
+            Ok(Ok(resp)) => {
+                self.stats.e2e.record(resp_latency(&resp));
+                Ok(resp)
+            }
+            Ok(Err(msg)) => Err(Error::Coordinator(msg)),
+            Err(_) => Err(Error::Coordinator("reply channel dropped".into())),
+        }
+    }
+
+    /// Non-blocking admission: rejects instead of waiting when the queue
+    /// is full (returns the reply receiver to await later).
+    pub fn try_infer(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+    ) -> Result<Receiver<std::result::Result<InferResponse, String>>> {
+        let (reply_tx, reply_rx) = channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model: model.to_string(),
+            input,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        match self.tx.as_ref().ok_or_else(|| Error::Coordinator("server shut down".into()))?.try_send(req)
+        {
+            Ok(()) => Ok(reply_rx),
+            Err(TrySendError::Full(_)) => {
+                self.stats.rejected.inc();
+                Err(Error::Coordinator("admission queue full".into()))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Coordinator("admission queue closed".into()))
+            }
+        }
+    }
+
+    /// Await a receiver from [`Server::try_infer`].
+    pub fn await_reply(
+        &self,
+        rx: Receiver<std::result::Result<InferResponse, String>>,
+    ) -> Result<InferResponse> {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                self.stats.e2e.record(resp_latency(&resp));
+                Ok(resp)
+            }
+            Ok(Err(msg)) => Err(Error::Coordinator(msg)),
+            Err(_) => Err(Error::Coordinator("reply channel dropped".into())),
+        }
+    }
+
+    /// Drain and join.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close admission queue
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn resp_latency(resp: &InferResponse) -> Duration {
+    Duration::from_micros(resp.queue_us + resp.exec_us)
+}
+
+fn batcher_loop(rx: Receiver<InferRequest>, btx: SyncSender<Batch>, policy: BatchPolicy) {
+    let mut asm = BatchAssembler::new(policy);
+    loop {
+        let timeout = asm
+            .deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                for batch in asm.push(req, Instant::now()) {
+                    if btx.send(batch).is_err() {
+                        return;
+                    }
+                }
+                if let Some(batch) = asm.poll(Instant::now()) {
+                    if btx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = asm.poll(Instant::now()) {
+                    if btx.send(batch).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // flush and exit
+                if let Some(batch) = asm.flush(Instant::now()) {
+                    let _ = btx.send(batch);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn executor_loop(brx: Receiver<Batch>, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
+    for batch in brx.iter() {
+        let rows = batch.requests.len();
+        let dim = match exec.input_dim(&batch.model) {
+            Ok(d) => d,
+            Err(e) => {
+                fail_batch(batch, &format!("input_dim: {e}"), stats);
+                continue;
+            }
+        };
+        // assemble the batch matrix; reject rows with bad dims individually
+        let mut x = Vec::with_capacity(rows * dim);
+        let mut ok_requests = Vec::with_capacity(rows);
+        for req in batch.requests {
+            if req.input.len() == dim {
+                x.extend_from_slice(&req.input);
+                ok_requests.push(req);
+            } else {
+                stats.errors.inc();
+                let _ = req.reply.send(Err(format!(
+                    "input dim {} != expected {dim}",
+                    req.input.len()
+                )));
+            }
+        }
+        if ok_requests.is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        match exec.execute(&batch.model, &x, ok_requests.len()) {
+            Ok((y, out_dim)) => {
+                let exec_us = t0.elapsed().as_micros() as u64;
+                stats.exec.record(t0.elapsed());
+                stats.batches.inc();
+                stats.batched_rows.add(ok_requests.len() as u64);
+                stats.throughput.mark(ok_requests.len() as u64);
+                let bs = ok_requests.len();
+                for (i, req) in ok_requests.into_iter().enumerate() {
+                    let queue_us = batch
+                        .formed_at
+                        .saturating_duration_since(req.enqueued)
+                        .as_micros() as u64;
+                    stats.queue.record(Duration::from_micros(queue_us));
+                    let resp = InferResponse {
+                        id: req.id,
+                        output: y[i * out_dim..(i + 1) * out_dim].to_vec(),
+                        queue_us,
+                        exec_us,
+                        batch_size: bs,
+                    };
+                    // count BEFORE replying: callers may read stats the
+                    // instant their reply lands
+                    stats.completed.inc();
+                    let _ = req.reply.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("execute failed: {e}");
+                for req in ok_requests {
+                    stats.errors.inc();
+                    let _ = req.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+fn fail_batch(batch: Batch, msg: &str, stats: &ServerStats) {
+    for req in batch.requests {
+        stats.errors.inc();
+        let _ = req.reply.send(Err(msg.to_string()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::EchoExecutor;
+
+    fn echo_server(max_batch: usize, delay_ms: u64) -> Server {
+        let cfg = ServerConfig {
+            policy: BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_millis(delay_ms),
+            },
+            ..Default::default()
+        };
+        Server::start(cfg, || Ok(EchoExecutor { dim: 4, scale: 3.0 })).unwrap()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = echo_server(8, 1);
+        let resp = server.infer("m", vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(resp.output, vec![3.0, 6.0, 9.0, 12.0]);
+        assert!(resp.batch_size >= 1);
+        assert_eq!(server.stats().completed.get(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let server = std::sync::Arc::new(echo_server(16, 20));
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                s.infer("m", vec![i as f32; 4]).unwrap()
+            }));
+        }
+        let resps: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.output, vec![i as f32 * 3.0; 4]);
+        }
+        // at least one multi-row batch must have formed
+        assert!(server.stats().mean_batch_size() > 1.0, "mean batch {}", server.stats().mean_batch_size());
+    }
+
+    #[test]
+    fn wrong_dim_is_rejected_individually() {
+        let server = echo_server(4, 1);
+        let err = server.infer("m", vec![1.0, 2.0]).unwrap_err();
+        assert!(format!("{err}").contains("input dim"));
+        // server still healthy
+        let ok = server.infer("m", vec![0.0; 4]).unwrap();
+        assert_eq!(ok.output, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn executor_init_failure_fails_requests() {
+        let cfg = ServerConfig::default();
+        let server = Server::start(cfg, || {
+            Err::<EchoExecutor, _>(Error::Coordinator("boom".into()))
+        })
+        .unwrap();
+        let err = server.infer("m", vec![0.0; 4]).unwrap_err();
+        assert!(format!("{err}").contains("boom") || format!("{err}").contains("init"));
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let server = echo_server(64, 50);
+        let resp = server.infer("m", vec![0.0; 4]).unwrap();
+        assert_eq!(resp.output.len(), 4);
+        server.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,134 @@
+//! Batch execution backends.
+//!
+//! [`BatchExecutor`] abstracts "run a (rows x dim) batch through a model"
+//! so the coordinator can be tested without PJRT ([`EchoExecutor`]) and
+//! served with it ([`PjrtExecutor`]).  The PJRT executor pads each batch
+//! up to the routed artifact variant and slices the padding back off.
+
+use crate::coordinator::router::Router;
+use crate::error::{Error, Result};
+use crate::runtime::{CompiledModel, Manifest, RuntimeInput};
+use std::collections::BTreeMap;
+
+/// Something that can run one batch for a logical model.
+pub trait BatchExecutor {
+    /// `x` is `rows` concatenated feature vectors; returns `rows`
+    /// concatenated output vectors and the per-row output dimension.
+    fn execute(&mut self, model: &str, x: &[f32], rows: usize) -> Result<(Vec<f32>, usize)>;
+
+    /// Per-row input dimension expected by `model`.
+    fn input_dim(&self, model: &str) -> Result<usize>;
+}
+
+/// Test/bench executor: output = input scaled by a constant (dim
+/// preserved).  Deterministic and instant.
+pub struct EchoExecutor {
+    pub dim: usize,
+    pub scale: f32,
+}
+
+impl BatchExecutor for EchoExecutor {
+    fn execute(&mut self, _model: &str, x: &[f32], rows: usize) -> Result<(Vec<f32>, usize)> {
+        if x.len() != rows * self.dim {
+            return Err(Error::Coordinator(format!(
+                "echo: {} elems for {rows} rows of {}",
+                x.len(),
+                self.dim
+            )));
+        }
+        Ok((x.iter().map(|v| v * self.scale).collect(), self.dim))
+    }
+
+    fn input_dim(&self, _model: &str) -> Result<usize> {
+        Ok(self.dim)
+    }
+}
+
+/// The production executor: routes to AOT artifact variants, lazily
+/// compiling each on first use.  Thread-confined (PJRT handles).
+pub struct PjrtExecutor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    router: Router,
+    compiled: BTreeMap<String, CompiledModel>,
+}
+
+impl PjrtExecutor {
+    /// Build over an artifacts directory; registers every artifact that
+    /// follows the `<model>_b<batch>` naming convention.
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let mut router = Router::new();
+        let names: Vec<String> = manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        router.register_convention(&names);
+        let client = crate::runtime::cpu_client()?;
+        Ok(PjrtExecutor { client, manifest, router, compiled: BTreeMap::new() })
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    fn model_for(&mut self, artifact: &str) -> Result<&CompiledModel> {
+        if !self.compiled.contains_key(artifact) {
+            let m = CompiledModel::load(&self.client, &self.manifest, artifact)?;
+            self.compiled.insert(artifact.to_string(), m);
+        }
+        Ok(&self.compiled[artifact])
+    }
+}
+
+impl BatchExecutor for PjrtExecutor {
+    fn execute(&mut self, model: &str, x: &[f32], rows: usize) -> Result<(Vec<f32>, usize)> {
+        let dim = self.input_dim(model)?;
+        if x.len() != rows * dim {
+            return Err(Error::Coordinator(format!(
+                "{model}: {} elems for {rows} rows of {dim}",
+                x.len()
+            )));
+        }
+        let (artifact, variant) = self.router.route(model, rows)?;
+        let compiled = self.model_for(&artifact)?;
+        let out_dim = compiled.spec().outputs[0].shape[1];
+
+        let mut outputs = Vec::with_capacity(rows * out_dim);
+        let mut done = 0usize;
+        while done < rows {
+            let take = (rows - done).min(variant);
+            // pad up to the variant's fixed batch
+            let mut padded = vec![0.0f32; variant * dim];
+            padded[..take * dim].copy_from_slice(&x[done * dim..(done + take) * dim]);
+            let result = compiled.run(&[RuntimeInput::F32(padded)])?;
+            let y = &result[0];
+            outputs.extend_from_slice(&y.data()[..take * out_dim]);
+            done += take;
+        }
+        Ok((outputs, out_dim))
+    }
+
+    fn input_dim(&self, model: &str) -> Result<usize> {
+        let (artifact, _) = self.router.route(model, 1)?;
+        let spec = self.manifest.artifact(&artifact)?;
+        let rt = spec
+            .runtime_inputs()
+            .first()
+            .ok_or_else(|| Error::Coordinator(format!("{model}: no runtime input")))?
+            .shape
+            .clone();
+        Ok(rt[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn echo_roundtrip() {
+        let mut e = EchoExecutor { dim: 3, scale: 2.0 };
+        let (y, od) = e.execute("any", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2).unwrap();
+        assert_eq!(od, 3);
+        assert_eq!(y, vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0]);
+        assert!(e.execute("any", &[1.0], 2).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Minibatch iteration with per-epoch shuffling.
+
+use crate::data::Dataset;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Iterator of `(x_batch, label_batch)` over a dataset, reshuffled each
+/// time it is constructed.
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+    drop_last: bool,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, rng: &mut Rng, drop_last: bool) -> Self {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        BatchIter { data, order, batch: batch.max(1), pos: 0, drop_last }
+    }
+
+    /// Deterministic order (evaluation).
+    pub fn sequential(data: &'a Dataset, batch: usize) -> Self {
+        BatchIter {
+            data,
+            order: (0..data.len()).collect(),
+            batch: batch.max(1),
+            pos: 0,
+            drop_last: false,
+        }
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = (Tensor, Vec<usize>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        if self.drop_last && end - self.pos < self.batch {
+            return None;
+        }
+        let idx = &self.order[self.pos..end];
+        self.pos = end;
+        let sub = self.data.subset(idx).ok()?;
+        Some((sub.x, sub.labels))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn data(n: usize) -> Dataset {
+        let x = Tensor::from_vec(&[n, 1], (0..n).map(|i| i as f32).collect()).unwrap();
+        let labels = (0..n).map(|i| i % 3).collect();
+        Dataset::new(x, labels, 3).unwrap()
+    }
+
+    #[test]
+    fn covers_all_once() {
+        let d = data(10);
+        let mut rng = Rng::new(1);
+        let mut seen = vec![false; 10];
+        for (x, _) in BatchIter::new(&d, 3, &mut rng, false) {
+            for &v in x.data() {
+                let i = v as usize;
+                assert!(!seen[i], "duplicate {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn drop_last_trims() {
+        let d = data(10);
+        let mut rng = Rng::new(2);
+        let batches: Vec<_> = BatchIter::new(&d, 4, &mut rng, true).collect();
+        assert_eq!(batches.len(), 2); // 4+4, drops the 2 leftover
+        assert!(batches.iter().all(|(x, _)| x.shape()[0] == 4));
+    }
+
+    #[test]
+    fn sequential_in_order() {
+        let d = data(5);
+        let all: Vec<f32> = BatchIter::sequential(&d, 2)
+            .flat_map(|(x, _)| x.data().to_vec())
+            .collect();
+        assert_eq!(all, vec![0., 1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn labels_align() {
+        let d = data(9);
+        let mut rng = Rng::new(3);
+        for (x, labels) in BatchIter::new(&d, 4, &mut rng, false) {
+            for (row, &y) in x.data().chunks(1).zip(&labels) {
+                assert_eq!((row[0] as usize) % 3, y);
+            }
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! In-memory labelled dataset.
+
+use crate::error::{shape_err, Result};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A labelled dataset: `x (n, dim)` features, integer class labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Tensor,
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Tensor, labels: Vec<usize>, n_classes: usize) -> Result<Self> {
+        if x.ndim() != 2 || x.shape()[0] != labels.len() {
+            return shape_err(format!("dataset: x {:?} vs {} labels", x.shape(), labels.len()));
+        }
+        if let Some(&bad) = labels.iter().find(|&&y| y >= n_classes) {
+            return shape_err(format!("label {bad} >= {n_classes}"));
+        }
+        Ok(Dataset { x, labels, n_classes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.shape()[1]
+    }
+
+    /// Split off the first `n_train` samples as train, rest as test.
+    pub fn split(&self, n_train: usize) -> Result<(Dataset, Dataset)> {
+        if n_train > self.len() {
+            return shape_err(format!("split {n_train} > {}", self.len()));
+        }
+        let train_x = self.x.rows(0, n_train)?;
+        let test_x = self.x.rows(n_train, self.len())?;
+        Ok((
+            Dataset::new(train_x, self.labels[..n_train].to_vec(), self.n_classes)?,
+            Dataset::new(test_x, self.labels[n_train..].to_vec(), self.n_classes)?,
+        ))
+    }
+
+    /// Gather a subset by indices.
+    pub fn subset(&self, idx: &[usize]) -> Result<Dataset> {
+        let dim = self.dim();
+        let mut data = Vec::with_capacity(idx.len() * dim);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            if i >= self.len() {
+                return shape_err(format!("subset index {i} out of range"));
+            }
+            data.extend_from_slice(self.x.row(i));
+            labels.push(self.labels[i]);
+        }
+        Ok(Dataset { x: Tensor::from_vec(&[idx.len(), dim], data)?, labels, n_classes: self.n_classes })
+    }
+
+    /// In-place shuffle of rows (seeded).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut order);
+        let shuffled = self.subset(&order).expect("valid permutation");
+        *self = shuffled;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = Tensor::from_vec(&[4, 2], vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap();
+        Dataset::new(x, vec![0, 1, 0, 1], 2).unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        let x = Tensor::zeros(&[3, 2]);
+        assert!(Dataset::new(x.clone(), vec![0, 1], 2).is_err()); // wrong len
+        assert!(Dataset::new(x.clone(), vec![0, 1, 5], 2).is_err()); // label range
+        assert!(Dataset::new(x, vec![0, 1, 1], 2).is_ok());
+    }
+
+    #[test]
+    fn split_partitions() {
+        let (tr, te) = tiny().split(3).unwrap();
+        assert_eq!(tr.len(), 3);
+        assert_eq!(te.len(), 1);
+        assert_eq!(te.x.row(0), &[3., 3.]);
+        assert_eq!(te.labels, vec![1]);
+    }
+
+    #[test]
+    fn subset_gathers() {
+        let s = tiny().subset(&[2, 0]).unwrap();
+        assert_eq!(s.x.row(0), &[2., 2.]);
+        assert_eq!(s.labels, vec![0, 0]);
+        assert!(tiny().subset(&[9]).is_err());
+    }
+
+    #[test]
+    fn shuffle_preserves_pairs() {
+        let mut d = tiny();
+        d.shuffle(&mut Rng::new(1));
+        for i in 0..d.len() {
+            // pair invariant: feature value equals its original row id,
+            // whose label parity we know
+            let v = d.x.row(i)[0] as usize;
+            assert_eq!(d.labels[i], v % 2);
+        }
+    }
+}

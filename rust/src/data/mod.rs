@@ -1,0 +1,22 @@
+//! Synthetic dataset substrates (S6 in DESIGN.md).
+//!
+//! The paper trains on MNIST, CIFAR-10 and ImageNet.  None of those are
+//! available in this offline environment, so each is replaced by a
+//! procedurally-generated stand-in with the same input dimensionality,
+//! class count and preprocessing path (documented per-generator and in
+//! DESIGN.md §Substitutions).  The generators are deterministic in a
+//! `u64` seed, making every experiment reproducible bit-for-bit.
+
+mod batcher;
+mod dataset;
+mod preprocess;
+mod synth_cifar;
+mod synth_features;
+mod synth_mnist;
+
+pub use batcher::BatchIter;
+pub use dataset::Dataset;
+pub use preprocess::{global_contrast_normalize, ZcaWhitener};
+pub use synth_cifar::{synth_cifar, CIFAR_CLASSES, CIFAR_DIM};
+pub use synth_features::{synth_features, FeatureSpec};
+pub use synth_mnist::{synth_mnist, MNIST_CLASSES, MNIST_DIM, MNIST_SIDE};

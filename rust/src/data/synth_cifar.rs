@@ -1,0 +1,135 @@
+//! CIFAR-10 stand-in: textured color classes (DESIGN.md §Substitutions).
+//!
+//! Each of the 10 classes combines (a) a class-specific pair of oriented
+//! sinusoidal gratings, (b) a class color tint, and (c) a smooth random
+//! blob field, plus per-sample phase/orientation jitter and pixel noise.
+//! Matches CIFAR-10's interface: 3 x 32 x 32 inputs (3072-dim rows,
+//! channel-major like the flattened tensors the paper reshapes), 10
+//! classes, preprocessed by GCN + ZCA like the paper (§6.2 follows
+//! Goodfellow et al.).
+
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const CIFAR_SIDE: usize = 32;
+pub const CIFAR_DIM: usize = 3 * CIFAR_SIDE * CIFAR_SIDE;
+pub const CIFAR_CLASSES: usize = 10;
+
+/// Class recipe: grating frequencies/orientations + RGB tint.
+struct Recipe {
+    freq1: f32,
+    angle1: f32,
+    freq2: f32,
+    angle2: f32,
+    tint: [f32; 3],
+}
+
+fn recipe(class: usize) -> Recipe {
+    // spread parameters deterministically over classes
+    let golden = 0.618_034f32;
+    let a = (class as f32) * golden % 1.0;
+    Recipe {
+        freq1: 2.0 + 1.7 * (class % 5) as f32,
+        angle1: std::f32::consts::PI * a,
+        freq2: 3.0 + 1.3 * ((class + 3) % 5) as f32,
+        angle2: std::f32::consts::PI * ((a + 0.37) % 1.0),
+        tint: [
+            0.35 + 0.6 * ((class % 3) as f32 / 2.0),
+            0.35 + 0.6 * (((class / 3) % 3) as f32 / 2.0),
+            0.35 + 0.6 * (((class / 9) % 3) as f32 / 2.0),
+        ],
+    }
+}
+
+fn render(class: usize, rng: &mut Rng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), CIFAR_DIM);
+    let r = recipe(class);
+    let jitter = rng.range_f64(-0.2, 0.2) as f32;
+    let phase1 = rng.range_f64(0.0, std::f64::consts::TAU) as f32;
+    let phase2 = rng.range_f64(0.0, std::f64::consts::TAU) as f32;
+    let (a1, a2) = (r.angle1 + jitter, r.angle2 - jitter);
+    let (c1, s1) = (a1.cos(), a1.sin());
+    let (c2, s2) = (a2.cos(), a2.sin());
+    // smooth blob: 3 random Gaussians
+    let blobs: Vec<(f32, f32, f32)> = (0..3)
+        .map(|_| {
+            (
+                rng.range_f64(0.2, 0.8) as f32,
+                rng.range_f64(0.2, 0.8) as f32,
+                rng.range_f64(0.08, 0.25) as f32,
+            )
+        })
+        .collect();
+    let tau = std::f32::consts::TAU;
+    for iy in 0..CIFAR_SIDE {
+        for ix in 0..CIFAR_SIDE {
+            let x = (ix as f32 + 0.5) / CIFAR_SIDE as f32;
+            let y = (iy as f32 + 0.5) / CIFAR_SIDE as f32;
+            let u1 = c1 * x + s1 * y;
+            let u2 = c2 * x + s2 * y;
+            let g = 0.5 * (tau * r.freq1 * u1 + phase1).sin() + 0.35 * (tau * r.freq2 * u2 + phase2).sin();
+            let mut blob = 0.0f32;
+            for &(bx, by, bs) in &blobs {
+                let d2 = (x - bx).powi(2) + (y - by).powi(2);
+                blob += (-d2 / (2.0 * bs * bs)).exp();
+            }
+            let base = 0.45 + 0.3 * g + 0.15 * blob;
+            for ch in 0..3 {
+                let v = base * r.tint[ch] + rng.normal_f32(0.05);
+                out[ch * CIFAR_SIDE * CIFAR_SIDE + iy * CIFAR_SIDE + ix] = v.clamp(0.0, 1.0);
+            }
+        }
+    }
+}
+
+/// Generate `n` CIFAR-like samples.
+pub fn synth_cifar(n: usize, seed: u64) -> Result<Dataset> {
+    let mut rng = Rng::new(seed ^ 0x6369_6661_725f_3130);
+    let mut data = vec![0.0f32; n * CIFAR_DIM];
+    let mut labels = Vec::with_capacity(n);
+    for (i, chunk) in data.chunks_mut(CIFAR_DIM).enumerate() {
+        let class = if i < CIFAR_CLASSES { i } else { rng.below(CIFAR_CLASSES) };
+        render(class, &mut rng, chunk);
+        labels.push(class);
+    }
+    Dataset::new(Tensor::from_vec(&[n, CIFAR_DIM], data)?, labels, CIFAR_CLASSES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = synth_cifar(15, 1).unwrap();
+        assert_eq!(a.x.shape(), &[15, 3072]);
+        assert_eq!(a.x, synth_cifar(15, 1).unwrap().x);
+    }
+
+    #[test]
+    fn classes_distinguishable() {
+        let d = synth_cifar(120, 2).unwrap();
+        let mean = |class: usize| -> Vec<f32> {
+            let rows: Vec<usize> = (0..d.len()).filter(|&i| d.labels[i] == class).collect();
+            let mut m = vec![0.0f32; CIFAR_DIM];
+            for &i in &rows {
+                for (mm, &v) in m.iter_mut().zip(d.x.row(i)) {
+                    *mm += v / rows.len() as f32;
+                }
+            }
+            m
+        };
+        let m2 = mean(2);
+        let m7 = mean(7);
+        let dist: f32 = m2.iter().zip(&m7).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        assert!(dist > 0.5, "class means too close: {dist}");
+    }
+
+    #[test]
+    fn values_in_range() {
+        let d = synth_cifar(10, 3).unwrap();
+        assert!(d.x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

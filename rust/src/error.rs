@@ -1,0 +1,47 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All failure modes surfaced by the library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape arithmetic went wrong (mismatched dims, bad reshape, ...).
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Numerical routine failed to converge or hit an invalid input.
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// Artifact loading / manifest parsing problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Coordinator-level failure (queue closed, worker died, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Configuration file / CLI problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand for shape errors.
+pub fn shape_err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error::Shape(msg.into()))
+}

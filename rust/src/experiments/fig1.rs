@@ -1,0 +1,154 @@
+//! E1 — Figure 1: test error vs parameter count of the first (compressed)
+//! 1024x1024 layer on (synthetic) MNIST, comparing TT reshapes against the
+//! matrix-rank baseline.
+
+use crate::data::{global_contrast_normalize, synth_mnist, Dataset};
+use crate::error::Result;
+use crate::experiments::models::{mr_classifier, tt_classifier};
+use crate::nn::{SgdConfig, TrainConfig, Trainer};
+use crate::util::rng::Rng;
+
+/// One curve point: a trained configuration.
+#[derive(Clone, Debug)]
+pub struct Fig1Point {
+    pub family: String, // e.g. "TT 4x4x4x4x4" or "MR"
+    pub rank: usize,
+    pub layer1_params: usize,
+    pub test_error: f32,
+    pub train_loss: f32,
+}
+
+/// Sweep specification.
+#[derive(Clone, Debug)]
+pub struct Fig1Spec {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub epochs: usize,
+    pub tt_reshapes: Vec<(Vec<usize>, Vec<usize>)>,
+    pub tt_ranks: Vec<usize>,
+    pub mr_ranks: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Fig1Spec {
+    /// Fast smoke configuration (CI-sized).
+    pub fn quick() -> Self {
+        Fig1Spec {
+            n_train: 1500,
+            n_test: 600,
+            epochs: 3,
+            tt_reshapes: vec![
+                (vec![4, 4, 4, 4, 4], vec![4, 4, 4, 4, 4]),
+                (vec![32, 32], vec![32, 32]),
+            ],
+            tt_ranks: vec![2, 8],
+            mr_ranks: vec![2, 8],
+            seed: 20150407,
+        }
+    }
+
+    /// The full sweep (paper Fig. 1's four reshape families).
+    pub fn full() -> Self {
+        Fig1Spec {
+            n_train: 6000,
+            n_test: 2000,
+            epochs: 8,
+            tt_reshapes: vec![
+                (vec![4, 4, 4, 4, 4], vec![4, 4, 4, 4, 4]),
+                (vec![8, 4, 4, 8], vec![8, 4, 4, 8]),
+                (vec![32, 32], vec![32, 32]),
+                (vec![2; 10], vec![2; 10]),
+            ],
+            tt_ranks: vec![1, 2, 4, 8, 16],
+            mr_ranks: vec![1, 2, 4, 8, 16, 32],
+            seed: 20150407,
+        }
+    }
+}
+
+fn family_name(ms: &[usize]) -> String {
+    format!("TT {}", ms.iter().map(|m| m.to_string()).collect::<Vec<_>>().join("x"))
+}
+
+/// Prepare the (synthetic) MNIST train/test split with GCN.
+pub fn fig1_data(spec: &Fig1Spec) -> Result<(Dataset, Dataset)> {
+    let mut all = synth_mnist(spec.n_train + spec.n_test, spec.seed)?;
+    global_contrast_normalize(&mut all.x)?;
+    all.split(spec.n_train)
+}
+
+/// Run the sweep; returns all curve points.
+pub fn run_fig1(spec: &Fig1Spec, verbose: bool) -> Result<Vec<Fig1Point>> {
+    let (train, test) = fig1_data(spec)?;
+    let trainer = Trainer::new(TrainConfig {
+        epochs: spec.epochs,
+        batch_size: 32,
+        sgd: SgdConfig::with_lr(0.03),
+        lr_decay: 0.85,
+        log_every: 0,
+        seed: spec.seed ^ 0x1,
+    });
+    let mut points = Vec::new();
+
+    for (ms, ns) in &spec.tt_reshapes {
+        // d=2 reshapes cannot hold rank > min mode product meaningfully;
+        // sweep all requested ranks anyway (rank caps just saturate)
+        for &r in &spec.tt_ranks {
+            let mut rng = Rng::new(spec.seed ^ (r as u64) << 8);
+            let (mut net, layer1) = tt_classifier(ms, ns, r, 10, &mut rng)?;
+            let hist = trainer.fit(&mut net, &train, None)?;
+            let eval = trainer.evaluate(&mut net, &test)?;
+            let p = Fig1Point {
+                family: family_name(ms),
+                rank: r,
+                layer1_params: layer1,
+                test_error: eval.error,
+                train_loss: hist.final_loss(),
+            };
+            if verbose {
+                println!(
+                    "{:<18} r={:<3} params={:<8} err={:.3}",
+                    p.family, p.rank, p.layer1_params, p.test_error
+                );
+            }
+            points.push(p);
+        }
+    }
+    for &r in &spec.mr_ranks {
+        let mut rng = Rng::new(spec.seed ^ 0xA000 ^ (r as u64));
+        let (mut net, layer1) = mr_classifier(1024, 1024, r, 10, &mut rng)?;
+        let hist = trainer.fit(&mut net, &train, None)?;
+        let eval = trainer.evaluate(&mut net, &test)?;
+        let p = Fig1Point {
+            family: "MR".into(),
+            rank: r,
+            layer1_params: layer1,
+            test_error: eval.error,
+            train_loss: hist.final_loss(),
+        };
+        if verbose {
+            println!(
+                "{:<18} r={:<3} params={:<8} err={:.3}",
+                p.family, p.rank, p.layer1_params, p.test_error
+            );
+        }
+        points.push(p);
+    }
+    Ok(points)
+}
+
+/// Render points as the EXPERIMENTS.md table rows.
+pub fn fig1_table(points: &[Fig1Point]) -> Vec<Vec<String>> {
+    points
+        .iter()
+        .map(|p| {
+            vec![
+                p.family.clone(),
+                p.rank.to_string(),
+                p.layer1_params.to_string(),
+                format!("{:.3}", p.test_error),
+                format!("{:.3}", p.train_loss),
+            ]
+        })
+        .collect()
+}

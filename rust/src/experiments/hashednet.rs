@@ -1,0 +1,93 @@
+//! E2 — §6.1 HashedNet comparison: both FC layers of the 2-layer MNIST
+//! net replaced by TT-layers at ranks 8 and 6; report total parameters and
+//! test error (paper: 12 602 params / 1.6% and 7 698 params / 1.9%,
+//! vs HashedNet's 12 720 params / 2.79% at compression 64).
+
+use crate::data::{global_contrast_normalize, synth_mnist};
+use crate::error::Result;
+use crate::nn::{Dense, Layer, Relu, SgdConfig, Sequential, TrainConfig, Trainer, TtLinear};
+use crate::tt::TtShape;
+use crate::util::rng::Rng;
+
+/// One table row.
+#[derive(Clone, Debug)]
+pub struct HashedNetRow {
+    pub label: String,
+    pub total_params: usize,
+    pub test_error: f32,
+    pub compression_vs_dense: f64,
+}
+
+/// Both layers TT: `TT(1024->1024, r) -> ReLU -> TT(1024->10, r)`.
+fn both_tt(rank: usize, rng: &mut Rng) -> Result<Sequential> {
+    let l1 = TtLinear::new(&TtShape::uniform(&[4; 5], &[4; 5], rank)?, rng)?;
+    // 10 outputs factored as 10x1x1x1x1 over the 4^5 input modes
+    let l2 = TtLinear::new(&TtShape::uniform(&[10, 1, 1, 1, 1], &[4; 5], rank)?, rng)?;
+    Ok(Sequential::new(vec![Box::new(l1), Box::new(Relu::new()), Box::new(l2)]))
+}
+
+/// Run ranks {8, 6} plus the dense reference.
+pub fn run_hashednet(quick: bool, verbose: bool) -> Result<Vec<HashedNetRow>> {
+    let (n_train, n_test, epochs) = if quick { (1500, 600, 3) } else { (6000, 2000, 8) };
+    let seed = 0x4861_7368u64;
+    let mut all = synth_mnist(n_train + n_test, seed)?;
+    global_contrast_normalize(&mut all.x)?;
+    let (train, test) = all.split(n_train)?;
+    let trainer = Trainer::new(TrainConfig {
+        epochs,
+        batch_size: 32,
+        sgd: SgdConfig::with_lr(0.03),
+        lr_decay: 0.85,
+        log_every: 0,
+        seed,
+    });
+
+    let dense_total = (1024 * 1024 + 1024 + 1024 * 10 + 10) as f64;
+    let mut rows = Vec::new();
+
+    for &rank in &[8usize, 6] {
+        let mut rng = Rng::new(seed ^ rank as u64);
+        let mut net = both_tt(rank, &mut rng)?;
+        let params = net.num_params();
+        trainer.fit(&mut net, &train, None)?;
+        let eval = trainer.evaluate(&mut net, &test)?;
+        let row = HashedNetRow {
+            label: format!("TT{rank} TT{rank}"),
+            total_params: params,
+            test_error: eval.error,
+            compression_vs_dense: dense_total / params as f64,
+        };
+        if verbose {
+            println!(
+                "{:<10} params={:<8} err={:.3} compr={:.0}x",
+                row.label, row.total_params, row.test_error, row.compression_vs_dense
+            );
+        }
+        rows.push(row);
+    }
+
+    // dense reference
+    let mut rng = Rng::new(seed ^ 0xFF);
+    let mut dense = Sequential::new(vec![
+        Box::new(Dense::new(1024, 1024, &mut rng)),
+        Box::new(Relu::new()),
+        Box::new(Dense::new(1024, 10, &mut rng)),
+    ]);
+    let params = dense.num_params();
+    trainer.fit(&mut dense, &train, None)?;
+    let eval = trainer.evaluate(&mut dense, &test)?;
+    let row = HashedNetRow {
+        label: "FC FC (dense)".into(),
+        total_params: params,
+        test_error: eval.error,
+        compression_vs_dense: 1.0,
+    };
+    if verbose {
+        println!(
+            "{:<10} params={:<8} err={:.3} compr=1x",
+            row.label, row.total_params, row.test_error
+        );
+    }
+    rows.push(row);
+    Ok(rows)
+}

@@ -1,0 +1,19 @@
+//! Experiment drivers (DESIGN.md §5): one module per paper table/figure,
+//! shared by the CLI launcher, the examples and the benches so every
+//! number in EXPERIMENTS.md regenerates from a single code path.
+
+mod cifar;
+mod fig1;
+mod hashednet;
+mod models;
+mod table2;
+mod table3;
+mod wide;
+
+pub use cifar::{run_cifar, CifarResult};
+pub use fig1::{run_fig1, Fig1Point, Fig1Spec};
+pub use hashednet::{run_hashednet, HashedNetRow};
+pub use models::{mnist_fc_baseline, mnist_tensornet, mr_classifier, tt_classifier};
+pub use table2::{run_table2, Table2Row, VggFcGeometry};
+pub use table3::{run_table3, Table3Row};
+pub use wide::{run_wide, WideResult};

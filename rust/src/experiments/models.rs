@@ -1,0 +1,94 @@
+//! Shared model builders for the experiment drivers.
+
+use crate::error::Result;
+use crate::nn::{low_rank_pair, Dense, Layer, Relu, Sequential, TtLinear};
+use crate::tt::TtShape;
+use crate::util::rng::Rng;
+
+/// `TT(n_in -> n_hidden) -> ReLU -> FC(n_hidden -> classes)` — the paper's
+/// §6.1 single-TT-layer network.
+pub fn tt_classifier(
+    ms: &[usize],
+    ns: &[usize],
+    rank: usize,
+    n_classes: usize,
+    rng: &mut Rng,
+) -> Result<(Sequential, usize)> {
+    let shape = TtShape::uniform(ms, ns, rank)?;
+    let hidden = shape.m_total();
+    let tt = TtLinear::new(&shape, rng)?;
+    let layer1_params = tt.num_params();
+    let net = Sequential::new(vec![
+        Box::new(tt),
+        Box::new(Relu::new()),
+        Box::new(Dense::new(hidden, n_classes, rng)),
+    ]);
+    Ok((net, layer1_params))
+}
+
+/// `MR_r(n_in -> n_hidden) -> ReLU -> FC(n_hidden -> classes)` — the
+/// matrix-rank baseline of Fig. 1.
+pub fn mr_classifier(
+    n_in: usize,
+    n_hidden: usize,
+    rank: usize,
+    n_classes: usize,
+    rng: &mut Rng,
+) -> Result<(Sequential, usize)> {
+    let pair = low_rank_pair(n_in, n_hidden, rank, rng)?;
+    let layer1_params = crate::nn::Layer::num_params(&pair);
+    let net = Sequential::new(vec![
+        Box::new(pair),
+        Box::new(Relu::new()),
+        Box::new(Dense::new(n_hidden, n_classes, rng)),
+    ]);
+    Ok((net, layer1_params))
+}
+
+/// The uncompressed `FC(1024) -> ReLU -> FC(10)` reference (§6.1 baseline,
+/// 1.9% on real MNIST).
+pub fn mnist_fc_baseline(rng: &mut Rng) -> Sequential {
+    Sequential::new(vec![
+        Box::new(Dense::new(1024, 1024, rng)),
+        Box::new(Relu::new()),
+        Box::new(Dense::new(1024, 10, rng)),
+    ])
+}
+
+/// The MNIST TensorNet of the AOT artifacts: TT(4^5/4^5, r) -> ReLU ->
+/// FC(1024 -> 10).
+pub fn mnist_tensornet(rank: usize, rng: &mut Rng) -> Result<Sequential> {
+    Ok(tt_classifier(&[4; 5], &[4; 5], rank, 10, rng)?.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Layer;
+
+    #[test]
+    fn tt_classifier_param_accounting() {
+        let mut rng = Rng::new(1);
+        let (net, l1) = tt_classifier(&[4; 5], &[4; 5], 8, 10, &mut rng).unwrap();
+        assert_eq!(l1, 3328 + 1024); // cores + bias
+        assert_eq!(net.num_params(), l1 + 1024 * 10 + 10);
+    }
+
+    #[test]
+    fn mr_classifier_param_accounting() {
+        let mut rng = Rng::new(2);
+        let (net, l1) = mr_classifier(1024, 1024, 4, 10, &mut rng).unwrap();
+        assert_eq!(l1, 4 * 1024 + 4 + 1024 * 4 + 1024);
+        assert!(net.num_params() > l1);
+    }
+
+    #[test]
+    fn fc_baseline_shape() {
+        let mut rng = Rng::new(3);
+        let mut net = mnist_fc_baseline(&mut rng);
+        let y = net
+            .forward(&crate::tensor::Tensor::zeros(&[2, 1024]), false)
+            .unwrap();
+        assert_eq!(y.shape(), &[2, 10]);
+    }
+}

@@ -1,0 +1,110 @@
+//! E7 — Table 3: inference wall-clock of the 25088 -> 4096 layer, dense
+//! vs TT (all ranks 4), at batch 1 and batch 100, plus memory accounting.
+//!
+//! Paper numbers (GTX 980 / quad-core i5): CPU FC 16.1ms/97.2ms,
+//! CPU TT 1.2ms/94.7ms (batch 1 / batch 100); memory 392 MB vs 0.766 MB
+//! for one image.  The reproducible *shape*: TT ≫ FC at batch 1, gap
+//! narrows at batch 100, memory ratio ~512x.
+
+use crate::error::Result;
+use crate::experiments::table2::fc6_tt_shape;
+use crate::tensor::{matmul_bt, Tensor};
+use crate::tt::{MatvecScratch, TtMatrix};
+use crate::util::bench::{black_box, Bencher};
+use crate::util::rng::Rng;
+
+/// One Table-3 row.
+#[derive(Clone, Debug)]
+pub struct Table3Row {
+    pub kind: String, // "FC" / "TT4"
+    pub batch: usize,
+    pub mean_ms: f64,
+    /// bytes touched per single-image forward (weights + activations)
+    pub mem_bytes: usize,
+}
+
+/// Memory of one forward pass for a single image (paper's 392MB / 0.766MB
+/// comparison): weight storage + the largest intermediate.
+pub fn fc_forward_bytes() -> usize {
+    // dense W (f32) + input + output
+    4 * (25088 * 4096 + 25088 + 4096)
+}
+
+pub fn tt_forward_bytes(rank: usize) -> usize {
+    let shape = fc6_tt_shape(rank).expect("valid shape");
+    // cores + the maximal sweep intermediate: state is (r * N)-ish
+    let max_state: usize = 25088 * rank.max(1);
+    4 * (shape.num_params() + 25088 + 4096 + max_state)
+}
+
+/// Measure the native hot paths.  `quick` shortens measurement windows.
+pub fn run_table3(quick: bool, verbose: bool) -> Result<Vec<Table3Row>> {
+    let mut rng = Rng::new(0x5461_3362);
+    let shape = fc6_tt_shape(4)?;
+    let tt = TtMatrix::random(&shape, &mut rng)?;
+    // dense baseline with the same logical size (4096 x 25088, stored
+    // (out, in) like the Dense layer)
+    let w = Tensor::randn(&[4096, 25088], 0.01, &mut rng);
+
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut rows = Vec::new();
+
+    for &batch in &[1usize, 100] {
+        let x = Tensor::randn(&[batch, 25088], 1.0, &mut rng);
+
+        let m_fc = bencher.run(&format!("FC 25088x4096 batch={batch}"), || {
+            black_box(matmul_bt(&x, &w).unwrap());
+        });
+        rows.push(Table3Row {
+            kind: "FC".into(),
+            batch,
+            mean_ms: m_fc.mean_ms(),
+            mem_bytes: fc_forward_bytes(),
+        });
+
+        let mut scratch = MatvecScratch::default();
+        let m_tt = bencher.run(&format!("TT4 25088x4096 batch={batch}"), || {
+            black_box(tt.matvec_with(&x, &mut scratch).unwrap());
+        });
+        rows.push(Table3Row {
+            kind: "TT4".into(),
+            batch,
+            mean_ms: m_tt.mean_ms(),
+            mem_bytes: tt_forward_bytes(4),
+        });
+    }
+
+    if verbose {
+        for r in &rows {
+            println!(
+                "{:<4} batch={:<4} {:>9.3} ms   mem {:>12} bytes",
+                r.kind, r.batch, r.mean_ms, r.mem_bytes
+            );
+        }
+        let speedup_b1 = rows[0].mean_ms / rows[1].mean_ms;
+        let speedup_b100 = rows[2].mean_ms / rows[3].mean_ms;
+        println!("speedup at batch 1:   {speedup_b1:.1}x (paper: 13.4x on CPU)");
+        println!("speedup at batch 100: {speedup_b100:.1}x (paper: 1.03x on CPU)");
+        println!(
+            "memory ratio: {:.0}x (paper: 392MB / 0.766MB = 512x)",
+            fc_forward_bytes() as f64 / tt_forward_bytes(4) as f64
+        );
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_accounting_matches_paper_scale() {
+        // paper: 392 MB for FC, 0.766 MB for TT
+        let fc_mb = fc_forward_bytes() as f64 / (1024.0 * 1024.0);
+        let tt_mb = tt_forward_bytes(4) as f64 / (1024.0 * 1024.0);
+        assert!((fc_mb - 392.0).abs() < 5.0, "FC {fc_mb} MB");
+        assert!(tt_mb < 1.0, "TT {tt_mb} MB");
+        let ratio = fc_mb / tt_mb;
+        assert!(ratio > 300.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,38 @@
+//! # TensorNet
+//!
+//! A production-grade reproduction of *Tensorizing Neural Networks*
+//! (Novikov, Podoprikhin, Osokin, Vetrov — NIPS 2015): fully-connected
+//! layers whose weight matrices live in the Tensor-Train (TT) format,
+//! compressed by factors up to 200 000× while preserving accuracy.
+//!
+//! The crate is the runtime third of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the per-core
+//!   contraction GEMM, authored for the TPU MXU, validated in interpret
+//!   mode against a pure-jnp oracle.
+//! * **L2** — JAX graphs (`python/compile/model.py`): TT-layer forward,
+//!   full TensorNet, SGD-with-momentum train step; AOT-lowered to HLO text.
+//! * **L3** — this crate: a self-contained rust binary that loads the AOT
+//!   artifacts through PJRT ([`runtime`]), serves them behind a dynamic
+//!   batcher ([`coordinator`]), and additionally implements the *entire*
+//!   TT + training substrate natively ([`tensor`], [`linalg`], [`tt`],
+//!   [`nn`], [`data`]) so every experiment in the paper can be regenerated
+//!   without python anywhere near the hot path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;
+pub mod tt;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,142 @@
+//! Internal f64 row-major matrix used by the factorization routines.
+
+use crate::tensor::Tensor;
+
+/// Row-major `f64` matrix (internal to `linalg`, but exposed for tests and
+/// for callers that need double precision end to end).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Self {
+        assert_eq!(t.ndim(), 2, "Mat::from_tensor needs 2-D");
+        Mat {
+            rows: t.shape()[0],
+            cols: t.shape()[1],
+            data: t.data().iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_vec(&[self.rows, self.cols], self.data.iter().map(|&x| x as f32).collect())
+            .expect("consistent")
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} * {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik != 0.0 {
+                    let brow = &other.data[k * other.cols..(k + 1) * other.cols];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += aik * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Column `j` 2-norm.
+    pub fn col_norm(&self, j: usize) -> f64 {
+        (0..self.rows).map(|i| self.at(i, j).powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// Keep only the first `k` columns.
+    pub fn take_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.data[i * k..(i + 1) * k].copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    /// Keep only the first `k` rows.
+    pub fn take_rows(&self, k: usize) -> Mat {
+        assert!(k <= self.rows);
+        Mat { rows: k, cols: self.cols, data: self.data[..k * self.cols].to_vec() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat { rows: 2, cols: 3, data: vec![1., 2., 3., 4., 5., 6.] };
+        let got = a.matmul(&Mat::eye(3));
+        assert_eq!(got, a);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat { rows: 2, cols: 3, data: vec![1., 2., 3., 4., 5., 6.] };
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(Mat::from_tensor(&t).to_tensor(), t);
+    }
+
+    #[test]
+    fn take_cols_rows() {
+        let a = Mat { rows: 2, cols: 3, data: vec![1., 2., 3., 4., 5., 6.] };
+        let c = a.take_cols(2);
+        assert_eq!(c.data, vec![1., 2., 4., 5.]);
+        let r = a.take_rows(1);
+        assert_eq!(r.data, vec![1., 2., 3.]);
+    }
+}

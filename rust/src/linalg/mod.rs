@@ -1,0 +1,18 @@
+//! Dense linear algebra (S2 in DESIGN.md) — no external BLAS/LAPACK.
+//!
+//! Provides exactly what the TT machinery needs: Householder QR,
+//! one-sided-Jacobi SVD (QR-preconditioned for tall matrices), and
+//! tolerance/rank truncation.  Computation is done in `f64` internally and
+//! converted at the `Tensor` (f32) boundary — TT-SVD chains many
+//! factorizations and f32 accumulation visibly degrades the reconstruction
+//! tolerance.
+
+mod mat;
+mod qr;
+mod svd;
+mod truncate;
+
+pub use mat::Mat;
+pub use qr::{qr, qr_mat};
+pub use svd::{svd, svd_mat, Svd};
+pub use truncate::{rank_for_tolerance, truncated_svd, TruncatedSvd};

@@ -1,0 +1,177 @@
+//! Householder QR factorization (thin form).
+
+use crate::error::{shape_err, Result};
+use crate::linalg::Mat;
+use crate::tensor::Tensor;
+
+/// Thin QR of an `m x n` matrix: returns `(Q: m x k, R: k x n)` with
+/// `k = min(m, n)`, `Q` having orthonormal columns and `R` upper
+/// trapezoidal (triangular when `m >= n`).  Wide inputs (`m < n`) are
+/// supported — the TT rounding sweep produces them when a chain rank
+/// exceeds the adjacent mode product.
+///
+/// Classic Householder reflections applied in place; `Q` is recovered by
+/// applying the reflectors to the first `k` columns of the identity.
+pub fn qr_mat(a: &Mat) -> Result<(Mat, Mat)> {
+    let (m, n) = (a.rows, a.cols);
+    if m == 0 || n == 0 {
+        return shape_err(format!("qr of empty {}x{}", m, n));
+    }
+    let kmax = m.min(n);
+    let mut r = a.clone();
+    // Householder vectors, stored per column (length m, zero above pivot).
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(kmax);
+
+    for k in 0..kmax {
+        // build the reflector for column k
+        let mut v = vec![0.0f64; m];
+        let mut norm_x = 0.0f64;
+        for i in k..m {
+            let x = r.at(i, k);
+            v[i] = x;
+            norm_x += x * x;
+        }
+        norm_x = norm_x.sqrt();
+        if norm_x <= f64::MIN_POSITIVE {
+            vs.push(vec![0.0; m]); // nothing to eliminate
+            continue;
+        }
+        let alpha = if v[k] >= 0.0 { -norm_x } else { norm_x };
+        v[k] -= alpha;
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 <= f64::MIN_POSITIVE {
+            vs.push(vec![0.0; m]);
+            continue;
+        }
+        // apply H = I - 2 v v^T / (v^T v) to R columns k..n
+        for j in k..n {
+            let dot: f64 = (k..m).map(|i| v[i] * r.at(i, j)).sum();
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                let cur = r.at(i, j);
+                r.set(i, j, cur - c * v[i]);
+            }
+        }
+        vs.push(v);
+    }
+
+    // Q = H_0 H_1 ... H_{kmax-1} * I_{m x kmax}: apply reflectors in reverse.
+    let mut q = Mat::zeros(m, kmax);
+    for j in 0..kmax {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..kmax).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 <= f64::MIN_POSITIVE {
+            continue;
+        }
+        for j in 0..kmax {
+            let dot: f64 = (k..m).map(|i| v[i] * q.at(i, j)).sum();
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                let cur = q.at(i, j);
+                q.set(i, j, cur - c * v[i]);
+            }
+        }
+    }
+
+    // upper-trapezoidal R: k x n, rows below the diagonal zeroed
+    let mut r_out = Mat::zeros(kmax, n);
+    for i in 0..kmax {
+        for j in i..n {
+            r_out.set(i, j, r.at(i, j));
+        }
+    }
+    Ok((q, r_out))
+}
+
+/// Thin QR over `Tensor` (f32 boundary).
+pub fn qr(a: &Tensor) -> Result<(Tensor, Tensor)> {
+    if a.ndim() != 2 {
+        return shape_err(format!("qr on shape {:?}", a.shape()));
+    }
+    let (q, r) = qr_mat(&Mat::from_tensor(a))?;
+    Ok((q.to_tensor(), r.to_tensor()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(m: usize, n: usize, seed: u64) -> Mat {
+        Mat::from_tensor(&Tensor::randn(&[m, n], 1.0, &mut Rng::new(seed)))
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        for &(m, n, seed) in &[(5, 5, 1), (10, 4, 2), (30, 30, 3), (100, 7, 4)] {
+            let a = rand_mat(m, n, seed);
+            let (q, r) = qr_mat(&a).unwrap();
+            assert_close(&q.matmul(&r), &a, 1e-10);
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let a = rand_mat(20, 6, 5);
+        let (q, _) = qr_mat(&a).unwrap();
+        let qtq = q.transpose().matmul(&q);
+        assert_close(&qtq, &Mat::eye(6), 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let a = rand_mat(9, 9, 6);
+        let (_, r) = qr_mat(&a).unwrap();
+        for i in 0..9 {
+            for j in 0..i {
+                assert!(r.at(i, j).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_handles_rank_deficiency() {
+        // two identical columns
+        let mut a = rand_mat(8, 3, 7);
+        for i in 0..8 {
+            let v = a.at(i, 0);
+            a.set(i, 1, v);
+        }
+        let (q, r) = qr_mat(&a).unwrap();
+        assert_close(&q.matmul(&r), &a, 1e-10);
+    }
+
+    #[test]
+    fn qr_wide_trapezoidal() {
+        let a = rand_mat(3, 5, 8);
+        let (q, r) = qr_mat(&a).unwrap();
+        assert_eq!((q.rows, q.cols), (3, 3));
+        assert_eq!((r.rows, r.cols), (3, 5));
+        assert_close(&q.matmul(&r), &a, 1e-10);
+        let qtq = q.transpose().matmul(&q);
+        assert_close(&qtq, &Mat::eye(3), 1e-12);
+    }
+
+    #[test]
+    fn qr_rejects_empty() {
+        assert!(qr_mat(&Mat::zeros(0, 3)).is_err());
+    }
+
+    #[test]
+    fn qr_tensor_boundary() {
+        let t = Tensor::randn(&[12, 5], 1.0, &mut Rng::new(9));
+        let (q, r) = qr(&t).unwrap();
+        assert_eq!(q.shape(), &[12, 5]);
+        assert_eq!(r.shape(), &[5, 5]);
+    }
+}

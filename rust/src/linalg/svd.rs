@@ -1,0 +1,225 @@
+//! One-sided Jacobi SVD, QR-preconditioned for tall problems.
+//!
+//! One-sided Jacobi is slow but *robust* — exactly the property the
+//! TT-SVD sweep needs (it factors hundreds of unfoldings of wildly varying
+//! aspect ratio and conditioning).  For an `m x n` input with `m >= n` the
+//! method orthogonalizes the columns by plane rotations; the singular
+//! values are the resulting column norms.  Wide inputs are handled by
+//! factoring the transpose, very tall ones by a QR step first.
+
+use crate::error::{shape_err, Result};
+use crate::linalg::qr::qr_mat;
+use crate::linalg::Mat;
+use crate::tensor::Tensor;
+
+/// SVD result: `A = U * diag(s) * Vt`, with `U: m x p`, `Vt: p x n`,
+/// `p = min(m, n)`, and `s` sorted descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f64>,
+    pub vt: Mat,
+}
+
+const MAX_SWEEPS: usize = 60;
+const JACOBI_TOL: f64 = 1e-14;
+
+/// One-sided Jacobi on a matrix with `m >= n`.  Returns (U, s, V).
+fn jacobi_tall(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    debug_assert!(m >= n);
+    // work on columns: store A column-major for cache-friendly rotations
+    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| (0..m).map(|i| a.at(i, j)).collect()).collect();
+    let mut v = Mat::eye(n);
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                if apq.abs() <= JACOBI_TOL * (app * aqq).sqrt().max(f64::MIN_POSITIVE) {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                // Jacobi rotation zeroing the (p,q) inner product
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let xp = cols[p][i];
+                    let xq = cols[q][i];
+                    cols[p][i] = c * xp - s * xq;
+                    cols[q][i] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    v.set(i, p, c * vp - s * vq);
+                    v.set(i, q, s * vp + c * vq);
+                }
+            }
+        }
+        if off <= JACOBI_TOL {
+            break;
+        }
+    }
+
+    // singular values = column norms; U = normalized columns
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols.iter().map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut s = vec![0.0f64; n];
+    let mut v_sorted = Mat::zeros(n, n);
+    for (rank, &j) in order.iter().enumerate() {
+        s[rank] = norms[j];
+        if norms[j] > f64::MIN_POSITIVE {
+            for i in 0..m {
+                u.set(i, rank, cols[j][i] / norms[j]);
+            }
+        }
+        for i in 0..n {
+            v_sorted.set(i, rank, v.at(i, j));
+        }
+    }
+    (u, s, v_sorted)
+}
+
+/// Full (thin) SVD of an arbitrary `Mat`.
+pub fn svd_mat(a: &Mat) -> Result<Svd> {
+    let (m, n) = (a.rows, a.cols);
+    if m == 0 || n == 0 {
+        return shape_err(format!("svd of empty {}x{}", m, n));
+    }
+    if m < n {
+        // A = U S Vt  <=>  At = V S Ut
+        let t = svd_mat(&a.transpose())?;
+        return Ok(Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() });
+    }
+    if m > 2 * n {
+        // QR precondition: A = Q R, svd(R) = Ur S Vt, U = Q Ur
+        let (q, r) = qr_mat(a)?;
+        let (ur, s, v) = jacobi_tall(&r);
+        let u = q.matmul(&ur);
+        return Ok(Svd { u, s, vt: v.transpose() });
+    }
+    let (u, s, v) = jacobi_tall(a);
+    Ok(Svd { u, s, vt: v.transpose() })
+}
+
+/// Thin SVD over `Tensor` (f32 boundary): returns `(U, s, Vt)`.
+pub fn svd(a: &Tensor) -> Result<(Tensor, Vec<f32>, Tensor)> {
+    if a.ndim() != 2 {
+        return shape_err(format!("svd on shape {:?}", a.shape()));
+    }
+    let r = svd_mat(&Mat::from_tensor(a))?;
+    Ok((r.u.to_tensor(), r.s.iter().map(|&x| x as f32).collect(), r.vt.to_tensor()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(m: usize, n: usize, seed: u64) -> Mat {
+        Mat::from_tensor(&Tensor::randn(&[m, n], 1.0, &mut Rng::new(seed)))
+    }
+
+    fn reconstruct(svd: &Svd) -> Mat {
+        let p = svd.s.len();
+        let mut us = svd.u.clone();
+        for i in 0..us.rows {
+            for j in 0..p {
+                let v = us.at(i, j) * svd.s[j];
+                us.set(i, j, v);
+            }
+        }
+        us.matmul(&svd.vt)
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f64) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_various_shapes() {
+        for &(m, n, seed) in &[(1, 1, 0), (6, 6, 1), (12, 5, 2), (5, 12, 3), (64, 8, 4), (3, 40, 5)] {
+            let a = rand_mat(m, n, seed);
+            let s = svd_mat(&a).unwrap();
+            assert_close(&reconstruct(&s), &a, 1e-9);
+            assert_eq!(s.s.len(), m.min(n));
+        }
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let a = rand_mat(20, 9, 6);
+        let s = svd_mat(&a).unwrap();
+        for w in s.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(s.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let a = rand_mat(15, 7, 7);
+        let s = svd_mat(&a).unwrap();
+        let utu = s.u.transpose().matmul(&s.u);
+        let vvt = s.vt.matmul(&s.vt.transpose());
+        assert_close(&utu, &Mat::eye(7), 1e-10);
+        assert_close(&vvt, &Mat::eye(7), 1e-10);
+    }
+
+    #[test]
+    fn known_singular_values() {
+        // diag(3, 2, 1) embedded in 4x3
+        let mut a = Mat::zeros(4, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 2.0);
+        a.set(2, 2, 1.0);
+        let s = svd_mat(&a).unwrap();
+        assert!((s.s[0] - 3.0).abs() < 1e-12);
+        assert!((s.s[1] - 2.0).abs() < 1e-12);
+        assert!((s.s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_rank_input_gives_zero_tail() {
+        // rank-2 matrix: outer products
+        let u = rand_mat(10, 2, 8);
+        let v = rand_mat(2, 6, 9);
+        let a = u.matmul(&v);
+        let s = svd_mat(&a).unwrap();
+        for &x in &s.s[2..] {
+            assert!(x < 1e-9, "expected zero tail, got {x}");
+        }
+        assert_close(&reconstruct(&s), &a, 1e-9);
+    }
+
+    #[test]
+    fn frobenius_norm_preserved() {
+        let a = rand_mat(9, 9, 10);
+        let s = svd_mat(&a).unwrap();
+        let norm_s: f64 = s.s.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((norm_s - a.norm()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn svd_tensor_boundary() {
+        let t = Tensor::randn(&[8, 5], 1.0, &mut Rng::new(11));
+        let (u, s, vt) = svd(&t).unwrap();
+        assert_eq!(u.shape(), &[8, 5]);
+        assert_eq!(s.len(), 5);
+        assert_eq!(vt.shape(), &[5, 5]);
+    }
+}

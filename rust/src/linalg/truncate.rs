@@ -1,0 +1,116 @@
+//! Rank / tolerance truncation of an SVD — the primitive under TT-SVD and
+//! TT-rounding (Oseledets 2011, Alg. 1 & 2).
+
+use crate::error::Result;
+use crate::linalg::svd::{svd_mat, Svd};
+use crate::linalg::Mat;
+use crate::tensor::Tensor;
+
+/// Truncated factorization `A ~= U * diag(s) * Vt` with `U: m x k`,
+/// `Vt: k x n`.
+#[derive(Clone, Debug)]
+pub struct TruncatedSvd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub vt: Tensor,
+    /// `sqrt(sum of discarded sigma^2)` — the exact Frobenius error of the
+    /// truncation, reported so TT-SVD can distribute its error budget.
+    pub discarded: f64,
+}
+
+/// Smallest rank `k` such that the discarded tail satisfies
+/// `sqrt(sum_{i>=k} s[i]^2) <= delta`.  `delta <= 0` keeps everything
+/// (up to numerically-zero values).
+pub fn rank_for_tolerance(s: &[f64], delta: f64) -> usize {
+    if s.is_empty() {
+        return 0;
+    }
+    let mut tail = 0.0f64;
+    let mut k = s.len();
+    // walk from the smallest singular value upward
+    for i in (0..s.len()).rev() {
+        let cand = tail + s[i] * s[i];
+        if cand.sqrt() <= delta {
+            tail = cand;
+            k = i;
+        } else {
+            break;
+        }
+    }
+    k.max(1) // never truncate to rank 0: keep a degenerate rank-1 factor
+}
+
+/// SVD truncated by optional rank cap and Frobenius tolerance.
+///
+/// The effective rank is `min(rank_cap, rank_for_tolerance(s, delta))` —
+/// exactly the policy the TT-SVD sweep applies at every unfolding.
+pub fn truncated_svd(a: &Tensor, rank_cap: Option<usize>, delta: f64) -> Result<TruncatedSvd> {
+    let svd: Svd = svd_mat(&Mat::from_tensor(a))?;
+    let k_tol = rank_for_tolerance(&svd.s, delta);
+    let k = rank_cap.map_or(k_tol, |c| c.min(k_tol)).max(1).min(svd.s.len());
+    let discarded: f64 = svd.s[k..].iter().map(|x| x * x).sum::<f64>().sqrt();
+    Ok(TruncatedSvd {
+        u: svd.u.take_cols(k).to_tensor(),
+        s: svd.s[..k].iter().map(|&x| x as f32).collect(),
+        vt: svd.vt.take_rows(k).to_tensor(),
+        discarded,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rank_for_tolerance_basics() {
+        let s = vec![4.0, 2.0, 1.0, 0.5];
+        assert_eq!(rank_for_tolerance(&s, 0.0), 4);
+        assert_eq!(rank_for_tolerance(&s, 0.6), 3); // drop 0.5 (tail 0.5 <= 0.6)
+        assert_eq!(rank_for_tolerance(&s, 1.2), 2); // tail sqrt(1+0.25)=1.118
+        assert_eq!(rank_for_tolerance(&s, 100.0), 1); // never 0
+        assert_eq!(rank_for_tolerance(&[], 1.0), 0);
+    }
+
+    #[test]
+    fn truncation_error_matches_discarded() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[12, 10], 1.0, &mut rng);
+        let t = truncated_svd(&a, Some(4), 0.0).unwrap();
+        // reconstruct U diag(s) Vt
+        let mut us = t.u.clone();
+        for i in 0..12 {
+            for j in 0..t.s.len() {
+                let v = us.at(&[i, j]) * t.s[j];
+                us.set(&[i, j], v);
+            }
+        }
+        let rec = matmul(&us, &t.vt).unwrap();
+        let mut diff = rec.clone();
+        diff.axpy(-1.0, &a).unwrap();
+        assert!((diff.norm() as f64 - t.discarded).abs() < 1e-4 * (1.0 + t.discarded));
+    }
+
+    #[test]
+    fn exact_when_rank_suffices() {
+        let mut rng = Rng::new(1);
+        // rank-3 matrix
+        let u = Tensor::randn(&[9, 3], 1.0, &mut rng);
+        let v = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        let a = matmul(&u, &v).unwrap();
+        let t = truncated_svd(&a, Some(3), 0.0).unwrap();
+        assert_eq!(t.s.len(), 3);
+        // a is rank 3 up to f32 rounding of the product
+        assert!(t.discarded < 1e-4, "discarded {}", t.discarded);
+    }
+
+    #[test]
+    fn rank_cap_respected() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let t = truncated_svd(&a, Some(2), 0.0).unwrap();
+        assert_eq!(t.u.shape(), &[8, 2]);
+        assert_eq!(t.vt.shape(), &[2, 8]);
+    }
+}

@@ -1,0 +1,304 @@
+//! `tensornet` — the launcher.
+//!
+//! Subcommands regenerate every experiment in the paper (DESIGN.md §5):
+//!
+//! ```text
+//! tensornet fig1       [--quick|--full]        Figure 1 sweep
+//! tensornet hashednet  [--quick]               §6.1 HashedNet comparison
+//! tensornet cifar      [--quick]               §6.2 CIFAR tails
+//! tensornet wide       [--quick]               §6.2.1 wide & shallow net
+//! tensornet table2     [--accuracy] [--quick]  Table 2 compression (+proxy)
+//! tensornet table3     [--quick]               Table 3 inference timing
+//! tensornet train      [--rank 8] [--epochs 5] train the MNIST TensorNet
+//! tensornet serve      [--artifacts DIR] ...   serve AOT artifacts
+//! tensornet inspect    [--artifacts DIR]       list artifacts + variants
+//! ```
+
+use std::time::Duration;
+use tensornet::coordinator::{BatchPolicy, PjrtExecutor, Server, ServerConfig};
+use tensornet::data::{global_contrast_normalize, synth_mnist};
+use tensornet::error::Result;
+use tensornet::experiments::*;
+use tensornet::nn::{Layer, SgdConfig, TrainConfig, Trainer};
+#[allow(unused_imports)]
+use tensornet::nn::Sequential as _;
+use tensornet::runtime::Manifest;
+use tensornet::util::bench::print_table;
+use tensornet::util::cli::Args;
+use tensornet::util::rng::Rng;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("fig1") => cmd_fig1(&args),
+        Some("hashednet") => cmd_hashednet(&args),
+        Some("cifar") => cmd_cifar(&args),
+        Some("wide") => cmd_wide(&args),
+        Some("table2") => cmd_table2(&args),
+        Some("table3") => cmd_table3(&args),
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            print_usage();
+            std::process::exit(2);
+        }
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "tensornet — Tensorizing Neural Networks (NIPS 2015) reproduction\n\n\
+         subcommands:\n\
+         \u{20}  fig1 | hashednet | cifar | wide | table2 | table3   experiments\n\
+         \u{20}  train                                               train the MNIST TensorNet\n\
+         \u{20}  serve --model tt_layer --requests 200               serve AOT artifacts\n\
+         \u{20}  inspect                                             list artifacts\n\
+         common flags: --quick, --artifacts DIR (default ./artifacts)"
+    );
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let spec = if args.flag("full") { Fig1Spec::full() } else { Fig1Spec::quick() };
+    let points = run_fig1(&spec, true)?;
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.family.clone(),
+                p.rank.to_string(),
+                p.layer1_params.to_string(),
+                format!("{:.3}", p.test_error),
+            ]
+        })
+        .collect();
+    print_table(
+        "Figure 1 — error vs params of the compressed 1024x1024 layer",
+        &["family", "rank", "layer1 params", "test error"],
+        &rows,
+    );
+    Ok(())
+}
+
+fn cmd_hashednet(args: &Args) -> Result<()> {
+    let rows = run_hashednet(!args.flag("full"), true)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                r.total_params.to_string(),
+                format!("{:.3}", r.test_error),
+                format!("{:.0}x", r.compression_vs_dense),
+            ]
+        })
+        .collect();
+    print_table(
+        "§6.1 HashedNet comparison (paper: TT8 12602 params / HashedNet 12720 @ 2.79%)",
+        &["architecture", "params", "test error", "compression"],
+        &table,
+    );
+    Ok(())
+}
+
+fn cmd_cifar(args: &Args) -> Result<()> {
+    let rows = run_cifar(!args.flag("full"), true)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| vec![r.label.clone(), r.tail_params.to_string(), format!("{:.3}", r.test_error)])
+        .collect();
+    print_table("§6.2 CIFAR tails", &["tail", "params", "test error"], &table);
+    Ok(())
+}
+
+fn cmd_wide(args: &Args) -> Result<()> {
+    let r = run_wide(!args.flag("full"), true)?;
+    print_table(
+        "§6.2.1 wide & shallow TensorNet",
+        &["hidden units", "params", "dense equiv", "error before", "error after"],
+        &[vec![
+            r.hidden_units.to_string(),
+            r.total_params.to_string(),
+            r.dense_equivalent.to_string(),
+            format!("{:.3}", r.initial_error),
+            format!("{:.3}", r.test_error),
+        ]],
+    );
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let rows = run_table2(args.flag("quick"), args.flag("accuracy"), true)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.arch.clone(),
+                format!("{:.0}", r.layer_compression),
+                format!("{:.1}", r.vgg16_compression),
+                format!("{:.1}", r.vgg19_compression),
+                if r.proxy_error.is_nan() { "-".into() } else { format!("{:.3}", r.proxy_error) },
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 2 — vgg compression (exact) + proxy error ordering",
+        &["architecture", "layer compr.", "vgg16 compr.", "vgg19 compr.", "proxy err"],
+        &table,
+    );
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    let rows = run_table3(args.flag("quick"), true)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kind.clone(),
+                r.batch.to_string(),
+                format!("{:.3}", r.mean_ms),
+                format!("{:.2} MB", r.mem_bytes as f64 / 1048576.0),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 3 — 25088x4096 inference (native hot paths)",
+        &["layer", "batch", "time", "fwd memory"],
+        &table,
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rank = args.get_usize("rank", 8)?;
+    let epochs = args.get_usize("epochs", 5)?;
+    let n_train = args.get_usize("train-samples", 4000)?;
+    let n_test = args.get_usize("test-samples", 1000)?;
+    let lr = args.get_f64("lr", 0.03)? as f32;
+    let seed = args.get_usize("seed", 7)? as u64;
+
+    println!("== MNIST TensorNet: TT(1024->1024 4^5, rank {rank}) -> ReLU -> FC(10)");
+    let mut all = synth_mnist(n_train + n_test, seed)?;
+    global_contrast_normalize(&mut all.x)?;
+    let (train, test) = all.split(n_train)?;
+    let mut rng = Rng::new(seed);
+    let mut net = mnist_tensornet(rank, &mut rng)?;
+    println!("{}", net.summary());
+    let trainer = Trainer::new(TrainConfig {
+        epochs,
+        batch_size: args.get_usize("batch", 32)?,
+        sgd: SgdConfig::with_lr(lr),
+        lr_decay: 0.9,
+        log_every: args.get_usize("log-every", 50)?,
+        seed,
+    });
+    let hist = trainer.fit(&mut net, &train, Some(&test))?;
+    for (e, (loss, err)) in hist.epochs.iter().enumerate() {
+        println!("epoch {:>2}: train loss {loss:.4}, test error {err:.3}", e + 1);
+    }
+    println!("wall time: {:.1}s", hist.wall_seconds);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "tt_layer");
+    let n_requests = args.get_usize("requests", 200)?;
+    let concurrency = args.get_usize("concurrency", 8)?;
+    let max_batch = args.get_usize("max-batch", 32)?;
+    let max_delay_ms = args.get_usize("max-delay-ms", 2)?;
+
+    println!("== serving '{model}' from {dir} ({n_requests} requests, {concurrency} clients)");
+    let cfg = ServerConfig {
+        policy: BatchPolicy {
+            max_batch,
+            max_delay: Duration::from_millis(max_delay_ms as u64),
+        },
+        ..Default::default()
+    };
+    let dir2 = dir.clone();
+    let server = Server::start(cfg, move || PjrtExecutor::new(&dir2))?;
+
+    // discover input dim from the manifest
+    let manifest = Manifest::load(&dir)?;
+    let spec = manifest
+        .artifacts
+        .iter()
+        .find(|a| a.name.starts_with(&model))
+        .ok_or_else(|| tensornet::error::Error::Config(format!("no artifacts match '{model}'")))?;
+    let dim = spec.runtime_inputs()[0].shape[1];
+
+    let server = std::sync::Arc::new(server);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..concurrency {
+            let server = server.clone();
+            let model = model.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(c as u64);
+                for _ in 0..n_requests / concurrency {
+                    let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(1.0)).collect();
+                    let _ = server.infer(&model, x);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!("completed:  {}", stats.completed.get());
+    println!("errors:     {}", stats.errors.get());
+    println!("throughput: {:.1} req/s (wall {:.2}s)", stats.completed.get() as f64 / wall, wall);
+    println!("mean batch: {:.2}", stats.mean_batch_size());
+    println!("e2e:   {}", stats.e2e.summary());
+    println!("exec:  {}", stats.exec.summary());
+    println!("queue: {}", stats.queue.summary());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts in {dir} (seed {}):", manifest.seed);
+    for a in &manifest.artifacts {
+        let runtime: Vec<String> = a
+            .runtime_inputs()
+            .iter()
+            .map(|i| format!("{}{:?}", i.name, i.shape))
+            .collect();
+        println!(
+            "  {:<24} inputs: {:<3} runtime: {:<28} outputs: {:?}",
+            a.name,
+            a.inputs.len(),
+            runtime.join(", "),
+            a.outputs.iter().map(|o| format!("{:?}", o.shape)).collect::<Vec<_>>()
+        );
+    }
+    for (name, g) in &manifest.weight_groups {
+        let total: usize = g.layout.iter().map(|(_, _, _, l)| l).sum();
+        println!("  weights '{name}': {} tensors, {} params", g.layout.len(), total);
+    }
+    Ok(())
+}

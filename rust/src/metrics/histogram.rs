@@ -1,0 +1,155 @@
+//! Log-bucketed latency histogram with percentile queries.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Buckets spaced by powers of `2^(1/4)` from 1µs to ~1100s: 124 buckets,
+/// ≤ ~19% relative quantization error — plenty for latency reporting.
+const BUCKETS: usize = 124;
+const BASE_US: f64 = 1.0;
+
+/// Concurrent histogram of durations.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn bucket_of(us: f64) -> usize {
+    if us <= BASE_US {
+        return 0;
+    }
+    let b = (us / BASE_US).log2() * 4.0;
+    (b as usize).min(BUCKETS - 1)
+}
+
+fn bucket_upper_us(i: usize) -> f64 {
+    BASE_US * 2f64.powf((i + 1) as f64 / 4.0)
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.max_us.fetch_max(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64
+    }
+
+    /// Approximate quantile (`q` in [0,1]) in microseconds.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target.max(1) {
+                return bucket_upper_us(i);
+            }
+        }
+        bucket_upper_us(BUCKETS - 1)
+    }
+
+    /// One-line "p50/p95/p99/max (n)" summary in milliseconds.
+    pub fn summary(&self) -> String {
+        format!(
+            "p50 {:.3}ms  p95 {:.3}ms  p99 {:.3}ms  max {:.3}ms  mean {:.3}ms  (n={})",
+            self.quantile_us(0.50) / 1e3,
+            self.quantile_us(0.95) / 1e3,
+            self.quantile_us(0.99) / 1e3,
+            self.max_us() / 1e3,
+            self.mean_us() / 1e3,
+            self.count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_ordered_and_rough() {
+        let h = Histogram::new();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // ~19% bucket error allowed
+        assert!((40_000.0..70_000.0).contains(&p50), "p50 {p50}");
+        assert!((80_000.0..130_000.0).contains(&p99), "p99 {p99}");
+        assert!((h.mean_us() - 50_500.0).abs() < 2_000.0);
+    }
+
+    #[test]
+    fn concurrent_records() {
+        let h = std::sync::Arc::new(Histogram::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        h.record(Duration::from_micros(100));
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn extreme_values_clamp() {
+        let h = Histogram::new();
+        h.record(Duration::from_nanos(1));
+        h.record(Duration::from_secs(10_000));
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_us(1.0) > 0.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Counters and throughput meters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Throughput meter: events per second since construction/reset.
+#[derive(Debug)]
+pub struct Meter {
+    count: Counter,
+    started: Instant,
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Meter { count: Counter::new(), started: Instant::now() }
+    }
+
+    pub fn mark(&self, n: u64) {
+        self.count.add(n);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.count.get() as f64 / secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_adds() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn meter_rate_positive() {
+        let m = Meter::new();
+        m.mark(100);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(m.per_second() > 0.0);
+        assert_eq!(m.count(), 100);
+    }
+}

@@ -1,0 +1,9 @@
+//! Serving metrics (S10 in DESIGN.md): latency histograms with
+//! p50/p95/p99, counters and throughput meters.  Lock-light: histograms
+//! use atomic buckets.
+
+mod histogram;
+mod meter;
+
+pub use histogram::Histogram;
+pub use meter::{Counter, Meter};

@@ -1,0 +1,157 @@
+//! Elementwise nonlinearities.
+
+use crate::error::{Error, Result};
+use crate::nn::layer::Layer;
+use crate::tensor::Tensor;
+
+/// Rectified linear unit.
+#[derive(Default)]
+pub struct Relu {
+    mask: Option<Vec<bool>>,
+}
+
+impl Relu {
+    pub fn new() -> Self {
+        Relu::default()
+    }
+}
+
+impl Layer for Relu {
+    fn name(&self) -> String {
+        "ReLU".into()
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        let mut y = x.clone();
+        if train {
+            let mut mask = vec![false; x.numel()];
+            for (v, m) in y.data_mut().iter_mut().zip(mask.iter_mut()) {
+                if *v > 0.0 {
+                    *m = true;
+                } else {
+                    *v = 0.0;
+                }
+            }
+            self.mask = Some(mask);
+        } else {
+            for v in y.data_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        let mask = self
+            .mask
+            .take()
+            .ok_or_else(|| Error::Numerical("relu backward without forward".into()))?;
+        if mask.len() != grad_out.numel() {
+            return Err(Error::Shape("relu grad shape mismatch".into()));
+        }
+        let mut g = grad_out.clone();
+        for (v, m) in g.data_mut().iter_mut().zip(&mask) {
+            if !*m {
+                *v = 0.0;
+            }
+        }
+        Ok(g)
+    }
+}
+
+/// Logistic sigmoid (used by the wide-and-shallow §6.2.1 discussion).
+#[derive(Default)]
+pub struct Sigmoid {
+    cached_y: Option<Tensor>,
+}
+
+impl Sigmoid {
+    pub fn new() -> Self {
+        Sigmoid::default()
+    }
+}
+
+impl Layer for Sigmoid {
+    fn name(&self) -> String {
+        "Sigmoid".into()
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        let mut y = x.clone();
+        for v in y.data_mut() {
+            *v = 1.0 / (1.0 + (-*v).exp());
+        }
+        if train {
+            self.cached_y = Some(y.clone());
+        }
+        Ok(y)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        let y = self
+            .cached_y
+            .take()
+            .ok_or_else(|| Error::Numerical("sigmoid backward without forward".into()))?;
+        let mut g = grad_out.clone();
+        for (gv, &yv) in g.data_mut().iter_mut().zip(y.data()) {
+            *gv *= yv * (1.0 - yv);
+        }
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps_and_masks() {
+        let mut r = Relu::new();
+        let x = Tensor::from_vec(&[1, 4], vec![-1.0, 0.5, -0.2, 2.0]).unwrap();
+        let y = r.forward(&x, true).unwrap();
+        assert_eq!(y.data(), &[0.0, 0.5, 0.0, 2.0]);
+        let g = r.backward(&Tensor::filled(&[1, 4], 1.0)).unwrap();
+        assert_eq!(g.data(), &[0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn relu_inference_does_not_cache() {
+        let mut r = Relu::new();
+        let _ = r.forward(&Tensor::zeros(&[1, 2]), false).unwrap();
+        assert!(r.backward(&Tensor::zeros(&[1, 2])).is_err());
+    }
+
+    #[test]
+    fn sigmoid_values_and_grad() {
+        let mut s = Sigmoid::new();
+        let x = Tensor::from_vec(&[1, 2], vec![0.0, 100.0]).unwrap();
+        let y = s.forward(&x, true).unwrap();
+        assert!((y.data()[0] - 0.5).abs() < 1e-6);
+        assert!((y.data()[1] - 1.0).abs() < 1e-6);
+        let g = s.backward(&Tensor::filled(&[1, 2], 1.0)).unwrap();
+        assert!((g.data()[0] - 0.25).abs() < 1e-6); // σ'(0) = 1/4
+        assert!(g.data()[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn sigmoid_grad_matches_finite_diff() {
+        let mut s = Sigmoid::new();
+        let x = Tensor::from_vec(&[1, 3], vec![-0.7, 0.3, 1.9]).unwrap();
+        let _ = s.forward(&x, true).unwrap();
+        let g = s.backward(&Tensor::filled(&[1, 3], 1.0)).unwrap();
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let mut s2 = Sigmoid::new();
+            let yp: f32 = s2.forward(&xp, false).unwrap().data().iter().sum();
+            let ym: f32 = s2.forward(&xm, false).unwrap().data().iter().sum();
+            let want = (yp - ym) / (2.0 * eps);
+            assert!((g.data()[i] - want).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Explicit fully-connected layer — the paper's FC baseline.
+
+use crate::error::{shape_err, Result};
+use crate::nn::layer::Layer;
+use crate::nn::optim::{sgd_update, SgdConfig};
+use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+use crate::util::rng::Rng;
+
+/// `y = x Wᵀ + b` with `W (out, in)`, `b (out,)`, batched over rows of x.
+pub struct Dense {
+    w: Tensor,
+    b: Tensor,
+    grad_w: Tensor,
+    grad_b: Tensor,
+    vel_w: Tensor,
+    vel_b: Tensor,
+    cached_x: Option<Tensor>,
+}
+
+impl Dense {
+    /// He-initialized dense layer.
+    pub fn new(n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / n_in as f32).sqrt();
+        Dense {
+            w: Tensor::randn(&[n_out, n_in], std, rng),
+            b: Tensor::zeros(&[n_out]),
+            grad_w: Tensor::zeros(&[n_out, n_in]),
+            grad_b: Tensor::zeros(&[n_out]),
+            vel_w: Tensor::zeros(&[n_out, n_in]),
+            vel_b: Tensor::zeros(&[n_out]),
+            cached_x: None,
+        }
+    }
+
+    /// Wrap explicit weights (used to compare against AOT artifacts and to
+    /// build MR baselines from truncated factors).
+    pub fn from_weights(w: Tensor, b: Tensor) -> Result<Self> {
+        if w.ndim() != 2 || b.ndim() != 1 || b.shape()[0] != w.shape()[0] {
+            return shape_err(format!("dense weights {:?} / bias {:?}", w.shape(), b.shape()));
+        }
+        let (o, i) = (w.shape()[0], w.shape()[1]);
+        Ok(Dense {
+            grad_w: Tensor::zeros(&[o, i]),
+            grad_b: Tensor::zeros(&[o]),
+            vel_w: Tensor::zeros(&[o, i]),
+            vel_b: Tensor::zeros(&[o]),
+            w,
+            b,
+            cached_x: None,
+        })
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.w.shape()[1]
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.w.shape()[0]
+    }
+
+    pub fn weights(&self) -> (&Tensor, &Tensor) {
+        (&self.w, &self.b)
+    }
+}
+
+impl Layer for Dense {
+    fn name(&self) -> String {
+        format!("Dense({}x{})", self.n_out(), self.n_in())
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        if x.ndim() != 2 || x.shape()[1] != self.n_in() {
+            return shape_err(format!("dense fwd: {:?}, want (B, {})", x.shape(), self.n_in()));
+        }
+        let mut y = matmul_bt(x, &self.w)?; // (B, out)
+        let b = self.b.data();
+        for row in y.data_mut().chunks_mut(b.len()) {
+            for (o, &bb) in row.iter_mut().zip(b) {
+                *o += bb;
+            }
+        }
+        if train {
+            self.cached_x = Some(x.clone());
+        }
+        Ok(y)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        let x = self
+            .cached_x
+            .take()
+            .ok_or_else(|| crate::error::Error::Numerical("dense backward without forward".into()))?;
+        // dW += dyᵀ x ; db += column sums of dy ; dx = dy W
+        self.grad_w.axpy(1.0, &matmul_at(grad_out, &x)?)?;
+        let cols = grad_out.shape()[1];
+        let gb = self.grad_b.data_mut();
+        for row in grad_out.data().chunks(cols) {
+            for (g, &v) in gb.iter_mut().zip(row) {
+                *g += v;
+            }
+        }
+        matmul(grad_out, &self.w)
+    }
+
+    fn num_params(&self) -> usize {
+        self.w.numel() + self.b.numel()
+    }
+
+    fn sgd_step(&mut self, cfg: &SgdConfig) -> Result<()> {
+        sgd_update(&mut self.w, &self.grad_w, &mut self.vel_w, cfg);
+        sgd_update(&mut self.b, &self.grad_b, &mut self.vel_b, cfg);
+        self.zero_grads();
+        Ok(())
+    }
+
+    fn zero_grads(&mut self) {
+        self.grad_w.data_mut().fill(0.0);
+        self.grad_b.data_mut().fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numerical_grad_check(layer: &mut Dense, x: &Tensor) {
+        // finite differences on a scalar loss L = sum(y)
+        let y = layer.forward(x, true).unwrap();
+        let ones = Tensor::filled(y.shape(), 1.0);
+        let dx = layer.backward(&ones).unwrap();
+        let eps = 1e-3f32;
+        // check a few input coordinates
+        for &idx in &[0usize, 3, 7] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let yp: f32 = layer.forward(&xp, false).unwrap().data().iter().sum();
+            let ym: f32 = layer.forward(&xm, false).unwrap().data().iter().sum();
+            let want = (yp - ym) / (2.0 * eps);
+            let got = dx.data()[idx];
+            assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "{got} vs {want}");
+        }
+        // check a few weight coordinates via grad_w
+        let mut l2 = Dense::from_weights(layer.w.clone(), layer.b.clone()).unwrap();
+        let _ = l2.forward(x, true).unwrap();
+        let _ = l2.backward(&ones).unwrap();
+        for &idx in &[0usize, 5, 11] {
+            let mut wp = layer.w.clone();
+            wp.data_mut()[idx] += eps;
+            let mut lp = Dense::from_weights(wp, layer.b.clone()).unwrap();
+            let yp: f32 = lp.forward(x, false).unwrap().data().iter().sum();
+            let mut wm = layer.w.clone();
+            wm.data_mut()[idx] -= eps;
+            let mut lm = Dense::from_weights(wm, layer.b.clone()).unwrap();
+            let ym: f32 = lm.forward(x, false).unwrap().data().iter().sum();
+            let want = (yp - ym) / (2.0 * eps);
+            let got = l2.grad_w.data()[idx];
+            assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "w[{idx}]: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn forward_shape_and_bias() {
+        let mut rng = Rng::new(1);
+        let mut l = Dense::new(4, 3, &mut rng);
+        l.b = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let y = l.forward(&Tensor::zeros(&[2, 4]), false).unwrap();
+        assert_eq!(y.shape(), &[2, 3]);
+        assert_eq!(y.row(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Rng::new(2);
+        let mut l = Dense::new(6, 4, &mut rng);
+        let x = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        numerical_grad_check(&mut l, &x);
+    }
+
+    #[test]
+    fn backward_without_forward_errors() {
+        let mut rng = Rng::new(3);
+        let mut l = Dense::new(2, 2, &mut rng);
+        assert!(l.backward(&Tensor::zeros(&[1, 2])).is_err());
+    }
+
+    #[test]
+    fn sgd_step_changes_params_and_clears_grads() {
+        let mut rng = Rng::new(4);
+        let mut l = Dense::new(3, 2, &mut rng);
+        let x = Tensor::randn(&[4, 3], 1.0, &mut rng);
+        let y = l.forward(&x, true).unwrap();
+        let _ = l.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        let before = l.w.clone();
+        l.sgd_step(&SgdConfig::default()).unwrap();
+        assert_ne!(before, l.w);
+        assert!(l.grad_w.data().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn num_params() {
+        let mut rng = Rng::new(5);
+        let l = Dense::new(10, 7, &mut rng);
+        assert_eq!(l.num_params(), 70 + 7);
+    }
+}

@@ -1,0 +1,72 @@
+//! Frozen layer adapter — forward/backward flow through, parameters never
+//! update.  Used for the paper's §6.2 setup ("we fix the convolutional
+//! part of the network and substitute the fully-connected part"), where a
+//! fixed feature extractor feeds the trainable TT/FC tail.
+
+use crate::error::Result;
+use crate::nn::layer::Layer;
+use crate::nn::optim::SgdConfig;
+use crate::tensor::Tensor;
+
+/// Wraps any layer, disabling its parameter updates.
+pub struct Frozen<L: Layer>(pub L);
+
+impl<L: Layer> Layer for Frozen<L> {
+    fn name(&self) -> String {
+        format!("Frozen[{}]", self.0.name())
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        self.0.forward(x, train)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        let g = self.0.backward(grad_out)?;
+        self.0.zero_grads(); // discard parameter gradients
+        Ok(g)
+    }
+
+    fn num_params(&self) -> usize {
+        0 // not trainable, not counted against the compression budget
+    }
+
+    fn sgd_step(&mut self, _cfg: &SgdConfig) -> Result<()> {
+        Ok(())
+    }
+
+    fn zero_grads(&mut self) {
+        self.0.zero_grads();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Dense;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn frozen_never_moves() {
+        let mut rng = Rng::new(1);
+        let inner = Dense::new(4, 3, &mut rng);
+        let snapshot = inner.weights().0.clone();
+        let mut f = Frozen(inner);
+        let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        let y = f.forward(&x, true).unwrap();
+        let _ = f.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        f.sgd_step(&SgdConfig::default()).unwrap();
+        assert_eq!(f.0.weights().0, &snapshot);
+        assert_eq!(f.num_params(), 0);
+    }
+
+    #[test]
+    fn gradient_still_flows_through() {
+        let mut rng = Rng::new(2);
+        let mut f = Frozen(Dense::new(4, 3, &mut rng));
+        let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        let y = f.forward(&x, true).unwrap();
+        let dx = f.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        assert_eq!(dx.shape(), x.shape());
+        assert!(dx.max_abs() > 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! The layer trait: forward with activation caching, backward, SGD update.
+
+use crate::error::Result;
+use crate::nn::optim::SgdConfig;
+use crate::tensor::Tensor;
+
+/// A differentiable network layer.
+///
+/// Contract: `forward(x, train=true)` caches whatever `backward` needs;
+/// `backward(grad_out)` consumes that cache and returns `grad_in`, leaving
+/// parameter gradients stored in the layer until `sgd_step` / `zero_grads`.
+pub trait Layer: Send {
+    /// Human-readable layer description (used in summaries).
+    fn name(&self) -> String;
+
+    /// Compute the layer output.  With `train = false` no state is cached.
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor>;
+
+    /// Back-propagate: given `dL/d(output)` return `dL/d(input)` and
+    /// accumulate parameter gradients.
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor>;
+
+    /// Number of learnable parameters.
+    fn num_params(&self) -> usize {
+        0
+    }
+
+    /// Apply one SGD-with-momentum step to the layer's parameters using
+    /// the gradients accumulated by `backward`, then clear them.
+    fn sgd_step(&mut self, _cfg: &SgdConfig) -> Result<()> {
+        Ok(())
+    }
+
+    /// Drop any accumulated gradients.
+    fn zero_grads(&mut self) {}
+}

@@ -1,0 +1,137 @@
+//! Softmax cross-entropy (fused loss + gradient) and accuracy metrics.
+
+use crate::error::{shape_err, Result};
+use crate::tensor::Tensor;
+
+/// Fused softmax + cross-entropy over integer class labels.
+pub struct SoftmaxXent;
+
+impl SoftmaxXent {
+    /// Returns `(mean_loss, dL/dlogits)` for logits `(B, C)` and labels
+    /// `(B,)`.  Numerically stable (max-subtracted log-sum-exp); the
+    /// gradient is the classic `softmax(p) - onehot(y)` scaled by `1/B`.
+    pub fn loss_and_grad(logits: &Tensor, labels: &[usize]) -> Result<(f32, Tensor)> {
+        if logits.ndim() != 2 || logits.shape()[0] != labels.len() {
+            return shape_err(format!(
+                "xent: logits {:?} vs {} labels",
+                logits.shape(),
+                labels.len()
+            ));
+        }
+        let (b, c) = (logits.shape()[0], logits.shape()[1]);
+        if let Some(&bad) = labels.iter().find(|&&y| y >= c) {
+            return shape_err(format!("label {bad} out of range for {c} classes"));
+        }
+        let mut grad = logits.clone();
+        let mut total = 0.0f64;
+        let inv_b = 1.0 / b as f32;
+        for (i, row) in grad.data_mut().chunks_mut(c).enumerate() {
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            let y = labels[i];
+            total += -((row[y] / sum).max(f32::MIN_POSITIVE).ln() as f64);
+            for v in row.iter_mut() {
+                *v /= sum; // softmax
+            }
+            row[y] -= 1.0;
+            for v in row.iter_mut() {
+                *v *= inv_b;
+            }
+        }
+        Ok(((total / b as f64) as f32, grad))
+    }
+
+    /// Mean loss only (evaluation).
+    pub fn loss(logits: &Tensor, labels: &[usize]) -> Result<f32> {
+        Ok(Self::loss_and_grad(logits, labels)?.0)
+    }
+}
+
+/// Fraction of rows whose argmax equals the label.
+pub fn accuracy(logits: &Tensor, labels: &[usize]) -> Result<f32> {
+    if logits.ndim() != 2 || logits.shape()[0] != labels.len() {
+        return shape_err(format!("accuracy: {:?} vs {}", logits.shape(), labels.len()));
+    }
+    let c = logits.shape()[1];
+    let mut hits = 0usize;
+    for (row, &y) in logits.data().chunks(c).zip(labels) {
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == y {
+            hits += 1;
+        }
+    }
+    Ok(hits as f32 / labels.len() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_matches_manual() {
+        let logits = Tensor::from_vec(&[2, 3], vec![2.0, 0.5, -1.0, 0.0, 0.0, 0.0]).unwrap();
+        let labels = [0usize, 2];
+        let (loss, _) = SoftmaxXent::loss_and_grad(&logits, &labels).unwrap();
+        let p0 = (2.0f64).exp() / ((2.0f64).exp() + (0.5f64).exp() + (-1.0f64).exp());
+        let want = (-(p0.ln()) - (1.0f64 / 3.0).ln()) / 2.0;
+        assert!((loss as f64 - want).abs() < 1e-5, "{loss} vs {want}");
+    }
+
+    #[test]
+    fn grad_rows_sum_to_zero() {
+        let logits = Tensor::from_vec(&[2, 4], vec![1., 2., 3., 4., -1., 0., 1., 2.]).unwrap();
+        let (_, g) = SoftmaxXent::loss_and_grad(&logits, &[1, 3]).unwrap();
+        for row in g.data().chunks(4) {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let logits = Tensor::from_vec(&[1, 3], vec![0.3, -0.8, 1.2]).unwrap();
+        let labels = [2usize];
+        let (_, g) = SoftmaxXent::loss_and_grad(&logits, &labels).unwrap();
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            let mut lp = logits.clone();
+            lp.data_mut()[i] += eps;
+            let mut lm = logits.clone();
+            lm.data_mut()[i] -= eps;
+            let want = (SoftmaxXent::loss(&lp, &labels).unwrap()
+                - SoftmaxXent::loss(&lm, &labels).unwrap())
+                / (2.0 * eps);
+            assert!((g.data()[i] - want).abs() < 1e-3, "{} vs {}", g.data()[i], want);
+        }
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits =
+            Tensor::from_vec(&[3, 2], vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]).unwrap();
+        assert!((accuracy(&logits, &[0, 1, 1]).unwrap() - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn label_out_of_range() {
+        let logits = Tensor::zeros(&[1, 3]);
+        assert!(SoftmaxXent::loss_and_grad(&logits, &[3]).is_err());
+    }
+
+    #[test]
+    fn extreme_logits_stable() {
+        let logits = Tensor::from_vec(&[1, 2], vec![1000.0, -1000.0]).unwrap();
+        let (loss, g) = SoftmaxXent::loss_and_grad(&logits, &[0]).unwrap();
+        assert!(loss.is_finite());
+        assert!(g.data().iter().all(|x| x.is_finite()));
+    }
+}

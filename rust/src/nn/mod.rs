@@ -1,0 +1,37 @@
+//! Native training engine (S4/S5 in DESIGN.md) — the MatConvNet+TensorNet
+//! replacement that reproduces the paper's training experiments without
+//! python anywhere near the loop.
+//!
+//! * [`Layer`] — forward/backward/update trait.
+//! * [`Dense`] — explicit fully-connected layer (the FC baseline).
+//! * [`TtLinear`] — the paper's §4 TT-layer with the §5 core-gradient
+//!   algorithm: `∂L/∂W (M x N)` is never materialized; gradients are
+//!   assembled per core by reversing the contraction sweep, at
+//!   `O(d² r² m max{M,N})`-style cost and `O(r max{M,N})` extra memory
+//!   per cached sweep state.
+//! * [`low_rank_pair`] — the matrix-rank (MR) compression baseline of
+//!   Fig. 1 / Table 2 (two stacked dense layers `1024 x r`, `r x 1024`).
+//! * [`Relu`] / [`Sigmoid`], [`SoftmaxXent`], [`Sgd`] (momentum 0.9 +
+//!   L2 5e-4 — §6.4), [`Sequential`], [`Trainer`].
+
+mod activations;
+mod dense;
+mod frozen;
+mod layer;
+mod loss;
+mod lowrank;
+mod optim;
+mod sequential;
+mod trainer;
+mod ttlayer;
+
+pub use activations::{Relu, Sigmoid};
+pub use dense::Dense;
+pub use frozen::Frozen;
+pub use layer::Layer;
+pub use loss::{accuracy, SoftmaxXent};
+pub use lowrank::low_rank_pair;
+pub use optim::{sgd_update, SgdConfig};
+pub use sequential::Sequential;
+pub use trainer::{predict, EvalReport, TrainConfig, TrainHistory, Trainer};
+pub use ttlayer::TtLinear;

@@ -1,0 +1,146 @@
+//! Layer composition.
+
+use crate::error::Result;
+use crate::nn::layer::Layer;
+use crate::nn::optim::SgdConfig;
+use crate::tensor::Tensor;
+
+/// A straight-line stack of layers.
+pub struct Sequential {
+    layers: Vec<Box<dyn Layer>>,
+}
+
+impl Sequential {
+    pub fn new(layers: Vec<Box<dyn Layer>>) -> Self {
+        Sequential { layers }
+    }
+
+    pub fn push(&mut self, layer: Box<dyn Layer>) {
+        self.layers.push(layer);
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn layers(&self) -> &[Box<dyn Layer>] {
+        &self.layers
+    }
+
+    /// One-line-per-layer structure summary with parameter counts.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for l in &self.layers {
+            s.push_str(&format!("{:<60} {:>12} params\n", l.name(), l.num_params()));
+        }
+        s.push_str(&format!("{:<60} {:>12} params\n", "TOTAL", self.num_params()));
+        s
+    }
+}
+
+impl Layer for Sequential {
+    fn name(&self) -> String {
+        format!("Sequential[{}]", self.layers.iter().map(|l| l.name()).collect::<Vec<_>>().join(" -> "))
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        let mut cur = x.clone();
+        for l in &mut self.layers {
+            cur = l.forward(&cur, train)?;
+        }
+        Ok(cur)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        let mut g = grad_out.clone();
+        for l in self.layers.iter_mut().rev() {
+            g = l.backward(&g)?;
+        }
+        Ok(g)
+    }
+
+    fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    fn sgd_step(&mut self, cfg: &SgdConfig) -> Result<()> {
+        for l in &mut self.layers {
+            l.sgd_step(cfg)?;
+        }
+        Ok(())
+    }
+
+    fn zero_grads(&mut self) {
+        for l in &mut self.layers {
+            l.zero_grads();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Dense, Relu};
+    use crate::util::rng::Rng;
+
+    fn mlp(seed: u64) -> Sequential {
+        let mut rng = Rng::new(seed);
+        Sequential::new(vec![
+            Box::new(Dense::new(6, 8, &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(8, 3, &mut rng)),
+        ])
+    }
+
+    #[test]
+    fn forward_chains_shapes() {
+        let mut net = mlp(1);
+        let y = net.forward(&Tensor::zeros(&[5, 6]), false).unwrap();
+        assert_eq!(y.shape(), &[5, 3]);
+    }
+
+    #[test]
+    fn backward_returns_input_grad() {
+        let mut net = mlp(2);
+        let x = Tensor::randn(&[2, 6], 1.0, &mut Rng::new(3));
+        let y = net.forward(&x, true).unwrap();
+        let dx = net.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        assert_eq!(dx.shape(), x.shape());
+    }
+
+    #[test]
+    fn end_to_end_finite_difference() {
+        let mut net = mlp(4);
+        let x = Tensor::randn(&[2, 6], 1.0, &mut Rng::new(5));
+        let y = net.forward(&x, true).unwrap();
+        let dx = net.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        let eps = 1e-2f32;
+        for &i in &[0usize, 5, 11] {
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let yp: f32 = net.forward(&xp, false).unwrap().data().iter().sum();
+            let ym: f32 = net.forward(&xm, false).unwrap().data().iter().sum();
+            let want = (yp - ym) / (2.0 * eps);
+            assert!((dx.data()[i] - want).abs() < 2e-2 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn num_params_sums() {
+        let net = mlp(6);
+        assert_eq!(net.num_params(), (6 * 8 + 8) + (8 * 3 + 3));
+    }
+
+    #[test]
+    fn summary_mentions_layers() {
+        let s = mlp(7).summary();
+        assert!(s.contains("Dense(8x6)"));
+        assert!(s.contains("TOTAL"));
+    }
+}

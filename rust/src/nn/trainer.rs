@@ -1,0 +1,230 @@
+//! Training loop: epochs of shuffled minibatches, SGD with momentum,
+//! loss-curve recording and held-out evaluation.
+
+use crate::data::{BatchIter, Dataset};
+use crate::error::Result;
+use crate::nn::layer::Layer;
+use crate::nn::loss::{accuracy, SoftmaxXent};
+use crate::nn::optim::SgdConfig;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Training hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub sgd: SgdConfig,
+    /// multiply lr by this factor at each epoch boundary (1.0 = constant)
+    pub lr_decay: f32,
+    /// log every n steps (0 = silent)
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 10,
+            batch_size: 32,
+            sgd: SgdConfig::default(),
+            lr_decay: 0.9,
+            log_every: 0,
+            seed: 7,
+        }
+    }
+}
+
+/// Loss curve + timing of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainHistory {
+    /// `(global_step, minibatch loss)`
+    pub losses: Vec<(usize, f32)>,
+    /// per-epoch `(train_loss_mean, test_error)` when eval data is given
+    pub epochs: Vec<(f32, f32)>,
+    pub wall_seconds: f64,
+}
+
+impl TrainHistory {
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN)
+    }
+
+    /// Mean loss over the first / last `k` recorded steps — used by
+    /// convergence assertions.
+    pub fn mean_head_tail(&self, k: usize) -> (f32, f32) {
+        let k = k.min(self.losses.len()).max(1);
+        let head: f32 =
+            self.losses[..k].iter().map(|&(_, l)| l).sum::<f32>() / k as f32;
+        let tail: f32 = self.losses[self.losses.len() - k..]
+            .iter()
+            .map(|&(_, l)| l)
+            .sum::<f32>()
+            / k as f32;
+        (head, tail)
+    }
+}
+
+/// Evaluation summary.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalReport {
+    pub loss: f32,
+    pub error: f32, // 1 - accuracy, the paper's metric
+    pub n: usize,
+}
+
+/// Drives a [`Layer`] (usually a [`crate::nn::Sequential`]) through
+/// softmax-CE training on a [`Dataset`].
+pub struct Trainer {
+    pub cfg: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Self {
+        Trainer { cfg }
+    }
+
+    /// Train; if `test` is given, evaluate at each epoch end.
+    pub fn fit(
+        &self,
+        model: &mut dyn Layer,
+        train: &Dataset,
+        test: Option<&Dataset>,
+    ) -> Result<TrainHistory> {
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut history = TrainHistory::default();
+        let mut sgd = self.cfg.sgd;
+        let t0 = Instant::now();
+        let mut step = 0usize;
+        for _epoch in 0..self.cfg.epochs {
+            let mut epoch_loss = 0.0f64;
+            let mut batches = 0usize;
+            for (x, labels) in BatchIter::new(train, self.cfg.batch_size, &mut rng, false) {
+                let logits = model.forward(&x, true)?;
+                let (loss, grad) = SoftmaxXent::loss_and_grad(&logits, &labels)?;
+                model.backward(&grad)?;
+                model.sgd_step(&sgd)?;
+                history.losses.push((step, loss));
+                epoch_loss += loss as f64;
+                batches += 1;
+                step += 1;
+                if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                    println!("step {step:>6}  loss {loss:.4}");
+                }
+            }
+            let test_err = match test {
+                Some(t) => self.evaluate(model, t)?.error,
+                None => f32::NAN,
+            };
+            history
+                .epochs
+                .push(((epoch_loss / batches.max(1) as f64) as f32, test_err));
+            sgd.lr *= self.cfg.lr_decay;
+        }
+        history.wall_seconds = t0.elapsed().as_secs_f64();
+        Ok(history)
+    }
+
+    /// Loss + error on a dataset (inference mode, batched).
+    pub fn evaluate(&self, model: &mut dyn Layer, data: &Dataset) -> Result<EvalReport> {
+        let mut total_loss = 0.0f64;
+        let mut total_acc = 0.0f64;
+        let mut n = 0usize;
+        for (x, labels) in BatchIter::sequential(data, self.cfg.batch_size.max(64)) {
+            let logits = model.forward(&x, false)?;
+            let loss = SoftmaxXent::loss(&logits, &labels)?;
+            let acc = accuracy(&logits, &labels)?;
+            let b = labels.len();
+            total_loss += loss as f64 * b as f64;
+            total_acc += acc as f64 * b as f64;
+            n += b;
+        }
+        Ok(EvalReport {
+            loss: (total_loss / n.max(1) as f64) as f32,
+            error: 1.0 - (total_acc / n.max(1) as f64) as f32,
+            n,
+        })
+    }
+}
+
+/// Convenience: logits of a model over a full dataset (batched, eval mode).
+pub fn predict(model: &mut dyn Layer, data: &Dataset, batch: usize) -> Result<Tensor> {
+    let mut parts: Vec<Tensor> = Vec::new();
+    for (x, _) in BatchIter::sequential(data, batch) {
+        parts.push(model.forward(&x, false)?);
+    }
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    Tensor::vstack(&refs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Dense, Relu, Sequential};
+    use crate::tensor::Tensor;
+
+    /// Tiny 2-class linearly-separable task.
+    fn toy_data(n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(n * 4);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % 2;
+            let sign = if class == 0 { 1.0f32 } else { -1.0 };
+            for j in 0..4 {
+                let base = if j < 2 { sign } else { -sign };
+                data.push(base + rng.normal_f32(0.3));
+            }
+            labels.push(class);
+        }
+        Dataset::new(Tensor::from_vec(&[n, 4], data).unwrap(), labels, 2).unwrap()
+    }
+
+    fn toy_model(seed: u64) -> Sequential {
+        let mut rng = Rng::new(seed);
+        Sequential::new(vec![
+            Box::new(Dense::new(4, 16, &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(16, 2, &mut rng)),
+        ])
+    }
+
+    #[test]
+    fn training_reduces_loss_and_error() {
+        let train = toy_data(256, 1);
+        let test = toy_data(128, 2);
+        let mut model = toy_model(3);
+        let trainer = Trainer::new(TrainConfig {
+            epochs: 5,
+            batch_size: 16,
+            sgd: SgdConfig::with_lr(0.05),
+            ..Default::default()
+        });
+        let before = trainer.evaluate(&mut model, &test).unwrap();
+        let hist = trainer.fit(&mut model, &train, Some(&test)).unwrap();
+        let after = trainer.evaluate(&mut model, &test).unwrap();
+        let (head, tail) = hist.mean_head_tail(10);
+        assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+        assert!(after.error < before.error);
+        assert!(after.error < 0.1, "test error {}", after.error);
+        assert_eq!(hist.epochs.len(), 5);
+    }
+
+    #[test]
+    fn evaluate_counts_everything() {
+        let data = toy_data(100, 4);
+        let mut model = toy_model(5);
+        let rep = Trainer::new(TrainConfig::default()).evaluate(&mut model, &data).unwrap();
+        assert_eq!(rep.n, 100);
+        assert!(rep.error >= 0.0 && rep.error <= 1.0);
+    }
+
+    #[test]
+    fn predict_shapes() {
+        let data = toy_data(10, 6);
+        let mut model = toy_model(7);
+        let logits = predict(&mut model, &data, 4).unwrap();
+        assert_eq!(logits.shape(), &[10, 2]);
+    }
+}

@@ -1,0 +1,295 @@
+//! Artifact manifest parsing + weight blob loading.
+//!
+//! The manifest is the contract with `python/compile/aot.py`: artifact
+//! names, HLO file paths, positional input specs (with their source), and
+//! the layout of each `*.weights.bin` blob (LE f32, sorted by name).
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Where an entry-computation argument comes from at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputSource {
+    /// loaded from the artifact's weight group, kept device-resident
+    Weights,
+    /// provided per request (the payload)
+    Runtime,
+    /// mutable training state (velocities) — initialized to zeros
+    State,
+    /// synthesized by the runtime (seeded Gaussian) — used for baseline
+    /// weights too large to ship (vgg fc6 dense, 411 MB)
+    Synthesize,
+}
+
+impl InputSource {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "weights" => InputSource::Weights,
+            "runtime" => InputSource::Runtime,
+            "state" => InputSource::State,
+            "synthesize" => InputSource::Synthesize,
+            other => return Err(Error::Artifact(format!("unknown input source '{other}'"))),
+        })
+    }
+}
+
+/// One positional input of an artifact's entry computation.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub source: InputSource,
+}
+
+impl InputSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One output of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub weight_group: Option<String>,
+}
+
+impl ArtifactSpec {
+    pub fn runtime_inputs(&self) -> Vec<&InputSpec> {
+        self.inputs.iter().filter(|i| i.source == InputSource::Runtime).collect()
+    }
+}
+
+/// Layout of a weights blob.
+#[derive(Clone, Debug)]
+pub struct WeightGroup {
+    pub file: String,
+    /// `(name, shape, offset_elems, len_elems)`
+    pub layout: Vec<(String, Vec<usize>, usize, usize)>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub weight_groups: BTreeMap<String, WeightGroup>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| Error::Artifact("shape not an array".into()))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| Error::Artifact("bad shape entry".into())))
+        .collect()
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("reading {}: {e}", path.display())))?;
+        let root = Json::parse(&text)?;
+        let seed = root.req("seed")?.as_usize().unwrap_or(0) as u64;
+
+        let mut artifacts = Vec::new();
+        for a in root.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let mut inputs = Vec::new();
+            for i in a.req("inputs")?.as_arr().unwrap_or(&[]) {
+                inputs.push(InputSpec {
+                    name: i.req("name")?.as_str().unwrap_or("").to_string(),
+                    shape: parse_shape(i.req("shape")?)?,
+                    dtype: i.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+                    source: InputSource::parse(i.req("source")?.as_str().unwrap_or(""))?,
+                });
+            }
+            let mut outputs = Vec::new();
+            for o in a.req("outputs")?.as_arr().unwrap_or(&[]) {
+                outputs.push(IoSpec {
+                    shape: parse_shape(o.req("shape")?)?,
+                    dtype: o.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+                });
+            }
+            artifacts.push(ArtifactSpec {
+                name: a.req("name")?.as_str().unwrap_or("").to_string(),
+                hlo: a.req("hlo")?.as_str().unwrap_or("").to_string(),
+                inputs,
+                outputs,
+                weight_group: a
+                    .get("weight_group")
+                    .and_then(|g| g.as_str())
+                    .map(|s| s.to_string()),
+            });
+        }
+
+        let mut weight_groups = BTreeMap::new();
+        if let Some(groups) = root.get("weight_groups").and_then(|g| g.as_obj()) {
+            for (name, g) in groups {
+                let mut layout = Vec::new();
+                for e in g.req("layout")?.as_arr().unwrap_or(&[]) {
+                    layout.push((
+                        e.req("name")?.as_str().unwrap_or("").to_string(),
+                        parse_shape(e.req("shape")?)?,
+                        e.req("offset")?
+                            .as_usize()
+                            .ok_or_else(|| Error::Artifact("bad offset".into()))?,
+                        e.req("len")?
+                            .as_usize()
+                            .ok_or_else(|| Error::Artifact("bad len".into()))?,
+                    ));
+                }
+                weight_groups.insert(
+                    name.clone(),
+                    WeightGroup {
+                        file: g.req("file")?.as_str().unwrap_or("").to_string(),
+                        layout,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest { dir, seed, artifacts, weight_groups })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact '{name}' in manifest")))
+    }
+
+    /// Load a weight group's blob into named tensors.
+    pub fn load_weights(&self, group: &str) -> Result<BTreeMap<String, Tensor>> {
+        let g = self
+            .weight_groups
+            .get(group)
+            .ok_or_else(|| Error::Artifact(format!("no weight group '{group}'")))?;
+        let path = self.dir.join(&g.file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::Artifact(format!("reading {}: {e}", path.display())))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut out = BTreeMap::new();
+        for (name, shape, offset, len) in &g.layout {
+            if offset + len > floats.len() {
+                return Err(Error::Artifact(format!(
+                    "weight '{name}' range {offset}+{len} exceeds blob {}",
+                    floats.len()
+                )));
+            }
+            let t = Tensor::from_vec(shape, floats[*offset..*offset + *len].to_vec())?;
+            out.insert(name.clone(), t);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tensornet_test_{tag}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_fixture(dir: &Path) {
+        let manifest = r#"{
+          "seed": 7,
+          "artifacts": [{
+            "name": "toy_b2",
+            "hlo": "toy_b2.hlo.txt",
+            "inputs": [
+              {"name": "w", "shape": [3, 4], "dtype": "float32", "source": "weights"},
+              {"name": "x", "shape": [2, 4], "dtype": "float32", "source": "runtime"}
+            ],
+            "outputs": [{"shape": [2, 3], "dtype": "float32"}],
+            "weight_group": "toy"
+          }],
+          "weight_groups": {
+            "toy": {"file": "toy.weights.bin",
+                    "layout": [{"name": "w", "shape": [3, 4], "offset": 0, "len": 12}]}
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let mut f = std::fs::File::create(dir.join("toy.weights.bin")).unwrap();
+        for i in 0..12 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn parses_manifest_and_weights() {
+        let dir = tmpdir("manifest");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.seed, 7);
+        let a = m.artifact("toy_b2").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].source, InputSource::Weights);
+        assert_eq!(a.runtime_inputs().len(), 1);
+        assert_eq!(a.outputs[0].shape, vec![2, 3]);
+        let w = m.load_weights("toy").unwrap();
+        let t = &w["w"];
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.data()[5], 5.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let dir = tmpdir("missing");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.load_weights("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_layout_errors() {
+        let dir = tmpdir("corrupt");
+        write_fixture(&dir);
+        // truncate the blob
+        std::fs::write(dir.join("toy.weights.bin"), [0u8; 8]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.load_weights("toy").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_source_rejected() {
+        let dir = tmpdir("badsource");
+        let manifest = r#"{"seed": 1, "artifacts": [{
+            "name": "x", "hlo": "x.hlo.txt",
+            "inputs": [{"name": "a", "shape": [1], "dtype": "float32", "source": "martian"}],
+            "outputs": []}], "weight_groups": {}}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

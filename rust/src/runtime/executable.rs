@@ -1,0 +1,172 @@
+//! A compiled artifact with device-resident parameters.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::{ArtifactSpec, InputSource, Manifest};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A per-request input value (matched positionally against the artifact's
+/// `source == Runtime` slots).
+#[derive(Clone, Debug)]
+pub enum RuntimeInput {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// An AOT artifact compiled onto a PJRT client, with `weights` / `state` /
+/// `synthesize` arguments already transferred to device buffers.
+///
+/// Not `Send` (PJRT handles are raw pointers) — owned by one executor
+/// thread; see `coordinator::worker`.
+pub struct CompiledModel {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// device buffers for every non-runtime slot, `None` for runtime slots
+    resident: Vec<Option<xla::PjRtBuffer>>,
+    client: xla::PjRtClient,
+}
+
+impl CompiledModel {
+    /// Load + compile `spec` from `manifest`'s directory, transferring its
+    /// weight group (if any) to the device.  `Synthesize` inputs get seeded
+    /// He-scaled Gaussians; `State` inputs get zeros.
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest, name: &str) -> Result<CompiledModel> {
+        let spec = manifest.artifact(name)?.clone();
+        let hlo_path = manifest.dir.join(&spec.hlo);
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| Error::Artifact(format!("parsing {}: {e}", hlo_path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+
+        let weights = match &spec.weight_group {
+            Some(g) => manifest.load_weights(g)?,
+            None => Default::default(),
+        };
+        let mut rng = Rng::new(manifest.seed ^ 0x7265_7369_64);
+        let mut resident = Vec::with_capacity(spec.inputs.len());
+        for input in &spec.inputs {
+            let buf = match input.source {
+                InputSource::Runtime => None,
+                InputSource::Weights => {
+                    let t = weights.get(&input.name).ok_or_else(|| {
+                        Error::Artifact(format!(
+                            "artifact {name}: weight '{}' missing from group",
+                            input.name
+                        ))
+                    })?;
+                    if t.shape() != &input.shape[..] {
+                        return Err(Error::Artifact(format!(
+                            "weight '{}': blob shape {:?} vs spec {:?}",
+                            input.name,
+                            t.shape(),
+                            input.shape
+                        )));
+                    }
+                    Some(client.buffer_from_host_buffer(t.data(), &input.shape, None)?)
+                }
+                InputSource::State => {
+                    let zeros = vec![0.0f32; input.numel()];
+                    Some(client.buffer_from_host_buffer(&zeros, &input.shape, None)?)
+                }
+                InputSource::Synthesize => {
+                    // He-scaled Gaussian: same init family as the python side
+                    let fan_in = *input.shape.last().unwrap_or(&1) as f32;
+                    let std = (2.0 / fan_in.max(1.0)).sqrt();
+                    let data: Vec<f32> =
+                        (0..input.numel()).map(|_| rng.normal_f32(std)).collect();
+                    Some(client.buffer_from_host_buffer(&data, &input.shape, None)?)
+                }
+            };
+            resident.push(buf);
+        }
+        Ok(CompiledModel { spec, exe, resident, client: client.clone() })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Batch size of the first runtime input (serving uses this to route
+    /// requests to the right batch variant).
+    pub fn batch_size(&self) -> Option<usize> {
+        self.spec.runtime_inputs().first().map(|i| i.shape[0])
+    }
+
+    /// Execute with per-request inputs (positional over the runtime slots).
+    /// Returns the flattened output tuple as f32 tensors.
+    pub fn run(&self, runtime_inputs: &[RuntimeInput]) -> Result<Vec<Tensor>> {
+        let runtime_slots: Vec<usize> = self
+            .spec
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.source == InputSource::Runtime)
+            .map(|(idx, _)| idx)
+            .collect();
+        if runtime_inputs.len() != runtime_slots.len() {
+            return Err(Error::Xla(format!(
+                "{}: {} runtime inputs given, want {}",
+                self.spec.name,
+                runtime_inputs.len(),
+                runtime_slots.len()
+            )));
+        }
+        // transfer the per-request inputs, then borrow resident buffers in
+        // positional order (execute_b takes Borrow<PjRtBuffer>)
+        let mut fresh: Vec<xla::PjRtBuffer> = Vec::with_capacity(runtime_inputs.len());
+        let mut rt_iter = runtime_inputs.iter();
+        for (idx, input) in self.spec.inputs.iter().enumerate() {
+            if self.resident[idx].is_none() {
+                let rt = rt_iter.next().unwrap();
+                let (len, buf) = match rt {
+                    RuntimeInput::F32(v) => {
+                        (v.len(), self.client.buffer_from_host_buffer(v, &input.shape, None))
+                    }
+                    RuntimeInput::I32(v) => {
+                        (v.len(), self.client.buffer_from_host_buffer(v, &input.shape, None))
+                    }
+                };
+                if len != input.numel() {
+                    return Err(Error::Xla(format!(
+                        "input '{}': {len} elems, want {}",
+                        input.name,
+                        input.numel()
+                    )));
+                }
+                fresh.push(buf?);
+            }
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.spec.inputs.len());
+        let mut fi = 0usize;
+        for idx in 0..self.spec.inputs.len() {
+            match &self.resident[idx] {
+                Some(buf) => args.push(buf),
+                None => {
+                    args.push(&fresh[fi]);
+                    fi += 1;
+                }
+            }
+        }
+        let result = self.exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let literals = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(literals.len());
+        for (i, lit) in literals.into_iter().enumerate() {
+            let vals: Vec<f32> = lit
+                .to_vec::<f32>()
+                .map_err(|e| Error::Xla(format!("output {i} to f32: {e}")))?;
+            let shape = self
+                .spec
+                .outputs
+                .get(i)
+                .map(|o| o.shape.clone())
+                .unwrap_or_else(|| vec![vals.len()]);
+            out.push(Tensor::from_vec(&shape, vals)?);
+        }
+        Ok(out)
+    }
+}

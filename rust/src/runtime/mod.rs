@@ -1,0 +1,24 @@
+//! PJRT runtime (S7 in DESIGN.md): load the AOT HLO-text artifacts emitted
+//! by `python/compile/aot.py`, compile them on the PJRT CPU client, keep
+//! parameters resident as device buffers, and execute from the serving hot
+//! path.  Python never runs here — the artifacts directory is the entire
+//! interface between the build path and the request path.
+//!
+//! Thread model: the `xla` crate's handles hold raw pointers and are not
+//! `Send`, so a [`CompiledModel`] is *thread-confined* — the coordinator
+//! runs all PJRT execution on a dedicated executor thread that owns the
+//! registry (see `coordinator::worker`).
+
+mod artifact;
+mod executable;
+
+pub use artifact::{ArtifactSpec, InputSource, InputSpec, IoSpec, Manifest, WeightGroup};
+pub use executable::{CompiledModel, RuntimeInput};
+
+use crate::error::{Error, Result};
+
+/// Create a PJRT CPU client.  One per executor thread; creation is heavy
+/// (thread pools), so callers cache it for the thread's lifetime.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().map_err(Error::from)
+}

@@ -1,0 +1,370 @@
+//! The dense row-major tensor.
+
+use crate::error::{shape_err, Result};
+use crate::tensor::reshape::strides_of;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Dense row-major contiguous `f32` tensor of arbitrary dimensionality.
+///
+/// The last axis varies fastest.  All reshapes are zero-copy (contiguity is
+/// an invariant); permutations materialize a new tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Wrap an existing buffer; errors if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return shape_err(format!(
+                "from_vec: {} elements for shape {:?} (need {})",
+                data.len(),
+                shape,
+                n
+            ));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// 2-D identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// I.i.d. Gaussian entries with the given std (paper section 6.4 init).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32(std)).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Zero-copy reshape (element count must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return shape_err(format!("reshape {:?} -> {:?}", self.shape, shape));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Reshape returning a new tensor (clones the buffer).
+    pub fn reshaped(&self, shape: &[usize]) -> Result<Self> {
+        self.clone().reshape(shape)
+    }
+
+    /// Element access by multi-index (debug/tests; hot paths use `data()`).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = strides_of(&self.shape);
+        let lin: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[lin]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let strides = strides_of(&self.shape);
+        let lin: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[lin] = v;
+    }
+
+    /// Materializing axis permutation: `out[i_perm] = self[i]`.
+    pub fn permute(&self, axes: &[usize]) -> Result<Self> {
+        let d = self.shape.len();
+        if axes.len() != d {
+            return shape_err(format!("permute axes {:?} for ndim {}", axes, d));
+        }
+        let mut seen = vec![false; d];
+        for &a in axes {
+            if a >= d || seen[a] {
+                return shape_err(format!("bad permutation {:?}", axes));
+            }
+            seen[a] = true;
+        }
+        let new_shape: Vec<usize> = axes.iter().map(|&a| self.shape[a]).collect();
+        let in_strides = strides_of(&self.shape);
+        let out_strides = strides_of(&new_shape);
+        // stride of output axis j in the INPUT buffer
+        let gather: Vec<usize> = axes.iter().map(|&a| in_strides[a]).collect();
+        let mut out = vec![0.0f32; self.data.len()];
+        // iterate output linearly, computing source index incrementally
+        let mut idx = vec![0usize; d];
+        let mut src = 0usize;
+        for slot in out.iter_mut() {
+            *slot = self.data[src];
+            // increment multi-index (row-major, last axis fastest)
+            for ax in (0..d).rev() {
+                idx[ax] += 1;
+                src += gather[ax];
+                if idx[ax] < new_shape[ax] {
+                    break;
+                }
+                src -= gather[ax] * new_shape[ax];
+                idx[ax] = 0;
+            }
+        }
+        let _ = out_strides;
+        Tensor::from_vec(&new_shape, out)
+    }
+
+    /// 2-D transpose (materializing), a common special case.
+    pub fn t2(&self) -> Result<Self> {
+        if self.ndim() != 2 {
+            return shape_err(format!("t2 on shape {:?}", self.shape));
+        }
+        self.permute(&[1, 0])
+    }
+
+    /// Elementwise in-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return shape_err(format!("axpy {:?} vs {:?}", self.shape, other.shape));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// In-place scaling.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Elementwise sum returning a new tensor.
+    pub fn add(&self, other: &Tensor) -> Result<Self> {
+        let mut out = self.clone();
+        out.axpy(1.0, other)?;
+        Ok(out)
+    }
+
+    /// Elementwise (Hadamard) product.
+    pub fn hadamard(&self, other: &Tensor) -> Result<Self> {
+        if self.shape != other.shape {
+            return shape_err(format!("hadamard {:?} vs {:?}", self.shape, other.shape));
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Tensor::from_vec(&self.shape, data)
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Dot product of the flattened buffers.
+    pub fn dot(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            return shape_err(format!("dot {:?} vs {:?}", self.shape, other.shape));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum::<f64>() as f32)
+    }
+
+    /// Max |x|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Row `i` of a 2-D tensor as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Copy rows `[start, end)` of a 2-D tensor.
+    pub fn rows(&self, start: usize, end: usize) -> Result<Self> {
+        if self.ndim() != 2 || end > self.shape[0] || start > end {
+            return shape_err(format!("rows {}..{} of {:?}", start, end, self.shape));
+        }
+        let cols = self.shape[1];
+        Tensor::from_vec(&[end - start, cols], self.data[start * cols..end * cols].to_vec())
+    }
+
+    /// Vertically stack 2-D tensors with equal column counts.
+    pub fn vstack(parts: &[&Tensor]) -> Result<Self> {
+        if parts.is_empty() {
+            return shape_err("vstack of nothing");
+        }
+        let cols = parts[0].shape[1];
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.ndim() != 2 || p.shape[1] != cols {
+                return shape_err(format!("vstack mismatch {:?}", p.shape));
+            }
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::from_vec(&[rows, cols], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_vec_checks_count() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn reshape_is_zero_copy_semantics() {
+        let t = Tensor::from_vec(&[2, 6], (0..12).map(|x| x as f32).collect()).unwrap();
+        let r = t.clone().reshape(&[3, 4]).unwrap();
+        assert_eq!(r.data(), t.data());
+        assert!(t.clone().reshape(&[5, 5]).is_err());
+    }
+
+    #[test]
+    fn at_row_major() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+    }
+
+    #[test]
+    fn permute_2d_is_transpose() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]).unwrap();
+        let p = t.permute(&[1, 0]).unwrap();
+        assert_eq!(p.shape(), &[3, 2]);
+        for i in 0..2 {
+            for j in 0..3 {
+                assert_eq!(t.at(&[i, j]), p.at(&[j, i]));
+            }
+        }
+    }
+
+    #[test]
+    fn permute_3d_roundtrip() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[3, 4, 5], 1.0, &mut rng);
+        let p = t.permute(&[2, 0, 1]).unwrap();
+        assert_eq!(p.shape(), &[5, 3, 4]);
+        // inverse permutation of [2,0,1] is [1,2,0]
+        let back = p.permute(&[1, 2, 0]).unwrap();
+        assert_eq!(back, t);
+        for i in 0..3 {
+            for j in 0..4 {
+                for k in 0..5 {
+                    assert_eq!(t.at(&[i, j, k]), p.at(&[k, i, j]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn permute_rejects_bad_axes() {
+        let t = Tensor::zeros(&[2, 2]);
+        assert!(t.permute(&[0, 0]).is_err());
+        assert!(t.permute(&[0]).is_err());
+        assert!(t.permute(&[0, 5]).is_err());
+    }
+
+    #[test]
+    fn axpy_scale_norm() {
+        let mut a = Tensor::filled(&[4], 1.0);
+        let b = Tensor::filled(&[4], 2.0);
+        a.axpy(0.5, &b).unwrap();
+        assert!(a.data().iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        a.scale(0.5);
+        assert!((a.norm() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eye_identity() {
+        let e = Tensor::eye(3);
+        assert_eq!(e.at(&[1, 1]), 1.0);
+        assert_eq!(e.at(&[0, 1]), 0.0);
+    }
+
+    #[test]
+    fn vstack_and_rows() {
+        let a = Tensor::from_vec(&[1, 2], vec![1., 2.]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![3., 4., 5., 6.]).unwrap();
+        let s = Tensor::vstack(&[&a, &b]).unwrap();
+        assert_eq!(s.shape(), &[3, 2]);
+        assert_eq!(s.row(2), &[5., 6.]);
+        let r = s.rows(1, 3).unwrap();
+        assert_eq!(r.data(), &[3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn randn_seeded_deterministic() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = Tensor::randn(&[8], 1.0, &mut r1);
+        let b = Tensor::randn(&[8], 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+}

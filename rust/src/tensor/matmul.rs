@@ -1,0 +1,353 @@
+//! Blocked, rayon-parallel GEMM — the native hot path.
+//!
+//! Three variants avoid materializing transposes in the backward pass:
+//! `matmul` (A·B), `matmul_at` (Aᵀ·B), `matmul_bt` (A·Bᵀ).  The kernel is
+//! the classic i-k-j loop: the innermost loop runs along contiguous rows of
+//! B / the output, which auto-vectorizes.  Parallelism is over output row
+//! chunks; small problems stay single-threaded to avoid rayon overhead
+//! (threshold tuned in the perf pass, see EXPERIMENTS.md §Perf).
+
+use crate::error::{shape_err, Result};
+use crate::tensor::Tensor;
+use crate::util::threads::{num_threads, parallel_chunks_mut};
+
+/// Lane-accumulator dot product: the `[f32; 8]` accumulator array is the
+/// shape LLVM reliably auto-vectorizes into SIMD FMAs, and it also breaks
+/// the serial FP dependency chain (perf pass iterations #1/#4).
+#[inline]
+fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let a8 = a.chunks_exact(8);
+    let b8 = b.chunks_exact(8);
+    let tail_a = a8.remainder();
+    let tail_b = b8.remainder();
+    for (ca, cb) in a8.zip(b8) {
+        for l in 0..8 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in tail_a.iter().zip(tail_b) {
+        tail += x * y;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// GEMM engine with tuning knobs (shared defaults via free functions).
+#[derive(Clone, Copy, Debug)]
+pub struct Gemm {
+    /// Minimum FLOP count (2·m·k·n) before rayon kicks in.
+    pub par_flops: usize,
+    /// Row-chunk granularity for parallel dispatch.
+    pub chunk_rows: usize,
+}
+
+impl Default for Gemm {
+    fn default() -> Self {
+        Gemm { par_flops: 1 << 20, chunk_rows: 16 }
+    }
+}
+
+impl Gemm {
+    fn check2(a: &Tensor, b: &Tensor) -> Result<()> {
+        if a.ndim() != 2 || b.ndim() != 2 {
+            return shape_err(format!("gemm needs 2-D, got {:?} x {:?}", a.shape(), b.shape()));
+        }
+        Ok(())
+    }
+
+    /// `C = A · B` for A:(m,k), B:(k,n).
+    pub fn matmul(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        Self::check2(a, b)?;
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let (k2, n) = (b.shape()[0], b.shape()[1]);
+        if k != k2 {
+            return shape_err(format!("matmul {:?} x {:?}", a.shape(), b.shape()));
+        }
+        let mut out = vec![0.0f32; m * n];
+        let ad = a.data();
+        let bd = b.data();
+        let kernel = |i0: usize, rows: &mut [f32]| {
+            for (di, orow) in rows.chunks_mut(n).enumerate() {
+                let i = i0 + di;
+                let arow = &ad[i * k..(i + 1) * k];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    if aik != 0.0 {
+                        let brow = &bd[kk * n..(kk + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += aik * bv;
+                        }
+                    }
+                }
+            }
+        };
+        let big = 2 * m * k * n >= self.par_flops;
+        if big && m >= 2 * num_threads() {
+            // row-parallel with adaptive granularity
+            let cr = (m / (num_threads() * 4)).clamp(1, self.chunk_rows.max(1));
+            parallel_chunks_mut(&mut out, cr * n, |start, rows| {
+                kernel(start / n, rows);
+            });
+        } else if big && m == 1 && n >= 64 {
+            // batch-1 case (Table 3): parallelize over COLUMN blocks of the
+            // single output row — perf pass iteration #2
+            let cb = (n / num_threads()).max(32);
+            let arow = &ad[..k];
+            parallel_chunks_mut(&mut out, cb, |col0, cols| {
+                for (kk, &aik) in arow.iter().enumerate() {
+                    if aik != 0.0 {
+                        let brow = &bd[kk * n + col0..kk * n + col0 + cols.len()];
+                        for (o, &bv) in cols.iter_mut().zip(brow) {
+                            *o += aik * bv;
+                        }
+                    }
+                }
+            });
+        } else if big && m > 1 {
+            // few rows: one chunk per row
+            parallel_chunks_mut(&mut out, n, |start, rows| {
+                kernel(start / n, rows);
+            });
+        } else {
+            kernel(0, &mut out);
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// `C = Aᵀ · B` for A:(k,m), B:(k,n) — gradient-of-weights shape.
+    pub fn matmul_at(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        Self::check2(a, b)?;
+        let (k, m) = (a.shape()[0], a.shape()[1]);
+        let (k2, n) = (b.shape()[0], b.shape()[1]);
+        if k != k2 {
+            return shape_err(format!("matmul_at {:?} x {:?}", a.shape(), b.shape()));
+        }
+        let mut out = vec![0.0f32; m * n];
+        let ad = a.data();
+        let bd = b.data();
+        let kernel = |i0: usize, rows: &mut [f32]| {
+            // out[i, :] = sum_k a[k, i] * b[k, :]
+            for kk in 0..k {
+                let brow = &bd[kk * n..(kk + 1) * n];
+                let arow = &ad[kk * m..(kk + 1) * m];
+                for (di, orow) in rows.chunks_mut(n).enumerate() {
+                    let aki = arow[i0 + di];
+                    if aki != 0.0 {
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += aki * bv;
+                        }
+                    }
+                }
+            }
+        };
+        if 2 * m * k * n >= self.par_flops && m > 1 {
+            let cr = self.chunk_rows.max(1);
+            parallel_chunks_mut(&mut out, cr * n, |start, rows| {
+                kernel(start / n, rows);
+            });
+        } else {
+            kernel(0, &mut out);
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// `C = A · Bᵀ` for A:(m,k), B:(n,k) — dense-layer forward shape
+    /// (weights stored (out,in), inputs (batch,in)).
+    pub fn matmul_bt(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        Self::check2(a, b)?;
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let (n, k2) = (b.shape()[0], b.shape()[1]);
+        if k != k2 {
+            return shape_err(format!("matmul_bt {:?} x {:?}", a.shape(), b.shape()));
+        }
+        let mut out = vec![0.0f32; m * n];
+        let ad = a.data();
+        let bd = b.data();
+        // k-blocked path for multi-row batches (perf pass iteration #3):
+        // the naive per-row loop streams ALL of B once per output row
+        // (41 GB of traffic for the Table-3 batch-100 case).  Blocking the
+        // contraction axis keeps the A-panel cache-resident and streams B
+        // exactly once: kb -> j -> i with an unrolled dot over the block.
+        if m >= 8 && k >= 4096 {
+            let kc = (512 * 1024 / (4 * m)).clamp(512, k); // A-panel ~512 KiB
+            for k0 in (0..k).step_by(kc) {
+                let kb = kc.min(k - k0);
+                for j in 0..n {
+                    let brow = &bd[j * k + k0..j * k + k0 + kb];
+                    for i in 0..m {
+                        let arow = &ad[i * k + k0..i * k + k0 + kb];
+                        out[i * n + j] += dot_unrolled(arow, brow);
+                    }
+                }
+            }
+            return Tensor::from_vec(&[m, n], out);
+        }
+        let kernel = |i0: usize, rows: &mut [f32]| {
+            for (di, orow) in rows.chunks_mut(n).enumerate() {
+                let arow = &ad[(i0 + di) * k..(i0 + di + 1) * k];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = dot_unrolled(arow, &bd[j * k..(j + 1) * k]);
+                }
+            }
+        };
+        let big = 2 * m * k * n >= self.par_flops;
+        if big && m >= 2 * num_threads() {
+            let cr = (m / (num_threads() * 4)).clamp(1, self.chunk_rows.max(1));
+            parallel_chunks_mut(&mut out, cr * n, |start, rows| {
+                kernel(start / n, rows);
+            });
+        } else if big && m == 1 && n >= 2 {
+            // batch-1 inference: each output column is an independent dot
+            // against a row of B — parallelize over column blocks
+            let cb = (n / num_threads()).max(16);
+            let arow = &ad[..k];
+            parallel_chunks_mut(&mut out, cb, |col0, cols| {
+                for (dj, o) in cols.iter_mut().enumerate() {
+                    let j = col0 + dj;
+                    *o = dot_unrolled(arow, &bd[j * k..(j + 1) * k]);
+                }
+            });
+        } else if big && m > 1 {
+            parallel_chunks_mut(&mut out, n, |start, rows| {
+                kernel(start / n, rows);
+            });
+        } else {
+            kernel(0, &mut out);
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+}
+
+/// `A · B` with default tuning.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    Gemm::default().matmul(a, b)
+}
+
+/// `Aᵀ · B` with default tuning.
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    Gemm::default().matmul_at(a, b)
+}
+
+/// `A · Bᵀ` with default tuning.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    Gemm::default().matmul_bt(a, b)
+}
+
+/// Matrix-vector product `A · x` for A:(m,n), x:(n,).
+pub fn matvec(a: &Tensor, x: &Tensor) -> Result<Tensor> {
+    if a.ndim() != 2 || x.ndim() != 1 || a.shape()[1] != x.shape()[0] {
+        return shape_err(format!("matvec {:?} x {:?}", a.shape(), x.shape()));
+    }
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let ad = a.data();
+    let xd = x.data();
+    let out: Vec<f32> = (0..m)
+        .map(|i| {
+            let row = &ad[i * n..(i + 1) * n];
+            row.iter().zip(xd).map(|(a, b)| a * b).sum()
+        })
+        .collect();
+    Tensor::from_vec(&[m], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a.at(&[i, kk]) * b.at(&[kk, j]);
+                }
+                out.set(&[i, j], acc);
+            }
+        }
+        out
+    }
+
+    fn close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 9, 23), (64, 64, 64)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            close(&matmul(&a, &b).unwrap(), &naive(&a, &b), 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_at_matches_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[11, 7], 1.0, &mut rng);
+        let b = Tensor::randn(&[11, 13], 1.0, &mut rng);
+        let want = matmul(&a.t2().unwrap(), &b).unwrap();
+        close(&matmul_at(&a, &b).unwrap(), &want, 1e-5);
+    }
+
+    #[test]
+    fn matmul_bt_matches_transpose() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[9, 6], 1.0, &mut rng);
+        let b = Tensor::randn(&[14, 6], 1.0, &mut rng);
+        let want = matmul(&a, &b.t2().unwrap()).unwrap();
+        close(&matmul_bt(&a, &b).unwrap(), &want, 1e-5);
+    }
+
+    #[test]
+    fn parallel_path_matches_serial() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[300, 120], 1.0, &mut rng);
+        let b = Tensor::randn(&[120, 250], 1.0, &mut rng);
+        let par = Gemm { par_flops: 0, chunk_rows: 7 }; // force parallel, odd chunks
+        let ser = Gemm { par_flops: usize::MAX, chunk_rows: 16 };
+        close(&par.matmul(&a, &b).unwrap(), &ser.matmul(&a, &b).unwrap(), 1e-5);
+        // a^T b needs equal FIRST dims: (300,120)^T x (300,250)
+        let b2 = Tensor::randn(&[300, 250], 1.0, &mut rng);
+        close(&par.matmul_at(&a, &b2).unwrap(), &ser.matmul_at(&a, &b2).unwrap(), 1e-5);
+        let c = Tensor::randn(&[250, 120], 1.0, &mut rng);
+        close(&par.matmul_bt(&a, &c).unwrap(), &ser.matmul_bt(&a, &c).unwrap(), 1e-5);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        close(&matmul(&a, &Tensor::eye(8)).unwrap(), &a, 1e-6);
+        close(&matmul(&Tensor::eye(8), &a).unwrap(), &a, 1e-6);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(6);
+        let a = Tensor::randn(&[10, 20], 1.0, &mut rng);
+        let x = Tensor::randn(&[20], 1.0, &mut rng);
+        let xm = x.reshaped(&[20, 1]).unwrap();
+        let want = matmul(&a, &xm).unwrap();
+        let got = matvec(&a, &x).unwrap();
+        close(&got.reshaped(&[10, 1]).unwrap(), &want, 1e-5);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 5]);
+        assert!(matmul(&a, &b).is_err());
+        assert!(matmul_at(&a, &b).is_err());
+        assert!(matmul_bt(&a, &b).is_err());
+        assert!(matvec(&a, &Tensor::zeros(&[7])).is_err());
+    }
+}

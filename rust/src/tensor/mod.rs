@@ -1,0 +1,15 @@
+//! Dense strided tensor substrate (S1 in DESIGN.md).
+//!
+//! Row-major contiguous `f32` tensors plus the blocked, rayon-parallel GEMM
+//! that backs both the fully-connected baseline and every TT core
+//! contraction on the native path.  Deliberately minimal: contiguous
+//! storage only — permutes materialize — which keeps the hot loops simple
+//! enough to reason about and optimize.
+
+mod dense;
+mod matmul;
+mod reshape;
+
+pub use dense::Tensor;
+pub use matmul::{matmul, matmul_at, matmul_bt, matvec, Gemm};
+pub use reshape::{linear_index, multi_index, strides_of};

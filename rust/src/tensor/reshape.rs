@@ -1,0 +1,62 @@
+//! Index arithmetic helpers shared by the tensor / TT modules.
+
+/// Row-major strides for a shape (last axis has stride 1).
+pub fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+/// Linear (row-major) offset of a multi-index.
+pub fn linear_index(idx: &[usize], shape: &[usize]) -> usize {
+    debug_assert_eq!(idx.len(), shape.len());
+    let mut lin = 0usize;
+    for (i, s) in idx.iter().zip(shape) {
+        debug_assert!(i < s);
+        lin = lin * s + i;
+    }
+    lin
+}
+
+/// Multi-index of a linear (row-major) offset.
+pub fn multi_index(mut lin: usize, shape: &[usize]) -> Vec<usize> {
+    let mut idx = vec![0usize; shape.len()];
+    for ax in (0..shape.len()).rev() {
+        idx[ax] = lin % shape[ax];
+        lin /= shape[ax];
+    }
+    debug_assert_eq!(lin, 0);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_of(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_of(&[5]), vec![1]);
+        assert!(strides_of(&[]).is_empty());
+    }
+
+    #[test]
+    fn linear_multi_roundtrip() {
+        let shape = [3, 4, 5];
+        for lin in 0..60 {
+            let idx = multi_index(lin, &shape);
+            assert_eq!(linear_index(&idx, &shape), lin);
+        }
+    }
+
+    #[test]
+    fn linear_index_matches_strides() {
+        let shape = [2, 3, 4];
+        let strides = strides_of(&shape);
+        let idx = [1, 2, 3];
+        let by_strides: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        assert_eq!(linear_index(&idx, &shape), by_strides);
+    }
+}

@@ -1,0 +1,76 @@
+//! Random TT initialization (paper §6.4: i.i.d. Gaussian cores).
+
+use crate::error::Result;
+use crate::tensor::Tensor;
+use crate::tt::{TtMatrix, TtShape, TtVector};
+use crate::util::rng::Rng;
+
+impl TtMatrix {
+    /// Gaussian cores with the variance-preserving std of
+    /// [`TtShape::init_std`] — the reconstructed `W` has He-style scale.
+    pub fn random(shape: &TtShape, rng: &mut Rng) -> Result<TtMatrix> {
+        let std = shape.init_std();
+        let cores = (0..shape.d())
+            .map(|k| Tensor::randn(&shape.core_shape(k), std, rng))
+            .collect();
+        TtMatrix::from_cores(shape.clone(), cores)
+    }
+
+    /// Gaussian cores with an explicit per-core std (ablations).
+    pub fn random_with_std(shape: &TtShape, std: f32, rng: &mut Rng) -> Result<TtMatrix> {
+        let cores = (0..shape.d())
+            .map(|k| Tensor::randn(&shape.core_shape(k), std, rng))
+            .collect();
+        TtMatrix::from_cores(shape.clone(), cores)
+    }
+}
+
+impl TtVector {
+    /// Gaussian TT-vector with unit-ish element scale.
+    pub fn random(ns: &[usize], ranks: &[usize], rng: &mut Rng) -> Result<TtVector> {
+        let d = ns.len();
+        let paths: f64 = ranks[1..d].iter().product::<usize>() as f64;
+        let std = ((1.0 / paths).powf(1.0 / (2.0 * d as f64))) as f32;
+        let cores = (0..d)
+            .map(|k| Tensor::randn(&[ranks[k], ns[k], ranks[k + 1]], std, rng))
+            .collect();
+        TtVector::from_cores(cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_matrix_scale() {
+        // Var of reconstructed elements should be ~2/N
+        let shape = TtShape::uniform(&[4, 4, 4], &[4, 4, 4], 4).unwrap();
+        let mut rng = Rng::new(0);
+        let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+        let w = tt.to_dense().unwrap();
+        let n = w.numel() as f64;
+        let var = w.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / n;
+        let want = 2.0 / 64.0;
+        assert!(
+            var > want * 0.25 && var < want * 4.0,
+            "var {var} vs target {want}"
+        );
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let shape = TtShape::uniform(&[2, 2], &[2, 2], 2).unwrap();
+        let a = TtMatrix::random(&shape, &mut Rng::new(7)).unwrap();
+        let b = TtMatrix::random(&shape, &mut Rng::new(7)).unwrap();
+        assert_eq!(a.cores()[0], b.cores()[0]);
+        assert_eq!(a.cores()[1], b.cores()[1]);
+    }
+
+    #[test]
+    fn random_vector_shapes() {
+        let v = TtVector::random(&[3, 4, 5], &[1, 2, 2, 1], &mut Rng::new(1)).unwrap();
+        assert_eq!(v.n_total(), 60);
+        assert_eq!(v.cores()[1].shape(), &[2, 4, 2]);
+    }
+}

@@ -1,0 +1,249 @@
+//! The TT-layer forward product `Y = X Wᵀ` for a batch of rows — the
+//! paper's eq. (5), `O(d r² m max{M, N})` per sample instead of `O(MN)`.
+//!
+//! Mirrors the L2 jax sweep exactly (python/compile/model.py
+//! `tt_layer_forward`): the state tensor starts as `(B, 1, N, 1)` and after
+//! core `k` has shape `(B, M_done, N_rest, r_k)`; every step is one GEMM
+//! against the cached `(r·n, m·r')` core matrix.
+//!
+//! The permutations around each GEMM are fused into custom pack/unpack
+//! loops (no `Tensor::permute` allocations on the hot path), and
+//! [`MatvecScratch`] lets a serving worker reuse its buffers across calls.
+
+use crate::error::{shape_err, Result};
+use crate::tensor::{Gemm, Tensor};
+use crate::tt::TtMatrix;
+use crate::util::threads::parallel_chunks_mut;
+
+/// Reusable buffers for [`TtMatrix::matvec_with`].
+#[derive(Default, Clone, Debug)]
+pub struct MatvecScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl TtMatrix {
+    /// `Y (B, M) = X (B, N) · Wᵀ` — apply the TT linear map to each row.
+    pub fn matvec(&self, x: &Tensor) -> Result<Tensor> {
+        let mut scratch = MatvecScratch::default();
+        self.matvec_with(x, &mut scratch)
+    }
+
+    /// [`TtMatrix::matvec`] with caller-owned scratch buffers.
+    pub fn matvec_with(&self, x: &Tensor, scratch: &mut MatvecScratch) -> Result<Tensor> {
+        if x.ndim() != 2 || x.shape()[1] != self.n_total() {
+            return shape_err(format!(
+                "matvec: input {:?}, want (B, {})",
+                x.shape(),
+                self.n_total()
+            ));
+        }
+        let b = x.shape()[0];
+        let d = self.d();
+        let gemm = Gemm::default();
+
+        // state: logically (B, M_done, N_rest, r); stored flat in `cur`
+        let mut m_done = 1usize;
+        let mut n_rest = self.n_total();
+        let mut r = 1usize;
+        scratch.a.clear();
+        scratch.a.extend_from_slice(x.data());
+        let mut cur = std::mem::take(&mut scratch.a);
+
+        for k in 0..d {
+            let [r0, m, n, r1] = self.shape().core_shape(k);
+            debug_assert_eq!(r, r0);
+            let rest = n_rest / n;
+            let rows = b * m_done * rest;
+
+            // pack: (B, M, n, rest, r0) -> (B, M, rest, r0, n) flattened
+            // as the GEMM operand (rows, r0*n)
+            let packed = pack_a(&cur, b * m_done, n, rest, r0, &mut scratch.b);
+
+            // GEMM against cached core matrix (r0*n, m*r1)
+            let a_t = Tensor::from_vec(&[rows, r0 * n], std::mem::take(packed))?;
+            let out = gemm.matmul(&a_t, &self.core_mats()[k])?;
+            scratch.b = a_t.into_vec(); // return buffer for reuse
+
+            // unpack: (B, M, rest, m, r1) -> (B, M, m, rest, r1)
+            cur = unpack_out(out.data(), b * m_done, rest, m, r1, &mut cur);
+
+            m_done *= m;
+            n_rest = rest;
+            r = r1;
+        }
+        debug_assert_eq!(r, 1);
+        debug_assert_eq!(n_rest, 1);
+        let y = Tensor::from_vec(&[b, self.m_total()], cur)?;
+        scratch.a = Vec::new();
+        Ok(y)
+    }
+}
+
+/// `(BM, n, rest, r0) -> (BM, rest, r0, n)` flattened.  Returns `buf`.
+fn pack_a<'a>(
+    src: &[f32],
+    bm: usize,
+    n: usize,
+    rest: usize,
+    r0: usize,
+    buf: &'a mut Vec<f32>,
+) -> &'a mut Vec<f32> {
+    buf.clear();
+    buf.resize(bm * n * rest * r0, 0.0);
+    let block = n * rest * r0;
+    if bm >= 4 && bm * block >= 1 << 16 {
+        parallel_chunks_mut(buf, block, |start, chunk| {
+            let g = start / block;
+            pack_a_one(&src[g * block..(g + 1) * block], n, rest, r0, chunk);
+        });
+    } else {
+        for g in 0..bm {
+            pack_a_one(
+                &src[g * block..(g + 1) * block],
+                n,
+                rest,
+                r0,
+                &mut buf[g * block..(g + 1) * block],
+            );
+        }
+    }
+    buf
+}
+
+#[inline]
+fn pack_a_one(src: &[f32], n: usize, rest: usize, r0: usize, dst: &mut [f32]) {
+    // src[j, t, a] -> dst[t, a, j]
+    for j in 0..n {
+        for t in 0..rest {
+            let s_base = (j * rest + t) * r0;
+            let d_base = t * r0 * n;
+            for a in 0..r0 {
+                dst[d_base + a * n + j] = src[s_base + a];
+            }
+        }
+    }
+}
+
+/// `(BM, rest, m, r1) -> (BM, m, rest, r1)` flattened.  Reuses `out`.
+fn unpack_out(src: &[f32], bm: usize, rest: usize, m: usize, r1: usize, out: &mut Vec<f32>) -> Vec<f32> {
+    out.clear();
+    out.resize(bm * rest * m * r1, 0.0);
+    let block = rest * m * r1;
+    if bm >= 4 && bm * block >= 1 << 16 {
+        parallel_chunks_mut(out, block, |start, chunk| {
+            let g = start / block;
+            unpack_one(&src[g * block..(g + 1) * block], rest, m, r1, chunk);
+        });
+    } else {
+        for g in 0..bm {
+            unpack_one(
+                &src[g * block..(g + 1) * block],
+                rest,
+                m,
+                r1,
+                &mut out[g * block..(g + 1) * block],
+            );
+        }
+    }
+    std::mem::take(out)
+}
+
+#[inline]
+fn unpack_one(src: &[f32], rest: usize, m: usize, r1: usize, dst: &mut [f32]) {
+    // src[t, i, s] -> dst[i, t, s]
+    for t in 0..rest {
+        for i in 0..m {
+            let s_base = (t * m + i) * r1;
+            let d_base = (i * rest + t) * r1;
+            dst[d_base..d_base + r1].copy_from_slice(&src[s_base..s_base + r1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_bt;
+    use crate::tt::TtShape;
+    use crate::util::rng::Rng;
+
+    fn check_matches_dense(ms: &[usize], ns: &[usize], r: usize, batch: usize, seed: u64) {
+        let shape = TtShape::uniform(ms, ns, r).unwrap();
+        let mut rng = Rng::new(seed);
+        let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+        let x = Tensor::randn(&[batch, shape.n_total()], 1.0, &mut rng);
+        let got = tt.matvec(&x).unwrap();
+        let w = tt.to_dense().unwrap();
+        let want = matmul_bt(&x, &w).unwrap(); // X W^T
+        assert_eq!(got.shape(), want.shape());
+        for (g, w) in got.data().iter().zip(want.data()) {
+            assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense_various() {
+        check_matches_dense(&[2, 3], &[4, 5], 3, 1, 1);
+        check_matches_dense(&[4, 4, 4], &[4, 4, 4], 2, 7, 2);
+        check_matches_dense(&[2, 2, 2, 2], &[3, 3, 3, 3], 4, 5, 3);
+        check_matches_dense(&[7], &[9], 1, 3, 4); // d=1 degenerate
+        check_matches_dense(&[3, 5, 2], &[2, 5, 3], 5, 2, 5);
+    }
+
+    #[test]
+    fn matvec_rejects_bad_input() {
+        let shape = TtShape::uniform(&[2, 2], &[3, 3], 2).unwrap();
+        let tt = TtMatrix::random(&shape, &mut Rng::new(0)).unwrap();
+        assert!(tt.matvec(&Tensor::zeros(&[1, 7])).is_err());
+        assert!(tt.matvec(&Tensor::zeros(&[9])).is_err());
+    }
+
+    #[test]
+    fn matvec_linear() {
+        let shape = TtShape::uniform(&[2, 3, 2], &[3, 2, 3], 3).unwrap();
+        let mut rng = Rng::new(6);
+        let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+        let x = Tensor::randn(&[2, 18], 1.0, &mut rng);
+        let y = Tensor::randn(&[2, 18], 1.0, &mut rng);
+        let mut xy = x.clone();
+        xy.scale(2.0);
+        xy.axpy(-3.0, &y).unwrap();
+        let lhs = tt.matvec(&xy).unwrap();
+        let mut rhs = tt.matvec(&x).unwrap();
+        rhs.scale(2.0);
+        rhs.axpy(-3.0, &tt.matvec(&y).unwrap()).unwrap();
+        for (a, b) in lhs.data().iter().zip(rhs.data()) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_consistent() {
+        let shape = TtShape::uniform(&[4, 4], &[4, 4], 3).unwrap();
+        let mut rng = Rng::new(7);
+        let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+        let mut scratch = MatvecScratch::default();
+        let x1 = Tensor::randn(&[3, 16], 1.0, &mut rng);
+        let x2 = Tensor::randn(&[5, 16], 1.0, &mut rng);
+        let a1 = tt.matvec_with(&x1, &mut scratch).unwrap();
+        let _ = tt.matvec_with(&x2, &mut scratch).unwrap();
+        let a1_again = tt.matvec_with(&x1, &mut scratch).unwrap();
+        assert_eq!(a1, a1_again);
+    }
+
+    #[test]
+    fn transpose_matvec_is_wt() {
+        let shape = TtShape::uniform(&[2, 4], &[3, 3], 2).unwrap();
+        let mut rng = Rng::new(8);
+        let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+        let ttt = tt.transpose().unwrap();
+        let g = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let got = ttt.matvec(&g).unwrap(); // (4, 9) = g W
+        let w = tt.to_dense().unwrap();
+        let want = crate::tensor::matmul(&g, &w).unwrap();
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()));
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Tensor-Train format (S3 in DESIGN.md) — the paper's §3 substrate,
+//! built from scratch (a TT-Toolbox replacement).
+//!
+//! * [`TtShape`] — static shape/rank bookkeeping + parameter accounting
+//!   (the paper's compression ratios are pure arithmetic over this).
+//! * [`TtMatrix`] — a matrix `W (M x N)` stored as `d` cores
+//!   `G_k (r_{k-1}, m_k, n_k, r_k)`; supports densification, fast
+//!   matrix-by-batch products ([`TtMatrix::matvec`]), TT arithmetic
+//!   (add / hadamard / scale / TT-by-TT matmul), decomposition of a dense
+//!   matrix ([`TtMatrix::from_dense`], TT-SVD) and rank recompression
+//!   ([`TtMatrix::round`]).
+//! * [`TtVector`] — the analogous compressed vector (paper §3.1), used by
+//!   the future-work path where layer inputs also live in TT format.
+//!
+//! Index convention is row-major everywhere (DESIGN.md §6).
+
+mod init;
+mod matvec;
+mod ops;
+mod round;
+mod shape;
+mod ttmat;
+mod ttsvd;
+mod ttvec;
+
+pub use matvec::MatvecScratch;
+pub use shape::TtShape;
+pub use ttmat::TtMatrix;
+pub use ttvec::TtVector;

@@ -1,0 +1,323 @@
+//! TT arithmetic (the paper's §3 "supported operations"): scaling, sum,
+//! Hadamard product, dot / Frobenius norm, and TT-by-TT matrix product.
+//! Sums and products increase ranks (additively / multiplicatively);
+//! callers recompress with [`TtMatrix::round`].
+
+use crate::error::{shape_err, Result};
+use crate::tensor::Tensor;
+use crate::tt::{TtMatrix, TtShape};
+
+impl TtMatrix {
+    /// `alpha * W` — scales the first core only.
+    pub fn scale(&self, alpha: f32) -> Result<TtMatrix> {
+        let mut cores = self.cores().to_vec();
+        cores[0].scale(alpha);
+        TtMatrix::from_cores(self.shape().clone(), cores)
+    }
+
+    /// `W + V` in TT format.  Ranks add: `r_k(W+V) = r_k(W) + r_k(V)` for
+    /// interior k (block-diagonal core stacking).
+    pub fn add(&self, other: &TtMatrix) -> Result<TtMatrix> {
+        if self.shape().ms() != other.shape().ms() || self.shape().ns() != other.shape().ns() {
+            return shape_err(format!("add: {} vs {}", self.shape(), other.shape()));
+        }
+        let d = self.d();
+        let ra = self.shape().ranks();
+        let rb = other.shape().ranks();
+        let mut ranks = vec![1usize; d + 1];
+        for k in 1..d {
+            ranks[k] = ra[k] + rb[k];
+        }
+        let mut cores = Vec::with_capacity(d);
+        for k in 0..d {
+            let [a0, m, n, a1] = self.shape().core_shape(k);
+            let [b0, _, _, b1] = other.shape().core_shape(k);
+            let (c0, c1) = (ranks[k], ranks[k + 1]);
+            let mut core = Tensor::zeros(&[c0, m, n, c1]);
+            let ca = self.cores()[k].data();
+            let cb = other.cores()[k].data();
+            let cd = core.data_mut();
+            // A block at (0..a0, 0..a1); B block at (c0-b0.., c1-b1..)
+            for r in 0..a0 {
+                for i in 0..m {
+                    for j in 0..n {
+                        let src = ((r * m + i) * n + j) * a1;
+                        let dst = ((r * m + i) * n + j) * c1;
+                        cd[dst..dst + a1].copy_from_slice(&ca[src..src + a1]);
+                    }
+                }
+            }
+            // B block accumulates (+=): for d == 1 both blocks coincide at
+            // (0,0) and the sum of the two cores IS the TT sum.
+            let (off0, off1) = (c0 - b0, c1 - b1);
+            for r in 0..b0 {
+                for i in 0..m {
+                    for j in 0..n {
+                        let src = ((r * m + i) * n + j) * b1;
+                        let dst = (((r + off0) * m + i) * n + j) * c1 + off1;
+                        for s in 0..b1 {
+                            cd[dst + s] += cb[src + s];
+                        }
+                    }
+                }
+            }
+            cores.push(core);
+        }
+        let shape = TtShape::new(self.shape().ms(), self.shape().ns(), &ranks)?;
+        TtMatrix::from_cores(shape, cores)
+    }
+
+    /// `W - V`.
+    pub fn sub(&self, other: &TtMatrix) -> Result<TtMatrix> {
+        self.add(&other.scale(-1.0)?)
+    }
+
+    /// Elementwise (Hadamard) product.  Ranks multiply.
+    pub fn hadamard(&self, other: &TtMatrix) -> Result<TtMatrix> {
+        if self.shape().ms() != other.shape().ms() || self.shape().ns() != other.shape().ns() {
+            return shape_err(format!("hadamard: {} vs {}", self.shape(), other.shape()));
+        }
+        let d = self.d();
+        let mut ranks = vec![1usize; d + 1];
+        for k in 0..=d {
+            ranks[k] = self.shape().ranks()[k] * other.shape().ranks()[k];
+        }
+        let mut cores = Vec::with_capacity(d);
+        for k in 0..d {
+            let [a0, m, n, a1] = self.shape().core_shape(k);
+            let [b0, _, _, b1] = other.shape().core_shape(k);
+            let mut core = Tensor::zeros(&[a0 * b0, m, n, a1 * b1]);
+            let ca = self.cores()[k].data();
+            let cb = other.cores()[k].data();
+            let cd = core.data_mut();
+            let c1 = a1 * b1;
+            for ra in 0..a0 {
+                for rb in 0..b0 {
+                    let r = ra * b0 + rb;
+                    for i in 0..m {
+                        for j in 0..n {
+                            let abase = ((ra * m + i) * n + j) * a1;
+                            let bbase = ((rb * m + i) * n + j) * b1;
+                            let dbase = ((r * m + i) * n + j) * c1;
+                            for sa in 0..a1 {
+                                let av = ca[abase + sa];
+                                if av != 0.0 {
+                                    for sb in 0..b1 {
+                                        cd[dbase + sa * b1 + sb] = av * cb[bbase + sb];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            cores.push(core);
+        }
+        let shape = TtShape::new(self.shape().ms(), self.shape().ns(), &ranks)?;
+        TtMatrix::from_cores(shape, cores)
+    }
+
+    /// Inner product `<W, V> = Σ_{t,l} W(t,l) V(t,l)` without densifying —
+    /// contract core-by-core, `O(d · s · r^4)`-ish.
+    pub fn dot(&self, other: &TtMatrix) -> Result<f64> {
+        if self.shape().ms() != other.shape().ms() || self.shape().ns() != other.shape().ns() {
+            return shape_err(format!("dot: {} vs {}", self.shape(), other.shape()));
+        }
+        // v[(a, b)] running contraction, starts 1x1
+        let mut v = vec![1.0f64];
+        for k in 0..self.d() {
+            let [a0, m, n, a1] = self.shape().core_shape(k);
+            let [b0, _, _, b1] = other.shape().core_shape(k);
+            let ca = self.cores()[k].data();
+            let cb = other.cores()[k].data();
+            let mut nv = vec![0.0f64; a1 * b1];
+            // nv[a', b'] = sum_{a, b, i, j} v[a,b] * A[a,i,j,a'] * B[b,i,j,b']
+            // factor: for each (i,j): t[a'] per a via A, u[b'] per b via B
+            for i in 0..m {
+                for j in 0..n {
+                    // w[a, b'] = sum_b v[a,b] B[b,i,j,b']
+                    let mut w = vec![0.0f64; a0 * b1];
+                    for a in 0..a0 {
+                        for b in 0..b0 {
+                            let vv = v[a * b0 + b];
+                            if vv != 0.0 {
+                                let bbase = ((b * m + i) * n + j) * b1;
+                                for sb in 0..b1 {
+                                    w[a * b1 + sb] += vv * cb[bbase + sb] as f64;
+                                }
+                            }
+                        }
+                    }
+                    // nv[a', b'] += sum_a A[a,i,j,a'] w[a, b']
+                    for a in 0..a0 {
+                        let abase = ((a * m + i) * n + j) * a1;
+                        for sa in 0..a1 {
+                            let av = ca[abase + sa] as f64;
+                            if av != 0.0 {
+                                for sb in 0..b1 {
+                                    nv[sa * b1 + sb] += av * w[a * b1 + sb];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            v = nv;
+        }
+        Ok(v[0])
+    }
+
+    /// Frobenius norm via `sqrt(<W, W>)`.
+    pub fn norm(&self) -> Result<f64> {
+        Ok(self.dot(self)?.max(0.0).sqrt())
+    }
+
+    /// TT-by-TT matrix product `W (M x N) · V (N x P)`: cores contract over
+    /// the shared column/row modes; ranks multiply.
+    pub fn matmul_tt(&self, other: &TtMatrix) -> Result<TtMatrix> {
+        if self.shape().ns() != other.shape().ms() {
+            return shape_err(format!("matmul_tt: {} x {}", self.shape(), other.shape()));
+        }
+        let d = self.d();
+        let mut ranks = vec![1usize; d + 1];
+        for k in 0..=d {
+            ranks[k] = self.shape().ranks()[k] * other.shape().ranks()[k];
+        }
+        let mut cores = Vec::with_capacity(d);
+        for k in 0..d {
+            let [a0, m, n, a1] = self.shape().core_shape(k);
+            let [b0, _, p, b1] = other.shape().core_shape(k);
+            let mut core = Tensor::zeros(&[a0 * b0, m, p, a1 * b1]);
+            let ca = self.cores()[k].data();
+            let cb = other.cores()[k].data();
+            let cd = core.data_mut();
+            let c1 = a1 * b1;
+            for ra in 0..a0 {
+                for rb in 0..b0 {
+                    let r = ra * b0 + rb;
+                    for i in 0..m {
+                        for l in 0..p {
+                            let dbase = ((r * m + i) * p + l) * c1;
+                            for j in 0..n {
+                                let abase = ((ra * m + i) * n + j) * a1;
+                                let bbase = ((rb * n + j) * p + l) * b1;
+                                for sa in 0..a1 {
+                                    let av = ca[abase + sa];
+                                    if av != 0.0 {
+                                        for sb in 0..b1 {
+                                            cd[dbase + sa * b1 + sb] += av * cb[bbase + sb];
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            cores.push(core);
+        }
+        let shape = TtShape::new(self.shape().ms(), other.shape().ns(), &ranks)?;
+        TtMatrix::from_cores(shape, cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::rng::Rng;
+
+    fn rand_tt(ms: &[usize], ns: &[usize], r: usize, seed: u64) -> TtMatrix {
+        TtMatrix::random(&TtShape::uniform(ms, ns, r).unwrap(), &mut Rng::new(seed)).unwrap()
+    }
+
+    fn close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn scale_matches_dense() {
+        let tt = rand_tt(&[2, 3], &[3, 2], 2, 1);
+        let mut want = tt.to_dense().unwrap();
+        want.scale(-2.5);
+        close(&tt.scale(-2.5).unwrap().to_dense().unwrap(), &want, 1e-5);
+    }
+
+    #[test]
+    fn add_matches_dense() {
+        let a = rand_tt(&[2, 3, 2], &[2, 2, 3], 2, 2);
+        let b = rand_tt(&[2, 3, 2], &[2, 2, 3], 3, 3);
+        let want = a.to_dense().unwrap().add(&b.to_dense().unwrap()).unwrap();
+        let sum = a.add(&b).unwrap();
+        close(&sum.to_dense().unwrap(), &want, 1e-5);
+        assert_eq!(sum.shape().ranks()[1], 5); // 2 + 3
+    }
+
+    #[test]
+    fn sub_is_zero_for_self() {
+        let a = rand_tt(&[2, 2], &[3, 3], 2, 4);
+        let z = a.sub(&a).unwrap();
+        assert!(z.norm().unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn hadamard_matches_dense() {
+        let a = rand_tt(&[2, 2], &[3, 2], 2, 5);
+        let b = rand_tt(&[2, 2], &[3, 2], 2, 6);
+        let want = a.to_dense().unwrap().hadamard(&b.to_dense().unwrap()).unwrap();
+        let got = a.hadamard(&b).unwrap();
+        close(&got.to_dense().unwrap(), &want, 1e-5);
+        assert_eq!(got.shape().ranks()[1], 4); // 2 * 2
+    }
+
+    #[test]
+    fn dot_matches_dense() {
+        let a = rand_tt(&[2, 3], &[2, 2], 2, 7);
+        let b = rand_tt(&[2, 3], &[2, 2], 3, 8);
+        let want = a.to_dense().unwrap().dot(&b.to_dense().unwrap()).unwrap() as f64;
+        let got = a.dot(&b).unwrap();
+        assert!((got - want).abs() < 1e-4 * (1.0 + want.abs()), "{got} vs {want}");
+    }
+
+    #[test]
+    fn norm_matches_dense() {
+        let a = rand_tt(&[3, 2, 2], &[2, 2, 2], 2, 9);
+        let want = a.to_dense().unwrap().norm() as f64;
+        assert!((a.norm().unwrap() - want).abs() < 1e-4 * (1.0 + want));
+    }
+
+    #[test]
+    fn matmul_tt_matches_dense() {
+        // W: 6x8 modes (2,3)x(2,4); V: 8x9 modes (2,4)x(3,3)
+        let a = rand_tt(&[2, 3], &[2, 4], 2, 10);
+        let b = rand_tt(&[2, 4], &[3, 3], 2, 11);
+        let got = a.matmul_tt(&b).unwrap();
+        let want = matmul(&a.to_dense().unwrap(), &b.to_dense().unwrap()).unwrap();
+        close(&got.to_dense().unwrap(), &want, 1e-4);
+        assert_eq!(got.m_total(), 6);
+        assert_eq!(got.n_total(), 9);
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let a = rand_tt(&[2, 2], &[2, 2], 2, 12);
+        let b = rand_tt(&[2, 3], &[2, 2], 2, 13);
+        assert!(a.add(&b).is_err());
+        assert!(a.hadamard(&b).is_err());
+        assert!(a.dot(&b).is_err());
+        assert!(a.matmul_tt(&b).is_err());
+    }
+
+    #[test]
+    fn add_then_round_recovers() {
+        let a = rand_tt(&[2, 2, 2], &[2, 2, 2], 2, 14);
+        let sum = a.add(&a).unwrap().round(None, 1e-9).unwrap();
+        let mut want = a.to_dense().unwrap();
+        want.scale(2.0);
+        close(&sum.to_dense().unwrap(), &want, 1e-4);
+        assert!(sum.shape().max_rank() <= 2);
+    }
+}

@@ -1,0 +1,137 @@
+//! TT-rounding (rank recompression) — Oseledets 2011, Alg. 2.
+//!
+//! Right-to-left orthogonalization (LQ via QR of the transpose) followed by
+//! a left-to-right truncated-SVD sweep.  After orthogonalization the whole
+//! tensor's Frobenius norm concentrates in the first core, which gives the
+//! exact error budget for the truncation sweep.
+
+use crate::error::Result;
+use crate::linalg::{qr, truncated_svd};
+use crate::tensor::{matmul, Tensor};
+use crate::tt::{TtMatrix, TtShape};
+
+impl TtMatrix {
+    /// Recompress to `max_rank` and/or relative tolerance `eps`.
+    ///
+    /// Guarantees `‖W − round(W)‖_F ≤ eps · ‖W‖_F` when the rank cap does
+    /// not bind.  Rounding after TT arithmetic (`add`, `hadamard`, TT-by-TT
+    /// products) is what keeps ranks from blowing up — the paper's §3
+    /// "operations increase ranks" caveat.
+    pub fn round(&self, max_rank: Option<usize>, eps: f64) -> Result<TtMatrix> {
+        let d = self.d();
+        let ms = self.shape().ms().to_vec();
+        let ns = self.shape().ns().to_vec();
+        let mut cores: Vec<Tensor> = self.cores().to_vec();
+        let mut ranks: Vec<usize> = self.shape().ranks().to_vec();
+
+        if d == 1 {
+            return Ok(self.clone()); // single core: ranks are already (1,1)
+        }
+
+        // ---- right-to-left orthogonalization ------------------------------
+        for k in (1..d).rev() {
+            let s_k = ms[k] * ns[k];
+            let (r0, r1) = (ranks[k], ranks[k + 1]);
+            // unfold (r0, s_k*r1); LQ: unfold^T = Q R  =>  unfold = R^T Q^T
+            let unfold_t = cores[k].reshaped(&[r0, s_k * r1])?.t2()?; // (s_k r1, r0)
+            let (q, r) = qr(&unfold_t)?; // q: (s_k r1, p), r: (p, r0), p = min
+            let p = q.shape()[1];
+            // new core k = Q^T reshaped (p, m, n, r1)
+            cores[k] = q.t2()?.reshape(&[p, ms[k], ns[k], r1])?;
+            // fold R^T into core k-1: (.., r0) x (r0, p)
+            let rt = r.t2()?; // (r0, p)
+            let left_rows = ranks[k - 1] * ms[k - 1] * ns[k - 1];
+            let prev = cores[k - 1].reshaped(&[left_rows, r0])?;
+            cores[k - 1] = matmul(&prev, &rt)?.reshape(&[ranks[k - 1], ms[k - 1], ns[k - 1], p])?;
+            ranks[k] = p;
+        }
+
+        // norm now lives in core 0
+        let norm = cores[0].norm() as f64;
+        let delta = if d > 1 { eps * norm / ((d - 1) as f64).sqrt() } else { 0.0 };
+
+        // ---- left-to-right truncation sweep -------------------------------
+        for k in 0..d - 1 {
+            let s_k = ms[k] * ns[k];
+            let (r0, r1) = (ranks[k], ranks[k + 1]);
+            let unfold = cores[k].reshaped(&[r0 * s_k, r1])?;
+            let tsvd = truncated_svd(&unfold, max_rank, delta)?;
+            let p = tsvd.s.len();
+            cores[k] = tsvd.u.reshape(&[r0, ms[k], ns[k], p])?;
+            // carry diag(s)·Vt into core k+1
+            let mut carry = tsvd.vt; // (p, r1)
+            for (i, &sv) in tsvd.s.iter().enumerate() {
+                let cols = carry.shape()[1];
+                for x in &mut carry.data_mut()[i * cols..(i + 1) * cols] {
+                    *x *= sv;
+                }
+            }
+            let next = cores[k + 1].reshaped(&[r1, ms[k + 1] * ns[k + 1] * ranks[k + 2]])?;
+            cores[k + 1] =
+                matmul(&carry, &next)?.reshape(&[p, ms[k + 1], ns[k + 1], ranks[k + 2]])?;
+            ranks[k + 1] = p;
+        }
+
+        let shape = TtShape::new(&ms, &ns, &ranks)?;
+        TtMatrix::from_cores(shape, cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rounding_exact_when_rank_suffices() {
+        let shape = TtShape::uniform(&[3, 3, 3], &[3, 3, 3], 3).unwrap();
+        let tt = TtMatrix::random(&shape, &mut Rng::new(1)).unwrap();
+        let rounded = tt.round(Some(9), 0.0).unwrap();
+        let w = tt.to_dense().unwrap();
+        assert!(rounded.rel_error_vs(&w).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn rounding_reduces_inflated_ranks() {
+        // A + A has doubled ranks but represents 2A: rounding must recover
+        // the original ranks exactly.
+        let shape = TtShape::uniform(&[3, 3, 3], &[3, 3, 3], 2).unwrap();
+        let tt = TtMatrix::random(&shape, &mut Rng::new(2)).unwrap();
+        let doubled = tt.add(&tt).unwrap();
+        assert!(doubled.shape().max_rank() == 4);
+        let rounded = doubled.round(None, 1e-10).unwrap();
+        assert!(rounded.shape().max_rank() <= 2, "ranks {:?}", rounded.shape().ranks());
+        let mut want = tt.to_dense().unwrap();
+        want.scale(2.0);
+        assert!(rounded.rel_error_vs(&want).unwrap() < 1e-5);
+    }
+
+    #[test]
+    fn rounding_respects_eps() {
+        let shape = TtShape::uniform(&[4, 4], &[4, 4], 4).unwrap();
+        let tt = TtMatrix::random(&shape, &mut Rng::new(3)).unwrap();
+        let w = tt.to_dense().unwrap();
+        for &eps in &[0.05f64, 0.2, 0.5] {
+            let r = tt.round(None, eps).unwrap();
+            let err = r.rel_error_vs(&w).unwrap();
+            assert!(err <= eps + 1e-6, "err {err} > eps {eps}");
+        }
+    }
+
+    #[test]
+    fn rank_cap_binds() {
+        let shape = TtShape::uniform(&[4, 4, 4], &[4, 4, 4], 6).unwrap();
+        let tt = TtMatrix::random(&shape, &mut Rng::new(4)).unwrap();
+        let r = tt.round(Some(2), 0.0).unwrap();
+        assert!(r.shape().max_rank() <= 2);
+        assert_eq!(r.m_total(), tt.m_total());
+    }
+
+    #[test]
+    fn d1_noop() {
+        let shape = TtShape::uniform(&[5], &[7], 1).unwrap();
+        let tt = TtMatrix::random(&shape, &mut Rng::new(5)).unwrap();
+        let r = tt.round(Some(1), 0.1).unwrap();
+        assert!(r.rel_error_vs(&tt.to_dense().unwrap()).unwrap() < 1e-6);
+    }
+}

@@ -1,0 +1,183 @@
+//! TT shape / rank bookkeeping (rust mirror of `python/compile/shapes.py`).
+
+use crate::error::{shape_err, Result};
+
+/// Static description of a TT-matrix: row modes, column modes, ranks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TtShape {
+    ms: Vec<usize>,
+    ns: Vec<usize>,
+    ranks: Vec<usize>,
+}
+
+impl TtShape {
+    /// Validated constructor. `ranks` has length `d + 1` with boundary 1s.
+    pub fn new(ms: &[usize], ns: &[usize], ranks: &[usize]) -> Result<Self> {
+        if ms.len() != ns.len() || ms.is_empty() {
+            return shape_err(format!("ms/ns mismatch: {:?} vs {:?}", ms, ns));
+        }
+        if ranks.len() != ms.len() + 1 {
+            return shape_err(format!("need d+1 ranks, got {:?}", ranks));
+        }
+        if ranks[0] != 1 || ranks[ranks.len() - 1] != 1 {
+            return shape_err("boundary TT-ranks must be 1");
+        }
+        if ms.iter().chain(ns).chain(ranks).any(|&x| x == 0) {
+            return shape_err("zero mode size or rank");
+        }
+        Ok(TtShape { ms: ms.to_vec(), ns: ns.to_vec(), ranks: ranks.to_vec() })
+    }
+
+    /// Uniform ranks `(1, r, ..., r, 1)` — the paper's `TT<r>` notation.
+    pub fn uniform(ms: &[usize], ns: &[usize], r: usize) -> Result<Self> {
+        let d = ms.len();
+        let mut ranks = vec![r; d + 1];
+        ranks[0] = 1;
+        ranks[d] = 1;
+        TtShape::new(ms, ns, &ranks)
+    }
+
+    pub fn d(&self) -> usize {
+        self.ms.len()
+    }
+
+    pub fn ms(&self) -> &[usize] {
+        &self.ms
+    }
+
+    pub fn ns(&self) -> &[usize] {
+        &self.ns
+    }
+
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    pub fn m_total(&self) -> usize {
+        self.ms.iter().product()
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.ns.iter().product()
+    }
+
+    pub fn max_rank(&self) -> usize {
+        *self.ranks.iter().max().unwrap()
+    }
+
+    /// Shape of core `k`: `(r_{k-1}, m_k, n_k, r_k)`.
+    pub fn core_shape(&self, k: usize) -> [usize; 4] {
+        [self.ranks[k], self.ms[k], self.ns[k], self.ranks[k + 1]]
+    }
+
+    /// Number of parameters in the cores (the paper's compression numerator
+    /// is `dense_params / num_params`).
+    pub fn num_params(&self) -> usize {
+        (0..self.d()).map(|k| self.core_shape(k).iter().product::<usize>()).sum()
+    }
+
+    pub fn dense_params(&self) -> usize {
+        self.m_total() * self.n_total()
+    }
+
+    pub fn compression(&self) -> f64 {
+        self.dense_params() as f64 / self.num_params() as f64
+    }
+
+    /// Per-core init std giving the reconstructed W He-style variance 2/N
+    /// (same formula as `python/compile/shapes.py::TtShape.init_std`).
+    pub fn init_std(&self) -> f32 {
+        let paths: f64 = self.ranks[1..self.d()].iter().product::<usize>() as f64;
+        let target = 2.0 / self.n_total() as f64;
+        ((target / paths).powf(1.0 / (2.0 * self.d() as f64))) as f32
+    }
+
+    /// Clamp every internal rank to `cap` (boundaries stay 1); used to
+    /// express "all TT-ranks equal r" configurations from Table 2.
+    pub fn with_rank_cap(&self, cap: usize) -> TtShape {
+        let d = self.d();
+        let mut ranks = self.ranks.clone();
+        for r in ranks.iter_mut().take(d).skip(1) {
+            *r = (*r).min(cap).max(1);
+        }
+        TtShape { ms: self.ms.clone(), ns: self.ns.clone(), ranks }
+    }
+
+    /// Maximal representable ranks for these modes (any tensor of this
+    /// matrix shape admits a TT-decomposition within these ranks —
+    /// Oseledets Th. 2.1).
+    pub fn full_ranks(ms: &[usize], ns: &[usize]) -> Vec<usize> {
+        let d = ms.len();
+        let mut ranks = vec![1usize; d + 1];
+        for k in 1..d {
+            let left: usize = (0..k).map(|i| ms[i] * ns[i]).product();
+            let right: usize = (k..d).map(|i| ms[i] * ns[i]).product();
+            ranks[k] = left.min(right);
+        }
+        ranks
+    }
+}
+
+impl std::fmt::Display for TtShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TT[{}x{}; modes {:?}x{:?}; ranks {:?}; params {}]",
+            self.m_total(),
+            self.n_total(),
+            self.ms,
+            self.ns,
+            self.ranks,
+            self.num_params()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation() {
+        assert!(TtShape::new(&[2, 2], &[2], &[1, 2, 1]).is_err());
+        assert!(TtShape::new(&[2, 2], &[2, 2], &[1, 2]).is_err());
+        assert!(TtShape::new(&[2, 2], &[2, 2], &[2, 2, 1]).is_err());
+        assert!(TtShape::new(&[2, 0], &[2, 2], &[1, 2, 1]).is_err());
+        assert!(TtShape::new(&[2, 2], &[2, 2], &[1, 2, 1]).is_ok());
+    }
+
+    #[test]
+    fn param_accounting() {
+        let s = TtShape::new(&[2, 3, 4], &[5, 6, 7], &[1, 3, 2, 1]).unwrap();
+        assert_eq!(s.num_params(), 2 * 5 * 3 + 3 * 3 * 6 * 2 + 2 * 4 * 7);
+        assert_eq!(s.dense_params(), 24 * 210);
+    }
+
+    #[test]
+    fn paper_mnist_rank8_params() {
+        let s = TtShape::uniform(&[4; 5], &[4; 5], 8).unwrap();
+        assert_eq!(s.num_params(), 3328);
+        assert_eq!(s.dense_params(), 1024 * 1024);
+    }
+
+    #[test]
+    fn paper_table2_tt2_compression() {
+        // vgg fc6, rank 2: 25088x4096 -> 528 params (Table 2 row TT2)
+        let s = TtShape::uniform(&[4, 4, 4, 4, 4, 4], &[2, 7, 8, 8, 7, 4], 2).unwrap();
+        assert_eq!(s.num_params(), 528);
+        assert!((s.compression() - 194_621.0).abs() / 194_621.0 < 0.01);
+    }
+
+    #[test]
+    fn full_ranks_bound() {
+        let r = TtShape::full_ranks(&[2, 2, 2], &[2, 2, 2]);
+        assert_eq!(r, vec![1, 4, 4, 1]);
+    }
+
+    #[test]
+    fn rank_cap() {
+        let s = TtShape::new(&[2, 2, 2], &[2, 2, 2], &[1, 4, 4, 1]).unwrap();
+        let c = s.with_rank_cap(2);
+        assert_eq!(c.ranks(), &[1, 2, 2, 1]);
+    }
+}

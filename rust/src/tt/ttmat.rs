@@ -1,0 +1,281 @@
+//! The TT-matrix: storage, densification, element access.
+
+use crate::error::{shape_err, Error, Result};
+use crate::tensor::Tensor;
+use crate::tt::TtShape;
+
+/// A matrix `W (M x N)` in Tensor-Train format (paper §3.1): `d` cores
+/// `G_k` of shape `(r_{k-1}, m_k, n_k, r_k)` with
+/// `W(t, l) = G_1[i_1, j_1] · ... · G_d[i_d, j_d]` for the row-major
+/// multi-indices `t = (i_1..i_d)`, `l = (j_1..j_d)`.
+#[derive(Clone, Debug)]
+pub struct TtMatrix {
+    shape: TtShape,
+    cores: Vec<Tensor>,
+    /// cached GEMM operands: core k flattened to `(r_{k-1}·n_k, m_k·r_k)`
+    /// with K ordered `(r_{k-1}, n_k)` — same layout as the Pallas kernel's
+    /// `core_to_matrix` (python/compile/kernels/tt_contract.py).
+    core_mats: Vec<Tensor>,
+}
+
+impl TtMatrix {
+    /// Build from cores; validates every core against `shape`.
+    pub fn from_cores(shape: TtShape, cores: Vec<Tensor>) -> Result<Self> {
+        if cores.len() != shape.d() {
+            return shape_err(format!("{} cores for d={}", cores.len(), shape.d()));
+        }
+        for (k, core) in cores.iter().enumerate() {
+            let want = shape.core_shape(k);
+            if core.shape() != want {
+                return shape_err(format!("core {k}: shape {:?}, want {:?}", core.shape(), want));
+            }
+        }
+        let core_mats = cores
+            .iter()
+            .map(|c| core_to_matrix(c))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TtMatrix { shape, cores, core_mats })
+    }
+
+    pub fn shape(&self) -> &TtShape {
+        &self.shape
+    }
+
+    pub fn cores(&self) -> &[Tensor] {
+        &self.cores
+    }
+
+    pub fn core_mats(&self) -> &[Tensor] {
+        &self.core_mats
+    }
+
+    pub fn d(&self) -> usize {
+        self.shape.d()
+    }
+
+    pub fn m_total(&self) -> usize {
+        self.shape.m_total()
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.shape.n_total()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.shape.num_params()
+    }
+
+    pub fn compression(&self) -> f64 {
+        self.shape.compression()
+    }
+
+    /// Replace core `k` (used by the training engine's SGD update).
+    pub fn set_core(&mut self, k: usize, core: Tensor) -> Result<()> {
+        let want = self.shape.core_shape(k);
+        if core.shape() != want {
+            return shape_err(format!("set_core {k}: {:?}, want {:?}", core.shape(), want));
+        }
+        self.core_mats[k] = core_to_matrix(&core)?;
+        self.cores[k] = core;
+        Ok(())
+    }
+
+    /// The transposed TT-matrix `Wᵀ (N x M)`: every core swaps its row and
+    /// column mode — no arithmetic, just permutes.  Used by backprop for
+    /// `dL/dx = Wᵀ · dL/dy` (paper eq. 6).
+    pub fn transpose(&self) -> Result<TtMatrix> {
+        let shape = TtShape::new(self.shape.ns(), self.shape.ms(), self.shape.ranks())?;
+        let cores = self
+            .cores
+            .iter()
+            .map(|c| c.permute(&[0, 2, 1, 3]))
+            .collect::<Result<Vec<_>>>()?;
+        TtMatrix::from_cores(shape, cores)
+    }
+
+    /// Single element `W(t, l)` by multiplying the core chain — `O(d r^2)`.
+    pub fn element(&self, t: usize, l: usize) -> Result<f32> {
+        if t >= self.m_total() || l >= self.n_total() {
+            return shape_err(format!("element ({t},{l}) out of range"));
+        }
+        let d = self.d();
+        // decompose row-major multi-indices
+        let mut iks = vec![0usize; d];
+        let mut jks = vec![0usize; d];
+        let (mut tt, mut ll) = (t, l);
+        for k in (0..d).rev() {
+            iks[k] = tt % self.shape.ms()[k];
+            tt /= self.shape.ms()[k];
+            jks[k] = ll % self.shape.ns()[k];
+            ll /= self.shape.ns()[k];
+        }
+        // v (1 x r) running product
+        let mut v = vec![1.0f64];
+        for k in 0..d {
+            let [r0, _m, n, r1] = self.shape.core_shape(k);
+            let core = self.cores[k].data();
+            let (i, j) = (iks[k], jks[k]);
+            let mut nv = vec![0.0f64; r1];
+            for (a, &va) in v.iter().enumerate() {
+                if va != 0.0 {
+                    let base = ((a * self.shape.ms()[k] + i) * n + j) * r1;
+                    for (b, slot) in nv.iter_mut().enumerate() {
+                        *slot += va * core[base + b] as f64;
+                    }
+                }
+            }
+            debug_assert_eq!(v.len(), r0);
+            v = nv;
+        }
+        Ok(v[0] as f32)
+    }
+
+    /// Densify to the explicit `(M, N)` matrix.
+    ///
+    /// Cost `O(M · N · max r^2)` — fine for the experiment sizes that need
+    /// it (tests, MR baselines, Fig. 1 reconstructions).
+    pub fn to_dense(&self) -> Result<Tensor> {
+        // acc: (Ma, Na, r) with Ma/Na the products of processed modes
+        let [_, m0, n0, r1] = self.shape.core_shape(0);
+        let mut acc = self.cores[0].reshaped(&[m0, n0, r1])?;
+        for k in 1..self.d() {
+            let [r0, m, n, r1] = self.shape.core_shape(k);
+            let (ma, na) = (acc.shape()[0], acc.shape()[1]);
+            let core = self.cores[k].data();
+            let accd = acc.data();
+            let mut out = vec![0.0f32; ma * m * na * n * r1];
+            let out_cols = na * n * r1;
+            for x in 0..ma {
+                for y in 0..na {
+                    let acc_base = (x * na + y) * r0;
+                    for i in 0..m {
+                        for j in 0..n {
+                            let out_base = (x * m + i) * out_cols + (y * n + j) * r1;
+                            for r in 0..r0 {
+                                let a = accd[acc_base + r];
+                                if a != 0.0 {
+                                    let core_base = ((r * m + i) * n + j) * r1;
+                                    for s in 0..r1 {
+                                        out[out_base + s] += a * core[core_base + s];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            acc = Tensor::from_vec(&[ma * m, na * n, r1], out)?;
+        }
+        if acc.shape()[2] != 1 {
+            return Err(Error::Shape("boundary rank != 1".into()));
+        }
+        acc.reshape(&[self.m_total(), self.n_total()])
+    }
+}
+
+/// Flatten a core `(r0, m, n, r1)` to the GEMM operand `(r0·n, m·r1)`,
+/// K axis ordered `(r0, n)` — mirrors the L1 kernel layout exactly.
+pub(crate) fn core_to_matrix(core: &Tensor) -> Result<Tensor> {
+    if core.ndim() != 4 {
+        return shape_err(format!("core must be 4-D, got {:?}", core.shape()));
+    }
+    let s = core.shape().to_vec();
+    core.permute(&[0, 2, 1, 3])?.reshape(&[s[0] * s[2], s[1] * s[3]])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tt::TtMatrix;
+    use crate::util::rng::Rng;
+
+    fn random_tt(ms: &[usize], ns: &[usize], r: usize, seed: u64) -> TtMatrix {
+        let shape = TtShape::uniform(ms, ns, r).unwrap();
+        TtMatrix::random(&shape, &mut Rng::new(seed)).unwrap()
+    }
+
+    #[test]
+    fn from_cores_validates() {
+        let shape = TtShape::uniform(&[2, 2], &[3, 3], 2).unwrap();
+        let bad = vec![Tensor::zeros(&[1, 2, 3, 2]), Tensor::zeros(&[2, 2, 2, 1])];
+        assert!(TtMatrix::from_cores(shape.clone(), bad).is_err());
+        let good = vec![Tensor::zeros(&[1, 2, 3, 2]), Tensor::zeros(&[2, 2, 3, 1])];
+        assert!(TtMatrix::from_cores(shape, good).is_ok());
+    }
+
+    #[test]
+    fn element_matches_dense() {
+        let tt = random_tt(&[2, 3, 2], &[3, 2, 2], 3, 1);
+        let w = tt.to_dense().unwrap();
+        for &(t, l) in &[(0, 0), (5, 7), (11, 11), (3, 0)] {
+            let e = tt.element(t, l).unwrap();
+            assert!((e - w.at(&[t, l])).abs() < 1e-5, "({t},{l})");
+        }
+    }
+
+    #[test]
+    fn rank1_tt_is_kronecker() {
+        // rank-1: W = A ⊗ B for 1x1 cores... use d=2, r=1:
+        // W((i1,i2),(j1,j2)) = G1[i1,j1] * G2[i2,j2]
+        let shape = TtShape::uniform(&[2, 2], &[2, 2], 1).unwrap();
+        let mut rng = Rng::new(2);
+        let g1 = Tensor::randn(&[1, 2, 2, 1], 1.0, &mut rng);
+        let g2 = Tensor::randn(&[1, 2, 2, 1], 1.0, &mut rng);
+        let tt = TtMatrix::from_cores(shape, vec![g1.clone(), g2.clone()]).unwrap();
+        let w = tt.to_dense().unwrap();
+        for i1 in 0..2 {
+            for i2 in 0..2 {
+                for j1 in 0..2 {
+                    for j2 in 0..2 {
+                        let want = g1.at(&[0, i1, j1, 0]) * g2.at(&[0, i2, j2, 0]);
+                        let got = w.at(&[i1 * 2 + i2, j1 * 2 + j2]);
+                        assert!((want - got).abs() < 1e-6);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let tt = random_tt(&[2, 3], &[4, 2], 2, 3);
+        let wt = tt.transpose().unwrap().to_dense().unwrap();
+        let w = tt.to_dense().unwrap();
+        assert_eq!(wt.shape(), &[8, 6]);
+        for t in 0..6 {
+            for l in 0..8 {
+                assert!((w.at(&[t, l]) - wt.at(&[l, t])).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn set_core_updates_cached_mat() {
+        let mut tt = random_tt(&[2, 2], &[2, 2], 2, 4);
+        let before = tt.core_mats()[0].clone();
+        let mut rng = Rng::new(5);
+        let new_core = Tensor::randn(&[1, 2, 2, 2], 1.0, &mut rng);
+        tt.set_core(0, new_core).unwrap();
+        assert_ne!(&before, &tt.core_mats()[0]);
+        assert!(tt.set_core(0, Tensor::zeros(&[2, 2, 2, 2])).is_err());
+    }
+
+    #[test]
+    fn core_to_matrix_layout() {
+        // element (a0*n + j, i*r1 + a1) == core[a0, i, j, a1]
+        let (r0, m, n, r1) = (2usize, 3usize, 4usize, 2usize);
+        let data: Vec<f32> = (0..r0 * m * n * r1).map(|x| x as f32).collect();
+        let core = Tensor::from_vec(&[r0, m, n, r1], data).unwrap();
+        let cm = core_to_matrix(&core).unwrap();
+        assert_eq!(cm.shape(), &[r0 * n, m * r1]);
+        for a0 in 0..r0 {
+            for i in 0..m {
+                for j in 0..n {
+                    for a1 in 0..r1 {
+                        assert_eq!(cm.at(&[a0 * n + j, i * r1 + a1]), core.at(&[a0, i, j, a1]));
+                    }
+                }
+            }
+        }
+    }
+}

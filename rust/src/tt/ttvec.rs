@@ -1,0 +1,349 @@
+//! TT-vectors (paper §3.1) and the TT-matrix-by-TT-vector product — the
+//! machinery behind the paper's §7 future-work direction (layer inputs and
+//! outputs kept in TT format, removing the `max{M, N}` dependency).
+
+use crate::error::{shape_err, Result};
+use crate::linalg::truncated_svd;
+use crate::tensor::Tensor;
+use crate::tt::TtMatrix;
+
+/// A vector `b (N,)`, `N = Π n_k`, stored as `d` cores of shape
+/// `(r_{k-1}, n_k, r_k)`; element `b(l) = B_1[j_1] ... B_d[j_d]`.
+#[derive(Clone, Debug)]
+pub struct TtVector {
+    ns: Vec<usize>,
+    ranks: Vec<usize>,
+    cores: Vec<Tensor>,
+}
+
+impl TtVector {
+    pub fn from_cores(cores: Vec<Tensor>) -> Result<TtVector> {
+        if cores.is_empty() {
+            return shape_err("TtVector needs at least one core");
+        }
+        let mut ns = Vec::with_capacity(cores.len());
+        let mut ranks = vec![0usize; cores.len() + 1];
+        for (k, c) in cores.iter().enumerate() {
+            if c.ndim() != 3 {
+                return shape_err(format!("vector core {k} must be 3-D, got {:?}", c.shape()));
+            }
+            if k == 0 {
+                ranks[0] = c.shape()[0];
+            } else if c.shape()[0] != ranks[k] {
+                return shape_err(format!("rank chain broken at core {k}"));
+            }
+            ns.push(c.shape()[1]);
+            ranks[k + 1] = c.shape()[2];
+        }
+        if ranks[0] != 1 || ranks[cores.len()] != 1 {
+            return shape_err("boundary ranks must be 1");
+        }
+        Ok(TtVector { ns, ranks, cores })
+    }
+
+    pub fn ns(&self) -> &[usize] {
+        &self.ns
+    }
+
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    pub fn cores(&self) -> &[Tensor] {
+        &self.cores
+    }
+
+    pub fn d(&self) -> usize {
+        self.ns.len()
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.ns.iter().product()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.cores.iter().map(|c| c.numel()).sum()
+    }
+
+    /// TT-SVD of an explicit vector viewed as a `ns`-shaped tensor
+    /// (row-major).
+    pub fn from_dense(x: &Tensor, ns: &[usize], max_rank: Option<usize>, eps: f64) -> Result<TtVector> {
+        let n_total: usize = ns.iter().product();
+        if x.numel() != n_total {
+            return shape_err(format!("vector len {} != prod {:?}", x.numel(), ns));
+        }
+        let d = ns.len();
+        let norm = x.norm() as f64;
+        let delta = if d > 1 { eps * norm / ((d - 1) as f64).sqrt() } else { 0.0 };
+        let mut cores = Vec::with_capacity(d);
+        let mut ranks = vec![1usize; d + 1];
+        let mut rest = n_total;
+        let mut c = x.reshaped(&[ns[0], rest / ns[0]])?;
+        for k in 0..d - 1 {
+            let tsvd = truncated_svd(&c, max_rank, delta)?;
+            let rk = tsvd.s.len();
+            ranks[k + 1] = rk;
+            cores.push(tsvd.u.reshape(&[ranks[k], ns[k], rk])?);
+            let mut carry = tsvd.vt;
+            for (i, &sv) in tsvd.s.iter().enumerate() {
+                let cols = carry.shape()[1];
+                for v in &mut carry.data_mut()[i * cols..(i + 1) * cols] {
+                    *v *= sv;
+                }
+            }
+            rest /= ns[k];
+            c = carry.reshape(&[rk * ns[k + 1], rest / ns[k + 1]])?;
+        }
+        cores.push(c.reshape(&[ranks[d - 1], ns[d - 1], 1])?);
+        TtVector::from_cores(cores)
+    }
+
+    /// Densify to an explicit `(N,)` tensor.
+    pub fn to_dense(&self) -> Result<Tensor> {
+        // acc: (Na, r)
+        let mut acc = self.cores[0].reshaped(&[self.ns[0], self.ranks[1]])?;
+        for k in 1..self.d() {
+            let (r0, n, r1) = (self.ranks[k], self.ns[k], self.ranks[k + 1]);
+            let na = acc.shape()[0];
+            let accd = acc.data();
+            let core = self.cores[k].data();
+            let mut out = vec![0.0f32; na * n * r1];
+            for x in 0..na {
+                for j in 0..n {
+                    let obase = (x * n + j) * r1;
+                    for r in 0..r0 {
+                        let a = accd[x * r0 + r];
+                        if a != 0.0 {
+                            let cbase = (r * n + j) * r1;
+                            for s in 0..r1 {
+                                out[obase + s] += a * core[cbase + s];
+                            }
+                        }
+                    }
+                }
+            }
+            acc = Tensor::from_vec(&[na * n, r1], out)?;
+        }
+        acc.reshape(&[self.n_total()])
+    }
+
+    /// Inner product without densifying.
+    pub fn dot(&self, other: &TtVector) -> Result<f64> {
+        if self.ns != other.ns {
+            return shape_err(format!("dot: {:?} vs {:?}", self.ns, other.ns));
+        }
+        let mut v = vec![1.0f64];
+        for k in 0..self.d() {
+            let (a0, n, a1) = (self.ranks[k], self.ns[k], self.ranks[k + 1]);
+            let (b0, b1) = (other.ranks[k], other.ranks[k + 1]);
+            let ca = self.cores[k].data();
+            let cb = other.cores[k].data();
+            let mut nv = vec![0.0f64; a1 * b1];
+            for j in 0..n {
+                let mut w = vec![0.0f64; a0 * b1];
+                for a in 0..a0 {
+                    for b in 0..b0 {
+                        let vv = v[a * b0 + b];
+                        if vv != 0.0 {
+                            let bbase = (b * n + j) * b1;
+                            for sb in 0..b1 {
+                                w[a * b1 + sb] += vv * cb[bbase + sb] as f64;
+                            }
+                        }
+                    }
+                }
+                for a in 0..a0 {
+                    let abase = (a * n + j) * a1;
+                    for sa in 0..a1 {
+                        let av = ca[abase + sa] as f64;
+                        if av != 0.0 {
+                            for sb in 0..b1 {
+                                nv[sa * b1 + sb] += av * w[a * b1 + sb];
+                            }
+                        }
+                    }
+                }
+            }
+            v = nv;
+        }
+        Ok(v[0])
+    }
+
+    pub fn norm(&self) -> Result<f64> {
+        Ok(self.dot(self)?.max(0.0).sqrt())
+    }
+
+    /// `alpha * b`.
+    pub fn scale(&self, alpha: f32) -> Result<TtVector> {
+        let mut cores = self.cores.clone();
+        cores[0].scale(alpha);
+        TtVector::from_cores(cores)
+    }
+
+    /// `b + c` (ranks add).
+    pub fn add(&self, other: &TtVector) -> Result<TtVector> {
+        if self.ns != other.ns {
+            return shape_err(format!("add: {:?} vs {:?}", self.ns, other.ns));
+        }
+        let d = self.d();
+        let mut cores = Vec::with_capacity(d);
+        for k in 0..d {
+            let (a0, n, a1) = (self.ranks[k], self.ns[k], self.ranks[k + 1]);
+            let (b0, b1) = (other.ranks[k], other.ranks[k + 1]);
+            let c0 = if k == 0 { 1 } else { a0 + b0 };
+            let c1 = if k == d - 1 { 1 } else { a1 + b1 };
+            let mut core = Tensor::zeros(&[c0, n, c1]);
+            let ca = self.cores[k].data();
+            let cb = other.cores[k].data();
+            let cd = core.data_mut();
+            for r in 0..a0 {
+                for j in 0..n {
+                    let src = (r * n + j) * a1;
+                    let dst = (r * n + j) * c1;
+                    for s in 0..a1 {
+                        cd[dst + s] += ca[src + s];
+                    }
+                }
+            }
+            let (off0, off1) = (c0 - b0, c1 - b1);
+            for r in 0..b0 {
+                for j in 0..n {
+                    let src = (r * n + j) * b1;
+                    let dst = ((r + off0) * n + j) * c1 + off1;
+                    for s in 0..b1 {
+                        cd[dst + s] += cb[src + s];
+                    }
+                }
+            }
+            cores.push(core);
+        }
+        TtVector::from_cores(cores)
+    }
+}
+
+impl TtMatrix {
+    /// `W · b` with both operands in TT format: the result is a TT-vector
+    /// with ranks `r_k(W) · r_k(b)` — the "even more efficient" case of
+    /// §3.1 and the §7 future-work building block.
+    pub fn matvec_tt(&self, b: &TtVector) -> Result<TtVector> {
+        if self.shape().ns() != b.ns() {
+            return shape_err(format!("matvec_tt: {} x {:?}", self.shape(), b.ns()));
+        }
+        let d = self.d();
+        let mut cores = Vec::with_capacity(d);
+        for k in 0..d {
+            let [a0, m, n, a1] = self.shape().core_shape(k);
+            let (b0, b1) = (b.ranks()[k], b.ranks()[k + 1]);
+            let ca = self.cores()[k].data();
+            let cb = b.cores()[k].data();
+            let mut core = Tensor::zeros(&[a0 * b0, m, a1 * b1]);
+            let cd = core.data_mut();
+            let c1 = a1 * b1;
+            for ra in 0..a0 {
+                for rb in 0..b0 {
+                    let r = ra * b0 + rb;
+                    for i in 0..m {
+                        let dbase = (r * m + i) * c1;
+                        for j in 0..n {
+                            let abase = ((ra * m + i) * n + j) * a1;
+                            let bbase = (rb * n + j) * b1;
+                            for sa in 0..a1 {
+                                let av = ca[abase + sa];
+                                if av != 0.0 {
+                                    for sb in 0..b1 {
+                                        cd[dbase + sa * b1 + sb] += av * cb[bbase + sb];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            cores.push(core);
+        }
+        TtVector::from_cores(cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matvec as dense_matvec;
+    use crate::tt::TtShape;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[24], 1.0, &mut rng);
+        let v = TtVector::from_dense(&x, &[2, 3, 4], None, 0.0).unwrap();
+        let back = v.to_dense().unwrap();
+        for (a, b) in back.data().iter().zip(x.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_and_norm_match_dense() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[36], 1.0, &mut rng);
+        let y = Tensor::randn(&[36], 1.0, &mut rng);
+        let vx = TtVector::from_dense(&x, &[3, 3, 4], None, 0.0).unwrap();
+        let vy = TtVector::from_dense(&y, &[3, 3, 4], None, 0.0).unwrap();
+        let want = x.dot(&y).unwrap() as f64;
+        assert!((vx.dot(&vy).unwrap() - want).abs() < 1e-4 * (1.0 + want.abs()));
+        assert!((vx.norm().unwrap() - x.norm() as f64).abs() < 1e-4);
+    }
+
+    #[test]
+    fn add_scale_match_dense() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[12], 1.0, &mut rng);
+        let y = Tensor::randn(&[12], 1.0, &mut rng);
+        let vx = TtVector::from_dense(&x, &[3, 4], None, 0.0).unwrap();
+        let vy = TtVector::from_dense(&y, &[3, 4], None, 0.0).unwrap();
+        let sum = vx.add(&vy.scale(-2.0).unwrap()).unwrap().to_dense().unwrap();
+        for i in 0..12 {
+            let want = x.data()[i] - 2.0 * y.data()[i];
+            assert!((sum.data()[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matvec_tt_matches_dense() {
+        let mut rng = Rng::new(4);
+        let shape = TtShape::uniform(&[2, 3], &[3, 4], 2).unwrap();
+        let w = TtMatrix::random(&shape, &mut rng).unwrap();
+        let x = Tensor::randn(&[12], 1.0, &mut rng);
+        let vx = TtVector::from_dense(&x, &[3, 4], None, 0.0).unwrap();
+        let got = w.matvec_tt(&vx).unwrap().to_dense().unwrap();
+        let want = dense_matvec(&w.to_dense().unwrap(), &x).unwrap();
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn truncation_compresses_smooth_vector() {
+        // low "TT-rank" signal: rank-1 separable tensor
+        let mut data = vec![0.0f32; 64];
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..4 {
+                    data[(i * 4 + j) * 4 + k] = ((i + 1) * (j + 2)) as f32 * (k as f32).sin();
+                }
+            }
+        }
+        let x = Tensor::from_vec(&[64], data).unwrap();
+        let v = TtVector::from_dense(&x, &[4, 4, 4], None, 1e-6).unwrap();
+        assert!(v.ranks().iter().all(|&r| r <= 2), "ranks {:?}", v.ranks());
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(TtVector::from_cores(vec![]).is_err());
+        assert!(TtVector::from_cores(vec![Tensor::zeros(&[2, 3, 1])]).is_err()); // r0 != 1
+        let ok = TtVector::from_cores(vec![Tensor::zeros(&[1, 3, 1])]);
+        assert!(ok.is_ok());
+    }
+}

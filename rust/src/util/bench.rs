@@ -1,0 +1,158 @@
+//! Tiny bench harness (criterion replacement for the offline build).
+//!
+//! Warmup + timed iterations with mean / p50 / min reporting, plus a
+//! markdown-ish table printer the bench binaries use to regenerate the
+//! paper's tables.  `black_box` prevents the optimizer from deleting the
+//! measured work.
+
+use std::time::{Duration, Instant};
+
+/// Re-export of the std optimizer barrier.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+/// Bench runner: measures `f` until `target_time` is spent (after warmup),
+/// at least `min_iters` iterations.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            target_time: Duration::from_secs(1),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for slow end-to-end cases.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target_time: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 1_000,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples: Vec<Duration> = Vec::new();
+        let t0 = Instant::now();
+        while (t0.elapsed() < self.target_time || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: samples[samples.len() / 2],
+            min: samples[0],
+        };
+        println!(
+            "{:<48} {:>10.3} ms/iter  (p50 {:>8.3} ms, min {:>8.3} ms, n={})",
+            m.name,
+            m.mean_ms(),
+            m.p50.as_secs_f64() * 1e3,
+            m.min.as_secs_f64() * 1e3,
+            m.iters
+        );
+        m
+    }
+}
+
+/// Print a paper-style table: header row + aligned value rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: Vec<String>| {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(c.len())));
+        }
+        line
+    };
+    println!("{}", fmt_row(header.iter().map(|s| s.to_string()).collect()));
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    println!("{}", fmt_row(sep));
+    for row in rows {
+        println!("{}", fmt_row(row.clone()));
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            target_time: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 100,
+        };
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(m.iters >= 3);
+        assert!(m.min <= m.p50);
+        assert!(m.p50 <= m.mean * 10);
+    }
+
+    #[test]
+    fn table_does_not_panic() {
+        print_table(
+            "t",
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

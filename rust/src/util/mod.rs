@@ -1,0 +1,12 @@
+//! In-tree replacements for crates unavailable in the offline build
+//! (DESIGN.md §Substitutions): deterministic RNG, JSON parsing, a scoped
+//! thread pool, CLI parsing, a bench harness and a property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threads;
+
+pub use rng::Rng;

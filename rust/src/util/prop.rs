@@ -1,0 +1,118 @@
+//! Mini property-testing helper (proptest replacement for the offline
+//! build).  Runs a property over `cases` randomized inputs drawn from a
+//! seeded [`Rng`]; on failure it reports the case index and the seed so the
+//! exact input can be replayed (no shrinking — inputs are kept small
+//! instead).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `property(case_rng)` for `cfg.cases` independent cases.  The closure
+/// returns `Err(msg)` to fail with a message; panics also fail the test.
+pub fn check<F>(cfg: Config, name: &str, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut master = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut rng = master.fork(case as u64);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: default config.
+pub fn check_default<F>(name: &str, property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(Config::default(), name, property)
+}
+
+/// Draw helpers used by the property tests.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo + 1)
+    }
+
+    /// Vector of `len` i.i.d. normals scaled by `std`.
+    pub fn normal_vec(rng: &mut Rng, len: usize, std: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(std)).collect()
+    }
+
+    /// Random mode sizes whose product stays below `max_prod`.
+    pub fn modes(rng: &mut Rng, d: usize, lo: usize, hi: usize, max_prod: usize) -> Vec<usize> {
+        loop {
+            let m: Vec<usize> = (0..d).map(|_| int(rng, lo, hi)).collect();
+            if m.iter().product::<usize>() <= max_prod {
+                return m;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default("tautology", |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false'")]
+    fn failing_property_panics_with_context() {
+        check(Config { cases: 3, seed: 1 }, "always-false", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_int_inclusive() {
+        let mut rng = Rng::new(9);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..500 {
+            let x = gen::int(&mut rng, 2, 5);
+            assert!((2..=5).contains(&x));
+            lo_seen |= x == 2;
+            hi_seen |= x == 5;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn gen_modes_bounded() {
+        let mut rng = Rng::new(10);
+        for _ in 0..50 {
+            let m = gen::modes(&mut rng, 4, 1, 6, 100);
+            assert_eq!(m.len(), 4);
+            assert!(m.iter().product::<usize>() <= 100);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal scoped data-parallelism (rayon replacement for the offline
+//! build).  `parallel_chunks_mut` splits a mutable slice into per-thread
+//! contiguous regions and runs the worker over `granularity`-item chunks;
+//! static partitioning is the right shape for our GEMM row panels (uniform
+//! cost per row), and it needs no locks at all.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (cached `available_parallelism`).
+pub fn num_threads() -> usize {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let cached = N.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    N.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(start_item, chunk)` over `granularity`-item chunks of `data`,
+/// spread across up to `num_threads()` OS threads.
+///
+/// Each thread owns a contiguous run of whole chunks (no work stealing, no
+/// locks).  The last chunk may be short.  Serial when one thread suffices.
+pub fn parallel_chunks_mut<T: Send, F>(data: &mut [T], granularity: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let g = granularity.max(1);
+    let n_chunks = data.len().div_ceil(g);
+    let threads = num_threads().min(n_chunks);
+    if threads <= 1 {
+        for (ci, chunk) in data.chunks_mut(g).enumerate() {
+            f(ci * g, chunk);
+        }
+        return;
+    }
+    // region size: whole chunks, balanced across threads
+    let chunks_per_thread = n_chunks.div_ceil(threads);
+    let region = chunks_per_thread * g;
+    std::thread::scope(|s| {
+        for (ri, region_slice) in data.chunks_mut(region).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (ci, chunk) in region_slice.chunks_mut(g).enumerate() {
+                    f(ri * region + ci * g, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over indices `0..n`, collecting results in order.
+pub fn parallel_map<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results = Mutex::new(Vec::<(usize, R)>::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                let r = f(i);
+                results.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut pairs = results.into_inner().unwrap();
+    pairs.sort_by_key(|(i, _)| *i);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut data = vec![0u32; 1003];
+        parallel_chunks_mut(&mut data, 17, |start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (start + i) as u32;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn exact_multiple() {
+        let mut data = vec![0u32; 64];
+        parallel_chunks_mut(&mut data, 8, |start, chunk| {
+            assert_eq!(chunk.len(), 8);
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (start + i) as u32;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn single_chunk_serial() {
+        let mut data = vec![1u8; 5];
+        parallel_chunks_mut(&mut data, 100, |start, chunk| {
+            assert_eq!(start, 0);
+            for x in chunk.iter_mut() {
+                *x = 2;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn map_ordered() {
+        let out = parallel_map(100, |i| i * i);
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn map_empty() {
+        let out: Vec<usize> = parallel_map(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

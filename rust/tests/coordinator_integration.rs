@@ -1,0 +1,153 @@
+//! Integration: coordinator under concurrent load (echo backend — no
+//! PJRT needed, so this runs everywhere) plus the full artifact-serving
+//! path when `artifacts/` exists.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tensornet::coordinator::{
+    BatchPolicy, EchoExecutor, PjrtExecutor, Server, ServerConfig,
+};
+use tensornet::util::rng::Rng;
+
+fn echo_server(max_batch: usize, delay_ms: u64, queue: usize) -> Server {
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) },
+        queue_capacity: queue,
+        batch_queue_capacity: 4,
+    };
+    Server::start(cfg, || Ok(EchoExecutor { dim: 8, scale: 1.0 })).unwrap()
+}
+
+#[test]
+fn sustained_concurrent_load() {
+    let server = Arc::new(echo_server(16, 2, 256));
+    let n_clients = 8;
+    let per_client = 50;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let server = server.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(c);
+                for i in 0..per_client {
+                    let x: Vec<f32> = (0..8).map(|_| rng.normal_f32(1.0)).collect();
+                    let resp = server.infer("m", x.clone()).unwrap();
+                    assert_eq!(resp.output, x, "client {c} request {i}");
+                }
+            });
+        }
+    });
+    let stats = server.stats();
+    assert_eq!(stats.completed.get(), (n_clients * per_client) as u64);
+    assert_eq!(stats.errors.get(), 0);
+    // batching actually happened under concurrency
+    assert!(stats.mean_batch_size() >= 1.0);
+    assert!(stats.e2e.count() > 0);
+}
+
+#[test]
+fn outputs_never_cross_requests() {
+    // each request's output must be exactly its own input (echo), even
+    // when batched together — catches row-slicing bugs
+    let server = Arc::new(echo_server(32, 5, 256));
+    std::thread::scope(|s| {
+        for c in 0..16 {
+            let server = server.clone();
+            s.spawn(move || {
+                for i in 0..20 {
+                    let tag = (c * 1000 + i) as f32;
+                    let x = vec![tag; 8];
+                    let resp = server.infer("m", x).unwrap();
+                    assert!(resp.output.iter().all(|&v| v == tag));
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    // tiny queue + slow drain: try_infer must reject rather than grow
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(50) },
+        queue_capacity: 2,
+        batch_queue_capacity: 1,
+    };
+    struct SlowEcho;
+    impl tensornet::coordinator::BatchExecutor for SlowEcho {
+        fn execute(
+            &mut self,
+            _m: &str,
+            x: &[f32],
+            _rows: usize,
+        ) -> tensornet::error::Result<(Vec<f32>, usize)> {
+            std::thread::sleep(Duration::from_millis(30));
+            Ok((x.to_vec(), x.len()))
+        }
+        fn input_dim(&self, _m: &str) -> tensornet::error::Result<usize> {
+            Ok(1)
+        }
+    }
+    let server = Server::start(cfg, || Ok(SlowEcho)).unwrap();
+    let mut rejected = 0;
+    let mut receivers = Vec::new();
+    for _ in 0..50 {
+        match server.try_infer("m", vec![1.0]) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections");
+    // accepted requests still complete
+    for rx in receivers {
+        let _ = server.await_reply(rx).unwrap();
+    }
+}
+
+#[test]
+fn graceful_shutdown_under_load() {
+    let server = echo_server(8, 1, 64);
+    for _ in 0..20 {
+        let _ = server.infer("m", vec![0.0; 8]).unwrap();
+    }
+    server.shutdown(); // must not hang or panic
+}
+
+// ---------------------------------------------------------------------------
+// Full PJRT path (skipped when artifacts are absent)
+// ---------------------------------------------------------------------------
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("TENSORNET_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT serving test: no artifacts at {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn serve_tt_layer_artifact_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 32, max_delay: Duration::from_millis(2) },
+        ..Default::default()
+    };
+    let server = Arc::new(Server::start(cfg, move || PjrtExecutor::new(&dir)).unwrap());
+    std::thread::scope(|s| {
+        for c in 0..4 {
+            let server = server.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(c);
+                for _ in 0..10 {
+                    let x: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
+                    let resp = server.infer("tt_layer", x).unwrap();
+                    assert_eq!(resp.output.len(), 1024);
+                    assert!(resp.output.iter().all(|v| v.is_finite()));
+                }
+            });
+        }
+    });
+    assert_eq!(server.stats().completed.get(), 40);
+    assert_eq!(server.stats().errors.get(), 0);
+}

@@ -1,0 +1,364 @@
+//! Property-based tests over randomized inputs (in-tree `util::prop`
+//! harness — proptest is unavailable offline; failures print the case
+//! index and master seed for exact replay).
+
+use tensornet::coordinator::{choose_variant, BatchAssembler, BatchPolicy};
+use tensornet::linalg::{qr_mat, svd_mat, Mat};
+use tensornet::tensor::{matmul, matmul_bt, Tensor};
+use tensornet::tt::{TtMatrix, TtShape, TtVector};
+use tensornet::util::json::Json;
+use tensornet::util::prop::{check, gen, Config};
+use tensornet::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, seed: 0xBEEF }
+}
+
+// ---------------------------------------------------------------------------
+// linalg
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qr_reconstructs_and_q_orthonormal() {
+    check(cfg(40), "qr", |rng| {
+        let n = gen::int(rng, 1, 10);
+        let m = n + gen::int(rng, 0, 15);
+        let a = Mat::from_tensor(&Tensor::randn(&[m, n], 1.0, rng));
+        let (q, r) = qr_mat(&a).map_err(|e| e.to_string())?;
+        let rec = q.matmul(&r);
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            if (x - y).abs() > 1e-8 {
+                return Err(format!("reconstruction {x} vs {y}"));
+            }
+        }
+        let qtq = q.transpose().matmul(&q);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                if (qtq.at(i, j) - want).abs() > 1e-8 {
+                    return Err(format!("QtQ[{i},{j}] = {}", qtq.at(i, j)));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_svd_reconstructs_any_aspect_ratio() {
+    check(cfg(40), "svd", |rng| {
+        let m = gen::int(rng, 1, 18);
+        let n = gen::int(rng, 1, 18);
+        let a = Mat::from_tensor(&Tensor::randn(&[m, n], 1.0, rng));
+        let s = svd_mat(&a).map_err(|e| e.to_string())?;
+        // sorted, non-negative
+        for w in s.s.windows(2) {
+            if w[0] < w[1] - 1e-12 {
+                return Err(format!("unsorted {:?}", s.s));
+            }
+        }
+        // reconstruct
+        let mut us = s.u.clone();
+        for i in 0..us.rows {
+            for j in 0..s.s.len() {
+                let v = us.at(i, j) * s.s[j];
+                us.set(i, j, v);
+            }
+        }
+        let rec = us.matmul(&s.vt);
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            if (x - y).abs() > 1e-7 {
+                return Err(format!("reconstruction {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// TT invariants
+// ---------------------------------------------------------------------------
+
+fn random_tt(rng: &mut Rng, max_d: usize) -> TtMatrix {
+    let d = gen::int(rng, 1, max_d);
+    let ms = gen::modes(rng, d, 1, 4, 64);
+    let ns = gen::modes(rng, d, 1, 4, 64);
+    let r = gen::int(rng, 1, 4);
+    TtMatrix::random(&TtShape::uniform(&ms, &ns, r).unwrap(), rng).unwrap()
+}
+
+#[test]
+fn prop_ttsvd_reconstruction_within_eps() {
+    check(cfg(30), "ttsvd-eps", |rng| {
+        let d = gen::int(rng, 1, 4);
+        let ms = gen::modes(rng, d, 1, 4, 48);
+        let ns = gen::modes(rng, d, 1, 4, 48);
+        let m: usize = ms.iter().product();
+        let n: usize = ns.iter().product();
+        let w = Tensor::randn(&[m, n], 1.0, rng);
+        let eps = 0.05 + 0.4 * rng.uniform();
+        let tt = TtMatrix::from_dense(&w, &ms, &ns, None, eps).map_err(|e| e.to_string())?;
+        let err = tt.rel_error_vs(&w).map_err(|e| e.to_string())?;
+        if err > eps + 1e-5 {
+            return Err(format!("err {err} > eps {eps} for {ms:?}x{ns:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matvec_matches_dense() {
+    check(cfg(30), "matvec-dense", |rng| {
+        let tt = random_tt(rng, 4);
+        let b = gen::int(rng, 1, 5);
+        let x = Tensor::randn(&[b, tt.n_total()], 1.0, rng);
+        let fast = tt.matvec(&x).map_err(|e| e.to_string())?;
+        let slow = matmul_bt(&x, &tt.to_dense().map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        for (a, c) in fast.data().iter().zip(slow.data()) {
+            if (a - c).abs() > 1e-3 * (1.0 + c.abs()) {
+                return Err(format!("{a} vs {c} ({})", tt.shape()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rounding_preserves_norm_and_error_bound() {
+    check(cfg(25), "rounding", |rng| {
+        let tt = random_tt(rng, 4);
+        let eps = 0.02 + 0.3 * rng.uniform();
+        let rounded = tt.round(None, eps).map_err(|e| e.to_string())?;
+        let w = tt.to_dense().map_err(|e| e.to_string())?;
+        let err = rounded.rel_error_vs(&w).map_err(|e| e.to_string())?;
+        if err > eps + 1e-5 {
+            return Err(format!("round err {err} > {eps}"));
+        }
+        // ranks never grow
+        for (a, b) in rounded.shape().ranks().iter().zip(tt.shape().ranks()) {
+            if a > b {
+                return Err(format!("rank grew: {:?} -> {:?}", tt.shape().ranks(), rounded.shape().ranks()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_add_is_dense_add() {
+    check(cfg(25), "tt-add", |rng| {
+        let d = gen::int(rng, 1, 3);
+        let ms = gen::modes(rng, d, 1, 4, 32);
+        let ns = gen::modes(rng, d, 1, 4, 32);
+        let a = TtMatrix::random(&TtShape::uniform(&ms, &ns, gen::int(rng, 1, 3)).unwrap(), rng)
+            .unwrap();
+        let b = TtMatrix::random(&TtShape::uniform(&ms, &ns, gen::int(rng, 1, 3)).unwrap(), rng)
+            .unwrap();
+        let sum = a.add(&b).map_err(|e| e.to_string())?;
+        let want = a
+            .to_dense()
+            .unwrap()
+            .add(&b.to_dense().unwrap())
+            .map_err(|e| e.to_string())?;
+        let got = sum.to_dense().map_err(|e| e.to_string())?;
+        for (x, y) in got.data().iter().zip(want.data()) {
+            if (x - y).abs() > 1e-4 * (1.0 + y.abs()) {
+                return Err(format!("{x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dot_matches_dense_dot() {
+    check(cfg(25), "tt-dot", |rng| {
+        let d = gen::int(rng, 1, 3);
+        let ms = gen::modes(rng, d, 1, 4, 32);
+        let ns = gen::modes(rng, d, 1, 4, 32);
+        let a = TtMatrix::random(&TtShape::uniform(&ms, &ns, gen::int(rng, 1, 3)).unwrap(), rng)
+            .unwrap();
+        let b = TtMatrix::random(&TtShape::uniform(&ms, &ns, gen::int(rng, 1, 3)).unwrap(), rng)
+            .unwrap();
+        let got = a.dot(&b).map_err(|e| e.to_string())?;
+        let want = a
+            .to_dense()
+            .unwrap()
+            .dot(&b.to_dense().unwrap())
+            .map_err(|e| e.to_string())? as f64;
+        if (got - want).abs() > 1e-3 * (1.0 + want.abs()) {
+            return Err(format!("{got} vs {want}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ttvector_roundtrip() {
+    check(cfg(25), "ttvec", |rng| {
+        let d = gen::int(rng, 1, 4);
+        let ns = gen::modes(rng, d, 1, 5, 120);
+        let n: usize = ns.iter().product();
+        let x = Tensor::randn(&[n], 1.0, rng);
+        let v = TtVector::from_dense(&x, &ns, None, 0.0).map_err(|e| e.to_string())?;
+        let back = v.to_dense().map_err(|e| e.to_string())?;
+        for (a, b) in back.data().iter().zip(x.data()) {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("{a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// tensor / gemm
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gemm_associates_with_identity_and_transpose() {
+    check(cfg(30), "gemm", |rng| {
+        let m = gen::int(rng, 1, 12);
+        let k = gen::int(rng, 1, 12);
+        let n = gen::int(rng, 1, 12);
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let ab = matmul(&a, &b).map_err(|e| e.to_string())?;
+        // (A B)^T == B^T A^T
+        let abt = ab.t2().unwrap();
+        let want = matmul(&b.t2().unwrap(), &a.t2().unwrap()).unwrap();
+        for (x, y) in abt.data().iter().zip(want.data()) {
+            if (x - y).abs() > 1e-4 * (1.0 + y.abs()) {
+                return Err(format!("{x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_exceeds_max_and_preserves_fifo() {
+    check(cfg(60), "batcher", |rng| {
+        use std::sync::mpsc::channel;
+        use std::time::{Duration, Instant};
+        let max_batch = gen::int(rng, 1, 8);
+        let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(5) };
+        let mut asm = BatchAssembler::new(policy);
+        let t0 = Instant::now();
+        let n = gen::int(rng, 1, 40);
+        let mut emitted_ids: Vec<u64> = Vec::new();
+        let mut pushed = 0u64;
+        for i in 0..n {
+            let model = if rng.uniform() < 0.8 { "a" } else { "b" };
+            let (tx, _rx) = channel();
+            let req = tensornet::coordinator::InferRequest {
+                id: i as u64,
+                model: model.into(),
+                input: vec![],
+                enqueued: t0,
+                reply: tx,
+            };
+            pushed += 1;
+            for batch in asm.push(req, t0) {
+                if batch.requests.len() > max_batch {
+                    return Err(format!("batch {} > max {max_batch}", batch.requests.len()));
+                }
+                emitted_ids.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        if let Some(batch) = asm.flush(t0) {
+            emitted_ids.extend(batch.requests.iter().map(|r| r.id));
+        }
+        // no request lost or duplicated
+        if emitted_ids.len() != pushed as usize {
+            return Err(format!("{} emitted of {pushed}", emitted_ids.len()));
+        }
+        let mut sorted = emitted_ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        if sorted.len() != emitted_ids.len() {
+            return Err("duplicated request".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_choose_variant_minimal_fitting() {
+    check(cfg(60), "router", |rng| {
+        let k = gen::int(rng, 1, 6);
+        let mut sizes: Vec<usize> = (0..k).map(|_| gen::int(rng, 1, 128)).collect();
+        sizes.sort();
+        sizes.dedup();
+        let batch = gen::int(rng, 1, 160);
+        match choose_variant(&sizes, batch) {
+            None => {
+                if !sizes.is_empty() {
+                    return Err("no variant for non-empty sizes".into());
+                }
+            }
+            Some(v) => {
+                if !sizes.contains(&v) {
+                    return Err(format!("{v} not in {sizes:?}"));
+                }
+                if v >= batch {
+                    // must be the SMALLEST that fits
+                    for &s in &sizes {
+                        if s >= batch && s < v {
+                            return Err(format!("{s} fits better than {v}"));
+                        }
+                    }
+                } else {
+                    // nothing fits: must be the largest
+                    if sizes.iter().any(|&s| s > v) {
+                        return Err(format!("{v} not largest of {sizes:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// json round-trip
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0).round()),
+            _ => Json::Str(format!("s{}", rng.below(1000))),
+        };
+    }
+    match rng.below(2) {
+        0 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut obj = std::collections::BTreeMap::new();
+            for i in 0..rng.below(4) {
+                obj.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Json::Obj(obj)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check(cfg(80), "json", |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("{text} parsed differently"));
+        }
+        Ok(())
+    });
+}

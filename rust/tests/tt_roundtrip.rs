@@ -1,0 +1,109 @@
+//! Integration: TT format invariants at experiment scale (cross-module:
+//! linalg + tt + tensor together).
+
+use tensornet::tensor::{matmul_bt, Tensor};
+use tensornet::tt::{TtMatrix, TtShape};
+use tensornet::util::rng::Rng;
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug builds; run with --release")]
+fn mnist_scale_decompose_reconstruct() {
+    // 256x256 (4^4 modes) random matrix, exact decomposition
+    let mut rng = Rng::new(1);
+    let w = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    let tt = TtMatrix::from_dense_exact(&w, &[4; 4], &[4; 4]).unwrap();
+    assert!(tt.rel_error_vs(&w).unwrap() < 1e-4);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug builds; run with --release")]
+fn truncated_decomposition_of_tt_structured_matrix() {
+    // a genuinely TT-rank-4 1024x1024 matrix compresses back to rank 4
+    // with tiny error — the storage claim of §3
+    let shape = TtShape::uniform(&[4; 5], &[4; 5], 4).unwrap();
+    let mut rng = Rng::new(2);
+    let gt = TtMatrix::random(&shape, &mut rng).unwrap();
+    let w = gt.to_dense().unwrap();
+    let tt = TtMatrix::from_dense(&w, &[4; 5], &[4; 5], Some(4), 1e-4).unwrap();
+    assert!(tt.shape().max_rank() <= 4);
+    let err = tt.rel_error_vs(&w).unwrap();
+    assert!(err < 1e-3, "reconstruction err {err}");
+    // compression: 1M dense params -> <= rank-4 core params
+    assert!(tt.num_params() < 2000, "params {}", tt.num_params());
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug builds; run with --release")]
+fn matvec_agrees_with_dense_at_scale() {
+    let shape = TtShape::uniform(&[4; 5], &[4; 5], 8).unwrap();
+    let mut rng = Rng::new(3);
+    let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+    let x = Tensor::randn(&[16, 1024], 1.0, &mut rng);
+    let fast = tt.matvec(&x).unwrap();
+    let w = tt.to_dense().unwrap();
+    let slow = matmul_bt(&x, &w).unwrap();
+    let mut diff = fast.clone();
+    diff.axpy(-1.0, &slow).unwrap();
+    let rel = diff.norm() / slow.norm().max(1e-12);
+    assert!(rel < 1e-4, "rel err {rel}");
+}
+
+#[test]
+fn arithmetic_chain_with_rounding() {
+    // (2A - A) rounds back to A's ranks and values
+    let shape = TtShape::uniform(&[3, 4, 3], &[4, 3, 4], 3).unwrap();
+    let mut rng = Rng::new(4);
+    let a = TtMatrix::random(&shape, &mut rng).unwrap();
+    let two_a = a.add(&a).unwrap();
+    let back = two_a.sub(&a).unwrap().round(None, 1e-8).unwrap();
+    assert!(back.shape().max_rank() <= 3, "ranks {:?}", back.shape().ranks());
+    let want = a.to_dense().unwrap();
+    assert!(back.rel_error_vs(&want).unwrap() < 1e-4);
+}
+
+#[test]
+fn tt_by_tt_product_then_matvec() {
+    // (A B) x == A (B x)
+    let mut rng = Rng::new(5);
+    let a = TtMatrix::random(&TtShape::uniform(&[3, 4], &[4, 4], 2).unwrap(), &mut rng).unwrap();
+    let b = TtMatrix::random(&TtShape::uniform(&[4, 4], &[2, 5], 2).unwrap(), &mut rng).unwrap();
+    let ab = a.matmul_tt(&b).unwrap();
+    let x = Tensor::randn(&[3, 10], 1.0, &mut rng);
+    let got = ab.matvec(&x).unwrap();
+    let via = b.matvec(&x).unwrap();
+    let want = a.matvec(&via).unwrap();
+    let mut diff = got.clone();
+    diff.axpy(-1.0, &want).unwrap();
+    assert!(diff.norm() / want.norm().max(1e-9) < 1e-3);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow in debug builds; run with --release")]
+fn vgg_fc6_shape_matvec_smoke() {
+    // the Table-3 geometry actually runs (25088 -> 4096, rank 4)
+    let shape = TtShape::uniform(&[4; 6], &[2, 7, 8, 8, 7, 4], 4).unwrap();
+    let mut rng = Rng::new(6);
+    let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+    let x = Tensor::randn(&[2, 25088], 1.0, &mut rng);
+    let y = tt.matvec(&x).unwrap();
+    assert_eq!(y.shape(), &[2, 4096]);
+    assert!(y.data().iter().all(|v| v.is_finite()));
+    assert!(y.max_abs() > 0.0);
+}
+
+#[test]
+fn element_access_matches_matvec_basis_vectors() {
+    let shape = TtShape::uniform(&[2, 3], &[3, 2], 2).unwrap();
+    let mut rng = Rng::new(7);
+    let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+    // W e_j == column j
+    for j in 0..6 {
+        let mut e = Tensor::zeros(&[1, 6]);
+        e.data_mut()[j] = 1.0;
+        let col = tt.matvec(&e).unwrap();
+        for t in 0..6 {
+            let w = tt.element(t, j).unwrap();
+            assert!((col.data()[t] - w).abs() < 1e-5);
+        }
+    }
+}
