@@ -7,7 +7,7 @@
 
 use crate::coordinator::router::Router;
 use crate::error::{Error, Result};
-use crate::runtime::{CompiledModel, Manifest, RuntimeInput};
+use crate::runtime::{CompiledModel, Manifest, PjrtClient, RuntimeInput};
 use std::collections::BTreeMap;
 
 /// Something that can run one batch for a logical model.
@@ -45,9 +45,13 @@ impl BatchExecutor for EchoExecutor {
 }
 
 /// The production executor: routes to AOT artifact variants, lazily
-/// compiling each on first use.  Thread-confined (PJRT handles).
+/// compiling each on first use.  Thread-confined (PJRT handles).  In the
+/// offline std-only build [`crate::runtime::cpu_client`] fails, so
+/// [`PjrtExecutor::new`] returns a clear `Error::Xla` and servers built
+/// over it fail every request with "executor init failed" instead of
+/// crashing (see `runtime::executable` for the gating rationale).
 pub struct PjrtExecutor {
-    client: xla::PjRtClient,
+    client: PjrtClient,
     manifest: Manifest,
     router: Router,
     compiled: BTreeMap<String, CompiledModel>,

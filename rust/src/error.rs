@@ -1,41 +1,61 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — `thiserror` is one of the crates
+//! unavailable in the offline std-only build (DESIGN.md §Substitutions).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failure modes surfaced by the library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape arithmetic went wrong (mismatched dims, bad reshape, ...).
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Numerical routine failed to converge or hit an invalid input.
-    #[error("numerical error: {0}")]
     Numerical(String),
 
     /// Artifact loading / manifest parsing problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT / XLA runtime failure.
-    #[error("xla error: {0}")]
+    /// PJRT / XLA runtime failure (in this build: the backend is a stub
+    /// that reports itself unavailable — see `runtime::executable`).
     Xla(String),
 
     /// Coordinator-level failure (queue closed, worker died, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Configuration file / CLI problems.
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
     }
 }
 
@@ -44,4 +64,31 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// Shorthand for shape errors.
 pub fn shape_err<T>(msg: impl Into<String>) -> Result<T> {
     Err(Error::Shape(msg.into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        assert_eq!(format!("{}", Error::Shape("2x3 vs 4x5".into())), "shape error: 2x3 vs 4x5");
+        assert_eq!(format!("{}", Error::Config("bad flag".into())), "config error: bad flag");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(format!("{io}").contains("gone"));
+    }
+
+    #[test]
+    fn shape_err_helper() {
+        let r: Result<()> = shape_err("boom");
+        assert!(matches!(r, Err(Error::Shape(m)) if m == "boom"));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert!(e.source().is_some());
+        assert!(Error::Xla("x".into()).source().is_none());
+    }
 }

@@ -6,14 +6,19 @@ mod cifar;
 mod fig1;
 mod hashednet;
 mod models;
+mod perf;
 mod table2;
 mod table3;
 mod wide;
 
 pub use cifar::{run_cifar, CifarResult};
-pub use fig1::{run_fig1, Fig1Point, Fig1Spec};
+pub use fig1::{fig1_table, run_fig1, Fig1Point, Fig1Spec};
 pub use hashednet::{run_hashednet, HashedNetRow};
 pub use models::{mnist_fc_baseline, mnist_tensornet, mr_classifier, tt_classifier};
+pub use perf::{
+    bench_coordinator, bench_tt_matvec, bench_ttsvd, default_matvec_cases, report,
+    run_bench_suite, write_report, MatvecCase,
+};
 pub use table2::{run_table2, Table2Row, VggFcGeometry};
 pub use table3::{run_table3, Table3Row};
 pub use wide::{run_wide, WideResult};

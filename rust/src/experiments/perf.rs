@@ -1,0 +1,361 @@
+//! The perf-baseline suite behind `tensornet bench` (EXPERIMENTS.md
+//! §Perf): the paper-relevant microbenches — TT matvec vs dense GEMM over
+//! the Table-3 regime of (rank, batch) configurations, TT-SVD
+//! decomposition, and coordinator throughput/latency — emitted as
+//! machine-readable `BENCH_tt_matvec.json` / `BENCH_coordinator.json` so
+//! every future PR is judged against a recorded trajectory instead of
+//! anecdotes.  Built on `util::bench` (runner) and `util::json` (writer);
+//! no dependencies, like everything else in the crate.
+
+use crate::coordinator::{BatchPolicy, EchoExecutor, Server, ServerConfig};
+use crate::error::Result;
+use crate::tensor::{matmul_bt, Tensor};
+use crate::tt::{MatvecScratch, TtMatrix, TtShape};
+use crate::util::bench::{black_box, Bencher};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threads::num_threads;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One dense-vs-TT matvec configuration (a Table-3-style cell).
+#[derive(Clone, Debug)]
+pub struct MatvecCase {
+    pub label: String,
+    pub ms: Vec<usize>,
+    pub ns: Vec<usize>,
+    pub rank: usize,
+    pub batch: usize,
+}
+
+impl MatvecCase {
+    fn new(label: &str, ms: &[usize], ns: &[usize], rank: usize, batch: usize) -> Self {
+        MatvecCase {
+            label: label.to_string(),
+            ms: ms.to_vec(),
+            ns: ns.to_vec(),
+            rank,
+            batch,
+        }
+    }
+}
+
+/// The default (rank, batch) grid.  `quick` keeps everything at the MNIST
+/// 1024x1024 geometry; the full grid adds the paper's vgg fc6 shape
+/// (25088 -> 4096, rank 4 — the Table 3 row) whose dense baseline
+/// allocates a 411 MB weight matrix.
+pub fn default_matvec_cases(quick: bool) -> Vec<MatvecCase> {
+    let mut cases = vec![
+        MatvecCase::new("mnist 1024x1024 r2 b1", &[4; 5], &[4; 5], 2, 1),
+        MatvecCase::new("mnist 1024x1024 r8 b1", &[4; 5], &[4; 5], 8, 1),
+        MatvecCase::new("mnist 1024x1024 r8 b32", &[4; 5], &[4; 5], 8, 32),
+        MatvecCase::new("mnist 1024x1024 r8 b100", &[4; 5], &[4; 5], 8, 100),
+    ];
+    if !quick {
+        cases.push(MatvecCase::new(
+            "vgg 4096x25088 r4 b1",
+            &[4; 6],
+            &[2, 7, 8, 8, 7, 4],
+            4,
+            1,
+        ));
+        cases.push(MatvecCase::new(
+            "vgg 4096x25088 r4 b100",
+            &[4; 6],
+            &[2, 7, 8, 8, 7, 4],
+            4,
+            100,
+        ));
+    }
+    cases
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// Measure dense GEMM vs TT matvec for each case.  Returns the JSON
+/// entries (one object per case, dense and TT timings side by side).
+pub fn bench_tt_matvec(
+    bencher: &Bencher,
+    cases: &[MatvecCase],
+    verbose: bool,
+) -> Result<Vec<Json>> {
+    let mut entries = Vec::new();
+    for case in cases {
+        let shape = TtShape::uniform(&case.ms, &case.ns, case.rank)?;
+        let (m_total, n_total) = (shape.m_total(), shape.n_total());
+        let mut rng = Rng::new(0xBE9C_0000 ^ case.rank as u64 ^ ((case.batch as u64) << 16));
+        let tt = TtMatrix::random(&shape, &mut rng)?;
+        // dense baseline with the same logical size, stored (out, in) like
+        // the Dense layer; values don't affect timing, only shapes do
+        let w = Tensor::randn(&[m_total, n_total], 0.01, &mut rng);
+        let x = Tensor::randn(&[case.batch, n_total], 1.0, &mut rng);
+
+        let m_dense = bencher.run(&format!("dense {}", case.label), || {
+            black_box(matmul_bt(&x, &w).unwrap());
+        });
+        let mut scratch = MatvecScratch::default();
+        let m_tt = bencher.run(&format!("tt    {}", case.label), || {
+            black_box(tt.matvec_with(&x, &mut scratch).unwrap());
+        });
+        let speedup = m_dense.mean_ms() / m_tt.mean_ms().max(1e-9);
+
+        let mut obj = BTreeMap::new();
+        obj.insert("label".to_string(), Json::Str(case.label.clone()));
+        obj.insert("m".to_string(), num(m_total as f64));
+        obj.insert("n".to_string(), num(n_total as f64));
+        obj.insert("rank".to_string(), num(case.rank as f64));
+        obj.insert("batch".to_string(), num(case.batch as f64));
+        obj.insert("tt_params".to_string(), num(shape.num_params() as f64));
+        obj.insert("dense_params".to_string(), num(shape.dense_params() as f64));
+        obj.insert("dense".to_string(), m_dense.to_json());
+        obj.insert("tt".to_string(), m_tt.to_json());
+        obj.insert("speedup".to_string(), num(speedup));
+        entries.push(Json::Obj(obj));
+
+        // Bencher::run already printed each measurement's timing line;
+        // only the derived ratio is worth an extra line here
+        if verbose {
+            println!("  -> {:<26} speedup {speedup:.2}x (dense/tt)", case.label);
+        }
+    }
+    Ok(entries)
+}
+
+/// TT-SVD decomposition timings (256x256 as 4^4 modes, two rank caps).
+pub fn bench_ttsvd(bencher: &Bencher, verbose: bool) -> Result<Vec<Json>> {
+    let mut rng = Rng::new(0x7753_5644);
+    let w = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    let mut entries = Vec::new();
+    for rank in [4usize, 8] {
+        let m = bencher.run(&format!("tt-svd 256x256 (4^4) rank<={rank}"), || {
+            black_box(TtMatrix::from_dense(&w, &[4; 4], &[4; 4], Some(rank), 0.0).unwrap());
+        });
+        let mut obj = BTreeMap::new();
+        obj.insert("label".to_string(), Json::Str(format!("ttsvd 256x256 r{rank}")));
+        obj.insert("rank_cap".to_string(), num(rank as f64));
+        obj.insert("measurement".to_string(), m.to_json());
+        entries.push(Json::Obj(obj));
+        if verbose {
+            println!("  tt-svd rank<={rank}: {:.3} ms", m.mean_ms());
+        }
+    }
+    Ok(entries)
+}
+
+/// Coordinator throughput/latency over the echo backend (isolates
+/// coordination overhead from model compute) for a small policy sweep.
+pub fn bench_coordinator(
+    n_requests: usize,
+    clients: usize,
+    verbose: bool,
+) -> Result<Vec<Json>> {
+    let dim = 64usize;
+    let mut entries = Vec::new();
+    for (max_batch, delay_us) in [(1usize, 0u64), (32, 500), (32, 2000)] {
+        let cfg = ServerConfig {
+            policy: BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_micros(delay_us),
+            },
+            queue_capacity: 4096,
+            batch_queue_capacity: 16,
+        };
+        let server = Arc::new(Server::start(cfg, move || {
+            Ok(EchoExecutor { dim, scale: 1.0 })
+        })?);
+        let clients = clients.max(1);
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                // distribute the remainder so exactly n_requests are sent
+                let mine = n_requests / clients + usize::from(c < n_requests % clients);
+                let server = server.clone();
+                s.spawn(move || {
+                    let x = vec![1.0f32; dim];
+                    for _ in 0..mine {
+                        let _ = server.infer("m", x.clone());
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let st = server.stats();
+        let mut obj = BTreeMap::new();
+        obj.insert("max_batch".to_string(), num(max_batch as f64));
+        obj.insert("max_delay_us".to_string(), num(delay_us as f64));
+        obj.insert("clients".to_string(), num(clients as f64));
+        obj.insert("completed".to_string(), num(st.completed.get() as f64));
+        obj.insert("errors".to_string(), num(st.errors.get() as f64));
+        obj.insert("req_per_s".to_string(), num(st.completed.get() as f64 / wall));
+        obj.insert("mean_batch".to_string(), num(st.mean_batch_size()));
+        obj.insert("p50_us".to_string(), num(st.e2e.quantile_us(0.5)));
+        obj.insert("p99_us".to_string(), num(st.e2e.quantile_us(0.99)));
+        if verbose {
+            println!(
+                "  max_batch={max_batch:<4} delay={delay_us:>5}µs  {:>9.0} req/s  mean batch {:.1}  p50 {:.0}µs p99 {:.0}µs",
+                st.completed.get() as f64 / wall,
+                st.mean_batch_size(),
+                st.e2e.quantile_us(0.5),
+                st.e2e.quantile_us(0.99),
+            );
+        }
+        entries.push(Json::Obj(obj));
+    }
+    Ok(entries)
+}
+
+/// Wrap entries in the report envelope: suite name + environment.
+pub fn report(suite: &str, quick: bool, sections: Vec<(&str, Vec<Json>)>) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str(suite.to_string()));
+    obj.insert("quick".to_string(), Json::Bool(quick));
+    obj.insert("threads".to_string(), num(num_threads() as f64));
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    obj.insert("unix_time".to_string(), num(unix as f64));
+    for (name, entries) in sections {
+        obj.insert(name.to_string(), Json::Arr(entries));
+    }
+    Json::Obj(obj)
+}
+
+/// Write one report to `<dir>/<file>` (compact JSON + trailing newline).
+pub fn write_report(dir: &Path, file: &str, json: &Json) -> Result<PathBuf> {
+    let path = dir.join(file);
+    std::fs::write(&path, json.to_string() + "\n")?;
+    Ok(path)
+}
+
+/// The `tensornet bench` entry point: run every suite and emit
+/// `BENCH_tt_matvec.json` + `BENCH_coordinator.json` into `out_dir`.
+/// Returns the written paths.
+pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec<PathBuf>> {
+    // fail on an unwritable destination BEFORE spending minutes measuring
+    std::fs::create_dir_all(out_dir)?;
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let cases = default_matvec_cases(quick);
+    let (n_requests, clients) = if quick { (2_000, 8) } else { (10_000, 8) };
+
+    if verbose {
+        println!("== TT matvec vs dense GEMM ({} configurations)", cases.len());
+    }
+    let matvec = bench_tt_matvec(&bencher, &cases, verbose)?;
+    if verbose {
+        println!("== TT-SVD decomposition");
+    }
+    let ttsvd = bench_ttsvd(&bencher, verbose)?;
+    let tt_report = report(
+        "tt_matvec",
+        quick,
+        vec![("entries", matvec), ("ttsvd", ttsvd)],
+    );
+
+    if verbose {
+        println!("== coordinator policy sweep (echo backend, {clients} clients)");
+    }
+    let coord = bench_coordinator(n_requests, clients, verbose)?;
+    let coord_report = report("coordinator", quick, vec![("entries", coord)]);
+
+    let paths = vec![
+        write_report(out_dir, "BENCH_tt_matvec.json", &tt_report)?,
+        write_report(out_dir, "BENCH_coordinator.json", &coord_report)?,
+    ];
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn tiny_bencher() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(0),
+            target_time: Duration::from_millis(1),
+            min_iters: 1,
+            max_iters: 3,
+        }
+    }
+
+    fn tiny_cases() -> Vec<MatvecCase> {
+        vec![
+            MatvecCase::new("tiny r1 b1", &[2, 2], &[2, 2], 1, 1),
+            MatvecCase::new("tiny r2 b2", &[2, 2], &[2, 2], 2, 2),
+            MatvecCase::new("tiny r2 b4", &[2, 2], &[2, 2], 2, 4),
+        ]
+    }
+
+    #[test]
+    fn matvec_entries_have_dense_and_tt_timings() {
+        let entries = bench_tt_matvec(&tiny_bencher(), &tiny_cases(), false).unwrap();
+        assert_eq!(entries.len(), 3);
+        for e in &entries {
+            assert!(e.get("dense").unwrap().get("mean_ms").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("tt").unwrap().get("mean_ms").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("rank").unwrap().as_usize().is_some());
+            assert!(e.get("batch").unwrap().as_usize().is_some());
+        }
+        // the three (rank, batch) configurations are distinct
+        let keys: Vec<(usize, usize)> = entries
+            .iter()
+            .map(|e| {
+                (
+                    e.get("rank").unwrap().as_usize().unwrap(),
+                    e.get("batch").unwrap().as_usize().unwrap(),
+                )
+            })
+            .collect();
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len());
+    }
+
+    #[test]
+    fn report_envelope_roundtrips() {
+        let entries = bench_ttsvd(&tiny_bencher(), false).unwrap();
+        let r = report("tt_matvec", true, vec![("ttsvd", entries)]);
+        let text = r.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("tt_matvec"));
+        assert!(back.get("ttsvd").unwrap().as_arr().unwrap().len() == 2);
+    }
+
+    #[test]
+    fn coordinator_bench_small_sweep() {
+        let entries = bench_coordinator(60, 3, false).unwrap();
+        assert_eq!(entries.len(), 3);
+        for e in &entries {
+            assert_eq!(e.get("errors").unwrap().as_usize(), Some(0));
+            assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn write_report_emits_parseable_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("tensornet_bench_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let entries = bench_tt_matvec(&tiny_bencher(), &tiny_cases(), false).unwrap();
+        let r = report("tt_matvec", true, vec![("entries", entries)]);
+        let path = write_report(&dir, "BENCH_tt_matvec.json", &r).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(text.trim()).unwrap();
+        assert!(parsed.get("entries").unwrap().as_arr().unwrap().len() >= 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_grid_covers_three_rank_batch_configs() {
+        // the acceptance bar: >= 3 (rank, batch) configurations, both
+        // quick and full
+        assert!(default_matvec_cases(true).len() >= 3);
+        assert!(default_matvec_cases(false).len() > default_matvec_cases(true).len());
+    }
+}

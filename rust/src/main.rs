@@ -9,6 +9,7 @@
 //! tensornet wide       [--quick]               §6.2.1 wide & shallow net
 //! tensornet table2     [--accuracy] [--quick]  Table 2 compression (+proxy)
 //! tensornet table3     [--quick]               Table 3 inference timing
+//! tensornet bench      [--quick] [--out-dir D] perf baseline -> BENCH_*.json
 //! tensornet train      [--rank 8] [--epochs 5] train the MNIST TensorNet
 //! tensornet serve      [--artifacts DIR] ...   serve AOT artifacts
 //! tensornet inspect    [--artifacts DIR]       list artifacts + variants
@@ -19,9 +20,7 @@ use tensornet::coordinator::{BatchPolicy, PjrtExecutor, Server, ServerConfig};
 use tensornet::data::{global_contrast_normalize, synth_mnist};
 use tensornet::error::Result;
 use tensornet::experiments::*;
-use tensornet::nn::{Layer, SgdConfig, TrainConfig, Trainer};
-#[allow(unused_imports)]
-use tensornet::nn::Sequential as _;
+use tensornet::nn::{SgdConfig, TrainConfig, Trainer};
 use tensornet::runtime::Manifest;
 use tensornet::util::bench::print_table;
 use tensornet::util::cli::Args;
@@ -53,6 +52,7 @@ fn run(args: Args) -> Result<()> {
         Some("wide") => cmd_wide(&args),
         Some("table2") => cmd_table2(&args),
         Some("table3") => cmd_table3(&args),
+        Some("bench") => cmd_bench(&args),
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -73,6 +73,7 @@ fn print_usage() {
         "tensornet — Tensorizing Neural Networks (NIPS 2015) reproduction\n\n\
          subcommands:\n\
          \u{20}  fig1 | hashednet | cifar | wide | table2 | table3   experiments\n\
+         \u{20}  bench [--quick] [--out-dir DIR]                     perf baseline -> BENCH_*.json\n\
          \u{20}  train                                               train the MNIST TensorNet\n\
          \u{20}  serve --model tt_layer --requests 200               serve AOT artifacts\n\
          \u{20}  inspect                                             list artifacts\n\
@@ -189,6 +190,20 @@ fn cmd_table3(args: &Args) -> Result<()> {
         &["layer", "batch", "time", "fwd memory"],
         &table,
     );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let out_dir = args.get_or("out-dir", ".");
+    println!(
+        "== perf baseline ({}; writing BENCH_*.json to {out_dir})",
+        if quick { "quick profile" } else { "full profile" }
+    );
+    let paths = run_bench_suite(quick, std::path::Path::new(&out_dir), true)?;
+    for p in &paths {
+        println!("wrote {}", p.display());
+    }
     Ok(())
 }
 

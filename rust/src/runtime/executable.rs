@@ -1,9 +1,40 @@
-//! A compiled artifact with device-resident parameters.
+//! A compiled artifact — host side of the PJRT boundary.
+//!
+//! OFFLINE GATING.  The real device path needs the `xla` crate (PJRT FFI
+//! bindings), which cannot be vendored into this offline std-only build.
+//! This module keeps the entire *host* side working — manifest parsing,
+//! weight-blob loading, per-input shape validation, runtime-slot
+//! accounting — and stubs the *device* side: [`PjrtClient::cpu`] returns
+//! [`Error::Xla`] with an explanatory message, so anything that would
+//! actually execute an artifact fails fast and loudly instead of at link
+//! time.  The serving stack degrades gracefully: `PjrtExecutor`-backed
+//! servers report "executor init failed" per request, while the echo and
+//! native executors (and everything else in the crate) are unaffected.
+//! See DESIGN.md §Substitutions for the re-enabling plan.
 
 use crate::error::{Error, Result};
 use crate::runtime::artifact::{ArtifactSpec, InputSource, Manifest};
 use crate::tensor::Tensor;
-use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// The message every stubbed device operation fails with.
+pub const PJRT_UNAVAILABLE: &str = "PJRT/XLA backend is not linked in this std-only offline \
+     build; artifact execution needs an XLA toolchain (DESIGN.md §Substitutions)";
+
+/// Placeholder for the PJRT client handle.  Construction always fails in
+/// this build; the type exists so the executor/server plumbing keeps its
+/// real shape (thread-confined client created on the executor thread).
+#[derive(Debug)]
+pub struct PjrtClient {
+    _private: (),
+}
+
+impl PjrtClient {
+    /// Create a PJRT CPU client — always `Err(Error::Xla)` in this build.
+    pub fn cpu() -> Result<PjrtClient> {
+        Err(Error::Xla(PJRT_UNAVAILABLE.into()))
+    }
+}
 
 /// A per-request input value (matched positionally against the artifact's
 /// `source == Runtime` slots).
@@ -13,73 +44,67 @@ pub enum RuntimeInput {
     I32(Vec<i32>),
 }
 
-/// An AOT artifact compiled onto a PJRT client, with `weights` / `state` /
-/// `synthesize` arguments already transferred to device buffers.
-///
-/// Not `Send` (PJRT handles are raw pointers) — owned by one executor
-/// thread; see `coordinator::worker`.
+impl RuntimeInput {
+    pub fn len(&self) -> usize {
+        match self {
+            RuntimeInput::F32(v) => v.len(),
+            RuntimeInput::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// An AOT artifact with its host-side state loaded and validated: the
+/// spec, plus the weight group decoded into named tensors.  In a full
+/// build these tensors become device-resident buffers; here they stay on
+/// the host and [`CompiledModel::run`] reports the backend unavailable.
 pub struct CompiledModel {
     spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-    /// device buffers for every non-runtime slot, `None` for runtime slots
-    resident: Vec<Option<xla::PjRtBuffer>>,
-    client: xla::PjRtClient,
+    weights: BTreeMap<String, Tensor>,
 }
 
 impl CompiledModel {
-    /// Load + compile `spec` from `manifest`'s directory, transferring its
-    /// weight group (if any) to the device.  `Synthesize` inputs get seeded
-    /// He-scaled Gaussians; `State` inputs get zeros.
-    pub fn load(client: &xla::PjRtClient, manifest: &Manifest, name: &str) -> Result<CompiledModel> {
+    /// Load `name` from `manifest`'s directory and validate every
+    /// weight-sourced input against the blob (shape and presence) — the
+    /// same checks the device path performs before transfer.
+    pub fn load(_client: &PjrtClient, manifest: &Manifest, name: &str) -> Result<CompiledModel> {
         let spec = manifest.artifact(name)?.clone();
+        // the device path parsed the HLO text here; keep at least the
+        // presence check so a partially-synced artifact dir still fails
+        // at load time with a pointed message
         let hlo_path = manifest.dir.join(&spec.hlo);
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-            .map_err(|e| Error::Artifact(format!("parsing {}: {e}", hlo_path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-
+        if !hlo_path.is_file() {
+            return Err(Error::Artifact(format!(
+                "artifact {name}: HLO file {} is missing",
+                hlo_path.display()
+            )));
+        }
         let weights = match &spec.weight_group {
             Some(g) => manifest.load_weights(g)?,
-            None => Default::default(),
+            None => BTreeMap::new(),
         };
-        let mut rng = Rng::new(manifest.seed ^ 0x7265_7369_64);
-        let mut resident = Vec::with_capacity(spec.inputs.len());
         for input in &spec.inputs {
-            let buf = match input.source {
-                InputSource::Runtime => None,
-                InputSource::Weights => {
-                    let t = weights.get(&input.name).ok_or_else(|| {
-                        Error::Artifact(format!(
-                            "artifact {name}: weight '{}' missing from group",
-                            input.name
-                        ))
-                    })?;
-                    if t.shape() != &input.shape[..] {
-                        return Err(Error::Artifact(format!(
-                            "weight '{}': blob shape {:?} vs spec {:?}",
-                            input.name,
-                            t.shape(),
-                            input.shape
-                        )));
-                    }
-                    Some(client.buffer_from_host_buffer(t.data(), &input.shape, None)?)
+            if input.source == InputSource::Weights {
+                let t = weights.get(&input.name).ok_or_else(|| {
+                    Error::Artifact(format!(
+                        "artifact {name}: weight '{}' missing from group",
+                        input.name
+                    ))
+                })?;
+                if t.shape() != &input.shape[..] {
+                    return Err(Error::Artifact(format!(
+                        "weight '{}': blob shape {:?} vs spec {:?}",
+                        input.name,
+                        t.shape(),
+                        input.shape
+                    )));
                 }
-                InputSource::State => {
-                    let zeros = vec![0.0f32; input.numel()];
-                    Some(client.buffer_from_host_buffer(&zeros, &input.shape, None)?)
-                }
-                InputSource::Synthesize => {
-                    // He-scaled Gaussian: same init family as the python side
-                    let fan_in = *input.shape.last().unwrap_or(&1) as f32;
-                    let std = (2.0 / fan_in.max(1.0)).sqrt();
-                    let data: Vec<f32> =
-                        (0..input.numel()).map(|_| rng.normal_f32(std)).collect();
-                    Some(client.buffer_from_host_buffer(&data, &input.shape, None)?)
-                }
-            };
-            resident.push(buf);
+            }
         }
-        Ok(CompiledModel { spec, exe, resident, client: client.clone() })
+        Ok(CompiledModel { spec, weights })
     }
 
     pub fn name(&self) -> &str {
@@ -90,23 +115,23 @@ impl CompiledModel {
         &self.spec
     }
 
+    /// Host-resident weight tensors (the native cross-check tests compare
+    /// these against the pure-rust implementations).
+    pub fn weights(&self) -> &BTreeMap<String, Tensor> {
+        &self.weights
+    }
+
     /// Batch size of the first runtime input (serving uses this to route
     /// requests to the right batch variant).
     pub fn batch_size(&self) -> Option<usize> {
         self.spec.runtime_inputs().first().map(|i| i.shape[0])
     }
 
-    /// Execute with per-request inputs (positional over the runtime slots).
-    /// Returns the flattened output tuple as f32 tensors.
+    /// Execute with per-request inputs.  Validates the runtime slots
+    /// (count and element counts) exactly like the device path, then
+    /// reports the backend unavailable.
     pub fn run(&self, runtime_inputs: &[RuntimeInput]) -> Result<Vec<Tensor>> {
-        let runtime_slots: Vec<usize> = self
-            .spec
-            .inputs
-            .iter()
-            .enumerate()
-            .filter(|(_, i)| i.source == InputSource::Runtime)
-            .map(|(idx, _)| idx)
-            .collect();
+        let runtime_slots = self.spec.runtime_inputs();
         if runtime_inputs.len() != runtime_slots.len() {
             return Err(Error::Xla(format!(
                 "{}: {} runtime inputs given, want {}",
@@ -115,58 +140,122 @@ impl CompiledModel {
                 runtime_slots.len()
             )));
         }
-        // transfer the per-request inputs, then borrow resident buffers in
-        // positional order (execute_b takes Borrow<PjRtBuffer>)
-        let mut fresh: Vec<xla::PjRtBuffer> = Vec::with_capacity(runtime_inputs.len());
-        let mut rt_iter = runtime_inputs.iter();
-        for (idx, input) in self.spec.inputs.iter().enumerate() {
-            if self.resident[idx].is_none() {
-                let rt = rt_iter.next().unwrap();
-                let (len, buf) = match rt {
-                    RuntimeInput::F32(v) => {
-                        (v.len(), self.client.buffer_from_host_buffer(v, &input.shape, None))
-                    }
-                    RuntimeInput::I32(v) => {
-                        (v.len(), self.client.buffer_from_host_buffer(v, &input.shape, None))
-                    }
-                };
-                if len != input.numel() {
-                    return Err(Error::Xla(format!(
-                        "input '{}': {len} elems, want {}",
-                        input.name,
-                        input.numel()
-                    )));
-                }
-                fresh.push(buf?);
+        for (given, slot) in runtime_inputs.iter().zip(&runtime_slots) {
+            if given.len() != slot.numel() {
+                return Err(Error::Xla(format!(
+                    "input '{}': {} elems, want {}",
+                    slot.name,
+                    given.len(),
+                    slot.numel()
+                )));
             }
         }
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.spec.inputs.len());
-        let mut fi = 0usize;
-        for idx in 0..self.spec.inputs.len() {
-            match &self.resident[idx] {
-                Some(buf) => args.push(buf),
-                None => {
-                    args.push(&fresh[fi]);
-                    fi += 1;
-                }
-            }
+        Err(Error::Xla(format!("{}: {PJRT_UNAVAILABLE}", self.spec.name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::path::PathBuf;
+
+    fn fixture_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tensornet_exe_test_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "seed": 3,
+          "artifacts": [{
+            "name": "toy_b2",
+            "hlo": "toy_b2.hlo.txt",
+            "inputs": [
+              {"name": "w", "shape": [3, 4], "dtype": "float32", "source": "weights"},
+              {"name": "x", "shape": [2, 4], "dtype": "float32", "source": "runtime"}
+            ],
+            "outputs": [{"shape": [2, 3], "dtype": "float32"}],
+            "weight_group": "toy"
+          }],
+          "weight_groups": {
+            "toy": {"file": "toy.weights.bin",
+                    "layout": [{"name": "w", "shape": [3, 4], "offset": 0, "len": 12}]}
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        std::fs::write(dir.join("toy_b2.hlo.txt"), "HloModule toy_b2\n").unwrap();
+        let mut f = std::fs::File::create(dir.join("toy.weights.bin")).unwrap();
+        for i in 0..12 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
         }
-        let result = self.exe.execute_b(&args)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let literals = tuple.to_tuple()?;
-        let mut out = Vec::with_capacity(literals.len());
-        for (i, lit) in literals.into_iter().enumerate() {
-            let vals: Vec<f32> = lit
-                .to_vec::<f32>()
-                .map_err(|e| Error::Xla(format!("output {i} to f32: {e}")))?;
-            let shape = self
-                .spec
-                .outputs
-                .get(i)
-                .map(|o| o.shape.clone())
-                .unwrap_or_else(|| vec![vals.len()]);
-            out.push(Tensor::from_vec(&shape, vals)?);
-        }
-        Ok(out)
+        dir
+    }
+
+    #[test]
+    fn cpu_client_reports_unavailable() {
+        let err = PjrtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("PJRT"), "{err}");
+    }
+
+    #[test]
+    fn load_validates_host_side_and_run_reports_unavailable() {
+        let dir = fixture_dir("load");
+        let manifest = Manifest::load(&dir).unwrap();
+        // client construction is stubbed, so fabricate the handle the way
+        // only tests may: through the validated-load entry point
+        let client = PjrtClient { _private: () };
+        let model = CompiledModel::load(&client, &manifest, "toy_b2").unwrap();
+        assert_eq!(model.name(), "toy_b2");
+        assert_eq!(model.batch_size(), Some(2));
+        assert_eq!(model.weights()["w"].shape(), &[3, 4]);
+        // wrong slot count / element count are caught before the stub error
+        assert!(model.run(&[]).is_err());
+        let bad = model.run(&[RuntimeInput::F32(vec![0.0; 3])]).unwrap_err();
+        assert!(format!("{bad}").contains("elems"), "{bad}");
+        let stub = model.run(&[RuntimeInput::F32(vec![0.0; 8])]).unwrap_err();
+        assert!(format!("{stub}").contains("PJRT"), "{stub}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncated_blob() {
+        let dir = fixture_dir("truncated");
+        // truncate the blob so the layout no longer fits (fails inside
+        // Manifest::load_weights, before load()'s own shape check)
+        std::fs::write(dir.join("toy.weights.bin"), [0u8; 8]).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = PjrtClient { _private: () };
+        assert!(CompiledModel::load(&client, &manifest, "toy_b2").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_weight_shape_mismatch() {
+        let dir = fixture_dir("mismatch");
+        // same 12-float blob, but the layout decodes it as (4, 3) while
+        // the input spec wants (3, 4): load_weights succeeds and load()'s
+        // shape-vs-spec branch must fire
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let twisted = manifest_text.replace(
+            r#""layout": [{"name": "w", "shape": [3, 4], "offset": 0, "len": 12}]"#,
+            r#""layout": [{"name": "w", "shape": [4, 3], "offset": 0, "len": 12}]"#,
+        );
+        assert_ne!(manifest_text, twisted, "fixture layout line moved; update the test");
+        std::fs::write(dir.join("manifest.json"), twisted).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = PjrtClient { _private: () };
+        let err = CompiledModel::load(&client, &manifest, "toy_b2").unwrap_err();
+        assert!(format!("{err}").contains("blob shape"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_missing_hlo_file() {
+        let dir = fixture_dir("nohlo");
+        std::fs::remove_file(dir.join("toy_b2.hlo.txt")).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = PjrtClient { _private: () };
+        let err = CompiledModel::load(&client, &manifest, "toy_b2").unwrap_err();
+        assert!(format!("{err}").contains("HLO"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,24 +1,30 @@
 //! PJRT runtime (S7 in DESIGN.md): load the AOT HLO-text artifacts emitted
-//! by `python/compile/aot.py`, compile them on the PJRT CPU client, keep
-//! parameters resident as device buffers, and execute from the serving hot
-//! path.  Python never runs here — the artifacts directory is the entire
-//! interface between the build path and the request path.
+//! by `python/compile/aot.py`, validate them against their weight blobs,
+//! and — in a full build — compile them on the PJRT CPU client and execute
+//! from the serving hot path.
 //!
-//! Thread model: the `xla` crate's handles hold raw pointers and are not
-//! `Send`, so a [`CompiledModel`] is *thread-confined* — the coordinator
-//! runs all PJRT execution on a dedicated executor thread that owns the
-//! registry (see `coordinator::worker`).
+//! OFFLINE GATING: the `xla` PJRT bindings cannot be vendored into this
+//! std-only build, so the device half is stubbed (see `executable.rs`) —
+//! [`cpu_client`] returns `Error::Xla` and execution paths fail fast with
+//! a clear message.  The host half (manifest parsing, weight loading,
+//! shape checks) is fully functional and tested.
+//!
+//! Thread model (unchanged by the stub): PJRT handles hold raw pointers
+//! and are not `Send`, so a [`CompiledModel`] is *thread-confined* — the
+//! coordinator runs all PJRT execution on a dedicated executor thread that
+//! owns the registry (see `coordinator::worker`).
 
 mod artifact;
 mod executable;
 
 pub use artifact::{ArtifactSpec, InputSource, InputSpec, IoSpec, Manifest, WeightGroup};
-pub use executable::{CompiledModel, RuntimeInput};
+pub use executable::{CompiledModel, PjrtClient, RuntimeInput, PJRT_UNAVAILABLE};
 
-use crate::error::{Error, Result};
+use crate::error::Result;
 
 /// Create a PJRT CPU client.  One per executor thread; creation is heavy
-/// (thread pools), so callers cache it for the thread's lifetime.
-pub fn cpu_client() -> Result<xla::PjRtClient> {
-    xla::PjRtClient::cpu().map_err(Error::from)
+/// (thread pools), so callers cache it for the thread's lifetime.  In this
+/// offline build the call always fails — see [`PJRT_UNAVAILABLE`].
+pub fn cpu_client() -> Result<PjrtClient> {
+    PjrtClient::cpu()
 }

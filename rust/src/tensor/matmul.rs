@@ -59,13 +59,28 @@ impl Gemm {
 
     /// `C = A · B` for A:(m,k), B:(k,n).
     pub fn matmul(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let mut out = Vec::new();
+        self.matmul_into(a, b, &mut out)?;
+        Tensor::from_vec(&[a.shape()[0], b.shape()[1]], out)
+    }
+
+    /// [`Gemm::matmul`] into a caller-owned buffer (cleared, resized,
+    /// capacity retained across calls) — the serving hot path uses this to
+    /// stay allocation-free in steady state ([`crate::tt::MatvecScratch`]).
+    pub fn matmul_into(&self, a: &Tensor, b: &Tensor, out: &mut Vec<f32>) -> Result<()> {
         Self::check2(a, b)?;
         let (m, k) = (a.shape()[0], a.shape()[1]);
         let (k2, n) = (b.shape()[0], b.shape()[1]);
         if k != k2 {
             return shape_err(format!("matmul {:?} x {:?}", a.shape(), b.shape()));
         }
-        let mut out = vec![0.0f32; m * n];
+        out.clear();
+        out.resize(m * n, 0.0);
+        // degenerate dims: the product is all-zeros (or empty); the kernel
+        // below would call `chunks_mut(0)` and panic when n == 0
+        if m == 0 || n == 0 || k == 0 {
+            return Ok(());
+        }
         let ad = a.data();
         let bd = b.data();
         let kernel = |i0: usize, rows: &mut [f32]| {
@@ -86,7 +101,7 @@ impl Gemm {
         if big && m >= 2 * num_threads() {
             // row-parallel with adaptive granularity
             let cr = (m / (num_threads() * 4)).clamp(1, self.chunk_rows.max(1));
-            parallel_chunks_mut(&mut out, cr * n, |start, rows| {
+            parallel_chunks_mut(&mut out[..], cr * n, |start, rows| {
                 kernel(start / n, rows);
             });
         } else if big && m == 1 && n >= 64 {
@@ -94,7 +109,7 @@ impl Gemm {
             // single output row — perf pass iteration #2
             let cb = (n / num_threads()).max(32);
             let arow = &ad[..k];
-            parallel_chunks_mut(&mut out, cb, |col0, cols| {
+            parallel_chunks_mut(&mut out[..], cb, |col0, cols| {
                 for (kk, &aik) in arow.iter().enumerate() {
                     if aik != 0.0 {
                         let brow = &bd[kk * n + col0..kk * n + col0 + cols.len()];
@@ -106,13 +121,13 @@ impl Gemm {
             });
         } else if big && m > 1 {
             // few rows: one chunk per row
-            parallel_chunks_mut(&mut out, n, |start, rows| {
+            parallel_chunks_mut(&mut out[..], n, |start, rows| {
                 kernel(start / n, rows);
             });
         } else {
-            kernel(0, &mut out);
+            kernel(0, &mut out[..]);
         }
-        Tensor::from_vec(&[m, n], out)
+        Ok(())
     }
 
     /// `C = Aᵀ · B` for A:(k,m), B:(k,n) — gradient-of-weights shape.
@@ -124,6 +139,11 @@ impl Gemm {
             return shape_err(format!("matmul_at {:?} x {:?}", a.shape(), b.shape()));
         }
         let mut out = vec![0.0f32; m * n];
+        // degenerate dims: all-zeros result; the kernel would panic on
+        // `chunks_mut(0)` when n == 0
+        if m == 0 || n == 0 || k == 0 {
+            return Tensor::from_vec(&[m, n], out);
+        }
         let ad = a.data();
         let bd = b.data();
         let kernel = |i0: usize, rows: &mut [f32]| {
@@ -162,6 +182,11 @@ impl Gemm {
             return shape_err(format!("matmul_bt {:?} x {:?}", a.shape(), b.shape()));
         }
         let mut out = vec![0.0f32; m * n];
+        // degenerate dims: all-zeros result; the kernel would panic on
+        // `chunks_mut(0)` when n == 0
+        if m == 0 || n == 0 || k == 0 {
+            return Tensor::from_vec(&[m, n], out);
+        }
         let ad = a.data();
         let bd = b.data();
         // k-blocked path for multi-row batches (perf pass iteration #3):
@@ -349,5 +374,56 @@ mod tests {
         assert!(matmul_at(&a, &b).is_err());
         assert!(matmul_bt(&a, &b).is_err());
         assert!(matvec(&a, &Tensor::zeros(&[7])).is_err());
+    }
+
+    #[test]
+    fn degenerate_dims_do_not_panic() {
+        // n == 0 used to hit `chunks_mut(0)` inside the kernels
+        for &(m, k, n) in &[(0usize, 3usize, 4usize), (3, 0, 4), (3, 4, 0), (0, 0, 0), (1, 5, 0)] {
+            let a = Tensor::zeros(&[m, k]);
+            let b = Tensor::zeros(&[k, n]);
+            let c = matmul(&a, &b).unwrap();
+            assert_eq!(c.shape(), &[m, n]);
+            assert!(c.data().iter().all(|&x| x == 0.0));
+
+            let at = Tensor::zeros(&[k, m]);
+            let cat = matmul_at(&at, &b).unwrap();
+            assert_eq!(cat.shape(), &[m, n]);
+
+            let bt = Tensor::zeros(&[n, k]);
+            let cbt = matmul_bt(&a, &bt).unwrap();
+            assert_eq!(cbt.shape(), &[m, n]);
+        }
+        // forced-parallel tuning must survive the same degenerate shapes
+        let par = Gemm { par_flops: 0, chunk_rows: 3 };
+        let c = par.matmul(&Tensor::zeros(&[4, 0]), &Tensor::zeros(&[0, 4])).unwrap();
+        assert_eq!(c.shape(), &[4, 4]);
+        let v = matvec(&Tensor::zeros(&[0, 5]), &Tensor::zeros(&[5])).unwrap();
+        assert_eq!(v.shape(), &[0]);
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer_and_matches() {
+        let mut rng = Rng::new(7);
+        let g = Gemm::default();
+        let a = Tensor::randn(&[6, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        let want = g.matmul(&a, &b).unwrap();
+        let mut buf = Vec::new();
+        g.matmul_into(&a, &b, &mut buf).unwrap();
+        assert_eq!(buf.as_slice(), want.data());
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        // a second same-shape call must not reallocate
+        g.matmul_into(&a, &b, &mut buf).unwrap();
+        assert_eq!(buf.capacity(), cap);
+        assert_eq!(buf.as_ptr(), ptr);
+        assert_eq!(buf.as_slice(), want.data());
+        // stale contents from a larger previous result must not leak in
+        let small_a = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        g.matmul_into(&small_a, &b, &mut buf).unwrap();
+        assert_eq!(buf.len(), 2 * 9);
+        let want_small = g.matmul(&small_a, &b).unwrap();
+        assert_eq!(buf.as_slice(), want_small.data());
     }
 }

@@ -16,10 +16,21 @@ use crate::tt::TtMatrix;
 use crate::util::threads::parallel_chunks_mut;
 
 /// Reusable buffers for [`TtMatrix::matvec_with`].
+///
+/// Three buffers cycle through the sweep: `a` seeds the state buffer
+/// (recycled from the previous call's spent GEMM output), `b` holds the
+/// packed GEMM operand, `c` the GEMM output.  In steady state a serving
+/// worker calling with a fixed input shape performs exactly ONE heap
+/// allocation per call — the buffer that leaves inside the returned
+/// tensor — everything else retains capacity across calls.
 #[derive(Default, Clone, Debug)]
 pub struct MatvecScratch {
+    /// sweep-state buffer; capacity retained across calls
     a: Vec<f32>,
+    /// packed GEMM operand `(rows, r0·n)`
     b: Vec<f32>,
+    /// GEMM output `(rows, m·r1)`; donated to `a` at the end of each call
+    c: Vec<f32>,
 }
 
 impl TtMatrix {
@@ -42,12 +53,12 @@ impl TtMatrix {
         let d = self.d();
         let gemm = Gemm::default();
 
-        // state: logically (B, M_done, N_rest, r); stored flat in `cur`
+        // state: logically (B, M_done, N_rest, r); stored flat in `cur`.
+        // The first pack reads straight from `x`, so the input is never
+        // copied into a staging buffer.
         let mut m_done = 1usize;
         let mut n_rest = self.n_total();
         let mut r = 1usize;
-        scratch.a.clear();
-        scratch.a.extend_from_slice(x.data());
         let mut cur = std::mem::take(&mut scratch.a);
 
         for k in 0..d {
@@ -58,15 +69,17 @@ impl TtMatrix {
 
             // pack: (B, M, n, rest, r0) -> (B, M, rest, r0, n) flattened
             // as the GEMM operand (rows, r0*n)
-            let packed = pack_a(&cur, b * m_done, n, rest, r0, &mut scratch.b);
+            let src: &[f32] = if k == 0 { x.data() } else { &cur };
+            let packed = pack_a(src, b * m_done, n, rest, r0, &mut scratch.b);
 
-            // GEMM against cached core matrix (r0*n, m*r1)
+            // GEMM against cached core matrix (r0*n, m*r1), written into
+            // the retained scratch buffer — no allocation once warm
             let a_t = Tensor::from_vec(&[rows, r0 * n], std::mem::take(packed))?;
-            let out = gemm.matmul(&a_t, &self.core_mats()[k])?;
+            gemm.matmul_into(&a_t, &self.core_mats()[k], &mut scratch.c)?;
             scratch.b = a_t.into_vec(); // return buffer for reuse
 
             // unpack: (B, M, rest, m, r1) -> (B, M, m, rest, r1)
-            cur = unpack_out(out.data(), b * m_done, rest, m, r1, &mut cur);
+            cur = unpack_out(&scratch.c, b * m_done, rest, m, r1, &mut cur);
 
             m_done *= m;
             n_rest = rest;
@@ -75,7 +88,11 @@ impl TtMatrix {
         debug_assert_eq!(r, 1);
         debug_assert_eq!(n_rest, 1);
         let y = Tensor::from_vec(&[b, self.m_total()], cur)?;
-        scratch.a = Vec::new();
+        // `cur`'s allocation leaves inside `y`; recycle the spent GEMM
+        // buffer as the next call's state buffer so capacity survives
+        // across serving-worker invocations (this used to be
+        // `scratch.a = Vec::new()`, reallocating every call)
+        scratch.a = std::mem::take(&mut scratch.c);
         Ok(y)
     }
 }
@@ -126,7 +143,14 @@ fn pack_a_one(src: &[f32], n: usize, rest: usize, r0: usize, dst: &mut [f32]) {
 }
 
 /// `(BM, rest, m, r1) -> (BM, m, rest, r1)` flattened.  Reuses `out`.
-fn unpack_out(src: &[f32], bm: usize, rest: usize, m: usize, r1: usize, out: &mut Vec<f32>) -> Vec<f32> {
+fn unpack_out(
+    src: &[f32],
+    bm: usize,
+    rest: usize,
+    m: usize,
+    r1: usize,
+    out: &mut Vec<f32>,
+) -> Vec<f32> {
     out.clear();
     out.resize(bm * rest * m * r1, 0.0);
     let block = rest * m * r1;
@@ -230,6 +254,21 @@ mod tests {
         let _ = tt.matvec_with(&x2, &mut scratch).unwrap();
         let a1_again = tt.matvec_with(&x1, &mut scratch).unwrap();
         assert_eq!(a1, a1_again);
+
+        // allocation-regression guard: the original bug reset `scratch.a`
+        // to `Vec::new()` on every call, so the state buffer was
+        // reallocated per serving-worker invocation.  After a warm call
+        // the recycled buffers must hold capacity, and repeated
+        // same-shape calls must leave every capacity unchanged (steady
+        // state allocates only the returned tensor's buffer).
+        assert!(scratch.a.capacity() > 0, "state buffer lost its capacity");
+        assert!(scratch.b.capacity() > 0, "pack buffer lost its capacity");
+        let caps = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
+        for _ in 0..4 {
+            let _ = tt.matvec_with(&x1, &mut scratch).unwrap();
+            let now = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
+            assert_eq!(caps, now, "scratch capacities drifted across same-shape calls");
+        }
     }
 
     #[test]

@@ -4,7 +4,13 @@
 //! markdown-ish table printer the bench binaries use to regenerate the
 //! paper's tables.  `black_box` prevents the optimizer from deleting the
 //! measured work.
+//!
+//! [`Measurement::to_json`] makes every measurement machine-readable;
+//! `tensornet bench` (experiments::perf) assembles them into the
+//! `BENCH_*.json` perf-trajectory files described in EXPERIMENTS.md §Perf.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Re-export of the std optimizer barrier.
@@ -29,10 +35,22 @@ impl Measurement {
     pub fn mean_us(&self) -> f64 {
         self.mean.as_secs_f64() * 1e6
     }
+
+    /// Machine-readable form for the `BENCH_*.json` perf trajectory.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(self.name.clone()));
+        obj.insert("iters".to_string(), Json::Num(self.iters as f64));
+        obj.insert("mean_ms".to_string(), Json::Num(self.mean.as_secs_f64() * 1e3));
+        obj.insert("p50_ms".to_string(), Json::Num(self.p50.as_secs_f64() * 1e3));
+        obj.insert("min_ms".to_string(), Json::Num(self.min.as_secs_f64() * 1e3));
+        Json::Obj(obj)
+    }
 }
 
 /// Bench runner: measures `f` until `target_time` is spent (after warmup),
 /// at least `min_iters` iterations.
+#[derive(Clone, Copy, Debug)]
 pub struct Bencher {
     pub warmup: Duration,
     pub target_time: Duration,
@@ -68,11 +86,14 @@ impl Bencher {
         while w0.elapsed() < self.warmup {
             f();
         }
-        // measure
+        // measure; always take at least one sample so the percentile /
+        // mean math below can never divide by (or index into) zero, even
+        // under a pathological `min_iters: 0` profile
         let mut samples: Vec<Duration> = Vec::new();
         let t0 = Instant::now();
-        while (t0.elapsed() < self.target_time || samples.len() < self.min_iters)
-            && samples.len() < self.max_iters
+        while samples.is_empty()
+            || ((t0.elapsed() < self.target_time || samples.len() < self.min_iters)
+                && samples.len() < self.max_iters)
         {
             let s = Instant::now();
             f();
@@ -145,6 +166,38 @@ mod tests {
         assert!(m.iters >= 3);
         assert!(m.min <= m.p50);
         assert!(m.p50 <= m.mean * 10);
+    }
+
+    #[test]
+    fn measurement_serializes() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 3,
+            mean: Duration::from_millis(2),
+            p50: Duration::from_millis(2),
+            min: Duration::from_millis(1),
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("iters").unwrap().as_usize(), Some(3));
+        assert!((j.get("mean_ms").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        // round-trips through the in-tree parser
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn zero_min_iters_still_measures_once() {
+        let b = Bencher {
+            warmup: Duration::from_millis(0),
+            target_time: Duration::from_millis(0),
+            min_iters: 0,
+            max_iters: 10,
+        };
+        let m = b.run("one-shot", || {
+            black_box(1 + 1);
+        });
+        assert!(m.iters >= 1);
     }
 
     #[test]

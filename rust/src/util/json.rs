@@ -81,13 +81,6 @@ impl Json {
         self.get(key).ok_or_else(|| Error::Artifact(format!("missing json field '{key}'")))
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -123,6 +116,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization; `json.to_string()` comes from the `ToString`
+/// blanket impl over this.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -6,6 +6,16 @@
 //! the L3 native TT stack all agree.
 //!
 //! Skipped (with a message) when `artifacts/` is missing.
+//!
+//! GATING: every test here is additionally `#[ignore]`d because the
+//! offline std-only build stubs the PJRT backend (`cpu_client()`
+//! UNCONDITIONALLY errors — see `rust/src/runtime/executable.rs`; the
+//! stub is not cfg-gated) and the AOT artifacts themselves require the
+//! python/JAX toolchain to produce.  Re-enabling takes BOTH steps:
+//! restore the xla-backed device code behind the same `CompiledModel`
+//! API (replacing the stub), AND produce artifacts via `make artifacts`;
+//! only then does `cargo test --test runtime_artifacts -- --ignored`
+//! exercise anything.
 
 use tensornet::nn::{Dense, Layer, Relu, Sequential, TtLinear};
 use tensornet::runtime::{cpu_client, CompiledModel, Manifest, RuntimeInput};
@@ -40,6 +50,7 @@ fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 }
 
 #[test]
+#[ignore = "needs the PJRT/XLA backend, stubbed out in the offline std-only build"]
 fn tt_layer_artifact_matches_native_tt() {
     let Some(m) = manifest() else { return };
     let client = cpu_client().unwrap();
@@ -60,6 +71,7 @@ fn tt_layer_artifact_matches_native_tt() {
 }
 
 #[test]
+#[ignore = "needs the PJRT/XLA backend, stubbed out in the offline std-only build"]
 fn tt_layer_batch_variant_consistent() {
     let Some(m) = manifest() else { return };
     let client = cpu_client().unwrap();
@@ -80,6 +92,7 @@ fn tt_layer_batch_variant_consistent() {
 }
 
 #[test]
+#[ignore = "needs the PJRT/XLA backend, stubbed out in the offline std-only build"]
 fn tensornet_artifact_matches_native_network() {
     let Some(m) = manifest() else { return };
     let client = cpu_client().unwrap();
@@ -100,6 +113,7 @@ fn tensornet_artifact_matches_native_network() {
 }
 
 #[test]
+#[ignore = "needs the PJRT/XLA backend, stubbed out in the offline std-only build"]
 fn fc_artifact_matches_native_dense() {
     let Some(m) = manifest() else { return };
     let client = cpu_client().unwrap();
@@ -118,7 +132,7 @@ fn fc_artifact_matches_native_dense() {
 }
 
 #[test]
-#[cfg_attr(debug_assertions, ignore = "slow in debug builds; run with --release")]
+#[ignore = "needs the PJRT/XLA backend, stubbed out in the offline std-only build"]
 fn train_step_artifact_decreases_loss() {
     // the AOT'd jax.grad training step (through the Pallas custom-vjp)
     // actually optimizes: run several steps on one batch, loss must drop.
