@@ -1,51 +1,51 @@
-//! Serving demo (Table 3's serving framing): run the AOT TT-layer and the
+//! Serving demo (Table 3's serving framing): run the TT-layer and the
 //! dense baseline behind the dynamic batcher, fire a concurrent workload,
 //! and report latency/throughput per model.
 //!
+//! With AOT artifacts present this serves them through `PjrtExecutor`;
+//! without (the offline build), it falls back to the native backend —
+//! the same models, executed in-process — so the demo always runs:
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_tt -- [requests] [clients]
+//! cargo run --release --example serve_tt -- [requests] [clients] [executor_threads]
 //! ```
 
-use std::sync::Arc;
-use std::time::{Duration, Instant};
-use tensornet::coordinator::{BatchPolicy, PjrtExecutor, Server, ServerConfig};
-use tensornet::util::rng::Rng;
+use std::time::Duration;
+use tensornet::coordinator::{
+    BatchPolicy, ModelRegistry, NativeExecutor, PjrtExecutor, Server, ServerConfig,
+};
+use tensornet::experiments::drive_clients;
 
 fn main() -> tensornet::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
     let clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let executor_threads: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
 
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    if !have_artifacts {
+        println!("artifacts/ missing — serving the native backend instead (run `make artifacts` for PJRT)");
     }
 
     for (model, dim) in [("tt_layer", 1024usize), ("fc_mnist", 1024)] {
-        println!("\n== model '{model}': {n_requests} requests from {clients} clients");
+        println!("\n== model '{model}': {n_requests} requests from {clients} clients, {executor_threads} executor threads");
         let cfg = ServerConfig {
             policy: BatchPolicy { max_batch: 32, max_delay: Duration::from_millis(2) },
+            executor_threads,
             ..Default::default()
         };
-        let server = Arc::new(Server::start(cfg, || PjrtExecutor::new("artifacts"))?);
-        // warmup compiles the artifact
+        let server = if have_artifacts {
+            Server::start(cfg, || PjrtExecutor::new("artifacts"))?
+        } else {
+            let registry = ModelRegistry::standard();
+            Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone())))?
+        };
+        // warmup compiles the artifact / builds the native model
         let _ = server.infer(model, vec![0.0; dim])?;
 
-        let t0 = Instant::now();
-        std::thread::scope(|s| {
-            for c in 0..clients {
-                let server = server.clone();
-                s.spawn(move || {
-                    let mut rng = Rng::new(c as u64);
-                    for _ in 0..n_requests / clients {
-                        let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(1.0)).collect();
-                        server.infer(model, x).expect("inference");
-                    }
-                });
-            }
-        });
-        let wall = t0.elapsed().as_secs_f64();
+        let wall = drive_clients(&server, model, dim, n_requests, clients);
         let st = server.stats();
+        assert_eq!(st.errors.get(), 0, "serving errors — see stderr");
         println!("  throughput: {:.0} req/s", (st.completed.get() - 1) as f64 / wall);
         println!("  e2e   {}", st.e2e.summary());
         println!("  exec  {}", st.exec.summary());

@@ -26,7 +26,6 @@ impl Default for BatchPolicy {
 pub struct Batch {
     pub model: String,
     pub requests: Vec<InferRequest>,
-    pub formed_at: Instant,
 }
 
 /// Pure batching state machine.  Requests for different models never share
@@ -46,20 +45,20 @@ impl BatchAssembler {
         self.pending.len()
     }
 
-    /// Offer a request at time `now`.  Returns a full batch if this
-    /// request completed one (or if it belongs to a different model than
-    /// the pending group, which flushes the group first — in that case the
-    /// request is queued for the next batch).
-    pub fn push(&mut self, req: InferRequest, now: Instant) -> Vec<Batch> {
+    /// Offer a request.  Returns a full batch if this request completed
+    /// one (or if it belongs to a different model than the pending group,
+    /// which flushes the group first — in that case the request is queued
+    /// for the next batch).
+    pub fn push(&mut self, req: InferRequest) -> Vec<Batch> {
         let mut out = Vec::new();
         if let Some(first) = self.pending.first() {
             if first.model != req.model {
-                out.push(self.flush(now).expect("non-empty pending"));
+                out.push(self.flush().expect("non-empty pending"));
             }
         }
         self.pending.push(req);
         if self.pending.len() >= self.policy.max_batch {
-            out.push(self.flush(now).expect("full batch"));
+            out.push(self.flush().expect("full batch"));
         }
         out
     }
@@ -73,18 +72,18 @@ impl BatchAssembler {
     /// Flush if `now` has passed the pending group's deadline.
     pub fn poll(&mut self, now: Instant) -> Option<Batch> {
         match self.deadline() {
-            Some(d) if now >= d => self.flush(now),
+            Some(d) if now >= d => self.flush(),
             _ => None,
         }
     }
 
     /// Unconditionally emit whatever is pending (shutdown path).
-    pub fn flush(&mut self, now: Instant) -> Option<Batch> {
+    pub fn flush(&mut self) -> Option<Batch> {
         if self.pending.is_empty() {
             return None;
         }
         let requests = std::mem::take(&mut self.pending);
-        Some(Batch { model: requests[0].model.clone(), requests, formed_at: now })
+        Some(Batch { model: requests[0].model.clone(), requests })
     }
 }
 
@@ -106,9 +105,9 @@ mod tests {
     fn fills_to_max_batch() {
         let mut a = BatchAssembler::new(policy(3, 100));
         let t = Instant::now();
-        assert!(a.push(req(1, "tt", t), t).is_empty());
-        assert!(a.push(req(2, "tt", t), t).is_empty());
-        let batches = a.push(req(3, "tt", t), t);
+        assert!(a.push(req(1, "tt", t)).is_empty());
+        assert!(a.push(req(2, "tt", t)).is_empty());
+        let batches = a.push(req(3, "tt", t));
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].requests.len(), 3);
         assert_eq!(a.pending_len(), 0);
@@ -118,7 +117,7 @@ mod tests {
     fn deadline_flushes() {
         let mut a = BatchAssembler::new(policy(10, 5));
         let t0 = Instant::now();
-        a.push(req(1, "tt", t0), t0);
+        a.push(req(1, "tt", t0));
         assert!(a.poll(t0).is_none()); // too early
         let late = t0 + Duration::from_millis(6);
         let b = a.poll(late).expect("deadline passed");
@@ -130,9 +129,9 @@ mod tests {
     fn model_switch_flushes_group() {
         let mut a = BatchAssembler::new(policy(10, 100));
         let t = Instant::now();
-        a.push(req(1, "tt", t), t);
-        a.push(req(2, "tt", t), t);
-        let batches = a.push(req(3, "fc", t), t);
+        a.push(req(1, "tt", t));
+        a.push(req(2, "tt", t));
+        let batches = a.push(req(3, "fc", t));
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].model, "tt");
         assert_eq!(batches[0].requests.len(), 2);
@@ -144,9 +143,9 @@ mod tests {
         let mut a = BatchAssembler::new(policy(4, 100));
         let t = Instant::now();
         for id in 1..=3 {
-            a.push(req(id, "tt", t), t);
+            a.push(req(id, "tt", t));
         }
-        let b = a.flush(t).unwrap();
+        let b = a.flush().unwrap();
         let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![1, 2, 3]);
     }
@@ -154,7 +153,7 @@ mod tests {
     #[test]
     fn empty_flush_is_none() {
         let mut a = BatchAssembler::new(policy(4, 1));
-        assert!(a.flush(Instant::now()).is_none());
+        assert!(a.flush().is_none());
         assert!(a.deadline().is_none());
     }
 }

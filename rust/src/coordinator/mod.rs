@@ -4,25 +4,32 @@
 //! of a TT-layer vs its dense counterpart at batch 1 and batch 100.  This
 //! module is the production driver around that: a request router over
 //! model variants, a dynamic batcher (max-batch / max-delay policy, the
-//! vLLM-style knobs), a thread-confined executor that owns the PJRT
-//! artifacts, bounded queues for backpressure, and latency histograms.
+//! vLLM-style knobs), an executor worker pool, bounded queues for
+//! backpressure, and latency histograms.  Two serving backends share the
+//! [`BatchExecutor`] trait: [`NativeExecutor`] runs real in-process
+//! TT/dense models (the default — fully functional offline), and
+//! [`PjrtExecutor`] runs AOT artifacts (stubbed offline).
 //!
 //! Thread model (no async runtime in the offline build — plain OS threads
 //! and channels, which is the right shape for CPU inference anyway):
 //!
 //! ```text
-//! caller ── bounded queue ──► batcher thread ──► executor thread ──► reply
-//!              (admission)      (max_batch /        (owns PJRT,
-//!                                max_delay)          not Send)
+//!                                                        ┌► executor-0 ─┐
+//! caller ── bounded queue ──► batcher thread ── batch ────┼► executor-1 ─┼─► reply
+//!              (admission)      (max_batch /    queue     └► executor-N ─┘
+//!                                max_delay)            (each worker owns its
+//!                                                       executor + scratch)
 //! ```
 
 mod batcher;
+mod native;
 mod request;
 mod router;
 mod server;
 mod worker;
 
 pub use batcher::{Batch, BatchAssembler, BatchPolicy};
+pub use native::{ModelRegistry, ModelSpec, NativeExecutor};
 pub use request::{InferRequest, InferResponse};
 pub use router::{choose_variant, Router};
 pub use server::{Server, ServerConfig, ServerStats};

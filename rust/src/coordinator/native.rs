@@ -1,0 +1,297 @@
+//! Native serving backend: real TT/dense models executed in-process.
+//!
+//! Table 3 of the paper is a *serving* measurement, but the PJRT path is
+//! stubbed in the offline build (DESIGN.md §Substitutions), so until this
+//! module existed the batcher/router/metrics stack had never executed a
+//! real TT matvec.  [`NativeExecutor`] closes that gap: a
+//! [`ModelRegistry`] of named, deterministic model specs is instantiated
+//! lazily *inside each executor worker* (the [`crate::coordinator::Server`]
+//! factory runs on the worker thread), so every worker owns its models and
+//! its [`MatvecScratch`] — on the TT path the only allocations per served
+//! batch are the batch-gather buffer (which becomes the input tensor
+//! without a copy) and the output, exactly like the direct
+//! [`TtMatrix::matvec_with`] hot loop.
+//!
+//! Model construction is deterministic per `seed` (the in-tree
+//! xoshiro256++ [`Rng`]), which is what makes a multi-worker pool
+//! coherent: every worker materializes bitwise-identical weights, so a
+//! request's reply does not depend on which worker drained its batch.
+//! Tests rely on the same property to build an out-of-band oracle (see
+//! `rust/tests/native_serving.rs`).
+
+use crate::coordinator::worker::BatchExecutor;
+use crate::error::{Error, Result};
+use crate::nn::{Layer, Sequential};
+use crate::tensor::{matmul_bt, Tensor};
+use crate::tt::{MatvecScratch, TtMatrix, TtShape};
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// How to build one named inference-ready model.  Pure data — `Clone` +
+/// `Send` — so a registry can be moved into the server's executor factory
+/// and instantiated independently on every worker thread.
+#[derive(Clone, Debug)]
+pub enum ModelSpec {
+    /// A bare TT matrix `W (Πms x Πns)` applied as `y = x Wᵀ` — the
+    /// paper's TT-layer matvec (weights `TtMatrix::random` at `seed`).
+    TtLayer { ms: Vec<usize>, ns: Vec<usize>, rank: usize, seed: u64 },
+    /// The dense counterpart: an explicit `(n_out, n_in)` matrix applied
+    /// as `y = x Wᵀ` (the Table-3 baseline row).
+    DenseLayer { n_out: usize, n_in: usize, seed: u64 },
+    /// The full MNIST TensorNet of `nn::zoo`:
+    /// `TT(4^5/4^5, rank) -> ReLU -> FC(1024 -> 10)`.
+    MnistTensorNet { rank: usize, seed: u64 },
+}
+
+impl ModelSpec {
+    /// Per-row input dimension — pure arithmetic, no model construction.
+    pub fn input_dim(&self) -> usize {
+        match self {
+            ModelSpec::TtLayer { ns, .. } => ns.iter().product(),
+            ModelSpec::DenseLayer { n_in, .. } => *n_in,
+            ModelSpec::MnistTensorNet { .. } => 1024,
+        }
+    }
+
+    /// Per-row output dimension.
+    pub fn output_dim(&self) -> usize {
+        match self {
+            ModelSpec::TtLayer { ms, .. } => ms.iter().product(),
+            ModelSpec::DenseLayer { n_out, .. } => *n_out,
+            ModelSpec::MnistTensorNet { .. } => 10,
+        }
+    }
+
+    /// Materialize the model.  Deterministic: the same spec always yields
+    /// bitwise-identical weights, on any thread.
+    fn build(&self) -> Result<NativeModel> {
+        match self {
+            ModelSpec::TtLayer { ms, ns, rank, seed } => {
+                let shape = TtShape::uniform(ms, ns, *rank)?;
+                let tt = TtMatrix::random(&shape, &mut Rng::new(*seed))?;
+                Ok(NativeModel::Tt { tt, scratch: MatvecScratch::default() })
+            }
+            ModelSpec::DenseLayer { n_out, n_in, seed } => {
+                let w = Tensor::randn(&[*n_out, *n_in], 0.02, &mut Rng::new(*seed));
+                Ok(NativeModel::Dense { w })
+            }
+            ModelSpec::MnistTensorNet { rank, seed } => {
+                let net = crate::nn::mnist_tensornet(*rank, &mut Rng::new(*seed))?;
+                Ok(NativeModel::Net(net))
+            }
+        }
+    }
+}
+
+/// An instantiated model plus its per-worker reusable state.
+enum NativeModel {
+    Tt { tt: TtMatrix, scratch: MatvecScratch },
+    Dense { w: Tensor },
+    Net(Sequential),
+}
+
+/// Named inference-ready model specs.  Cheap to clone; the server's
+/// executor factory clones it into every worker.
+#[derive(Clone, Debug, Default)]
+pub struct ModelRegistry {
+    specs: BTreeMap<String, ModelSpec>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry::default()
+    }
+
+    /// The stock serving lineup at the paper's Table-3 MNIST geometry:
+    ///
+    /// * `tt_layer`  — TT 1024x1024 (4^5 modes, rank 8), in/out 1024
+    /// * `fc_mnist`  — dense 1024x1024 counterpart, in/out 1024
+    /// * `mnist_net` — full MNIST TensorNet, in 1024 / out 10
+    pub fn standard() -> Self {
+        let mut r = ModelRegistry::new();
+        r.register(
+            "tt_layer",
+            ModelSpec::TtLayer { ms: vec![4; 5], ns: vec![4; 5], rank: 8, seed: 0x7e50_0001 },
+        );
+        r.register("fc_mnist", ModelSpec::DenseLayer { n_out: 1024, n_in: 1024, seed: 0x7e50_0002 });
+        r.register("mnist_net", ModelSpec::MnistTensorNet { rank: 8, seed: 0x7e50_0003 });
+        r
+    }
+
+    pub fn register(&mut self, name: &str, spec: ModelSpec) {
+        self.specs.insert(name.to_string(), spec);
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ModelSpec> {
+        self.specs.get(name).ok_or_else(|| {
+            Error::Coordinator(format!(
+                "unknown model '{name}' (registered: {})",
+                self.names().join(", ")
+            ))
+        })
+    }
+
+    /// Per-row input dimension of a registered model.
+    pub fn input_dim(&self, name: &str) -> Result<usize> {
+        Ok(self.spec(name)?.input_dim())
+    }
+}
+
+/// [`BatchExecutor`] over a [`ModelRegistry`]: the fully-working native
+/// stack behind the batcher.  Models build lazily on first use, so a
+/// worker only pays for the models its traffic actually routes to.  The
+/// batch buffer arrives owned from the server and is wrapped into the
+/// input tensor without a copy; each TT model's [`MatvecScratch`]
+/// retains capacity across batches.
+pub struct NativeExecutor {
+    registry: ModelRegistry,
+    models: BTreeMap<String, NativeModel>,
+}
+
+impl NativeExecutor {
+    pub fn new(registry: ModelRegistry) -> Self {
+        NativeExecutor { registry, models: BTreeMap::new() }
+    }
+
+    /// Executor over [`ModelRegistry::standard`].
+    pub fn standard() -> Self {
+        NativeExecutor::new(ModelRegistry::standard())
+    }
+
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.registry
+    }
+
+    /// Resolve `name` to its (lazily built) model and per-row input
+    /// dimension with a single registry lookup.
+    fn model_for(&mut self, name: &str) -> Result<(&mut NativeModel, usize)> {
+        let spec = self.registry.spec(name)?;
+        let dim = spec.input_dim();
+        if !self.models.contains_key(name) {
+            let built = spec.build()?;
+            self.models.insert(name.to_string(), built);
+        }
+        Ok((self.models.get_mut(name).expect("inserted above"), dim))
+    }
+}
+
+impl BatchExecutor for NativeExecutor {
+    fn execute(&mut self, model: &str, x: Vec<f32>, rows: usize) -> Result<(Vec<f32>, usize)> {
+        let (m, dim) = self.model_for(model)?;
+        if x.len() != rows * dim {
+            return Err(Error::Coordinator(format!(
+                "{model}: {} elems for {rows} rows of {dim}",
+                x.len()
+            )));
+        }
+        // the owned batch buffer becomes the input tensor as-is — the
+        // only per-batch allocation on this path is the output
+        let xt = Tensor::from_vec(&[rows, dim], x)?;
+        let y = match m {
+            NativeModel::Tt { tt, scratch } => tt.matvec_with(&xt, scratch)?,
+            NativeModel::Dense { w } => matmul_bt(&xt, w)?,
+            NativeModel::Net(net) => net.forward(&xt, false)?,
+        };
+        let out_dim = y.shape()[1];
+        Ok((y.into_vec(), out_dim))
+    }
+
+    fn input_dim(&self, model: &str) -> Result<usize> {
+        self.registry.input_dim(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_registry() -> ModelRegistry {
+        let mut r = ModelRegistry::new();
+        r.register(
+            "tt",
+            ModelSpec::TtLayer { ms: vec![2, 3], ns: vec![3, 2], rank: 2, seed: 11 },
+        );
+        r.register("fc", ModelSpec::DenseLayer { n_out: 4, n_in: 6, seed: 12 });
+        r
+    }
+
+    #[test]
+    fn standard_registry_has_the_serving_lineup() {
+        let r = ModelRegistry::standard();
+        assert_eq!(r.names(), vec!["fc_mnist", "mnist_net", "tt_layer"]);
+        assert_eq!(r.input_dim("tt_layer").unwrap(), 1024);
+        assert_eq!(r.input_dim("fc_mnist").unwrap(), 1024);
+        assert_eq!(r.input_dim("mnist_net").unwrap(), 1024);
+        assert_eq!(r.spec("tt_layer").unwrap().output_dim(), 1024);
+        assert_eq!(r.spec("mnist_net").unwrap().output_dim(), 10);
+    }
+
+    #[test]
+    fn unknown_model_lists_registered_names() {
+        let e = ModelRegistry::standard().input_dim("nope").unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("unknown model 'nope'"), "{msg}");
+        assert!(msg.contains("tt_layer"), "{msg}");
+    }
+
+    #[test]
+    fn tt_path_matches_direct_matvec_bitwise() {
+        let mut exec = NativeExecutor::new(tiny_registry());
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..3 * 6).map(|_| rng.normal_f32(1.0)).collect();
+        let (y, od) = exec.execute("tt", x.clone(), 3).unwrap();
+        assert_eq!(od, 6);
+
+        let shape = TtShape::uniform(&[2, 3], &[3, 2], 2).unwrap();
+        let tt = TtMatrix::random(&shape, &mut Rng::new(11)).unwrap();
+        let want = tt.matvec(&Tensor::from_vec(&[3, 6], x).unwrap()).unwrap();
+        assert_eq!(y, want.data());
+    }
+
+    #[test]
+    fn dense_path_matches_matmul_bt() {
+        let mut exec = NativeExecutor::new(tiny_registry());
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..2 * 6).map(|_| rng.normal_f32(1.0)).collect();
+        let (y, od) = exec.execute("fc", x.clone(), 2).unwrap();
+        assert_eq!(od, 4);
+
+        let w = Tensor::randn(&[4, 6], 0.02, &mut Rng::new(12));
+        let want = matmul_bt(&Tensor::from_vec(&[2, 6], x).unwrap(), &w).unwrap();
+        assert_eq!(y, want.data());
+    }
+
+    #[test]
+    fn mnist_net_serves_ten_logits() {
+        let mut exec = NativeExecutor::standard();
+        let (y, od) = exec.execute("mnist_net", vec![0.1f32; 2 * 1024], 2).unwrap();
+        assert_eq!(od, 10);
+        assert_eq!(y.len(), 20);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rejects_bad_row_count_and_unknown_model() {
+        let mut exec = NativeExecutor::new(tiny_registry());
+        assert!(exec.execute("tt", vec![0.0; 5], 1).is_err());
+        assert!(exec.execute("ghost", vec![0.0; 6], 1).is_err());
+        assert_eq!(exec.input_dim("tt").unwrap(), 6);
+        assert!(exec.input_dim("ghost").is_err());
+    }
+
+    #[test]
+    fn build_failure_surfaces_and_executor_stays_usable() {
+        let mut r = tiny_registry();
+        // passes input_dim (= 4) but fails to build: ms/ns length mismatch
+        r.register("broken", ModelSpec::TtLayer { ms: vec![2], ns: vec![2, 2], rank: 1, seed: 0 });
+        let mut exec = NativeExecutor::new(r);
+        assert!(exec.execute("broken", vec![0.0; 4], 1).is_err());
+        // a failing model must not poison the worker for other models
+        let (y, od) = exec.execute("tt", vec![0.0; 6], 1).unwrap();
+        assert_eq!((y.len(), od), (6, 6));
+    }
+}

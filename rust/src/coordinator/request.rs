@@ -21,10 +21,16 @@ pub struct InferRequest {
 pub struct InferResponse {
     pub id: u64,
     pub output: Vec<f32>,
-    /// time spent waiting in queues (admission + batching)
+    /// time from enqueue to execution start (admission + batching +
+    /// batch-queue wait)
     pub queue_us: u64,
-    /// artifact execution time of the whole batch
+    /// execution time of the whole batch
     pub exec_us: u64,
     /// how many requests shared the batch
     pub batch_size: usize,
+    /// when the request entered the admission queue; `Server` records
+    /// true end-to-end latency as the wall clock from this instant to
+    /// reply receipt (`queue_us + exec_us` alone would drop batch-queue
+    /// wait and the reply hop)
+    pub enqueued: Instant,
 }

@@ -1,14 +1,27 @@
 //! The serving front-end: admission queue → batcher thread → executor
-//! thread → per-request replies, with latency/throughput metrics.
+//! worker pool → per-request replies, with latency/throughput metrics.
+//!
+//! ```text
+//!                                                     ┌► tn-executor-0 ─┐
+//! callers ── admission queue ──► tn-batcher ── batch ──┼► tn-executor-1 ─┼─► replies
+//!             (bounded; try_infer   (max_batch /  queue └► tn-executor-N ─┘
+//!              rejects when full)    max_delay)
+//! ```
+//!
+//! The batch queue is a single `mpsc` receiver shared by all workers
+//! behind a mutex (the std-only stand-in for a multi-consumer channel).
+//! Each worker constructs its own executor through the `Fn` factory *on
+//! its own thread*, so non-`Send` executors (PJRT handles) stay
+//! thread-confined and every worker owns its scratch buffers.
 
 use crate::coordinator::batcher::{Batch, BatchAssembler, BatchPolicy};
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::worker::BatchExecutor;
 use crate::error::{Error, Result};
 use crate::metrics::{Counter, Histogram, Meter};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Server wiring knobs.
@@ -18,25 +31,40 @@ pub struct ServerConfig {
     /// admission queue bound — beyond this, `try_infer` rejects
     /// (backpressure instead of unbounded memory growth)
     pub queue_capacity: usize,
-    /// bound on formed batches waiting for the executor
+    /// bound on formed batches waiting for the executor pool
     pub batch_queue_capacity: usize,
+    /// executor worker threads draining the shared batch queue.  Each
+    /// worker builds its own executor via the `Fn` factory, so model
+    /// state is never shared across workers.  Clamped to at least 1.
+    pub executor_threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { policy: BatchPolicy::default(), queue_capacity: 1024, batch_queue_capacity: 8 }
+        ServerConfig {
+            policy: BatchPolicy::default(),
+            queue_capacity: 1024,
+            batch_queue_capacity: 8,
+            executor_threads: 1,
+        }
     }
 }
 
 /// Shared serving metrics.
 #[derive(Debug, Default)]
 pub struct ServerStats {
+    /// wall-clock enqueue → reply receipt (recorded by `infer`/`await_reply`)
     pub e2e: Histogram,
+    /// batch execution time
     pub exec: Histogram,
+    /// enqueue → execution start (admission + batching + batch-queue wait)
     pub queue: Histogram,
     pub completed: Counter,
     pub rejected: Counter,
     pub errors: Counter,
+    /// executor workers whose init failed (pool running degraded if
+    /// fewer than `executor_threads` remain)
+    pub failed_workers: Counter,
     pub throughput: Meter,
     pub batches: Counter,
     pub batched_rows: Counter,
@@ -55,7 +83,8 @@ impl ServerStats {
 }
 
 /// A running coordinator.  Dropping (or calling [`Server::shutdown`])
-/// closes the admission queue, drains in-flight work and joins threads.
+/// closes the admission queue, drains in-flight work and joins the
+/// batcher plus every executor worker.
 pub struct Server {
     tx: Option<SyncSender<InferRequest>>,
     next_id: AtomicU64,
@@ -64,14 +93,16 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the batcher + executor threads.  `make_executor` runs *on*
-    /// the executor thread (PJRT handles are not `Send`, so the executor
-    /// must be constructed there).
+    /// Start the batcher thread and `cfg.executor_threads` executor
+    /// workers.  `make_executor` runs once *on each* worker thread (PJRT
+    /// handles are not `Send`, so executors must be constructed where
+    /// they run) — hence `Fn`, not `FnOnce`.
     pub fn start<E, F>(cfg: ServerConfig, make_executor: F) -> Result<Server>
     where
         E: BatchExecutor,
-        F: FnOnce() -> Result<E> + Send + 'static,
+        F: Fn() -> Result<E> + Send + Sync + 'static,
     {
+        let workers = cfg.executor_threads.max(1);
         let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_capacity);
         let (btx, brx) = sync_channel::<Batch>(cfg.batch_queue_capacity);
         let stats = Arc::new(ServerStats::default());
@@ -81,32 +112,50 @@ impl Server {
             .name("tn-batcher".into())
             .spawn(move || batcher_loop(rx, btx, policy))
             .map_err(|e| Error::Coordinator(format!("spawn batcher: {e}")))?;
+        let mut threads = vec![batcher];
 
-        let stats_exec = stats.clone();
-        let executor = std::thread::Builder::new()
-            .name("tn-executor".into())
-            .spawn(move || {
-                let mut exec = match make_executor() {
-                    Ok(e) => e,
-                    Err(e) => {
-                        // fail every batch that arrives
-                        let msg = format!("executor init failed: {e}");
-                        for batch in brx.iter() {
-                            fail_batch(batch, &msg, &stats_exec);
+        let shared = Arc::new(Mutex::new(brx));
+        let factory = Arc::new(make_executor);
+        let failed_inits = Arc::new(AtomicUsize::new(0));
+        for w in 0..workers {
+            let shared = shared.clone();
+            let factory = factory.clone();
+            let stats = stats.clone();
+            let failed_inits = failed_inits.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("tn-executor-{w}"))
+                .spawn(move || {
+                    let mut exec = match (factory.as_ref())() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            // A worker whose executor fails to construct
+                            // exits while healthy siblings keep serving —
+                            // but not silently: the pool would otherwise
+                            // run degraded with no signal.  The LAST
+                            // failure (no healthy worker can exist) stays
+                            // behind to fail queued batches so callers
+                            // get an error instead of hanging.
+                            let msg = format!("executor init failed: {e}");
+                            stats.failed_workers.inc();
+                            let down = failed_inits.fetch_add(1, Ordering::SeqCst) + 1;
+                            eprintln!("tn-executor-{w}: {msg} ({down}/{workers} workers down)");
+                            if down == workers {
+                                while let Some(batch) = recv_shared(&shared) {
+                                    fail_batch(batch, &msg, &stats);
+                                }
+                            }
+                            return;
                         }
-                        return;
+                    };
+                    while let Some(batch) = recv_shared(&shared) {
+                        run_batch(batch, &mut exec, &stats);
                     }
-                };
-                executor_loop(brx, &mut exec, &stats_exec);
-            })
-            .map_err(|e| Error::Coordinator(format!("spawn executor: {e}")))?;
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn executor {w}: {e}")))?;
+            threads.push(handle);
+        }
 
-        Ok(Server {
-            tx: Some(tx),
-            next_id: AtomicU64::new(1),
-            stats,
-            threads: vec![batcher, executor],
-        })
+        Ok(Server { tx: Some(tx), next_id: AtomicU64::new(1), stats, threads })
     }
 
     pub fn stats(&self) -> &ServerStats {
@@ -128,14 +177,7 @@ impl Server {
             .ok_or_else(|| Error::Coordinator("server shut down".into()))?
             .send(req)
             .map_err(|_| Error::Coordinator("admission queue closed".into()))?;
-        match reply_rx.recv() {
-            Ok(Ok(resp)) => {
-                self.stats.e2e.record(resp_latency(&resp));
-                Ok(resp)
-            }
-            Ok(Err(msg)) => Err(Error::Coordinator(msg)),
-            Err(_) => Err(Error::Coordinator("reply channel dropped".into())),
-        }
+        self.receive(reply_rx)
     }
 
     /// Non-blocking admission: rejects instead of waiting when the queue
@@ -171,9 +213,20 @@ impl Server {
         &self,
         rx: Receiver<std::result::Result<InferResponse, String>>,
     ) -> Result<InferResponse> {
+        self.receive(rx)
+    }
+
+    fn receive(
+        &self,
+        rx: Receiver<std::result::Result<InferResponse, String>>,
+    ) -> Result<InferResponse> {
         match rx.recv() {
             Ok(Ok(resp)) => {
-                self.stats.e2e.record(resp_latency(&resp));
+                // true end-to-end latency: wall clock from enqueue to
+                // reply receipt.  (This used to be queue_us + exec_us,
+                // which silently dropped batch-queue wait and the reply
+                // hop.)
+                self.stats.e2e.record(resp.enqueued.elapsed());
                 Ok(resp)
             }
             Ok(Err(msg)) => Err(Error::Coordinator(msg)),
@@ -181,7 +234,8 @@ impl Server {
         }
     }
 
-    /// Drain and join.
+    /// Drain and join: in-flight requests complete, then the batcher and
+    /// every executor worker exit.
     pub fn shutdown(mut self) {
         self.tx.take(); // close admission queue
         for t in self.threads.drain(..) {
@@ -199,8 +253,18 @@ impl Drop for Server {
     }
 }
 
-fn resp_latency(resp: &InferResponse) -> Duration {
-    Duration::from_micros(resp.queue_us + resp.exec_us)
+/// Pop the next batch off the pool's shared queue; `None` once the
+/// batcher has exited and the queue is drained.  One worker at a time
+/// blocks inside `recv` holding the lock; the lock is released before
+/// the batch executes, so model execution overlaps across workers.
+fn recv_shared(shared: &Mutex<Receiver<Batch>>) -> Option<Batch> {
+    let rx = match shared.lock() {
+        Ok(guard) => guard,
+        // a worker that panicked mid-recv poisons the mutex; the queue
+        // itself is still coherent, so keep serving
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    rx.recv().ok()
 }
 
 fn batcher_loop(rx: Receiver<InferRequest>, btx: SyncSender<Batch>, policy: BatchPolicy) {
@@ -212,7 +276,7 @@ fn batcher_loop(rx: Receiver<InferRequest>, btx: SyncSender<Batch>, policy: Batc
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                for batch in asm.push(req, Instant::now()) {
+                for batch in asm.push(req) {
                     if btx.send(batch).is_err() {
                         return;
                     }
@@ -232,7 +296,7 @@ fn batcher_loop(rx: Receiver<InferRequest>, btx: SyncSender<Batch>, policy: Batc
             }
             Err(RecvTimeoutError::Disconnected) => {
                 // flush and exit
-                if let Some(batch) = asm.flush(Instant::now()) {
+                if let Some(batch) = asm.flush() {
                     let _ = btx.send(batch);
                 }
                 return;
@@ -241,68 +305,77 @@ fn batcher_loop(rx: Receiver<InferRequest>, btx: SyncSender<Batch>, policy: Batc
     }
 }
 
-fn executor_loop(brx: Receiver<Batch>, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
-    for batch in brx.iter() {
-        let rows = batch.requests.len();
-        let dim = match exec.input_dim(&batch.model) {
-            Ok(d) => d,
-            Err(e) => {
-                fail_batch(batch, &format!("input_dim: {e}"), stats);
-                continue;
-            }
-        };
-        // assemble the batch matrix; reject rows with bad dims individually
-        let mut x = Vec::with_capacity(rows * dim);
-        let mut ok_requests = Vec::with_capacity(rows);
-        for req in batch.requests {
-            if req.input.len() == dim {
-                x.extend_from_slice(&req.input);
-                ok_requests.push(req);
-            } else {
-                stats.errors.inc();
-                let _ = req.reply.send(Err(format!(
-                    "input dim {} != expected {dim}",
-                    req.input.len()
-                )));
-            }
+/// Execute one batch on this worker's executor and reply per request.
+fn run_batch(batch: Batch, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
+    let rows = batch.requests.len();
+    let dim = match exec.input_dim(&batch.model) {
+        Ok(d) => d,
+        Err(e) => {
+            fail_batch(batch, &format!("input_dim: {e}"), stats);
+            return;
         }
-        if ok_requests.is_empty() {
-            continue;
+    };
+    // assemble the batch matrix; reject rows with bad dims individually
+    let mut x = Vec::with_capacity(rows * dim);
+    let mut ok_requests = Vec::with_capacity(rows);
+    for req in batch.requests {
+        if req.input.len() == dim {
+            x.extend_from_slice(&req.input);
+            ok_requests.push(req);
+        } else {
+            stats.errors.inc();
+            let _ = req.reply.send(Err(format!(
+                "input dim {} != expected {dim}",
+                req.input.len()
+            )));
         }
-        let t0 = Instant::now();
-        match exec.execute(&batch.model, &x, ok_requests.len()) {
-            Ok((y, out_dim)) => {
-                let exec_us = t0.elapsed().as_micros() as u64;
-                stats.exec.record(t0.elapsed());
-                stats.batches.inc();
-                stats.batched_rows.add(ok_requests.len() as u64);
-                stats.throughput.mark(ok_requests.len() as u64);
-                let bs = ok_requests.len();
-                for (i, req) in ok_requests.into_iter().enumerate() {
-                    let queue_us = batch
-                        .formed_at
-                        .saturating_duration_since(req.enqueued)
-                        .as_micros() as u64;
-                    stats.queue.record(Duration::from_micros(queue_us));
-                    let resp = InferResponse {
-                        id: req.id,
-                        output: y[i * out_dim..(i + 1) * out_dim].to_vec(),
-                        queue_us,
-                        exec_us,
-                        batch_size: bs,
-                    };
-                    // count BEFORE replying: callers may read stats the
-                    // instant their reply lands
-                    stats.completed.inc();
-                    let _ = req.reply.send(Ok(resp));
-                }
-            }
-            Err(e) => {
-                let msg = format!("execute failed: {e}");
+    }
+    if ok_requests.is_empty() {
+        return;
+    }
+    let t0 = Instant::now();
+    match exec.execute(&batch.model, x, ok_requests.len()) {
+        Ok((y, out_dim)) => {
+            if y.len() != ok_requests.len() * out_dim {
+                let msg = format!(
+                    "executor returned {} values for {} rows of {out_dim}",
+                    y.len(),
+                    ok_requests.len()
+                );
                 for req in ok_requests {
                     stats.errors.inc();
                     let _ = req.reply.send(Err(msg.clone()));
                 }
+                return;
+            }
+            let exec_us = t0.elapsed().as_micros() as u64;
+            stats.exec.record(t0.elapsed());
+            stats.batches.inc();
+            stats.batched_rows.add(ok_requests.len() as u64);
+            stats.throughput.mark(ok_requests.len() as u64);
+            let bs = ok_requests.len();
+            for (i, req) in ok_requests.into_iter().enumerate() {
+                let queue_us = t0.saturating_duration_since(req.enqueued).as_micros() as u64;
+                stats.queue.record(Duration::from_micros(queue_us));
+                let resp = InferResponse {
+                    id: req.id,
+                    output: y[i * out_dim..(i + 1) * out_dim].to_vec(),
+                    queue_us,
+                    exec_us,
+                    batch_size: bs,
+                    enqueued: req.enqueued,
+                };
+                // count BEFORE replying: callers may read stats the
+                // instant their reply lands
+                stats.completed.inc();
+                let _ = req.reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = format!("execute failed: {e}");
+            for req in ok_requests {
+                stats.errors.inc();
+                let _ = req.reply.send(Err(msg.clone()));
             }
         }
     }
@@ -360,6 +433,66 @@ mod tests {
     }
 
     #[test]
+    fn pool_processes_all_requests() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 4, max_delay: Duration::from_millis(1) },
+            executor_threads: 4,
+            ..Default::default()
+        };
+        let server = Server::start(cfg, || Ok(EchoExecutor { dim: 4, scale: 2.0 })).unwrap();
+        std::thread::scope(|s| {
+            for c in 0..8 {
+                let server = &server;
+                s.spawn(move || {
+                    for i in 0..25 {
+                        let tag = (c * 100 + i) as f32;
+                        let resp = server.infer("m", vec![tag; 4]).unwrap();
+                        assert_eq!(resp.output, vec![tag * 2.0; 4]);
+                    }
+                });
+            }
+        });
+        assert_eq!(server.stats().completed.get(), 200);
+        assert_eq!(server.stats().errors.get(), 0);
+        server.shutdown(); // drains and joins all 4 workers + batcher
+    }
+
+    #[test]
+    fn e2e_latency_covers_the_whole_round_trip() {
+        // Two max_batch=1 requests enqueued back-to-back against a single
+        // slow worker: the second one's batch waits in the batch queue for
+        // the full 20ms of the first one's execution, so its true e2e is
+        // ~40ms.  The accounting this guards against (summing the
+        // response's own exec time) would report only ~20ms — the
+        // regression is a max_us below the serialized total.
+        struct Sleepy;
+        impl BatchExecutor for Sleepy {
+            fn execute(&mut self, _m: &str, x: Vec<f32>, _r: usize) -> Result<(Vec<f32>, usize)> {
+                std::thread::sleep(Duration::from_millis(20));
+                let n = x.len();
+                Ok((x, n))
+            }
+            fn input_dim(&self, _m: &str) -> Result<usize> {
+                Ok(2)
+            }
+        }
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(1) },
+            ..Default::default()
+        };
+        let server = Server::start(cfg, || Ok(Sleepy)).unwrap();
+        let rx1 = server.try_infer("m", vec![1.0, 2.0]).unwrap();
+        let rx2 = server.try_infer("m", vec![3.0, 4.0]).unwrap();
+        server.await_reply(rx1).unwrap();
+        server.await_reply(rx2).unwrap();
+        let e2e = server.stats().e2e.max_us();
+        assert!(
+            e2e >= 35_000.0,
+            "e2e max {e2e}µs must include the second request's batch-queue wait (~40ms)"
+        );
+    }
+
+    #[test]
     fn wrong_dim_is_rejected_individually() {
         let server = echo_server(4, 1);
         let err = server.infer("m", vec![1.0, 2.0]).unwrap_err();
@@ -378,6 +511,24 @@ mod tests {
         .unwrap();
         let err = server.infer("m", vec![0.0; 4]).unwrap_err();
         assert!(format!("{err}").contains("boom") || format!("{err}").contains("init"));
+    }
+
+    #[test]
+    fn pool_wide_init_failure_fails_requests() {
+        // every worker fails init: requests must error, not hang
+        let cfg = ServerConfig { executor_threads: 3, ..Default::default() };
+        let server = Server::start(cfg, || {
+            Err::<EchoExecutor, _>(Error::Coordinator("boom".into()))
+        })
+        .unwrap();
+        for _ in 0..5 {
+            let err = server.infer("m", vec![0.0; 4]).unwrap_err();
+            assert!(format!("{err}").contains("boom") || format!("{err}").contains("init"));
+        }
+        // a reply can only have come from the last-failed drainer, so by
+        // now every worker has recorded its init failure
+        assert_eq!(server.stats().failed_workers.get(), 3);
+        server.shutdown(); // must not hang
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Batch execution backends.
 //!
 //! [`BatchExecutor`] abstracts "run a (rows x dim) batch through a model"
-//! so the coordinator can be tested without PJRT ([`EchoExecutor`]) and
-//! served with it ([`PjrtExecutor`]).  The PJRT executor pads each batch
-//! up to the routed artifact variant and slices the padding back off.
+//! so the coordinator can be tested without PJRT ([`EchoExecutor`]),
+//! served natively ([`crate::coordinator::NativeExecutor`] — real TT and
+//! dense models, fully functional offline) or served over AOT artifacts
+//! ([`PjrtExecutor`]).  The PJRT executor pads each batch up to the
+//! routed artifact variant and slices the padding back off.
 
 use crate::coordinator::router::Router;
 use crate::error::{Error, Result};
@@ -14,7 +16,9 @@ use std::collections::BTreeMap;
 pub trait BatchExecutor {
     /// `x` is `rows` concatenated feature vectors; returns `rows`
     /// concatenated output vectors and the per-row output dimension.
-    fn execute(&mut self, model: &str, x: &[f32], rows: usize) -> Result<(Vec<f32>, usize)>;
+    /// Takes the batch buffer by value so executors can wrap it directly
+    /// (the native path turns it into the input `Tensor` with zero copies).
+    fn execute(&mut self, model: &str, x: Vec<f32>, rows: usize) -> Result<(Vec<f32>, usize)>;
 
     /// Per-row input dimension expected by `model`.
     fn input_dim(&self, model: &str) -> Result<usize>;
@@ -28,7 +32,7 @@ pub struct EchoExecutor {
 }
 
 impl BatchExecutor for EchoExecutor {
-    fn execute(&mut self, _model: &str, x: &[f32], rows: usize) -> Result<(Vec<f32>, usize)> {
+    fn execute(&mut self, _model: &str, mut x: Vec<f32>, rows: usize) -> Result<(Vec<f32>, usize)> {
         if x.len() != rows * self.dim {
             return Err(Error::Coordinator(format!(
                 "echo: {} elems for {rows} rows of {}",
@@ -36,7 +40,10 @@ impl BatchExecutor for EchoExecutor {
                 self.dim
             )));
         }
-        Ok((x.iter().map(|v| v * self.scale).collect(), self.dim))
+        for v in &mut x {
+            *v *= self.scale;
+        }
+        Ok((x, self.dim))
     }
 
     fn input_dim(&self, _model: &str) -> Result<usize> {
@@ -55,6 +62,9 @@ pub struct PjrtExecutor {
     manifest: Manifest,
     router: Router,
     compiled: BTreeMap<String, CompiledModel>,
+    /// padding staging buffer, retained across batches (resized per
+    /// routed variant; no steady-state allocation)
+    staging: Vec<f32>,
 }
 
 impl PjrtExecutor {
@@ -66,7 +76,7 @@ impl PjrtExecutor {
         let names: Vec<String> = manifest.artifacts.iter().map(|a| a.name.clone()).collect();
         router.register_convention(&names);
         let client = crate::runtime::cpu_client()?;
-        Ok(PjrtExecutor { client, manifest, router, compiled: BTreeMap::new() })
+        Ok(PjrtExecutor { client, manifest, router, compiled: BTreeMap::new(), staging: Vec::new() })
     }
 
     pub fn router(&self) -> &Router {
@@ -83,7 +93,7 @@ impl PjrtExecutor {
 }
 
 impl BatchExecutor for PjrtExecutor {
-    fn execute(&mut self, model: &str, x: &[f32], rows: usize) -> Result<(Vec<f32>, usize)> {
+    fn execute(&mut self, model: &str, x: Vec<f32>, rows: usize) -> Result<(Vec<f32>, usize)> {
         let dim = self.input_dim(model)?;
         if x.len() != rows * dim {
             return Err(Error::Coordinator(format!(
@@ -92,22 +102,51 @@ impl BatchExecutor for PjrtExecutor {
             )));
         }
         let (artifact, variant) = self.router.route(model, rows)?;
-        let compiled = self.model_for(&artifact)?;
+        // the padding staging buffer is a retained field (it used to be
+        // reallocated and re-zeroed for every chunk of every batch); it
+        // travels inside a RuntimeInput for the duration of the call and
+        // is recovered afterwards, even when a chunk fails
+        let mut buf = std::mem::take(&mut self.staging);
+        let compiled = match self.model_for(&artifact) {
+            Ok(c) => c,
+            Err(e) => {
+                self.staging = buf; // keep the buffer through load failures
+                return Err(e);
+            }
+        };
         let out_dim = compiled.spec().outputs[0].shape[1];
 
         let mut outputs = Vec::with_capacity(rows * out_dim);
         let mut done = 0usize;
+        // resize only adjusts the length (steady state: no-op, no
+        // re-zeroing) — every chunk iteration overwrites the full buffer
+        buf.resize(variant * dim, 0.0);
+        let mut staged = RuntimeInput::F32(buf);
+        let mut failure = None;
         while done < rows {
             let take = (rows - done).min(variant);
-            // pad up to the variant's fixed batch
-            let mut padded = vec![0.0f32; variant * dim];
-            padded[..take * dim].copy_from_slice(&x[done * dim..(done + take) * dim]);
-            let result = compiled.run(&[RuntimeInput::F32(padded)])?;
-            let y = &result[0];
-            outputs.extend_from_slice(&y.data()[..take * out_dim]);
-            done += take;
+            if let RuntimeInput::F32(padded) = &mut staged {
+                padded[..take * dim].copy_from_slice(&x[done * dim..(done + take) * dim]);
+                padded[take * dim..].fill(0.0);
+            }
+            match compiled.run(std::slice::from_ref(&staged)) {
+                Ok(result) => {
+                    outputs.extend_from_slice(&result[0].data()[..take * out_dim]);
+                    done += take;
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
         }
-        Ok((outputs, out_dim))
+        if let RuntimeInput::F32(buf) = staged {
+            self.staging = buf;
+        }
+        match failure {
+            Some(e) => Err(e),
+            None => Ok((outputs, out_dim)),
+        }
     }
 
     fn input_dim(&self, model: &str) -> Result<usize> {
@@ -130,9 +169,9 @@ mod tests {
     #[test]
     fn echo_roundtrip() {
         let mut e = EchoExecutor { dim: 3, scale: 2.0 };
-        let (y, od) = e.execute("any", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2).unwrap();
+        let (y, od) = e.execute("any", vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2).unwrap();
         assert_eq!(od, 3);
         assert_eq!(y, vec![2.0, 4.0, 6.0, 8.0, 10.0, 12.0]);
-        assert!(e.execute("any", &[1.0], 2).is_err());
+        assert!(e.execute("any", vec![1.0], 2).is_err());
     }
 }

@@ -4,7 +4,7 @@
 
 use crate::data::{global_contrast_normalize, synth_mnist, Dataset};
 use crate::error::Result;
-use crate::experiments::models::{mr_classifier, tt_classifier};
+use crate::nn::{mr_classifier, tt_classifier};
 use crate::nn::{SgdConfig, TrainConfig, Trainer};
 use crate::util::rng::Rng;
 

@@ -5,7 +5,6 @@
 mod cifar;
 mod fig1;
 mod hashednet;
-mod models;
 mod perf;
 mod table2;
 mod table3;
@@ -14,10 +13,13 @@ mod wide;
 pub use cifar::{run_cifar, CifarResult};
 pub use fig1::{fig1_table, run_fig1, Fig1Point, Fig1Spec};
 pub use hashednet::{run_hashednet, HashedNetRow};
-pub use models::{mnist_fc_baseline, mnist_tensornet, mr_classifier, tt_classifier};
+// model builders moved to nn::zoo (the coordinator's serving registry
+// uses them, so they cannot live in the driver layer); re-exported here
+// so `experiments::tt_classifier`-style paths keep working
+pub use crate::nn::{mnist_fc_baseline, mnist_tensornet, mr_classifier, tt_classifier};
 pub use perf::{
-    bench_coordinator, bench_tt_matvec, bench_ttsvd, default_matvec_cases, report,
-    run_bench_suite, write_report, MatvecCase,
+    bench_coordinator, bench_native_serving, bench_tt_matvec, bench_ttsvd,
+    default_matvec_cases, drive_clients, report, run_bench_suite, write_report, MatvecCase,
 };
 pub use table2::{run_table2, Table2Row, VggFcGeometry};
 pub use table3::{run_table3, Table3Row};

@@ -2,12 +2,15 @@
 //! §Perf): the paper-relevant microbenches — TT matvec vs dense GEMM over
 //! the Table-3 regime of (rank, batch) configurations, TT-SVD
 //! decomposition, and coordinator throughput/latency — emitted as
-//! machine-readable `BENCH_tt_matvec.json` / `BENCH_coordinator.json` so
+//! machine-readable `BENCH_tt_matvec.json` / `BENCH_coordinator.json`
+//! (echo policy sweep + native-TT serving sweep) so
 //! every future PR is judged against a recorded trajectory instead of
 //! anecdotes.  Built on `util::bench` (runner) and `util::json` (writer);
 //! no dependencies, like everything else in the crate.
 
-use crate::coordinator::{BatchPolicy, EchoExecutor, Server, ServerConfig};
+use crate::coordinator::{
+    BatchPolicy, EchoExecutor, ModelRegistry, NativeExecutor, Server, ServerConfig,
+};
 use crate::error::Result;
 use crate::tensor::{matmul_bt, Tensor};
 use crate::tt::{MatvecScratch, TtMatrix, TtShape};
@@ -17,7 +20,6 @@ use crate::util::rng::Rng;
 use crate::util::threads::num_threads;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One dense-vs-TT matvec configuration (a Table-3-style cell).
@@ -146,6 +148,37 @@ pub fn bench_ttsvd(bencher: &Bencher, verbose: bool) -> Result<Vec<Json>> {
     Ok(entries)
 }
 
+/// Fire exactly `n_requests` random-normal inputs at `model` from
+/// `clients` concurrent threads (the remainder is distributed across
+/// clients), ignoring per-request failures — those surface in
+/// [`crate::coordinator::ServerStats::errors`].  Returns the wall-clock
+/// seconds of the run.  Shared by `tensornet serve`, the native serving
+/// bench and `examples/serve_tt.rs` so the driven workload cannot drift
+/// between the CLI and the perf trajectory.
+pub fn drive_clients(
+    server: &Server,
+    model: &str,
+    dim: usize,
+    n_requests: usize,
+    clients: usize,
+) -> f64 {
+    let clients = clients.max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let mine = n_requests / clients + usize::from(c < n_requests % clients);
+            s.spawn(move || {
+                let mut rng = Rng::new(0xD21F_E000 ^ c as u64);
+                for _ in 0..mine {
+                    let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(1.0)).collect();
+                    let _ = server.infer(model, x);
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
 /// Coordinator throughput/latency over the echo backend (isolates
 /// coordination overhead from model compute) for a small policy sweep.
 pub fn bench_coordinator(
@@ -163,17 +196,19 @@ pub fn bench_coordinator(
             },
             queue_capacity: 4096,
             batch_queue_capacity: 16,
+            executor_threads: 1,
         };
-        let server = Arc::new(Server::start(cfg, move || {
-            Ok(EchoExecutor { dim, scale: 1.0 })
-        })?);
+        let server = Server::start(cfg, move || Ok(EchoExecutor { dim, scale: 1.0 }))?;
+        // NOT drive_clients: this sweep's baseline was recorded with a
+        // constant input vector (client-side RNG cost would skew the
+        // pure-coordination numbers against the near-free echo backend)
         let clients = clients.max(1);
         let t0 = Instant::now();
         std::thread::scope(|s| {
             for c in 0..clients {
                 // distribute the remainder so exactly n_requests are sent
                 let mine = n_requests / clients + usize::from(c < n_requests % clients);
-                let server = server.clone();
+                let server = &server;
                 s.spawn(move || {
                     let x = vec![1.0f32; dim];
                     for _ in 0..mine {
@@ -198,6 +233,66 @@ pub fn bench_coordinator(
             println!(
                 "  max_batch={max_batch:<4} delay={delay_us:>5}µs  {:>9.0} req/s  mean batch {:.1}  p50 {:.0}µs p99 {:.0}µs",
                 st.completed.get() as f64 / wall,
+                st.mean_batch_size(),
+                st.e2e.quantile_us(0.5),
+                st.e2e.quantile_us(0.99),
+            );
+        }
+        entries.push(Json::Obj(obj));
+    }
+    Ok(entries)
+}
+
+/// Native-TT serving sweep: the real `TtMatrix::matvec_with` behind the
+/// batcher (model `tt_layer`, the paper's 1024x1024 Table-3 shape), swept
+/// over `(executor_threads, max_batch)`.  Unlike the echo sweep above —
+/// which isolates coordination overhead — this finally measures model
+/// execution through the serving spine, so the perf trajectory captures
+/// how throughput scales from 1 to N executor workers.
+pub fn bench_native_serving(
+    n_requests: usize,
+    clients: usize,
+    verbose: bool,
+) -> Result<Vec<Json>> {
+    let registry = ModelRegistry::standard();
+    let model = "tt_layer";
+    let dim = registry.input_dim(model)?;
+    let sweep = [(1usize, 1usize), (1, 32), (2, 32), (4, 32)];
+    let mut entries = Vec::new();
+    for (threads, max_batch) in sweep {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch, max_delay: Duration::from_micros(500) },
+            queue_capacity: 4096,
+            batch_queue_capacity: 16,
+            executor_threads: threads,
+        };
+        let reg = registry.clone();
+        let server = Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?;
+        // warm the lazily-built model out of the timed region (one worker;
+        // the rest pay the tiny core build on their first batch).  The
+        // warmup's latency does land in the e2e histogram — one sample
+        // out of n_requests+1, which cannot move p50/p99 at the ≥1000
+        // request counts the suite uses — but it is excluded from
+        // `completed` and `req_per_s` below.
+        server.infer(model, vec![0.0; dim])?;
+        let wall = drive_clients(&server, model, dim, n_requests, clients).max(1e-9);
+        let st = server.stats();
+        let served = st.completed.get().saturating_sub(1); // minus warmup
+        let mut obj = BTreeMap::new();
+        obj.insert("model".to_string(), Json::Str(model.to_string()));
+        obj.insert("executor_threads".to_string(), num(threads as f64));
+        obj.insert("max_batch".to_string(), num(max_batch as f64));
+        obj.insert("clients".to_string(), num(clients as f64));
+        obj.insert("completed".to_string(), num(served as f64));
+        obj.insert("errors".to_string(), num(st.errors.get() as f64));
+        obj.insert("req_per_s".to_string(), num(served as f64 / wall));
+        obj.insert("mean_batch".to_string(), num(st.mean_batch_size()));
+        obj.insert("p50_us".to_string(), num(st.e2e.quantile_us(0.5)));
+        obj.insert("p99_us".to_string(), num(st.e2e.quantile_us(0.99)));
+        if verbose {
+            println!(
+                "  workers={threads}  max_batch={max_batch:<4} {:>9.0} req/s  mean batch {:.1}  p50 {:.0}µs p99 {:.0}µs",
+                served as f64 / wall,
                 st.mean_batch_size(),
                 st.e2e.quantile_us(0.5),
                 st.e2e.quantile_us(0.99),
@@ -260,7 +355,13 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
         println!("== coordinator policy sweep (echo backend, {clients} clients)");
     }
     let coord = bench_coordinator(n_requests, clients, verbose)?;
-    let coord_report = report("coordinator", quick, vec![("entries", coord)]);
+    if verbose {
+        println!("== native TT serving sweep (executor_threads x max_batch, {clients} clients)");
+    }
+    let native_requests = if quick { 1_000 } else { 5_000 };
+    let native = bench_native_serving(native_requests, clients, verbose)?;
+    let coord_report =
+        report("coordinator", quick, vec![("entries", coord), ("native_tt", native)]);
 
     let paths = vec![
         write_report(out_dir, "BENCH_tt_matvec.json", &tt_report)?,
@@ -325,6 +426,23 @@ mod tests {
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("tt_matvec"));
         assert!(back.get("ttsvd").unwrap().as_arr().unwrap().len() == 2);
+    }
+
+    #[test]
+    fn native_serving_sweep_covers_thread_scaling() {
+        let entries = bench_native_serving(24, 3, false).unwrap();
+        assert_eq!(entries.len(), 4);
+        let threads: Vec<usize> = entries
+            .iter()
+            .map(|e| e.get("executor_threads").unwrap().as_usize().unwrap())
+            .collect();
+        assert!(threads.contains(&1) && threads.iter().any(|&t| t > 1), "{threads:?}");
+        for e in &entries {
+            assert_eq!(e.get("errors").unwrap().as_usize(), Some(0));
+            assert_eq!(e.get("completed").unwrap().as_usize(), Some(24));
+            assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(e.get("model").unwrap().as_str(), Some("tt_layer"));
+        }
     }
 
     #[test]

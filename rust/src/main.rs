@@ -11,12 +11,16 @@
 //! tensornet table3     [--quick]               Table 3 inference timing
 //! tensornet bench      [--quick] [--out-dir D] perf baseline -> BENCH_*.json
 //! tensornet train      [--rank 8] [--epochs 5] train the MNIST TensorNet
-//! tensornet serve      [--artifacts DIR] ...   serve AOT artifacts
+//! tensornet serve      [--backend native|pjrt] [--executor-threads N] ...
+//!                                              serve native TT/dense models
+//!                                              (default) or AOT artifacts
 //! tensornet inspect    [--artifacts DIR]       list artifacts + variants
 //! ```
 
 use std::time::Duration;
-use tensornet::coordinator::{BatchPolicy, PjrtExecutor, Server, ServerConfig};
+use tensornet::coordinator::{
+    BatchPolicy, ModelRegistry, NativeExecutor, PjrtExecutor, Server, ServerConfig,
+};
 use tensornet::data::{global_contrast_normalize, synth_mnist};
 use tensornet::error::Result;
 use tensornet::experiments::*;
@@ -75,7 +79,9 @@ fn print_usage() {
          \u{20}  fig1 | hashednet | cifar | wide | table2 | table3   experiments\n\
          \u{20}  bench [--quick] [--out-dir DIR]                     perf baseline -> BENCH_*.json\n\
          \u{20}  train                                               train the MNIST TensorNet\n\
-         \u{20}  serve --model tt_layer --requests 200               serve AOT artifacts\n\
+         \u{20}  serve [--backend native|pjrt] [--model tt_layer]    serve models behind the batcher\n\
+         \u{20}        [--executor-threads N] [--requests 200]       (native: in-process TT/dense/\n\
+         \u{20}        [--max-batch 32] [--max-delay-ms 2]            mnist_net; pjrt: AOT artifacts)\n\
          \u{20}  inspect                                             list artifacts\n\
          common flags: --quick, --artifacts DIR (default ./artifacts)"
     );
@@ -239,49 +245,59 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let backend = args.get_or("backend", "native");
     let dir = args.get_or("artifacts", "artifacts");
     let model = args.get_or("model", "tt_layer");
     let n_requests = args.get_usize("requests", 200)?;
-    let concurrency = args.get_usize("concurrency", 8)?;
+    let concurrency = args.get_usize("concurrency", 8)?.max(1);
     let max_batch = args.get_usize("max-batch", 32)?;
     let max_delay_ms = args.get_usize("max-delay-ms", 2)?;
+    let executor_threads = args.get_usize("executor-threads", 1)?;
 
-    println!("== serving '{model}' from {dir} ({n_requests} requests, {concurrency} clients)");
     let cfg = ServerConfig {
         policy: BatchPolicy {
             max_batch,
             max_delay: Duration::from_millis(max_delay_ms as u64),
         },
+        executor_threads,
         ..Default::default()
     };
-    let dir2 = dir.clone();
-    let server = Server::start(cfg, move || PjrtExecutor::new(&dir2))?;
-
-    // discover input dim from the manifest
-    let manifest = Manifest::load(&dir)?;
-    let spec = manifest
-        .artifacts
-        .iter()
-        .find(|a| a.name.starts_with(&model))
-        .ok_or_else(|| tensornet::error::Error::Config(format!("no artifacts match '{model}'")))?;
-    let dim = spec.runtime_inputs()[0].shape[1];
-
-    let server = std::sync::Arc::new(server);
-    let t0 = std::time::Instant::now();
-    std::thread::scope(|s| {
-        for c in 0..concurrency {
-            let server = server.clone();
-            let model = model.clone();
-            s.spawn(move || {
-                let mut rng = Rng::new(c as u64);
-                for _ in 0..n_requests / concurrency {
-                    let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(1.0)).collect();
-                    let _ = server.infer(&model, x);
-                }
-            });
+    let (server, dim) = match backend.as_str() {
+        "native" => {
+            println!(
+                "== serving '{model}' on the native backend \
+                 ({n_requests} requests, {concurrency} clients, {executor_threads} executor threads)"
+            );
+            let registry = ModelRegistry::standard();
+            let dim = registry.input_dim(&model)?;
+            (Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone())))?, dim)
         }
-    });
-    let wall = t0.elapsed().as_secs_f64();
+        "pjrt" => {
+            println!(
+                "== serving '{model}' from {dir} \
+                 ({n_requests} requests, {concurrency} clients, {executor_threads} executor threads)"
+            );
+            // discover input dim from the manifest
+            let manifest = Manifest::load(&dir)?;
+            let spec = manifest
+                .artifacts
+                .iter()
+                .find(|a| a.name.starts_with(&model))
+                .ok_or_else(|| {
+                    tensornet::error::Error::Config(format!("no artifacts match '{model}'"))
+                })?;
+            let dim = spec.runtime_inputs()[0].shape[1];
+            let dir2 = dir.clone();
+            (Server::start(cfg, move || PjrtExecutor::new(&dir2))?, dim)
+        }
+        other => {
+            return Err(tensornet::error::Error::Config(format!(
+                "--backend must be 'native' or 'pjrt', got '{other}'"
+            )))
+        }
+    };
+
+    let wall = drive_clients(&server, &model, dim, n_requests, concurrency);
     let stats = server.stats();
     println!("completed:  {}", stats.completed.get());
     println!("errors:     {}", stats.errors.get());
@@ -290,6 +306,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("e2e:   {}", stats.e2e.summary());
     println!("exec:  {}", stats.exec.summary());
     println!("queue: {}", stats.queue.summary());
+    // gate on completions and pool health, not just counted errors: a
+    // reply channel dropped by a dying worker fails the caller without
+    // touching stats.errors, and a worker whose init failed leaves the
+    // pool silently degraded — both must fail the run (CI smokes on this)
+    if stats.errors.get() > 0
+        || stats.completed.get() != n_requests as u64
+        || stats.failed_workers.get() > 0
+    {
+        return Err(tensornet::error::Error::Coordinator(format!(
+            "{} of {n_requests} requests completed, {} errored, {} workers failed init",
+            stats.completed.get(),
+            stats.errors.get(),
+            stats.failed_workers.get()
+        )));
+    }
     Ok(())
 }
 

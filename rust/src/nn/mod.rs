@@ -24,6 +24,7 @@ mod optim;
 mod sequential;
 mod trainer;
 mod ttlayer;
+mod zoo;
 
 pub use activations::{Relu, Sigmoid};
 pub use dense::Dense;
@@ -35,3 +36,4 @@ pub use optim::{sgd_update, SgdConfig};
 pub use sequential::Sequential;
 pub use trainer::{predict, EvalReport, TrainConfig, TrainHistory, Trainer};
 pub use ttlayer::TtLinear;
+pub use zoo::{mnist_fc_baseline, mnist_tensornet, mr_classifier, tt_classifier};

@@ -1,4 +1,8 @@
-//! Shared model builders for the experiment drivers.
+//! The model zoo: canonical builders for the paper's networks, shared by
+//! the experiment drivers, the CLI trainer and the serving registry
+//! (`coordinator/native.rs`).  Living in `nn/` keeps the layering one-way
+//! — the coordinator must not depend on the experiment drivers that
+//! themselves drive the coordinator.
 
 use crate::error::Result;
 use crate::nn::{low_rank_pair, Dense, Layer, Relu, Sequential, TtLinear};

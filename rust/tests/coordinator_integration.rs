@@ -14,6 +14,7 @@ fn echo_server(max_batch: usize, delay_ms: u64, queue: usize) -> Server {
         policy: BatchPolicy { max_batch, max_delay: Duration::from_millis(delay_ms) },
         queue_capacity: queue,
         batch_queue_capacity: 4,
+        executor_threads: 1,
     };
     Server::start(cfg, || Ok(EchoExecutor { dim: 8, scale: 1.0 })).unwrap()
 }
@@ -71,17 +72,19 @@ fn backpressure_rejects_when_full() {
         policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(50) },
         queue_capacity: 2,
         batch_queue_capacity: 1,
+        executor_threads: 1,
     };
     struct SlowEcho;
     impl tensornet::coordinator::BatchExecutor for SlowEcho {
         fn execute(
             &mut self,
             _m: &str,
-            x: &[f32],
+            x: Vec<f32>,
             _rows: usize,
         ) -> tensornet::error::Result<(Vec<f32>, usize)> {
             std::thread::sleep(Duration::from_millis(30));
-            Ok((x.to_vec(), x.len()))
+            let n = x.len();
+            Ok((x, n))
         }
         fn input_dim(&self, _m: &str) -> tensornet::error::Result<usize> {
             Ok(1)

@@ -264,14 +264,14 @@ fn prop_batcher_never_exceeds_max_and_preserves_fifo() {
                 reply: tx,
             };
             pushed += 1;
-            for batch in asm.push(req, t0) {
+            for batch in asm.push(req) {
                 if batch.requests.len() > max_batch {
                     return Err(format!("batch {} > max {max_batch}", batch.requests.len()));
                 }
                 emitted_ids.extend(batch.requests.iter().map(|r| r.id));
             }
         }
-        if let Some(batch) = asm.flush(t0) {
+        if let Some(batch) = asm.flush() {
             emitted_ids.extend(batch.requests.iter().map(|r| r.id));
         }
         // no request lost or duplicated
