@@ -18,14 +18,22 @@
 //! request's reply does not depend on which worker drained its batch.
 //! Tests rely on the same property to build an out-of-band oracle (see
 //! `rust/tests/native_serving.rs`).
+//!
+//! Beyond the seed-deterministic zoo, [`ModelSpec::Checkpoint`] serves
+//! *trained* artifacts: [`ModelRegistry::from_dir`] scans a directory of
+//! `runtime::Checkpoint`s (what `tensornet train --save` and `tensornet
+//! compress` write) and registers each one by name — determinism across
+//! workers comes from every worker loading the same bytes.
 
 use crate::coordinator::worker::BatchExecutor;
 use crate::error::{Error, Result};
 use crate::nn::{Layer, Sequential};
+use crate::runtime::Checkpoint;
 use crate::tensor::{matmul_bt, Tensor};
 use crate::tt::{MatvecScratch, TtMatrix, TtShape};
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
+use std::path::Path;
 
 /// How to build one named inference-ready model.  Pure data — `Clone` +
 /// `Send` — so a registry can be moved into the server's executor factory
@@ -41,6 +49,12 @@ pub enum ModelSpec {
     /// The full MNIST TensorNet of `nn::zoo`:
     /// `TT(4^5/4^5, rank) -> ReLU -> FC(1024 -> 10)`.
     MnistTensorNet { rank: usize, seed: u64 },
+    /// A trained model persisted by `runtime::Checkpoint` — the lifecycle
+    /// endpoint: whatever `tensornet train --save` / `tensornet compress`
+    /// wrote is served as-is.  Dims are captured at registration time
+    /// (`Checkpoint::peek`) so admission checks never touch the blob;
+    /// every worker loads the same files, so the pool stays coherent.
+    Checkpoint { dir: String, n_in: usize, n_out: usize },
 }
 
 impl ModelSpec {
@@ -50,6 +64,7 @@ impl ModelSpec {
             ModelSpec::TtLayer { ns, .. } => ns.iter().product(),
             ModelSpec::DenseLayer { n_in, .. } => *n_in,
             ModelSpec::MnistTensorNet { .. } => 1024,
+            ModelSpec::Checkpoint { n_in, .. } => *n_in,
         }
     }
 
@@ -59,6 +74,7 @@ impl ModelSpec {
             ModelSpec::TtLayer { ms, .. } => ms.iter().product(),
             ModelSpec::DenseLayer { n_out, .. } => *n_out,
             ModelSpec::MnistTensorNet { .. } => 10,
+            ModelSpec::Checkpoint { n_out, .. } => *n_out,
         }
     }
 
@@ -79,6 +95,9 @@ impl ModelSpec {
                 let net = crate::nn::mnist_tensornet(*rank, &mut Rng::new(*seed))?;
                 Ok(NativeModel::Net(net))
             }
+            ModelSpec::Checkpoint { dir, .. } => {
+                Ok(NativeModel::Loaded(Checkpoint::load(Path::new(dir))?.build()?))
+            }
         }
     }
 }
@@ -88,6 +107,8 @@ enum NativeModel {
     Tt { tt: TtMatrix, scratch: MatvecScratch },
     Dense { w: Tensor },
     Net(Sequential),
+    /// A checkpoint-restored model of arbitrary structure.
+    Loaded(Box<dyn Layer>),
 }
 
 /// Named inference-ready model specs.  Cheap to clone; the server's
@@ -118,6 +139,62 @@ impl ModelRegistry {
         r
     }
 
+    /// Register every checkpoint under `dir`: the directory itself if it
+    /// is one, otherwise each immediate subdirectory containing a
+    /// checkpoint, named after the subdirectory.  This is what
+    /// `tensornet serve --models <dir>` builds its lineup from.
+    pub fn from_dir(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let mut r = ModelRegistry::new();
+        if Checkpoint::exists(dir) {
+            let name = dir
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "model".to_string());
+            r.register_checkpoint(&name, dir)?;
+            return Ok(r);
+        }
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| Error::Coordinator(format!("reading {}: {e}", dir.display())))?;
+        // sort for a deterministic registry regardless of readdir order
+        let mut paths: Vec<_> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| Checkpoint::exists(p))
+            .collect();
+        paths.sort();
+        for p in &paths {
+            let name = p
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            r.register_checkpoint(&name, p)?;
+        }
+        if r.specs.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "no checkpoints under {} (expected <dir>/checkpoint.json or \
+                 <dir>/<model>/checkpoint.json)",
+                dir.display()
+            )));
+        }
+        Ok(r)
+    }
+
+    /// Register one checkpoint directory under `name`.  Reads only the
+    /// header ([`Checkpoint::peek`]) — the blob loads lazily per worker.
+    pub fn register_checkpoint(&mut self, name: &str, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        let info = Checkpoint::peek(dir)?;
+        self.register(
+            name,
+            ModelSpec::Checkpoint {
+                dir: dir.to_string_lossy().into_owned(),
+                n_in: info.input_dim,
+                n_out: info.output_dim,
+            },
+        );
+        Ok(())
+    }
+
     pub fn register(&mut self, name: &str, spec: ModelSpec) {
         self.specs.insert(name.to_string(), spec);
     }
@@ -145,8 +222,12 @@ impl ModelRegistry {
 /// stack behind the batcher.  Models build lazily on first use, so a
 /// worker only pays for the models its traffic actually routes to.  The
 /// batch buffer arrives owned from the server and is wrapped into the
-/// input tensor without a copy; each TT model's [`MatvecScratch`]
-/// retains capacity across batches.
+/// input tensor without a copy; every TT sweep — the bare
+/// [`ModelSpec::TtLayer`] path and any `TtLinear` inside a
+/// checkpoint-restored model — retains its [`MatvecScratch`] capacity
+/// across batches.  (Multi-layer `Loaded`/`Net` models still allocate
+/// each layer's output tensor per batch — inherent to
+/// `Sequential::forward`.)
 pub struct NativeExecutor {
     registry: ModelRegistry,
     models: BTreeMap<String, NativeModel>,
@@ -195,6 +276,7 @@ impl BatchExecutor for NativeExecutor {
             NativeModel::Tt { tt, scratch } => tt.matvec_with(&xt, scratch)?,
             NativeModel::Dense { w } => matmul_bt(&xt, w)?,
             NativeModel::Net(net) => net.forward(&xt, false)?,
+            NativeModel::Loaded(model) => model.forward(&xt, false)?,
         };
         let out_dim = y.shape()[1];
         Ok((y.into_vec(), out_dim))
@@ -281,6 +363,55 @@ mod tests {
         assert!(exec.execute("ghost", vec![0.0; 6], 1).is_err());
         assert_eq!(exec.input_dim("tt").unwrap(), 6);
         assert!(exec.input_dim("ghost").is_err());
+    }
+
+    #[test]
+    fn checkpoint_spec_serves_saved_model_bitwise() {
+        use crate::nn::{Dense, Relu, Sequential};
+        let dir = std::env::temp_dir()
+            .join(format!("tensornet_native_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(21);
+        let mut net = Sequential::new(vec![
+            Box::new(Dense::new(6, 8, &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(8, 3, &mut rng)),
+        ]);
+        Checkpoint::save(dir.join("toy"), &net).unwrap();
+
+        let registry = ModelRegistry::from_dir(&dir).unwrap();
+        assert_eq!(registry.names(), vec!["toy"]);
+        assert_eq!(registry.input_dim("toy").unwrap(), 6);
+        assert_eq!(registry.spec("toy").unwrap().output_dim(), 3);
+
+        let mut exec = NativeExecutor::new(registry);
+        let x: Vec<f32> = (0..2 * 6).map(|_| rng.normal_f32(1.0)).collect();
+        let (y, od) = exec.execute("toy", x.clone(), 2).unwrap();
+        assert_eq!(od, 3);
+        let want = net
+            .forward(&Tensor::from_vec(&[2, 6], x).unwrap(), false)
+            .unwrap();
+        assert_eq!(y, want.data(), "served output must match the trained model bitwise");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_dir_on_a_single_checkpoint_and_empty_dir() {
+        use crate::nn::{Dense, Sequential};
+        let dir = std::env::temp_dir()
+            .join(format!("tensornet_native_single_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(22);
+        let net = Sequential::new(vec![Box::new(Dense::new(4, 2, &mut rng))]);
+        Checkpoint::save(dir.join("solo"), &net).unwrap();
+        // pointing at the checkpoint itself registers it under its dirname
+        let r = ModelRegistry::from_dir(dir.join("solo")).unwrap();
+        assert_eq!(r.names(), vec!["solo"]);
+        // a directory with no checkpoints is an error, not an empty lineup
+        let empty = dir.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(ModelRegistry::from_dir(&empty).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -24,6 +24,10 @@ pub enum Error {
     /// Coordinator-level failure (queue closed, worker died, ...).
     Coordinator(String),
 
+    /// Checkpoint save/load problems (version mismatch, corrupt blob,
+    /// state/architecture mismatch — see `runtime::checkpoint`).
+    Checkpoint(String),
+
     /// Configuration file / CLI problems.
     Config(String),
 
@@ -38,6 +42,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }

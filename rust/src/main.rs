@@ -10,13 +10,24 @@
 //! tensornet table2     [--accuracy] [--quick]  Table 2 compression (+proxy)
 //! tensornet table3     [--quick]               Table 3 inference timing
 //! tensornet bench      [--quick] [--out-dir D] perf baseline -> BENCH_*.json
-//! tensornet train      [--rank 8] [--epochs 5] train the MNIST TensorNet
-//! tensornet serve      [--backend native|pjrt] [--executor-threads N] ...
-//!                                              serve native TT/dense models
-//!                                              (default) or AOT artifacts
+//! tensornet train      [--model tt|fc] [--rank 8] [--epochs 5]
+//!                      [--save DIR] [--init-from CKPT]
+//!                                              train (or fine-tune) on MNIST,
+//!                                              optionally checkpointing
+//! tensornet compress   --from CKPT --to DIR [--rank 8] [--eps 0]
+//!                      [--ms 4,4,4,4,4] [--ns 4,4,4,4,4]
+//!                                              TT-SVD a dense checkpoint
+//! tensornet serve      [--backend native|pjrt] [--executor-threads N]
+//!                      [--models DIR]          serve native zoo models,
+//!                                              trained checkpoints, or AOT
+//!                                              artifacts
 //! tensornet inspect    [--artifacts DIR]       list artifacts + variants
 //! ```
+//!
+//! `train --save` → `compress` → `serve --models` is the paper's full
+//! train → compress(TT-SVD) → fine-tune → deploy lifecycle (§3.1, §5).
 
+use std::path::Path;
 use std::time::Duration;
 use tensornet::coordinator::{
     BatchPolicy, ModelRegistry, NativeExecutor, PjrtExecutor, Server, ServerConfig,
@@ -24,10 +35,11 @@ use tensornet::coordinator::{
 use tensornet::data::{global_contrast_normalize, synth_mnist};
 use tensornet::error::Result;
 use tensornet::experiments::*;
-use tensornet::nn::{SgdConfig, TrainConfig, Trainer};
-use tensornet::runtime::Manifest;
+use tensornet::nn::{Layer, SgdConfig, TrainConfig, Trainer};
+use tensornet::runtime::{Checkpoint, Manifest};
 use tensornet::util::bench::print_table;
 use tensornet::util::cli::Args;
+use tensornet::util::json::Json;
 use tensornet::util::rng::Rng;
 
 fn main() {
@@ -58,6 +70,7 @@ fn run(args: Args) -> Result<()> {
         Some("table3") => cmd_table3(&args),
         Some("bench") => cmd_bench(&args),
         Some("train") => cmd_train(&args),
+        Some("compress") => cmd_compress(&args),
         Some("serve") => cmd_serve(&args),
         Some("inspect") => cmd_inspect(&args),
         Some(other) => {
@@ -78,12 +91,18 @@ fn print_usage() {
          subcommands:\n\
          \u{20}  fig1 | hashednet | cifar | wide | table2 | table3   experiments\n\
          \u{20}  bench [--quick] [--out-dir DIR]                     perf baseline -> BENCH_*.json\n\
-         \u{20}  train                                               train the MNIST TensorNet\n\
+         \u{20}  train [--model tt|fc] [--rank 8] [--epochs 5]       train (or --init-from CKPT to\n\
+         \u{20}        [--save DIR] [--init-from CKPT]                fine-tune); --save checkpoints\n\
+         \u{20}  compress --from CKPT --to DIR [--rank 8] [--eps 0]  TT-SVD dense checkpoint layers\n\
+         \u{20}        [--ms 4,4,4,4,4] [--ns 4,4,4,4,4]              into a TT checkpoint\n\
          \u{20}  serve [--backend native|pjrt] [--model tt_layer]    serve models behind the batcher\n\
-         \u{20}        [--executor-threads N] [--requests 200]       (native: in-process TT/dense/\n\
-         \u{20}        [--max-batch 32] [--max-delay-ms 2]            mnist_net; pjrt: AOT artifacts)\n\
+         \u{20}        [--models DIR]                                 (native: zoo models or trained\n\
+         \u{20}        [--executor-threads N] [--requests 200]        checkpoints from --models DIR;\n\
+         \u{20}        [--max-batch 32] [--max-delay-ms 2]            pjrt: AOT artifacts)\n\
          \u{20}  inspect                                             list artifacts\n\
-         common flags: --quick, --artifacts DIR (default ./artifacts)"
+         common flags: --quick, --artifacts DIR (default ./artifacts)\n\
+         lifecycle:  train --model fc --save c/dense  ->  compress --from c/dense --to c/tt\n\
+         \u{20}           ->  train --init-from c/tt --save c/tt2  ->  serve --models c --model tt2"
     );
 }
 
@@ -220,14 +239,52 @@ fn cmd_train(args: &Args) -> Result<()> {
     let n_test = args.get_usize("test-samples", 1000)?;
     let lr = args.get_f64("lr", 0.03)? as f32;
     let seed = args.get_usize("seed", 7)? as u64;
+    let arch = args.get_or("model", "tt");
 
-    println!("== MNIST TensorNet: TT(1024->1024 4^5, rank {rank}) -> ReLU -> FC(10)");
     let mut all = synth_mnist(n_train + n_test, seed)?;
     global_contrast_normalize(&mut all.x)?;
     let (train, test) = all.split(n_train)?;
-    let mut rng = Rng::new(seed);
-    let mut net = mnist_tensornet(rank, &mut rng)?;
-    println!("{}", net.summary());
+
+    let mut net: Box<dyn Layer> = match args.get("init-from") {
+        Some(ckpt) => {
+            // the architecture comes from the checkpoint — silently
+            // ignoring --model/--rank would make a scripted sweep produce
+            // identical runs that look distinct
+            if args.get("model").is_some() || args.get("rank").is_some() {
+                return Err(tensornet::error::Error::Config(
+                    "--init-from restores the checkpointed architecture; \
+                     drop --model/--rank (compress chooses the TT rank)"
+                        .into(),
+                ));
+            }
+            // the fine-tune half of compress-then-fine-tune (§5): resume
+            // from whatever `train --save` or `compress` wrote
+            println!("== fine-tuning from checkpoint {ckpt}");
+            Checkpoint::load(ckpt)?.build()?
+        }
+        None => {
+            let mut rng = Rng::new(seed);
+            match arch.as_str() {
+                "tt" => {
+                    println!(
+                        "== MNIST TensorNet: TT(1024->1024 4^5, rank {rank}) -> ReLU -> FC(10)"
+                    );
+                    Box::new(mnist_tensornet(rank, &mut rng)?)
+                }
+                "fc" => {
+                    println!("== MNIST FC baseline: FC(1024->1024) -> ReLU -> FC(10)");
+                    Box::new(mnist_fc_baseline(&mut rng))
+                }
+                other => {
+                    return Err(tensornet::error::Error::Config(format!(
+                        "--model must be 'tt' or 'fc', got '{other}'"
+                    )))
+                }
+            }
+        }
+    };
+    println!("{}  ({} params)", net.name(), net.num_params());
+
     let trainer = Trainer::new(TrainConfig {
         epochs,
         batch_size: args.get_usize("batch", 32)?,
@@ -236,18 +293,92 @@ fn cmd_train(args: &Args) -> Result<()> {
         log_every: args.get_usize("log-every", 50)?,
         seed,
     });
-    let hist = trainer.fit(&mut net, &train, Some(&test))?;
+    // for a fine-tune run, the pre-training eval IS the data point the
+    // paper's compress-then-fine-tune curve needs (truncation-only error)
+    let initial_eval = match args.get("init-from") {
+        Some(_) => {
+            let rep = trainer.evaluate(&mut *net, &test)?;
+            println!(
+                "initial:  test loss {:.4}, test error {:.3} (before fine-tuning)",
+                rep.loss, rep.error
+            );
+            Some(rep)
+        }
+        None => None,
+    };
+    let hist = trainer.fit(&mut *net, &train, Some(&test))?;
     for (e, (loss, err)) in hist.epochs.iter().enumerate() {
         println!("epoch {:>2}: train loss {loss:.4}, test error {err:.3}", e + 1);
     }
+    let final_eval = trainer.evaluate(&mut *net, &test)?;
+    println!(
+        "final:    test loss {:.4}, test error {:.3} ({} samples)",
+        final_eval.loss, final_eval.error, final_eval.n
+    );
     println!("wall time: {:.1}s", hist.wall_seconds);
+
+    if let Some(dir) = args.get("save") {
+        let dir = Path::new(dir);
+        Checkpoint::save(dir, &*net)?;
+        // convergence stays inspectable after the process exits
+        let mut report = match hist.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("TrainHistory::to_json returns an object"),
+        };
+        if let Some(rep) = initial_eval {
+            report.insert("initial_eval".to_string(), rep.to_json());
+        }
+        report.insert("final_eval".to_string(), final_eval.to_json());
+        std::fs::write(dir.join("history.json"), Json::Obj(report).to_string())?;
+        println!("saved checkpoint + history.json to {}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let from = args.get("from").ok_or_else(|| {
+        tensornet::error::Error::Config("compress needs --from <checkpoint dir>".into())
+    })?;
+    let to = args.get("to").ok_or_else(|| {
+        tensornet::error::Error::Config("compress needs --to <output dir>".into())
+    })?;
+    let ms = args.get_usize_list("ms", &[4, 4, 4, 4, 4])?;
+    let ns = args.get_usize_list("ns", &[4, 4, 4, 4, 4])?;
+    let rank = args.get_usize("rank", 8)?;
+    let eps = args.get_f64("eps", 0.0)?;
+    let max_rank = if rank == 0 { None } else { Some(rank) };
+    let m_total: usize = ms.iter().product();
+    let n_total: usize = ns.iter().product();
+
+    println!(
+        "== compress: TT-SVD every dense {m_total}x{n_total} layer of {from} \
+         (modes {ms:?}x{ns:?}, rank cap {}, eps {eps})",
+        if rank == 0 { "none".to_string() } else { rank.to_string() }
+    );
+    let ck = Checkpoint::load(from)?;
+    let dense_values = ck.info.num_values;
+    let (state, converted) = ck.state.compress_dense(&ms, &ns, max_rank, eps)?;
+    if converted == 0 {
+        return Err(tensornet::error::Error::Config(format!(
+            "no dense {m_total}x{n_total} layer in {from} — check --ms/--ns \
+             against the checkpointed architecture"
+        )));
+    }
+    Checkpoint::save_state(to, &state)?;
+    let tt_values = state.num_values();
+    println!(
+        "converted {converted} layer(s): {dense_values} -> {tt_values} stored values \
+         ({:.1}x smaller checkpoint)",
+        dense_values as f64 / tt_values as f64
+    );
+    println!("wrote TT checkpoint to {to}  (fine-tune: tensornet train --init-from {to})");
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "native");
     let dir = args.get_or("artifacts", "artifacts");
-    let model = args.get_or("model", "tt_layer");
+    let models_dir = args.get("models");
     let n_requests = args.get_usize("requests", 200)?;
     let concurrency = args.get_usize("concurrency", 8)?.max(1);
     let max_batch = args.get_usize("max-batch", 32)?;
@@ -262,17 +393,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         executor_threads,
         ..Default::default()
     };
-    let (server, dim) = match backend.as_str() {
+    let (server, dim, model) = match backend.as_str() {
         "native" => {
+            // --models DIR swaps the seed-deterministic zoo for trained
+            // checkpoints; without an explicit --model the first (sorted)
+            // checkpoint is served
+            let registry = match models_dir {
+                Some(d) => ModelRegistry::from_dir(d)?,
+                None => ModelRegistry::standard(),
+            };
+            let model = match args.get("model") {
+                Some(m) => m.to_string(),
+                None if models_dir.is_some() => {
+                    registry.names().first().expect("from_dir is non-empty").to_string()
+                }
+                None => "tt_layer".to_string(),
+            };
+            let source = models_dir.map_or_else(
+                || "native backend".to_string(),
+                |d| format!("checkpoints in {d}"),
+            );
             println!(
-                "== serving '{model}' on the native backend \
+                "== serving '{model}' ({source}) \
                  ({n_requests} requests, {concurrency} clients, {executor_threads} executor threads)"
             );
-            let registry = ModelRegistry::standard();
+            // unknown --model errors here, listing the registered names
             let dim = registry.input_dim(&model)?;
-            (Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone())))?, dim)
+            (Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone())))?, dim, model)
         }
         "pjrt" => {
+            if models_dir.is_some() {
+                return Err(tensornet::error::Error::Config(
+                    "--models serves native checkpoints; use --artifacts with --backend pjrt"
+                        .into(),
+                ));
+            }
+            let model = args.get_or("model", "tt_layer");
             println!(
                 "== serving '{model}' from {dir} \
                  ({n_requests} requests, {concurrency} clients, {executor_threads} executor threads)"
@@ -284,11 +440,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .iter()
                 .find(|a| a.name.starts_with(&model))
                 .ok_or_else(|| {
-                    tensornet::error::Error::Config(format!("no artifacts match '{model}'"))
+                    let names: Vec<&str> =
+                        manifest.artifacts.iter().map(|a| a.name.as_str()).collect();
+                    tensornet::error::Error::Config(format!(
+                        "no artifacts match '{model}' (available: {})",
+                        names.join(", ")
+                    ))
                 })?;
             let dim = spec.runtime_inputs()[0].shape[1];
             let dir2 = dir.clone();
-            (Server::start(cfg, move || PjrtExecutor::new(&dir2))?, dim)
+            (Server::start(cfg, move || PjrtExecutor::new(&dir2))?, dim, model)
         }
         other => {
             return Err(tensornet::error::Error::Config(format!(

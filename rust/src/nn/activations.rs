@@ -2,6 +2,7 @@
 
 use crate::error::{Error, Result};
 use crate::nn::layer::Layer;
+use crate::nn::state::{import_mismatch, LayerState};
 use crate::tensor::Tensor;
 
 /// Rectified linear unit.
@@ -59,6 +60,20 @@ impl Layer for Relu {
         }
         Ok(g)
     }
+
+    fn export_state(&self) -> Result<LayerState> {
+        Ok(LayerState::Relu)
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::Relu => {
+                self.mask = None; // stateless: just drop any stale cache
+                Ok(())
+            }
+            other => Err(import_mismatch("ReLU", &other)),
+        }
+    }
 }
 
 /// Logistic sigmoid (used by the wide-and-shallow §6.2.1 discussion).
@@ -99,6 +114,20 @@ impl Layer for Sigmoid {
             *gv *= yv * (1.0 - yv);
         }
         Ok(g)
+    }
+
+    fn export_state(&self) -> Result<LayerState> {
+        Ok(LayerState::Sigmoid)
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::Sigmoid => {
+                self.cached_y = None;
+                Ok(())
+            }
+            other => Err(import_mismatch("Sigmoid", &other)),
+        }
     }
 }
 

@@ -3,6 +3,7 @@
 use crate::error::{shape_err, Result};
 use crate::nn::layer::Layer;
 use crate::nn::optim::{sgd_update, SgdConfig};
+use crate::nn::state::{import_mismatch, LayerState};
 use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
 use crate::util::rng::Rng;
 
@@ -117,6 +118,29 @@ impl Layer for Dense {
         self.grad_w.data_mut().fill(0.0);
         self.grad_b.data_mut().fill(0.0);
     }
+
+    fn export_state(&self) -> Result<LayerState> {
+        Ok(LayerState::Dense { w: self.w.clone(), b: self.b.clone() })
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::Dense { w, b }
+                if w.shape() == self.w.shape() && b.shape() == self.b.shape() =>
+            {
+                *self = Dense::from_weights(w, b)?;
+                Ok(())
+            }
+            LayerState::Dense { w, b } => Err(crate::error::Error::Checkpoint(format!(
+                "dense import: state {:?}/{:?} into layer {:?}/{:?}",
+                w.shape(),
+                b.shape(),
+                self.w.shape(),
+                self.b.shape()
+            ))),
+            other => Err(import_mismatch("Dense", &other)),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -203,5 +227,24 @@ mod tests {
         let mut rng = Rng::new(5);
         let l = Dense::new(10, 7, &mut rng);
         assert_eq!(l.num_params(), 70 + 7);
+    }
+
+    #[test]
+    fn state_roundtrip_is_bitwise_and_resets_momentum() {
+        let mut rng = Rng::new(6);
+        let mut l = Dense::new(4, 3, &mut rng);
+        // accumulate some momentum so the import provably resets it
+        let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        let y = l.forward(&x, true).unwrap();
+        let _ = l.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        l.sgd_step(&SgdConfig::default()).unwrap();
+        assert!(l.vel_w.max_abs() > 0.0);
+
+        let state = l.export_state().unwrap();
+        let mut fresh = Dense::new(4, 3, &mut Rng::new(99));
+        fresh.import_state(state).unwrap();
+        assert_eq!(fresh.w, l.w);
+        assert_eq!(fresh.b, l.b);
+        assert_eq!(fresh.vel_w.max_abs(), 0.0);
     }
 }

@@ -6,6 +6,7 @@
 use crate::error::Result;
 use crate::nn::layer::Layer;
 use crate::nn::optim::SgdConfig;
+use crate::nn::state::{import_mismatch, LayerState};
 use crate::tensor::Tensor;
 
 /// Wraps any layer, disabling its parameter updates.
@@ -36,6 +37,19 @@ impl<L: Layer> Layer for Frozen<L> {
 
     fn zero_grads(&mut self) {
         self.0.zero_grads();
+    }
+
+    fn export_state(&self) -> Result<LayerState> {
+        // frozen weights still persist — a checkpointed §6.2 network must
+        // restore its fixed feature extractor, not reinitialize it
+        Ok(LayerState::Frozen(Box::new(self.0.export_state()?)))
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::Frozen(inner) => self.0.import_state(*inner),
+            other => Err(import_mismatch("Frozen", &other)),
+        }
     }
 }
 

@@ -1,7 +1,9 @@
-//! The layer trait: forward with activation caching, backward, SGD update.
+//! The layer trait: forward with activation caching, backward, SGD update,
+//! and state export/import (the checkpoint visitor).
 
 use crate::error::Result;
 use crate::nn::optim::SgdConfig;
+use crate::nn::state::LayerState;
 use crate::tensor::Tensor;
 
 /// A differentiable network layer.
@@ -9,6 +11,12 @@ use crate::tensor::Tensor;
 /// Contract: `forward(x, train=true)` caches whatever `backward` needs;
 /// `backward(grad_out)` consumes that cache and returns `grad_in`, leaving
 /// parameter gradients stored in the layer until `sgd_step` / `zero_grads`.
+///
+/// Every layer additionally participates in the checkpoint protocol:
+/// `export_state` snapshots its parameters into a [`LayerState`] tree and
+/// `import_state` restores them in place.  Both are mandatory — a layer
+/// that cannot be persisted cannot ship through the train → compress →
+/// serve lifecycle (see `runtime::checkpoint`).
 pub trait Layer: Send {
     /// Human-readable layer description (used in summaries).
     fn name(&self) -> String;
@@ -33,4 +41,56 @@ pub trait Layer: Send {
 
     /// Drop any accumulated gradients.
     fn zero_grads(&mut self) {}
+
+    /// Snapshot the layer's parameters and structure.
+    ///
+    /// Invariant: `export_state()?.build()?` yields a layer whose eval-mode
+    /// forward is bitwise-identical to this one's.
+    fn export_state(&self) -> Result<LayerState>;
+
+    /// Restore parameters from a state previously produced by
+    /// `export_state` on a layer of the same architecture.  Gradients and
+    /// optimizer velocities reset to zero.  Errors on a kind or geometry
+    /// mismatch, leaving *parameters* unchanged; a composite layer whose
+    /// rollback re-imports an earlier snapshot may still have reset the
+    /// optimizer slots of its children ([`LayerState`] does not carry
+    /// them), so treat a failed import as also zeroing momentum.
+    fn import_state(&mut self, state: LayerState) -> Result<()>;
+}
+
+/// Boxed layers are layers: lets heterogeneous stacks rebuilt from
+/// checkpoints ([`LayerState::build`]) slot in anywhere a concrete layer
+/// would — e.g. inside [`crate::nn::Frozen`].
+impl Layer for Box<dyn Layer> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        (**self).forward(x, train)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        (**self).backward(grad_out)
+    }
+
+    fn num_params(&self) -> usize {
+        (**self).num_params()
+    }
+
+    fn sgd_step(&mut self, cfg: &SgdConfig) -> Result<()> {
+        (**self).sgd_step(cfg)
+    }
+
+    fn zero_grads(&mut self) {
+        (**self).zero_grads()
+    }
+
+    fn export_state(&self) -> Result<LayerState> {
+        (**self).export_state()
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        (**self).import_state(state)
+    }
 }

@@ -89,6 +89,23 @@ mod tests {
     }
 
     #[test]
+    fn factored_pair_state_roundtrip_is_bitwise() {
+        // the MR baseline is a Sequential of two Dense layers; its state
+        // must survive export -> rebuild with the factorization intact
+        let mut rng = Rng::new(4);
+        let mut net = low_rank_pair(10, 12, 3, &mut rng).unwrap();
+        let state = net.export_state().unwrap();
+        assert_eq!(state.input_dim(), Some(10));
+        assert_eq!(state.output_dim(), Some(12));
+        let mut rebuilt = state.build().unwrap();
+        assert_eq!(rebuilt.num_params(), low_rank_params(10, 12, 3));
+        let x = Tensor::randn(&[5, 10], 1.0, &mut rng);
+        let want = net.forward(&x, false).unwrap();
+        let got = rebuilt.forward(&x, false).unwrap();
+        assert_eq!(want.data(), got.data());
+    }
+
+    #[test]
     fn truncation_degrades_gracefully() {
         let mut rng = Rng::new(3);
         let w = Tensor::randn(&[16, 16], 1.0, &mut rng);

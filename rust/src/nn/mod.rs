@@ -13,6 +13,8 @@
 //!   Fig. 1 / Table 2 (two stacked dense layers `1024 x r`, `r x 1024`).
 //! * [`Relu`] / [`Sigmoid`], [`SoftmaxXent`], [`Sgd`] (momentum 0.9 +
 //!   L2 5e-4 — §6.4), [`Sequential`], [`Trainer`].
+//! * [`LayerState`] — the export/import snapshot every layer implements;
+//!   `runtime::checkpoint` persists it, `coordinator::native` serves it.
 
 mod activations;
 mod dense;
@@ -22,6 +24,7 @@ mod loss;
 mod lowrank;
 mod optim;
 mod sequential;
+mod state;
 mod trainer;
 mod ttlayer;
 mod zoo;
@@ -34,6 +37,7 @@ pub use loss::{accuracy, SoftmaxXent};
 pub use lowrank::low_rank_pair;
 pub use optim::{sgd_update, SgdConfig};
 pub use sequential::Sequential;
+pub use state::LayerState;
 pub use trainer::{predict, EvalReport, TrainConfig, TrainHistory, Trainer};
 pub use ttlayer::TtLinear;
 pub use zoo::{mnist_fc_baseline, mnist_tensornet, mr_classifier, tt_classifier};

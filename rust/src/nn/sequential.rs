@@ -1,8 +1,9 @@
 //! Layer composition.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::nn::layer::Layer;
 use crate::nn::optim::SgdConfig;
+use crate::nn::state::{import_mismatch, LayerState};
 use crate::tensor::Tensor;
 
 /// A straight-line stack of layers.
@@ -77,6 +78,45 @@ impl Layer for Sequential {
     fn zero_grads(&mut self) {
         for l in &mut self.layers {
             l.zero_grads();
+        }
+    }
+
+    fn export_state(&self) -> Result<LayerState> {
+        Ok(LayerState::Stack(
+            self.layers.iter().map(|l| l.export_state()).collect::<Result<Vec<_>>>()?,
+        ))
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::Stack(states) if states.len() == self.layers.len() => {
+                // snapshot first so a mid-stack mismatch can roll back —
+                // a half-imported stack would silently mix old and new
+                // weights.  Rollback restores parameters bitwise but not
+                // optimizer slots (states don't carry them); the Layer
+                // contract documents that caveat.
+                let snapshot = match self.export_state()? {
+                    LayerState::Stack(prev) => prev,
+                    _ => unreachable!("Sequential exports a Stack"),
+                };
+                for (i, s) in states.into_iter().enumerate() {
+                    if let Err(e) = self.layers[i].import_state(s) {
+                        for (l, p) in
+                            self.layers.iter_mut().zip(snapshot.iter().cloned()).take(i)
+                        {
+                            let _ = l.import_state(p);
+                        }
+                        return Err(e);
+                    }
+                }
+                Ok(())
+            }
+            LayerState::Stack(states) => Err(Error::Checkpoint(format!(
+                "sequential import: {} layer states into a {}-layer stack",
+                states.len(),
+                self.layers.len()
+            ))),
+            other => Err(import_mismatch("Sequential", &other)),
         }
     }
 }

@@ -1,0 +1,373 @@
+//! Layer state export/import — the substrate of the checkpoint subsystem.
+//!
+//! [`LayerState`] is a concrete, serializable snapshot of a layer's
+//! learnable parameters plus the minimal structure needed to rebuild the
+//! layer *without knowing its concrete type*: every [`Layer`] can export
+//! itself (`Layer::export_state`), restore in place
+//! (`Layer::import_state`), or be reconstructed from scratch
+//! ([`LayerState::build`]).  `runtime::checkpoint` maps this tree onto a
+//! versioned on-disk manifest + tensor blob; this module stays pure
+//! in-memory so the nn layer never depends on the runtime layer.
+//!
+//! Optimizer slots (gradients, momentum velocities) are deliberately NOT
+//! part of the state: a restored layer starts with fresh zeros, which is
+//! also what the paper's compress-then-fine-tune workflow (§5) wants —
+//! the TT-SVD initialization carries no momentum history.
+
+use crate::error::{Error, Result};
+use crate::nn::layer::Layer;
+use crate::nn::{Dense, Frozen, Relu, Sequential, Sigmoid, TtLinear};
+use crate::tensor::Tensor;
+use crate::tt::{TtMatrix, TtShape};
+
+/// A snapshot of one layer's parameters and structure.
+///
+/// The tree mirrors the layer tree: composite layers ([`Sequential`],
+/// [`Frozen`]) hold child states, parametric layers hold tensors, and
+/// stateless activations are bare tags.
+#[derive(Clone, Debug)]
+pub enum LayerState {
+    /// [`Dense`]: `w (out, in)`, `b (out,)`.
+    Dense { w: Tensor, b: Tensor },
+    /// [`TtLinear`]: the full [`TtShape`] (modes + per-boundary ranks, so
+    /// non-uniform TT-SVD ranks survive), cores `(r0, m, n, r1)`, bias.
+    TtLinear { shape: TtShape, cores: Vec<Tensor>, bias: Tensor },
+    /// [`Sequential`]: child states in forward order.
+    Stack(Vec<LayerState>),
+    /// [`Frozen`]: the wrapped layer's state (restored frozen again).
+    Frozen(Box<LayerState>),
+    /// [`Relu`] — stateless.
+    Relu,
+    /// [`Sigmoid`] — stateless.
+    Sigmoid,
+}
+
+impl LayerState {
+    /// Stable tag used by the checkpoint manifest.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LayerState::Dense { .. } => "dense",
+            LayerState::TtLinear { .. } => "tt_linear",
+            LayerState::Stack(_) => "sequential",
+            LayerState::Frozen(_) => "frozen",
+            LayerState::Relu => "relu",
+            LayerState::Sigmoid => "sigmoid",
+        }
+    }
+
+    /// Per-row input dimension, when the structure determines one
+    /// (activations are shape-polymorphic and report `None`).
+    pub fn input_dim(&self) -> Option<usize> {
+        match self {
+            LayerState::Dense { w, .. } => Some(w.shape()[1]),
+            LayerState::TtLinear { shape, .. } => Some(shape.n_total()),
+            LayerState::Stack(layers) => layers.iter().find_map(|l| l.input_dim()),
+            LayerState::Frozen(inner) => inner.input_dim(),
+            LayerState::Relu | LayerState::Sigmoid => None,
+        }
+    }
+
+    /// Per-row output dimension (last shape-determining layer of a stack).
+    pub fn output_dim(&self) -> Option<usize> {
+        match self {
+            LayerState::Dense { w, .. } => Some(w.shape()[0]),
+            LayerState::TtLinear { shape, .. } => Some(shape.m_total()),
+            LayerState::Stack(layers) => layers.iter().rev().find_map(|l| l.output_dim()),
+            LayerState::Frozen(inner) => inner.output_dim(),
+            LayerState::Relu | LayerState::Sigmoid => None,
+        }
+    }
+
+    /// Total stored scalar count — the exact number of f32 values a
+    /// checkpoint blob of this state holds (unlike `Layer::num_params`,
+    /// frozen parameters count: they still have to be persisted).
+    pub fn num_values(&self) -> usize {
+        match self {
+            LayerState::Dense { w, b } => w.numel() + b.numel(),
+            LayerState::TtLinear { cores, bias, .. } => {
+                cores.iter().map(|c| c.numel()).sum::<usize>() + bias.numel()
+            }
+            LayerState::Stack(layers) => layers.iter().map(|l| l.num_values()).sum(),
+            LayerState::Frozen(inner) => inner.num_values(),
+            LayerState::Relu | LayerState::Sigmoid => 0,
+        }
+    }
+
+    /// Validate internal consistency (core shapes against the recorded
+    /// [`TtShape`], bias lengths against output dims).  `build` performs
+    /// the same checks implicitly; this is the cheap pre-flight used by
+    /// checkpoint loading for early, well-located errors.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            LayerState::Dense { w, b } => {
+                if w.ndim() != 2 || b.ndim() != 1 || b.shape()[0] != w.shape()[0] {
+                    return Err(Error::Checkpoint(format!(
+                        "dense state: w {:?} incompatible with b {:?}",
+                        w.shape(),
+                        b.shape()
+                    )));
+                }
+                Ok(())
+            }
+            LayerState::TtLinear { shape, cores, bias } => {
+                if cores.len() != shape.d() {
+                    return Err(Error::Checkpoint(format!(
+                        "tt state: {} cores for d={}",
+                        cores.len(),
+                        shape.d()
+                    )));
+                }
+                for (k, core) in cores.iter().enumerate() {
+                    if core.shape() != shape.core_shape(k) {
+                        return Err(Error::Checkpoint(format!(
+                            "tt state: core {k} is {:?}, shape says {:?}",
+                            core.shape(),
+                            shape.core_shape(k)
+                        )));
+                    }
+                }
+                if bias.shape() != [shape.m_total()] {
+                    return Err(Error::Checkpoint(format!(
+                        "tt state: bias {:?} for output dim {}",
+                        bias.shape(),
+                        shape.m_total()
+                    )));
+                }
+                Ok(())
+            }
+            LayerState::Stack(layers) => layers.iter().try_for_each(|l| l.validate()),
+            LayerState::Frozen(inner) => inner.validate(),
+            LayerState::Relu | LayerState::Sigmoid => Ok(()),
+        }
+    }
+
+    /// Reconstruct a fresh layer from this state.  The inverse of
+    /// `Layer::export_state`: `state.build()?.export_state()?` is
+    /// bitwise-identical to `state`.
+    pub fn build(self) -> Result<Box<dyn Layer>> {
+        Ok(match self {
+            LayerState::Dense { w, b } => Box::new(Dense::from_weights(w, b)?),
+            LayerState::TtLinear { shape, cores, bias } => {
+                let tt = TtMatrix::from_cores(shape, cores)?;
+                if bias.shape() != [tt.m_total()] {
+                    return Err(Error::Checkpoint(format!(
+                        "tt bias {:?} for output dim {}",
+                        bias.shape(),
+                        tt.m_total()
+                    )));
+                }
+                Box::new(TtLinear::from_tt(tt, bias))
+            }
+            LayerState::Stack(layers) => {
+                let built = layers
+                    .into_iter()
+                    .map(|l| l.build())
+                    .collect::<Result<Vec<_>>>()?;
+                Box::new(Sequential::new(built))
+            }
+            LayerState::Frozen(inner) => Box::new(Frozen(inner.build()?)),
+            LayerState::Relu => Box::new(Relu::new()),
+            LayerState::Sigmoid => Box::new(Sigmoid::new()),
+        })
+    }
+
+    /// The compress half of the paper's train → compress → fine-tune loop:
+    /// walk the tree and TT-SVD every [`Dense`] whose weight matrix is
+    /// `(Πms x Πns)` into a [`TtLinear`] at the given rank cap / relative
+    /// Frobenius tolerance (`tt::ttsvd`).  Non-matching layers (e.g. the
+    /// final classifier head) pass through untouched.  Returns the
+    /// transformed state and how many layers were converted.
+    pub fn compress_dense(
+        self,
+        ms: &[usize],
+        ns: &[usize],
+        max_rank: Option<usize>,
+        eps: f64,
+    ) -> Result<(LayerState, usize)> {
+        let m_total: usize = ms.iter().product();
+        let n_total: usize = ns.iter().product();
+        Ok(match self {
+            LayerState::Dense { w, b } if w.shape() == [m_total, n_total] => {
+                let tt = TtMatrix::from_dense(&w, ms, ns, max_rank, eps)?;
+                (
+                    LayerState::TtLinear {
+                        shape: tt.shape().clone(),
+                        cores: tt.cores().to_vec(),
+                        bias: b,
+                    },
+                    1,
+                )
+            }
+            LayerState::Stack(layers) => {
+                let mut converted = 0;
+                let mut out = Vec::with_capacity(layers.len());
+                for l in layers {
+                    let (s, c) = l.compress_dense(ms, ns, max_rank, eps)?;
+                    converted += c;
+                    out.push(s);
+                }
+                (LayerState::Stack(out), converted)
+            }
+            LayerState::Frozen(inner) => {
+                let (s, c) = inner.compress_dense(ms, ns, max_rank, eps)?;
+                (LayerState::Frozen(Box::new(s)), c)
+            }
+            other => (other, 0),
+        })
+    }
+}
+
+/// Shorthand for the mismatch error every `import_state` impl raises.
+pub(crate) fn import_mismatch(layer: &str, state: &LayerState) -> Error {
+    Error::Checkpoint(format!(
+        "cannot import '{}' state into a {layer} layer",
+        state.kind()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mixed_net(seed: u64) -> Sequential {
+        let mut rng = Rng::new(seed);
+        let shape = TtShape::uniform(&[2, 3], &[3, 2], 2).unwrap();
+        Sequential::new(vec![
+            Box::new(Frozen(Dense::new(6, 6, &mut rng))),
+            Box::new(TtLinear::new(&shape, &mut rng).unwrap()),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(6, 4, &mut rng)),
+            Box::new(Sigmoid::new()),
+        ])
+    }
+
+    #[test]
+    fn export_build_roundtrip_is_bitwise() {
+        let mut net = mixed_net(1);
+        let state = net.export_state().unwrap();
+        assert_eq!(state.kind(), "sequential");
+        assert_eq!(state.input_dim(), Some(6));
+        assert_eq!(state.output_dim(), Some(4));
+        let mut rebuilt = state.build().unwrap();
+        let x = Tensor::randn(&[3, 6], 1.0, &mut Rng::new(2));
+        let want = net.forward(&x, false).unwrap();
+        let got = rebuilt.forward(&x, false).unwrap();
+        assert_eq!(want.data(), got.data(), "rebuilt forward must be bitwise identical");
+        // trainability preserved: frozen stays frozen
+        assert_eq!(rebuilt.num_params(), net.num_params());
+    }
+
+    #[test]
+    fn import_restores_in_place() {
+        let mut a = mixed_net(3);
+        let mut b = mixed_net(4); // same architecture, different weights
+        let x = Tensor::randn(&[2, 6], 1.0, &mut Rng::new(5));
+        let ya = a.forward(&x, false).unwrap();
+        b.import_state(a.export_state().unwrap()).unwrap();
+        let yb = b.forward(&x, false).unwrap();
+        assert_eq!(ya.data(), yb.data());
+    }
+
+    #[test]
+    fn import_rejects_wrong_kind_and_geometry() {
+        let mut rng = Rng::new(6);
+        let mut d = Dense::new(4, 3, &mut rng);
+        assert!(d.import_state(LayerState::Relu).is_err());
+        let other = Dense::new(5, 3, &mut rng).export_state().unwrap();
+        assert!(d.import_state(other).is_err());
+        let mut stack = Sequential::new(vec![Box::new(Relu::new())]);
+        let two = LayerState::Stack(vec![LayerState::Relu, LayerState::Relu]);
+        assert!(stack.import_state(two).is_err());
+    }
+
+    #[test]
+    fn sequential_import_failure_leaves_stack_unchanged() {
+        let mut rng = Rng::new(9);
+        let mut net = Sequential::new(vec![
+            Box::new(Dense::new(4, 4, &mut rng)),
+            Box::new(Dense::new(4, 2, &mut rng)),
+        ]);
+        let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        let before = net.forward(&x, false).unwrap();
+        // layer 0's state matches, layer 1's geometry doesn't: the import
+        // must fail AND roll layer 0 back (Layer contract: unchanged on error)
+        let bad = LayerState::Stack(vec![
+            Dense::new(4, 4, &mut rng).export_state().unwrap(),
+            Dense::new(5, 3, &mut rng).export_state().unwrap(),
+        ]);
+        assert!(net.import_state(bad).is_err());
+        let after = net.forward(&x, false).unwrap();
+        assert_eq!(before.data(), after.data());
+    }
+
+    #[test]
+    fn validate_catches_inconsistent_tt_state() {
+        let shape = TtShape::uniform(&[2, 2], &[2, 2], 2).unwrap();
+        let bad = LayerState::TtLinear {
+            shape: shape.clone(),
+            cores: vec![Tensor::zeros(&[1, 2, 2, 2])], // only one of two cores
+            bias: Tensor::zeros(&[4]),
+        };
+        assert!(bad.validate().is_err());
+        let bad_bias = LayerState::TtLinear {
+            shape: shape.clone(),
+            cores: vec![Tensor::zeros(&[1, 2, 2, 2]), Tensor::zeros(&[2, 2, 2, 1])],
+            bias: Tensor::zeros(&[3]),
+        };
+        assert!(bad_bias.validate().is_err());
+        let good = LayerState::TtLinear {
+            shape,
+            cores: vec![Tensor::zeros(&[1, 2, 2, 2]), Tensor::zeros(&[2, 2, 2, 1])],
+            bias: Tensor::zeros(&[4]),
+        };
+        assert!(good.validate().is_ok());
+    }
+
+    #[test]
+    fn compress_dense_converts_matching_layers_only() {
+        let mut rng = Rng::new(7);
+        let net = Sequential::new(vec![
+            Box::new(Dense::new(16, 16, &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(16, 4, &mut rng)),
+        ]);
+        let state = net.export_state().unwrap();
+        let dense_values = state.num_values();
+        let (tt_state, converted) =
+            state.compress_dense(&[4, 4], &[4, 4], Some(2), 0.0).unwrap();
+        assert_eq!(converted, 1, "only the 16x16 layer matches the modes");
+        assert!(tt_state.num_values() < dense_values);
+        match &tt_state {
+            LayerState::Stack(layers) => {
+                assert_eq!(layers[0].kind(), "tt_linear");
+                assert_eq!(layers[2].kind(), "dense"); // head untouched
+            }
+            other => panic!("expected stack, got {}", other.kind()),
+        }
+        // the compressed net still runs and approximates the original
+        let mut rebuilt = tt_state.build().unwrap();
+        let y = rebuilt.forward(&Tensor::zeros(&[2, 16]), false).unwrap();
+        assert_eq!(y.shape(), &[2, 4]);
+    }
+
+    #[test]
+    fn compress_exact_rank_reproduces_forward() {
+        // uncapped, eps 0: TT-SVD is exact, so forward outputs agree to
+        // numerical precision with the dense parent
+        let mut rng = Rng::new(8);
+        let mut net = Sequential::new(vec![Box::new(Dense::new(16, 16, &mut rng))]);
+        let x = Tensor::randn(&[3, 16], 1.0, &mut rng);
+        let want = net.forward(&x, false).unwrap();
+        let (state, c) = net
+            .export_state()
+            .unwrap()
+            .compress_dense(&[4, 4], &[4, 4], None, 0.0)
+            .unwrap();
+        assert_eq!(c, 1);
+        let got = state.build().unwrap().forward(&x, false).unwrap();
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+}

@@ -51,6 +51,36 @@ impl TrainHistory {
         self.losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN)
     }
 
+    /// Serialize the history for `train --save`'s `history.json`: the
+    /// loss curve, per-epoch summary and wall time, so convergence is
+    /// inspectable after the run instead of vanishing with the process.
+    /// Non-finite values (diverged loss, no-eval NaN) map to JSON null.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert(
+            "losses".to_string(),
+            Json::Arr(
+                self.losses
+                    .iter()
+                    .map(|&(step, loss)| Json::Arr(vec![Json::Num(step as f64), num(loss as f64)]))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "epochs".to_string(),
+            Json::Arr(
+                self.epochs
+                    .iter()
+                    .map(|&(loss, err)| Json::Arr(vec![num(loss as f64), num(err as f64)]))
+                    .collect(),
+            ),
+        );
+        obj.insert("wall_seconds".to_string(), num(self.wall_seconds));
+        Json::Obj(obj)
+    }
+
     /// Mean loss over the first / last `k` recorded steps — used by
     /// convergence assertions.
     pub fn mean_head_tail(&self, k: usize) -> (f32, f32) {
@@ -72,6 +102,18 @@ pub struct EvalReport {
     pub loss: f32,
     pub error: f32, // 1 - accuracy, the paper's metric
     pub n: usize,
+}
+
+impl EvalReport {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let num = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("loss".to_string(), num(self.loss as f64));
+        obj.insert("error".to_string(), num(self.error as f64));
+        obj.insert("n".to_string(), Json::Num(self.n as f64));
+        Json::Obj(obj)
+    }
 }
 
 /// Drives a [`Layer`] (usually a [`crate::nn::Sequential`]) through
@@ -218,6 +260,23 @@ mod tests {
         let rep = Trainer::new(TrainConfig::default()).evaluate(&mut model, &data).unwrap();
         assert_eq!(rep.n, 100);
         assert!(rep.error >= 0.0 && rep.error <= 1.0);
+    }
+
+    #[test]
+    fn history_json_roundtrips_and_nan_becomes_null() {
+        let hist = TrainHistory {
+            losses: vec![(0, 1.5), (1, f32::NAN)],
+            epochs: vec![(0.7, f32::NAN)],
+            wall_seconds: 2.0,
+        };
+        let text = hist.to_json().to_string();
+        let back = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(back.req("wall_seconds").unwrap().as_f64(), Some(2.0));
+        assert_eq!(back.req("losses").unwrap().as_arr().unwrap().len(), 2);
+        assert!(text.contains("null"), "NaN must serialize as null: {text}");
+        let rep = EvalReport { loss: 0.3, error: 0.1, n: 100 };
+        let rj = rep.to_json();
+        assert_eq!(rj.req("n").unwrap().as_usize(), Some(100));
     }
 
     #[test]

@@ -13,8 +13,9 @@
 use crate::error::{shape_err, Error, Result};
 use crate::nn::layer::Layer;
 use crate::nn::optim::{sgd_update, SgdConfig};
+use crate::nn::state::{import_mismatch, LayerState};
 use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
-use crate::tt::{TtMatrix, TtShape};
+use crate::tt::{MatvecScratch, TtMatrix, TtShape};
 use crate::util::rng::Rng;
 
 /// One contraction step's geometry, recorded by forward for backward.
@@ -44,6 +45,9 @@ pub struct TtLinear {
     vel_cores: Vec<Tensor>,
     vel_bias: Tensor,
     cache: Option<FwdCache>,
+    /// eval-path sweep buffers, retained across forwards so a served
+    /// checkpoint model allocates like the zoo's bare-TT hot path
+    scratch: MatvecScratch,
 }
 
 impl TtLinear {
@@ -60,7 +64,16 @@ impl TtLinear {
         let vel_cores = tt.cores().iter().map(|c| Tensor::zeros(c.shape())).collect();
         let grad_bias = Tensor::zeros(bias.shape());
         let vel_bias = Tensor::zeros(bias.shape());
-        TtLinear { tt, bias, grad_cores, grad_bias, vel_cores, vel_bias, cache: None }
+        TtLinear {
+            tt,
+            bias,
+            grad_cores,
+            grad_bias,
+            vel_cores,
+            vel_bias,
+            cache: None,
+            scratch: MatvecScratch::default(),
+        }
     }
 
     pub fn tt(&self) -> &TtMatrix {
@@ -128,8 +141,10 @@ impl Layer for TtLinear {
         if train {
             self.forward_cached(x)
         } else {
-            // inference path: fused pack/unpack sweep, no caching
-            let mut y = self.tt.matvec(x)?;
+            // inference path: fused pack/unpack sweep, no gradient caching;
+            // the retained scratch keeps served checkpoints at one
+            // allocation per forward (the output) in steady state
+            let mut y = self.tt.matvec_with(x, &mut self.scratch)?;
             let bias = self.bias.data();
             for row in y.data_mut().chunks_mut(bias.len()) {
                 for (o, &bb) in row.iter_mut().zip(bias) {
@@ -206,6 +221,36 @@ impl Layer for TtLinear {
             g.data_mut().fill(0.0);
         }
         self.grad_bias.data_mut().fill(0.0);
+    }
+
+    fn export_state(&self) -> Result<LayerState> {
+        Ok(LayerState::TtLinear {
+            shape: self.tt.shape().clone(),
+            cores: self.tt.cores().to_vec(),
+            bias: self.bias.clone(),
+        })
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::TtLinear { shape, cores, bias } if &shape == self.tt.shape() => {
+                let tt = TtMatrix::from_cores(shape, cores)?;
+                if bias.shape() != self.bias.shape() {
+                    return Err(Error::Checkpoint(format!(
+                        "tt import: bias {:?} into {:?}",
+                        bias.shape(),
+                        self.bias.shape()
+                    )));
+                }
+                *self = TtLinear::from_tt(tt, bias);
+                Ok(())
+            }
+            LayerState::TtLinear { shape, .. } => Err(Error::Checkpoint(format!(
+                "tt import: state {shape} into layer {}",
+                self.tt.shape()
+            ))),
+            other => Err(import_mismatch("TtLinear", &other)),
+        }
     }
 }
 
@@ -330,5 +375,30 @@ mod tests {
     fn backward_without_forward_errors() {
         let mut l = make_layer(&[2, 2], &[2, 2], 1, 15);
         assert!(l.backward(&Tensor::zeros(&[1, 4])).is_err());
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_nonuniform_ranks_bitwise() {
+        // TT-SVD yields per-boundary ranks; the state must carry them
+        let w = Tensor::randn(&[24, 24], 1.0, &mut Rng::new(16));
+        let tt = TtMatrix::from_dense(&w, &[2, 3, 4], &[4, 3, 2], None, 1e-3).unwrap();
+        let ranks = tt.shape().ranks().to_vec();
+        let mut l = TtLinear::from_tt(tt, Tensor::randn(&[24], 0.1, &mut Rng::new(17)));
+        let mut rebuilt = l.export_state().unwrap().build().unwrap();
+        match rebuilt.export_state().unwrap() {
+            LayerState::TtLinear { shape, .. } => assert_eq!(shape.ranks(), &ranks[..]),
+            other => panic!("expected tt state, got {}", other.kind()),
+        }
+        let x = Tensor::randn(&[3, 24], 1.0, &mut Rng::new(18));
+        let want = l.forward(&x, false).unwrap();
+        let got = rebuilt.forward(&x, false).unwrap();
+        assert_eq!(want.data(), got.data());
+    }
+
+    #[test]
+    fn import_rejects_rank_mismatch() {
+        let mut l = make_layer(&[2, 2], &[2, 2], 2, 19);
+        let other = make_layer(&[2, 2], &[2, 2], 1, 20).export_state().unwrap();
+        assert!(l.import_state(other).is_err());
     }
 }

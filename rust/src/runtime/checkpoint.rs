@@ -1,0 +1,577 @@
+//! Native checkpoints: persist any [`Layer`] to disk and restore it —
+//! the subsystem that turns train / compress / serve into one lifecycle.
+//!
+//! A checkpoint directory holds three files:
+//!
+//! ```text
+//! <dir>/checkpoint.json      versioned header + the LayerState tree
+//!                            (layer kinds, TT modes/ranks, tensor names)
+//! <dir>/manifest.json        artifact-convention manifest (same schema as
+//!                            python/compile/aot.py emits) describing the
+//!                            weight blob layout — readable by `Manifest`
+//! <dir>/model.weights.bin    little-endian f32 blob, offsets per layout
+//! ```
+//!
+//! The blob and its layout deliberately reuse the existing [`Manifest`]
+//! weight-group conventions (`(name, shape, offset, len)`, LE f32, one
+//! file per group): loading goes through `Manifest::load_weights`, so the
+//! artifact reader and the checkpoint writer are provably inverse — and
+//! `tensornet inspect --artifacts <ckpt>` works on checkpoints for free.
+//!
+//! `checkpoint.json` is the part the AOT manifests don't have: a `format`
+//! tag + `version` (loads reject anything else), the model structure as a
+//! [`LayerState`] tree with tensors referenced by name, and the I/O dims
+//! so a serving registry can admit requests without materializing the
+//! model ([`Checkpoint::peek`]).
+
+use crate::error::{Error, Result};
+use crate::nn::{Layer, LayerState};
+use crate::runtime::artifact::Manifest;
+use crate::tensor::Tensor;
+use crate::tt::TtShape;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// The header file inside a checkpoint directory.
+pub const CHECKPOINT_FILE: &str = "checkpoint.json";
+/// Format tag — rejects non-checkpoint json that happens to parse.
+pub const FORMAT: &str = "tensornet.checkpoint";
+/// On-disk format version this build reads and writes.
+pub const VERSION: u64 = 1;
+/// Weight-group name / blob file used by checkpoints.
+const GROUP: &str = "model";
+const BLOB_FILE: &str = "model.weights.bin";
+
+/// Cheap header facts — everything a registry needs before build time.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckpointInfo {
+    pub input_dim: usize,
+    pub output_dim: usize,
+    /// stored f32 count (blob bytes / 4) — the compression denominator
+    pub num_values: usize,
+}
+
+/// A loaded checkpoint: the state tree plus its header facts.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub dir: PathBuf,
+    pub state: LayerState,
+    pub info: CheckpointInfo,
+}
+
+impl Checkpoint {
+    /// Persist a layer: `save(dir, &net)` = `save_state(dir, &export)`.
+    pub fn save(dir: impl AsRef<Path>, layer: &dyn Layer) -> Result<()> {
+        Checkpoint::save_state(dir, &layer.export_state()?)
+    }
+
+    /// Write `checkpoint.json` + `manifest.json` + the weight blob.
+    /// The directory is created if needed; existing files are replaced.
+    pub fn save_state(dir: impl AsRef<Path>, state: &LayerState) -> Result<()> {
+        let dir = dir.as_ref();
+        state.validate()?;
+        let (input_dim, output_dim) = io_dims(state)?;
+
+        let mut blob = BlobBuilder::default();
+        let model = state_to_json(state, GROUP, &mut blob);
+
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::Checkpoint(format!("creating {}: {e}", dir.display())))?;
+        blob.write_files(dir, 0, GROUP, BLOB_FILE)?;
+
+        let mut header = BTreeMap::new();
+        header.insert("format".to_string(), Json::Str(FORMAT.into()));
+        header.insert("version".to_string(), Json::Num(VERSION as f64));
+        header.insert("input_dim".to_string(), Json::Num(input_dim as f64));
+        header.insert("output_dim".to_string(), Json::Num(output_dim as f64));
+        header.insert("num_values".to_string(), Json::Num(blob.data.len() as f64));
+        header.insert("weight_group".to_string(), Json::Str(GROUP.into()));
+        header.insert("model".to_string(), model);
+        write_text(&dir.join(CHECKPOINT_FILE), &Json::Obj(header).to_string())
+    }
+
+    /// Read the header only — no blob I/O, no model construction.
+    pub fn peek(dir: impl AsRef<Path>) -> Result<CheckpointInfo> {
+        let header = read_header(dir.as_ref())?;
+        Ok(CheckpointInfo {
+            input_dim: req_usize(&header, "input_dim")?,
+            output_dim: req_usize(&header, "output_dim")?,
+            num_values: req_usize(&header, "num_values")?,
+        })
+    }
+
+    /// Load a checkpoint: validate the header, read the blob through the
+    /// artifact [`Manifest`] machinery, and reassemble the state tree.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Checkpoint> {
+        let dir = dir.as_ref();
+        let header = read_header(dir)?;
+        let info = CheckpointInfo {
+            input_dim: req_usize(&header, "input_dim")?,
+            output_dim: req_usize(&header, "output_dim")?,
+            num_values: req_usize(&header, "num_values")?,
+        };
+        let group = header
+            .req("weight_group")?
+            .as_str()
+            .ok_or_else(|| Error::Checkpoint("bad 'weight_group'".into()))?;
+        let manifest = Manifest::load(dir)?;
+        let mut tensors = manifest.load_weights(group)?;
+        let state = state_from_json(header.req("model")?, &mut tensors)?;
+        state.validate()?;
+        let (input_dim, output_dim) = io_dims(&state)?;
+        if input_dim != info.input_dim || output_dim != info.output_dim {
+            return Err(Error::Checkpoint(format!(
+                "header says {}x{} but the model tree is {}x{}",
+                info.input_dim, info.output_dim, input_dim, output_dim
+            )));
+        }
+        // num_values feeds compression-ratio reporting — a tampered header
+        // must not silently skew it
+        if state.num_values() != info.num_values {
+            return Err(Error::Checkpoint(format!(
+                "header says {} stored values but the model tree holds {}",
+                info.num_values,
+                state.num_values()
+            )));
+        }
+        Ok(Checkpoint { dir: dir.to_path_buf(), state, info })
+    }
+
+    /// Rebuild the model (`LayerState::build`).
+    pub fn build(self) -> Result<Box<dyn Layer>> {
+        self.state.build()
+    }
+
+    /// Whether `dir` looks like a checkpoint (has the header file).
+    pub fn exists(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join(CHECKPOINT_FILE).is_file()
+    }
+}
+
+/// Write named tensors as an artifact-convention weight group: a
+/// `manifest.json` (no artifacts, one weight group) plus a little-endian
+/// f32 blob, exactly the files `Manifest::load` + `load_weights` read.
+/// This is the reusable half of the checkpoint writer — callers that only
+/// need Manifest-compatible tensors (tests, artifact tooling) use it
+/// directly.
+pub fn write_weight_group(
+    dir: impl AsRef<Path>,
+    seed: u64,
+    group: &str,
+    file: &str,
+    tensors: &[(String, Tensor)],
+) -> Result<()> {
+    let mut blob = BlobBuilder::default();
+    for (name, t) in tensors {
+        blob.push(name, t);
+    }
+    std::fs::create_dir_all(dir.as_ref())
+        .map_err(|e| Error::Checkpoint(format!("creating {}: {e}", dir.as_ref().display())))?;
+    blob.write_files(dir.as_ref(), seed, group, file)
+}
+
+// ---------------------------------------------------------------------------
+// blob + manifest writing
+// ---------------------------------------------------------------------------
+
+/// Accumulates tensors into one flat buffer with a Manifest-style layout.
+#[derive(Default)]
+struct BlobBuilder {
+    /// `(name, shape, offset_elems, len_elems)` — the `WeightGroup` layout
+    layout: Vec<(String, Vec<usize>, usize, usize)>,
+    data: Vec<f32>,
+}
+
+impl BlobBuilder {
+    /// Append a tensor under `name` at the next free offset.
+    fn push(&mut self, name: &str, t: &Tensor) {
+        let offset = self.data.len();
+        self.data.extend_from_slice(t.data());
+        self.layout.push((name.to_string(), t.shape().to_vec(), offset, t.numel()));
+    }
+
+    /// Emit `<dir>/<file>` (LE f32) and `<dir>/manifest.json`.
+    fn write_files(&self, dir: &Path, seed: u64, group: &str, file: &str) -> Result<()> {
+        let blob_path = dir.join(file);
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut f = std::fs::File::create(&blob_path)
+            .map_err(|e| Error::Checkpoint(format!("creating {}: {e}", blob_path.display())))?;
+        f.write_all(&bytes)
+            .map_err(|e| Error::Checkpoint(format!("writing {}: {e}", blob_path.display())))?;
+
+        let layout: Vec<Json> = self
+            .layout
+            .iter()
+            .map(|(name, shape, offset, len)| {
+                let mut e = BTreeMap::new();
+                e.insert("name".to_string(), Json::Str(name.clone()));
+                e.insert(
+                    "shape".to_string(),
+                    Json::Arr(shape.iter().map(|&s| Json::Num(s as f64)).collect()),
+                );
+                e.insert("offset".to_string(), Json::Num(*offset as f64));
+                e.insert("len".to_string(), Json::Num(*len as f64));
+                Json::Obj(e)
+            })
+            .collect();
+        let mut g = BTreeMap::new();
+        g.insert("file".to_string(), Json::Str(file.into()));
+        g.insert("layout".to_string(), Json::Arr(layout));
+        let mut groups = BTreeMap::new();
+        groups.insert(group.to_string(), Json::Obj(g));
+        let mut manifest = BTreeMap::new();
+        manifest.insert("seed".to_string(), Json::Num(seed as f64));
+        manifest.insert("artifacts".to_string(), Json::Arr(vec![]));
+        manifest.insert("weight_groups".to_string(), Json::Obj(groups));
+        write_text(&dir.join("manifest.json"), &Json::Obj(manifest).to_string())
+    }
+}
+
+fn write_text(path: &Path, text: &str) -> Result<()> {
+    std::fs::write(path, text)
+        .map_err(|e| Error::Checkpoint(format!("writing {}: {e}", path.display())))
+}
+
+// ---------------------------------------------------------------------------
+// state tree <-> json
+// ---------------------------------------------------------------------------
+
+/// Serialize the state tree, pushing tensors into `blob` and referencing
+/// them by name.  `prefix` is the dotted path of this node ("model",
+/// "model.0", "model.1.inner", ...).
+fn state_to_json(state: &LayerState, prefix: &str, blob: &mut BlobBuilder) -> Json {
+    let mut node = BTreeMap::new();
+    node.insert("kind".to_string(), Json::Str(state.kind().into()));
+    match state {
+        LayerState::Dense { w, b } => {
+            let (wn, bn) = (format!("{prefix}.w"), format!("{prefix}.b"));
+            blob.push(&wn, w);
+            blob.push(&bn, b);
+            node.insert("w".to_string(), Json::Str(wn));
+            node.insert("b".to_string(), Json::Str(bn));
+        }
+        LayerState::TtLinear { shape, cores, bias } => {
+            node.insert("ms".to_string(), usize_arr(shape.ms()));
+            node.insert("ns".to_string(), usize_arr(shape.ns()));
+            node.insert("ranks".to_string(), usize_arr(shape.ranks()));
+            let mut names = Vec::with_capacity(cores.len());
+            for (k, core) in cores.iter().enumerate() {
+                let cn = format!("{prefix}.core{k}");
+                blob.push(&cn, core);
+                names.push(Json::Str(cn));
+            }
+            node.insert("cores".to_string(), Json::Arr(names));
+            let bn = format!("{prefix}.bias");
+            blob.push(&bn, bias);
+            node.insert("bias".to_string(), Json::Str(bn));
+        }
+        LayerState::Stack(layers) => {
+            let children: Vec<Json> = layers
+                .iter()
+                .enumerate()
+                .map(|(i, l)| state_to_json(l, &format!("{prefix}.{i}"), blob))
+                .collect();
+            node.insert("layers".to_string(), Json::Arr(children));
+        }
+        LayerState::Frozen(inner) => {
+            node.insert(
+                "inner".to_string(),
+                state_to_json(inner, &format!("{prefix}.inner"), blob),
+            );
+        }
+        LayerState::Relu | LayerState::Sigmoid => {}
+    }
+    Json::Obj(node)
+}
+
+/// Inverse of [`state_to_json`]: tensors move out of the loaded map.
+fn state_from_json(j: &Json, tensors: &mut BTreeMap<String, Tensor>) -> Result<LayerState> {
+    let kind = j
+        .req("kind")?
+        .as_str()
+        .ok_or_else(|| Error::Checkpoint("layer 'kind' not a string".into()))?
+        .to_string();
+    match kind.as_str() {
+        "dense" => Ok(LayerState::Dense {
+            w: take_tensor(j.req("w")?, tensors)?,
+            b: take_tensor(j.req("b")?, tensors)?,
+        }),
+        "tt_linear" => {
+            let ms = usize_list(j.req("ms")?)?;
+            let ns = usize_list(j.req("ns")?)?;
+            let ranks = usize_list(j.req("ranks")?)?;
+            let shape = TtShape::new(&ms, &ns, &ranks)?;
+            let cores = j
+                .req("cores")?
+                .as_arr()
+                .ok_or_else(|| Error::Checkpoint("'cores' not an array".into()))?
+                .iter()
+                .map(|n| take_tensor(n, tensors))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(LayerState::TtLinear { shape, cores, bias: take_tensor(j.req("bias")?, tensors)? })
+        }
+        "sequential" => Ok(LayerState::Stack(
+            j.req("layers")?
+                .as_arr()
+                .ok_or_else(|| Error::Checkpoint("'layers' not an array".into()))?
+                .iter()
+                .map(|c| state_from_json(c, tensors))
+                .collect::<Result<Vec<_>>>()?,
+        )),
+        "frozen" => Ok(LayerState::Frozen(Box::new(state_from_json(
+            j.req("inner")?,
+            tensors,
+        )?))),
+        "relu" => Ok(LayerState::Relu),
+        "sigmoid" => Ok(LayerState::Sigmoid),
+        other => Err(Error::Checkpoint(format!("unknown layer kind '{other}'"))),
+    }
+}
+
+fn take_tensor(name: &Json, tensors: &mut BTreeMap<String, Tensor>) -> Result<Tensor> {
+    let name = name
+        .as_str()
+        .ok_or_else(|| Error::Checkpoint("tensor reference not a string".into()))?;
+    tensors
+        .remove(name)
+        .ok_or_else(|| Error::Checkpoint(format!("tensor '{name}' missing from the weight blob")))
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn usize_list(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| Error::Checkpoint("expected an integer array".into()))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| Error::Checkpoint("bad integer entry".into())))
+        .collect()
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| Error::Checkpoint(format!("bad '{key}' in checkpoint header")))
+}
+
+/// Parse + validate `<dir>/checkpoint.json` (format tag, version).
+fn read_header(dir: &Path) -> Result<Json> {
+    let path = dir.join(CHECKPOINT_FILE);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| Error::Checkpoint(format!("reading {}: {e}", path.display())))?;
+    let header = Json::parse(&text)?;
+    match header.get("format").and_then(|f| f.as_str()) {
+        Some(f) if f == FORMAT => {}
+        Some(f) => {
+            return Err(Error::Checkpoint(format!(
+                "{} has format '{f}', expected '{FORMAT}'",
+                path.display()
+            )))
+        }
+        None => {
+            return Err(Error::Checkpoint(format!(
+                "{} is not a tensornet checkpoint (no 'format' tag)",
+                path.display()
+            )))
+        }
+    }
+    let version = req_usize(&header, "version")? as u64;
+    if version != VERSION {
+        return Err(Error::Checkpoint(format!(
+            "checkpoint version {version} not supported (this build reads {VERSION})"
+        )));
+    }
+    Ok(header)
+}
+
+/// First/last shape-determining dims of the tree; a model whose boundary
+/// layers are all shape-polymorphic (pure activations) can't be served and
+/// is rejected at save time.
+fn io_dims(state: &LayerState) -> Result<(usize, usize)> {
+    match (state.input_dim(), state.output_dim()) {
+        (Some(i), Some(o)) => Ok((i, o)),
+        _ => Err(Error::Checkpoint(
+            "model has no parametric layer to determine I/O dims".into(),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Dense, Frozen, Relu, Sequential, Sigmoid, TtLinear};
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tensornet_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn mixed_net(seed: u64) -> Sequential {
+        let mut rng = Rng::new(seed);
+        let shape = TtShape::uniform(&[2, 3], &[3, 2], 2).unwrap();
+        Sequential::new(vec![
+            Box::new(Frozen(Dense::new(6, 6, &mut rng))),
+            Box::new(TtLinear::new(&shape, &mut rng).unwrap()),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(6, 4, &mut rng)),
+            Box::new(Sigmoid::new()),
+        ])
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_bitwise() {
+        let dir = tmpdir("roundtrip");
+        let mut net = mixed_net(1);
+        Checkpoint::save(&dir, &net).unwrap();
+
+        let ck = Checkpoint::load(&dir).unwrap();
+        assert_eq!(ck.info.input_dim, 6);
+        assert_eq!(ck.info.output_dim, 4);
+        assert_eq!(ck.info.num_values, net.export_state().unwrap().num_values());
+
+        let mut rebuilt = ck.build().unwrap();
+        let x = Tensor::randn(&[3, 6], 1.0, &mut Rng::new(2));
+        let want = net.forward(&x, false).unwrap();
+        let got = rebuilt.forward(&x, false).unwrap();
+        assert_eq!(want.data(), got.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn peek_reads_header_without_blob() {
+        let dir = tmpdir("peek");
+        Checkpoint::save(&dir, &mixed_net(2)).unwrap();
+        // delete the blob: peek must still work, load must fail
+        std::fs::remove_file(dir.join(BLOB_FILE)).unwrap();
+        let info = Checkpoint::peek(&dir).unwrap();
+        assert_eq!((info.input_dim, info.output_dim), (6, 4));
+        assert!(Checkpoint::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn blob_follows_manifest_conventions() {
+        // the existing artifact reader must round-trip checkpoint tensors
+        let dir = tmpdir("manifest_conv");
+        let net = mixed_net(3);
+        Checkpoint::save(&dir, &net).unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let weights = manifest.load_weights(GROUP).unwrap();
+        // the frozen dense layer's weight is stored under its tree path
+        let w = &weights["model.0.inner.w"];
+        match net.layers()[0].export_state().unwrap() {
+            LayerState::Frozen(inner) => match *inner {
+                LayerState::Dense { w: want, .. } => assert_eq!(w.data(), want.data()),
+                other => panic!("expected dense, got {}", other.kind()),
+            },
+            other => panic!("expected frozen, got {}", other.kind()),
+        }
+        // TT cores land too
+        assert!(weights.contains_key("model.1.core0"));
+        assert!(weights.contains_key("model.1.bias"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_weight_group_roundtrips_through_manifest() {
+        let dir = tmpdir("wg");
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[7], 1.0, &mut rng);
+        write_weight_group(
+            &dir,
+            42,
+            "params",
+            "params.weights.bin",
+            &[("a".into(), a.clone()), ("b".into(), b.clone())],
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.seed, 42);
+        let w = m.load_weights("params").unwrap();
+        assert_eq!(w["a"].data(), a.data());
+        assert_eq!(w["a"].shape(), a.shape());
+        assert_eq!(w["b"].data(), b.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let dir = tmpdir("version");
+        Checkpoint::save(&dir, &mixed_net(5)).unwrap();
+        let path = dir.join(CHECKPOINT_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"version\":1", "\"version\":999")).unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("version 999"), "{msg}");
+        assert!(Checkpoint::peek(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tampered_num_values_is_rejected() {
+        let dir = tmpdir("numvalues");
+        Checkpoint::save(&dir, &mixed_net(9)).unwrap();
+        let path = dir.join(CHECKPOINT_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let values = mixed_net(9).export_state().unwrap().num_values();
+        std::fs::write(
+            &path,
+            text.replace(&format!("\"num_values\":{values}"), "\"num_values\":1"),
+        )
+        .unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err();
+        assert!(format!("{err}").contains("stored values"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn foreign_json_is_rejected() {
+        let dir = tmpdir("format");
+        std::fs::write(dir.join(CHECKPOINT_FILE), r#"{"version": 1, "model": {}}"#).unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err();
+        assert!(format!("{err}").contains("not a tensornet checkpoint"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_blob_is_rejected() {
+        let dir = tmpdir("truncated");
+        Checkpoint::save(&dir, &mixed_net(6)).unwrap();
+        let blob = dir.join(BLOB_FILE);
+        let bytes = std::fs::read(&blob).unwrap();
+        std::fs::write(&blob, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_reference_is_rejected() {
+        let dir = tmpdir("missing_ref");
+        Checkpoint::save(&dir, &mixed_net(7)).unwrap();
+        let path = dir.join(CHECKPOINT_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("model.1.bias", "model.1.ghost")).unwrap();
+        let err = Checkpoint::load(&dir).unwrap_err();
+        assert!(format!("{err}").contains("missing from the weight blob"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pure_activation_model_is_rejected_at_save() {
+        let dir = tmpdir("activations_only");
+        let net = Sequential::new(vec![Box::new(Relu::new())]);
+        assert!(Checkpoint::save(&dir, &net).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

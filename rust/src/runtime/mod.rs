@@ -1,7 +1,10 @@
 //! PJRT runtime (S7 in DESIGN.md): load the AOT HLO-text artifacts emitted
 //! by `python/compile/aot.py`, validate them against their weight blobs,
 //! and — in a full build — compile them on the PJRT CPU client and execute
-//! from the serving hot path.
+//! from the serving hot path.  Alongside the AOT reader lives the *native*
+//! checkpoint subsystem ([`Checkpoint`], S11 in DESIGN.md): versioned
+//! save/load of any trained model through the same weight-blob
+//! conventions, closing the train → compress → serve lifecycle.
 //!
 //! OFFLINE GATING: the `xla` PJRT bindings cannot be vendored into this
 //! std-only build, so the device half is stubbed (see `executable.rs`) —
@@ -15,9 +18,13 @@
 //! owns the registry (see `coordinator::worker`).
 
 mod artifact;
+mod checkpoint;
 mod executable;
 
 pub use artifact::{ArtifactSpec, InputSource, InputSpec, IoSpec, Manifest, WeightGroup};
+pub use checkpoint::{
+    write_weight_group, Checkpoint, CheckpointInfo, CHECKPOINT_FILE, FORMAT, VERSION,
+};
 pub use executable::{CompiledModel, PjrtClient, RuntimeInput, PJRT_UNAVAILABLE};
 
 use crate::error::Result;

@@ -1,0 +1,221 @@
+//! End-to-end lifecycle: train → save → compress (TT-SVD) → fine-tune →
+//! load → serve.  This is the acceptance test of the checkpoint subsystem:
+//! a trained-then-compressed model served through the native executor pool
+//! must return outputs bitwise-identical to the same model run in-process,
+//! and the TT checkpoint's on-disk size must reflect the TT compression
+//! ratio vs. its dense parent.
+
+use std::path::PathBuf;
+use tensornet::coordinator::{BatchPolicy, ModelRegistry, NativeExecutor, Server, ServerConfig};
+use tensornet::data::Dataset;
+use tensornet::nn::{Dense, Layer, Relu, Sequential, SgdConfig, TrainConfig, Trainer};
+use tensornet::runtime::Checkpoint;
+use tensornet::tensor::Tensor;
+use tensornet::util::rng::Rng;
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tensornet_lifecycle_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Tiny 4-class task over 16 features with class-dependent means —
+/// learnable by a 16x16 net in a couple of epochs.
+fn toy_data(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(n * 16);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let class = i % 4;
+        for j in 0..16 {
+            let mean = if j % 4 == class { 1.0f32 } else { -0.25 };
+            data.push(mean + rng.normal_f32(0.4));
+        }
+        labels.push(class);
+    }
+    Dataset::new(Tensor::from_vec(&[n, 16], data).unwrap(), labels, 4).unwrap()
+}
+
+fn fresh_net(seed: u64) -> Sequential {
+    let mut rng = Rng::new(seed);
+    Sequential::new(vec![
+        Box::new(Dense::new(16, 16, &mut rng)),
+        Box::new(Relu::new()),
+        Box::new(Dense::new(16, 4, &mut rng)),
+    ])
+}
+
+fn blob_bytes(dir: &std::path::Path) -> u64 {
+    std::fs::metadata(dir.join("model.weights.bin")).unwrap().len()
+}
+
+#[test]
+fn train_save_compress_finetune_serve_roundtrip() {
+    let root = tmpdir("full");
+    let dense_dir = root.join("dense");
+    let tt_dir = root.join("tt");
+
+    // -- train a dense model ------------------------------------------------
+    let train = toy_data(256, 1);
+    let test = toy_data(64, 2);
+    let trainer = Trainer::new(TrainConfig {
+        epochs: 3,
+        batch_size: 16,
+        sgd: SgdConfig::with_lr(0.05),
+        ..Default::default()
+    });
+    let mut net = fresh_net(3);
+    trainer.fit(&mut net, &train, None).unwrap();
+    let dense_eval = trainer.evaluate(&mut net, &test).unwrap();
+    Checkpoint::save(&dense_dir, &net).unwrap();
+
+    // -- compress: TT-SVD the 16x16 layer at full rank (exact) --------------
+    let ck = Checkpoint::load(&dense_dir).unwrap();
+    let dense_values = ck.info.num_values;
+    let (tt_state, converted) = ck.state.compress_dense(&[4, 4], &[4, 4], Some(3), 0.0).unwrap();
+    assert_eq!(converted, 1);
+    Checkpoint::save_state(&tt_dir, &tt_state).unwrap();
+
+    // on-disk size reflects the compression ratio: both blobs are exactly
+    // 4 bytes per stored value, and TT stores fewer values
+    let tt_values = tt_state.num_values();
+    assert_eq!(blob_bytes(&dense_dir), 4 * dense_values as u64);
+    assert_eq!(blob_bytes(&tt_dir), 4 * tt_values as u64);
+    assert!(
+        tt_values < dense_values,
+        "TT checkpoint ({tt_values} values) must undercut dense ({dense_values})"
+    );
+
+    // -- fine-tune the compressed model (closes the §5 loop) ----------------
+    let mut tt_net = Checkpoint::load(&tt_dir).unwrap().build().unwrap();
+    let before = trainer.evaluate(&mut tt_net, &test).unwrap();
+    trainer.fit(&mut tt_net, &train, None).unwrap();
+    let after = trainer.evaluate(&mut tt_net, &test).unwrap();
+    assert!(
+        after.loss <= before.loss + 0.05,
+        "fine-tuning must not blow up the loss: {} -> {}",
+        before.loss,
+        after.loss
+    );
+    // rank-3 truncation of a trained 16x16 layer stays in the same
+    // accuracy regime as its dense parent after fine-tuning
+    assert!(after.error <= dense_eval.error + 0.25, "{} vs {}", after.error, dense_eval.error);
+    let tuned_dir = root.join("tt_tuned");
+    Checkpoint::save(&tuned_dir, &*tt_net).unwrap();
+
+    // -- serve all three through the executor pool --------------------------
+    let registry = ModelRegistry::from_dir(&root).unwrap();
+    assert_eq!(registry.names(), vec!["dense", "tt", "tt_tuned"]);
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) },
+        executor_threads: 2,
+        ..Default::default()
+    };
+    let reg = registry.clone();
+    let server = Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone()))).unwrap();
+
+    // oracle: the in-process fine-tuned model, row by row (batch 1 == the
+    // batch the sequential blocking client forms)
+    let mut rng = Rng::new(9);
+    for _ in 0..12 {
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(1.0)).collect();
+        let want = tt_net
+            .forward(&Tensor::from_vec(&[1, 16], x.clone()).unwrap(), false)
+            .unwrap();
+        let resp = server.infer("tt_tuned", x).unwrap();
+        assert_eq!(
+            resp.output,
+            want.data(),
+            "served output must be bitwise-identical to the in-process model"
+        );
+    }
+    // the dense parent serves too, from the same registry
+    let resp = server.infer("dense", vec![0.5; 16]).unwrap();
+    assert_eq!(resp.output.len(), 4);
+    server.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn served_batches_match_in_process_batches_bitwise() {
+    // concurrent clients => multi-row batches on the executor; every row
+    // must still match the in-process forward of that row (row-independent
+    // GEMM), which is what makes batching transparent to callers
+    let root = tmpdir("batched");
+    let mut net = fresh_net(11);
+    let (state, _) = net
+        .export_state()
+        .unwrap()
+        .compress_dense(&[4, 4], &[4, 4], None, 0.0)
+        .unwrap();
+    Checkpoint::save_state(root.join("m"), &state).unwrap();
+    let mut oracle = Checkpoint::load(root.join("m")).unwrap().build().unwrap();
+
+    let registry = ModelRegistry::from_dir(&root).unwrap();
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(10) },
+        executor_threads: 2,
+        ..Default::default()
+    };
+    let reg = registry.clone();
+    let server = std::sync::Arc::new(
+        Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone()))).unwrap(),
+    );
+    let mut handles = Vec::new();
+    for c in 0..8u64 {
+        let server = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + c);
+            let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(1.0)).collect();
+            let resp = server.infer("m", x.clone()).unwrap();
+            (x, resp.output)
+        }));
+    }
+    for h in handles {
+        let (x, served) = h.join().unwrap();
+        let want = oracle
+            .forward(&Tensor::from_vec(&[1, 16], x).unwrap(), false)
+            .unwrap();
+        assert_eq!(served, want.data());
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn registry_from_dir_unknown_model_lists_checkpoints() {
+    let root = tmpdir("names");
+    Checkpoint::save(root.join("alpha"), &fresh_net(21)).unwrap();
+    Checkpoint::save(root.join("beta"), &fresh_net(22)).unwrap();
+    let registry = ModelRegistry::from_dir(&root).unwrap();
+    let err = registry.input_dim("gamma").unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("unknown model 'gamma'"), "{msg}");
+    assert!(msg.contains("alpha") && msg.contains("beta"), "{msg}");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn corrupt_checkpoint_fails_requests_but_not_the_pool() {
+    // a registry entry whose blob is truncated after registration: its
+    // requests error with a checkpoint message, siblings keep serving
+    let root = tmpdir("corrupt");
+    Checkpoint::save(root.join("good"), &fresh_net(31)).unwrap();
+    Checkpoint::save(root.join("bad"), &fresh_net(32)).unwrap();
+    let blob = root.join("bad").join("model.weights.bin");
+    let bytes = std::fs::read(&blob).unwrap();
+    std::fs::write(&blob, &bytes[..8]).unwrap();
+
+    let registry = ModelRegistry::from_dir(&root).unwrap(); // peek only reads headers
+    let reg = registry.clone();
+    let server =
+        Server::start(ServerConfig::default(), move || Ok(NativeExecutor::new(reg.clone())))
+            .unwrap();
+    let err = server.infer("bad", vec![0.0; 16]).unwrap_err();
+    assert!(format!("{err}").contains("checkpoint") || format!("{err}").contains("weight"));
+    let ok = server.infer("good", vec![0.0; 16]).unwrap();
+    assert_eq!(ok.output.len(), 4);
+    server.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -4,6 +4,8 @@
 
 use tensornet::coordinator::{choose_variant, BatchAssembler, BatchPolicy};
 use tensornet::linalg::{qr_mat, svd_mat, Mat};
+use tensornet::nn::{Layer, LayerState, TtLinear};
+use tensornet::runtime::Checkpoint;
 use tensornet::tensor::{matmul, matmul_bt, Tensor};
 use tensornet::tt::{TtMatrix, TtShape, TtVector};
 use tensornet::util::json::Json;
@@ -210,6 +212,75 @@ fn prop_ttvector_roundtrip() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint round-trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_checkpoint_roundtrip_bitwise_for_random_tt_shapes() {
+    // save -> load must be the identity on cores and bias, bitwise, for
+    // arbitrary mode factorizations and (possibly non-uniform) ranks
+    let dir = std::env::temp_dir()
+        .join(format!("tensornet_prop_ckpt_{}", std::process::id()));
+    check(cfg(25), "ckpt-roundtrip", |rng| {
+        let d = gen::int(rng, 1, 4);
+        let ms = gen::modes(rng, d, 1, 4, 64);
+        let ns = gen::modes(rng, d, 1, 4, 64);
+        let r = gen::int(rng, 1, 4);
+        let shape = TtShape::uniform(&ms, &ns, r).map_err(|e| e.to_string())?;
+        let layer = TtLinear::new(&shape, rng).map_err(|e| e.to_string())?;
+        Checkpoint::save(&dir, &layer).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&dir).map_err(|e| e.to_string())?;
+        match (&back.state, &layer.export_state().map_err(|e| e.to_string())?) {
+            (
+                LayerState::TtLinear { shape: s2, cores: c2, bias: b2 },
+                LayerState::TtLinear { shape: s1, cores: c1, bias: b1 },
+            ) => {
+                if s1 != s2 {
+                    return Err(format!("shape changed: {s1} -> {s2}"));
+                }
+                for (k, (a, b)) in c1.iter().zip(c2).enumerate() {
+                    if a.data() != b.data() || a.shape() != b.shape() {
+                        return Err(format!("core {k} not bitwise-identical"));
+                    }
+                }
+                if b1.data() != b2.data() {
+                    return Err("bias not bitwise-identical".into());
+                }
+            }
+            _ => return Err("state kind changed across the roundtrip".into()),
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_checkpoint_rejects_random_truncations() {
+    // any strict prefix of the blob must fail the load, never panic or
+    // hand back a silently-short tensor
+    let dir = std::env::temp_dir()
+        .join(format!("tensornet_prop_trunc_{}", std::process::id()));
+    check(cfg(20), "ckpt-truncation", |rng| {
+        let d = gen::int(rng, 1, 3);
+        let ms = gen::modes(rng, d, 1, 4, 32);
+        let ns = gen::modes(rng, d, 1, 4, 32);
+        let shape =
+            TtShape::uniform(&ms, &ns, gen::int(rng, 1, 3)).map_err(|e| e.to_string())?;
+        let layer = TtLinear::new(&shape, rng).map_err(|e| e.to_string())?;
+        Checkpoint::save(&dir, &layer).map_err(|e| e.to_string())?;
+        let blob = dir.join("model.weights.bin");
+        let bytes = std::fs::read(&blob).map_err(|e| e.to_string())?;
+        let cut = gen::int(rng, 0, bytes.len().saturating_sub(1));
+        std::fs::write(&blob, &bytes[..cut]).map_err(|e| e.to_string())?;
+        if Checkpoint::load(&dir).is_ok() {
+            return Err(format!("load succeeded on a blob cut to {cut}/{} bytes", bytes.len()));
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 // ---------------------------------------------------------------------------
