@@ -1,56 +1,78 @@
-//! Serving demo (Table 3's serving framing): run the TT-layer and the
-//! dense baseline behind the dynamic batcher, fire a concurrent workload,
-//! and report latency/throughput per model.
-//!
-//! With AOT artifacts present this serves them through `PjrtExecutor`;
-//! without (the offline build), it falls back to the native backend —
-//! the same models, executed in-process — so the demo always runs:
+//! Serving demo (Table 3's serving framing) — over the network path
+//! users actually run: spawn the native server with a TCP front-end on a
+//! loopback port, then drive it through `Client` connections speaking
+//! the binary wire protocol (DESIGN.md §12), per model:
 //!
 //! ```bash
-//! cargo run --release --example serve_tt -- [requests] [clients] [executor_threads]
+//! cargo run --release --example serve_tt -- [requests] [connections] [executor_threads]
 //! ```
+//!
+//! This is `tensornet serve --listen` + `tensornet client --connect` in
+//! one process: the TT-layer and the dense baseline behind the dynamic
+//! batcher, reached over TCP, with client-observed (full round-trip)
+//! latency reported next to the server's own histograms.  (With AOT
+//! artifacts present, swap the executor factory for `PjrtExecutor` —
+//! the transport does not care what executes the batch.)
 
+use std::sync::Arc;
 use std::time::Duration;
 use tensornet::coordinator::{
-    BatchPolicy, ModelRegistry, NativeExecutor, PjrtExecutor, Server, ServerConfig,
+    BatchPolicy, Client, ModelInfo, ModelRegistry, NativeExecutor, NetServer, Server,
+    ServerConfig,
 };
-use tensornet::experiments::drive_clients;
+use tensornet::experiments::drive_remote_clients;
 
 fn main() -> tensornet::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
-    let clients: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let connections: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
     let executor_threads: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
 
-    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
-    if !have_artifacts {
-        println!("artifacts/ missing — serving the native backend instead (run `make artifacts` for PJRT)");
-    }
-
     for (model, dim) in [("tt_layer", 1024usize), ("fc_mnist", 1024)] {
-        println!("\n== model '{model}': {n_requests} requests from {clients} clients, {executor_threads} executor threads");
+        println!(
+            "\n== model '{model}': {n_requests} requests over {connections} TCP connection(s), \
+             {executor_threads} executor threads"
+        );
         let cfg = ServerConfig {
             policy: BatchPolicy { max_batch: 32, max_delay: Duration::from_millis(2) },
             executor_threads,
             ..Default::default()
         };
-        let server = if have_artifacts {
-            Server::start(cfg, || PjrtExecutor::new("artifacts"))?
-        } else {
-            let registry = ModelRegistry::standard();
-            Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone())))?
-        };
-        // warmup compiles the artifact / builds the native model
-        let _ = server.infer(model, vec![0.0; dim])?;
+        let registry = ModelRegistry::standard();
+        let server =
+            Arc::new(Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone())))?);
+        let net = NetServer::start(
+            server.clone(),
+            "127.0.0.1:0",
+            vec![ModelInfo {
+                name: model.to_string(),
+                input_dim: dim as u32,
+                output_dim: dim as u32,
+            }],
+        )?;
+        let addr = net.local_addr().to_string();
+        println!("  listening on {addr}");
 
-        let wall = drive_clients(&server, model, dim, n_requests, clients);
+        // one warmup request builds the lazily-constructed model outside
+        // the timed window — and doubles as the lineup round-trip check
+        let mut warm = Client::connect(&addr)?;
+        let lineup = warm.list_models()?;
+        assert_eq!(lineup[0].name, model);
+        let resp = warm.infer(model, &vec![0.0; dim])?;
+        assert_eq!(resp.output.len(), dim);
+
+        let drive = drive_remote_clients(&addr, model, dim, n_requests, connections, 4);
+        assert_eq!(drive.failed, 0, "remote serving errors — see stderr");
         let st = server.stats();
-        assert_eq!(st.errors.get(), 0, "serving errors — see stderr");
-        println!("  throughput: {:.0} req/s", (st.completed.get() - 1) as f64 / wall);
-        println!("  e2e   {}", st.e2e.summary());
-        println!("  exec  {}", st.exec.summary());
-        println!("  queue {}", st.queue.summary());
-        println!("  mean batch {:.1} rows", st.mean_batch_size());
+        println!("  throughput:  {:.0} req/s", drive.completed as f64 / drive.wall_seconds);
+        println!("  client e2e   {}", drive.e2e.summary());
+        println!("  server e2e   {}", st.e2e.summary());
+        println!("  server exec  {}", st.exec.summary());
+        println!("  server queue {}", st.queue.summary());
+        println!("  mean batch {:.1} rows, {} shed", st.mean_batch_size(), drive.busy);
+
+        net.shutdown();
+        drop(server); // joins batcher + executor pool
     }
     Ok(())
 }

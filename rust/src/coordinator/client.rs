@@ -1,0 +1,195 @@
+//! Blocking client for the TCP serving front-end (DESIGN.md §12).
+//!
+//! One [`Client`] owns one connection.  [`Client::infer`] is the simple
+//! request/reply call; [`Client::send`] + [`Client::recv`] expose the
+//! same pipelining the transport supports — many in-flight requests per
+//! connection, replies arriving in request order (the server's
+//! per-connection writer guarantees it, and `recv` verifies the id).
+//!
+//! f32 payloads travel as LE bit patterns, so a remote inference is
+//! bitwise identical to the in-process call
+//! (`rust/tests/remote_serving.rs` holds both against each other).
+
+use crate::coordinator::wire::{ErrCode, Frame, ModelInfo};
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// True when `err` is the server's load-shed reply ([`ErrCode::Busy`],
+/// i.e. the admission queue was full) — retryable, unlike real failures.
+pub fn is_busy(err: &Error) -> bool {
+    matches!(err, Error::Busy(_))
+}
+
+/// A completed remote inference (the wire image of
+/// [`crate::coordinator::InferResponse`], with server-side timings).
+#[derive(Clone, Debug)]
+pub struct RemoteResponse {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// server-side enqueue → execution start
+    pub queue_us: u64,
+    /// server-side batch execution time
+    pub exec_us: u64,
+    /// how many requests shared the batch
+    pub batch_size: usize,
+}
+
+/// Counter snapshot returned by [`Client::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RemoteStats {
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub failed_workers: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+}
+
+/// One blocking connection to a `tensornet serve --listen` front-end.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    peer: SocketAddr,
+    next_id: u64,
+    /// ids of sent-but-unanswered `Infer`s, oldest first (replies are
+    /// in request order per connection)
+    in_flight: VecDeque<u64>,
+}
+
+impl Client {
+    /// Connect to `addr` (as printed by `serve --listen`, e.g.
+    /// `127.0.0.1:7070`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| Error::Net(format!("connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let peer = stream.peer_addr().map_err(|e| Error::Net(format!("peer_addr: {e}")))?;
+        let write_half =
+            stream.try_clone().map_err(|e| Error::Net(format!("clone stream: {e}")))?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer: BufWriter::new(write_half),
+            peer,
+            next_id: 1,
+            in_flight: VecDeque::new(),
+        })
+    }
+
+    pub fn peer_addr(&self) -> SocketAddr {
+        self.peer
+    }
+
+    /// Sent-but-unanswered request count on this connection.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Pipelined enqueue: send one `Infer` without waiting for its
+    /// reply.  Returns the request id; collect replies with
+    /// [`Client::recv`] (in send order).
+    pub fn send(&mut self, model: &str, input: &[f32]) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Infer { id, model: model.to_string(), input: input.to_vec() };
+        frame.write_to(&mut self.writer)?;
+        self.writer.flush().map_err(|e| Error::Net(format!("flush: {e}")))?;
+        self.in_flight.push_back(id);
+        Ok(id)
+    }
+
+    /// Await the oldest in-flight request's reply.  A `Busy` reply (load
+    /// shed) surfaces as [`Error::Busy`] (see [`is_busy`]) — the
+    /// connection stays usable; retry later.
+    pub fn recv(&mut self) -> Result<RemoteResponse> {
+        let want = self
+            .in_flight
+            .pop_front()
+            .ok_or_else(|| Error::Net("recv with no request in flight".into()))?;
+        match self.read_reply()? {
+            Frame::InferOk { id, queue_us, exec_us, batch_size, output } => {
+                if id != want {
+                    return Err(Error::Wire(format!(
+                        "out-of-order reply: got id {id}, expected {want}"
+                    )));
+                }
+                Ok(RemoteResponse { id, output, queue_us, exec_us, batch_size: batch_size as usize })
+            }
+            Frame::InferErr { id, code, message } => {
+                if id != 0 && id != want {
+                    return Err(Error::Wire(format!(
+                        "out-of-order error reply: got id {id}, expected {want}"
+                    )));
+                }
+                match code {
+                    // typed, so callers classify load shedding without
+                    // parsing the display string (`is_busy`)
+                    ErrCode::Busy => Err(Error::Busy(message)),
+                    ErrCode::BadRequest => Err(Error::Wire(format!("rejected: {message}"))),
+                    ErrCode::Exec => Err(Error::Coordinator(message)),
+                }
+            }
+            other => Err(Error::Wire(format!("expected an inference reply, got {other:?}"))),
+        }
+    }
+
+    /// Blocking request/reply inference.
+    pub fn infer(&mut self, model: &str, input: &[f32]) -> Result<RemoteResponse> {
+        if !self.in_flight.is_empty() {
+            return Err(Error::Net(format!(
+                "infer with {} pipelined requests in flight — drain with recv first",
+                self.in_flight.len()
+            )));
+        }
+        self.send(model, input)?;
+        self.recv()
+    }
+
+    /// Snapshot the server's counters.
+    pub fn stats(&mut self) -> Result<RemoteStats> {
+        self.control(Frame::Stats)?;
+        match self.read_reply()? {
+            Frame::StatsReply { completed, rejected, errors, failed_workers, batches, batched_rows } => {
+                Ok(RemoteStats { completed, rejected, errors, failed_workers, batches, batched_rows })
+            }
+            other => Err(Error::Wire(format!("expected StatsReply, got {other:?}"))),
+        }
+    }
+
+    /// The served model lineup (name + per-row I/O dims).
+    pub fn list_models(&mut self) -> Result<Vec<ModelInfo>> {
+        self.control(Frame::ListModels)?;
+        match self.read_reply()? {
+            Frame::ModelList { models } => Ok(models),
+            other => Err(Error::Wire(format!("expected ModelList, got {other:?}"))),
+        }
+    }
+
+    /// Ask the server process to shut down; returns once acknowledged.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.control(Frame::Shutdown)?;
+        match self.read_reply()? {
+            Frame::ShutdownOk => Ok(()),
+            other => Err(Error::Wire(format!("expected ShutdownOk, got {other:?}"))),
+        }
+    }
+
+    fn control(&mut self, frame: Frame) -> Result<()> {
+        if !self.in_flight.is_empty() {
+            return Err(Error::Net(format!(
+                "control frame with {} pipelined requests in flight — drain with recv first",
+                self.in_flight.len()
+            )));
+        }
+        frame.write_to(&mut self.writer)?;
+        self.writer.flush().map_err(|e| Error::Net(format!("flush: {e}")))
+    }
+
+    fn read_reply(&mut self) -> Result<Frame> {
+        match Frame::read_from(&mut self.reader)? {
+            Some(f) => Ok(f),
+            None => Err(Error::Net("server closed the connection".into())),
+        }
+    }
+}

@@ -14,23 +14,35 @@
 //! and channels, which is the right shape for CPU inference anyway):
 //!
 //! ```text
-//!                                                        ┌► executor-0 ─┐
-//! caller ── bounded queue ──► batcher thread ── batch ────┼► executor-1 ─┼─► reply
-//!              (admission)      (max_batch /    queue     └► executor-N ─┘
-//!                                max_delay)            (each worker owns its
-//!                                                       executor + scratch)
+//! remote   ── tn-net-accept ── per-conn reader ─┐          ┌► executor-0 ─┐
+//! clients      (wire frames)   (admit / shed)   ├► bounded ─► batcher ────┼► executor-1 ─┼─► reply
+//!                                               │  queue      (max_batch/ └► executor-N ─┘
+//! in-process callers (infer / try_infer) ───────┘ (admission)  max_delay)  (each worker owns
+//!                                                                          executor + scratch)
 //! ```
+//!
+//! Admission is transport-agnostic (S12 in DESIGN.md): the TCP
+//! front-end ([`NetServer`], wire protocol in [`wire`], blocking client
+//! in [`Client`]) and in-process callers share the same bounded
+//! admission queue, backpressure ([`Admission::Busy`]) and
+//! [`ServerStats`].
 
 mod batcher;
+mod client;
 mod native;
+mod net;
 mod request;
 mod router;
 mod server;
+pub mod wire;
 mod worker;
 
 pub use batcher::{Batch, BatchAssembler, BatchPolicy};
+pub use client::{is_busy, Client, RemoteResponse, RemoteStats};
 pub use native::{ModelRegistry, ModelSpec, NativeExecutor};
+pub use net::NetServer;
 pub use request::{InferRequest, InferResponse};
 pub use router::{choose_variant, Router};
-pub use server::{Server, ServerConfig, ServerStats};
+pub use server::{Admission, ReplyReceiver, Server, ServerConfig, ServerStats};
+pub use wire::{ErrCode, Frame, ModelInfo};
 pub use worker::{BatchExecutor, EchoExecutor, PjrtExecutor};

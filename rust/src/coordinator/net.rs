@@ -1,0 +1,378 @@
+//! TCP front-end over the coordinator (DESIGN.md §12): an accept loop
+//! plus a reader/writer thread pair per connection, speaking the
+//! [`crate::coordinator::wire`] protocol and feeding the *same* bounded
+//! admission queue as in-process callers ([`Server::admit`]).
+//!
+//! ```text
+//! tn-net-accept ──► tn-net-conn (reader)  ──admit──►  admission queue ──► batcher ──► pool
+//!   (listener)        │  decode frames                     │
+//!                     │  Busy/Stats/ListModels          reply rx
+//!                     ▼                                     ▼
+//!                  tn-net-write (writer) ◄── in-order outbound queue ◄── await_reply
+//! ```
+//!
+//! The reader never blocks on a reply: admitted requests hand their
+//! reply receiver to the writer through an in-order outbound queue, so a
+//! connection can pipeline many in-flight requests while the reader
+//! keeps admitting (or shedding — a full admission queue becomes an
+//! immediate `Busy` reply, counted in `ServerStats::rejected` like every
+//! other transport).  Replies are written strictly in request order; the
+//! client relies on that.
+//!
+//! A malformed frame (bad magic/version/checksum, unknown type,
+//! truncation) gets a best-effort `InferErr`/`BadRequest` reply and
+//! closes *that* connection only — the listener and every other
+//! connection keep serving (`rust/tests/remote_serving.rs`).
+
+use crate::coordinator::server::{Admission, Server};
+use crate::coordinator::wire::{self, ErrCode, Frame, ModelInfo, ReadOutcome};
+use crate::error::{Error, Result};
+use std::io::BufWriter;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long a blocked accept/read waits before re-checking the stop flag
+/// (bounds shutdown latency, not throughput — a frame mid-flight is
+/// never interrupted).
+const POLL: Duration = Duration::from_millis(25);
+
+/// What the reader hands the writer, in request order.
+enum Outbound {
+    /// A reply that is already known (Busy, stats, errors, ...).
+    Ready(Frame),
+    /// An admitted request: the writer awaits the coordinator's reply
+    /// (through [`Server::await_reply`], so remote requests land in the
+    /// same e2e histogram as in-process ones).
+    Pending { id: u64, rx: crate::coordinator::server::ReplyReceiver },
+}
+
+/// A running TCP listener bound to a [`Server`].  Dropping (or calling
+/// [`NetServer::shutdown`]) stops accepting, closes every connection at
+/// its next poll tick and joins all transport threads; the `Server`
+/// itself stays up (it may have other front-ends).
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an OS-assigned port) and
+    /// start serving `server` over it.  `models` is the lineup
+    /// advertised to `ListModels` clients.
+    pub fn start(server: Arc<Server>, addr: &str, models: Vec<ModelInfo>) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| Error::Net(format!("bind {addr}: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Net(format!("set_nonblocking: {e}")))?;
+        let local_addr =
+            listener.local_addr().map_err(|e| Error::Net(format!("local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shutdown_requested = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let stop = stop.clone();
+            let shutdown_requested = shutdown_requested.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name("tn-net-accept".into())
+                .spawn(move || {
+                    accept_loop(listener, server, models, stop, shutdown_requested, conns)
+                })
+                .map_err(|e| Error::Net(format!("spawn accept loop: {e}")))?
+        };
+
+        Ok(NetServer { local_addr, stop, shutdown_requested, accept: Some(accept), conns })
+    }
+
+    /// The bound address — the port is meaningful when `start` was given
+    /// port 0.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// True once a client's `Shutdown` frame has been acknowledged.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Block until a wire `Shutdown` arrives (the daemon mode of
+    /// `tensornet serve --listen`).
+    pub fn wait_for_shutdown(&self) {
+        while !self.shutdown_requested() {
+            std::thread::sleep(POLL);
+        }
+    }
+
+    /// Stop accepting, close every connection at its next poll tick and
+    /// join all transport threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = match self.conns.lock() {
+            Ok(mut g) => g.drain(..).collect(),
+            Err(poisoned) => poisoned.into_inner().drain(..).collect(),
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    server: Arc<Server>,
+    models: Vec<ModelInfo>,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                // the listener is non-blocking so the stop flag stays
+                // responsive; each accepted socket goes back to blocking
+                // reads with a timeout (the reader's stop poll)
+                if stream.set_nonblocking(false).is_err()
+                    || stream.set_read_timeout(Some(POLL)).is_err()
+                {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let server = server.clone();
+                let models = models.clone();
+                let stop = stop.clone();
+                let shutdown_requested = shutdown_requested.clone();
+                let handle = std::thread::Builder::new()
+                    .name("tn-net-conn".into())
+                    .spawn(move || {
+                        connection_loop(stream, peer, server, models, stop, shutdown_requested)
+                    });
+                if let (Ok(h), Ok(mut guard)) = (handle, conns.lock()) {
+                    // reap finished connections so a long-lived listener
+                    // doesn't accumulate handles
+                    guard.retain(|j| !j.is_finished());
+                    guard.push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                eprintln!("tn-net-accept: {e}");
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+/// One connection: decode → dispatch loop, with the in-order writer on
+/// its own thread so admitted requests pipeline.
+fn connection_loop(
+    mut stream: TcpStream,
+    peer: SocketAddr,
+    server: Arc<Server>,
+    models: Vec<ModelInfo>,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+) {
+    let write_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("tn-net-conn {peer}: clone stream: {e}");
+            return;
+        }
+    };
+    let (out_tx, out_rx): (Sender<Outbound>, Receiver<Outbound>) = channel();
+    let writer = {
+        let server = server.clone();
+        std::thread::Builder::new()
+            .name("tn-net-write".into())
+            .spawn(move || writer_loop(write_stream, server, out_rx))
+    };
+    let writer = match writer {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("tn-net-conn {peer}: spawn writer: {e}");
+            return;
+        }
+    };
+
+    // true when this side decided to close (protocol error, shutdown, …)
+    // rather than the peer hanging up first
+    let mut server_initiated_close = false;
+    loop {
+        // the shared framed reader (coordinator::wire): the 25ms socket
+        // read timeout is its poll tick for our stop flag
+        match wire::read_frame(&mut stream, || stop.load(Ordering::SeqCst)) {
+            Ok(ReadOutcome::Eof) | Ok(ReadOutcome::Stopped) => break,
+            Ok(ReadOutcome::Frame(frame)) => {
+                if !dispatch(frame, &server, &models, &out_tx, &shutdown_requested) {
+                    server_initiated_close = true;
+                    break;
+                }
+            }
+            Err(e) => {
+                // protocol violation: reply (best-effort) and close this
+                // connection; the listener keeps serving everyone else
+                let _ = out_tx.send(Outbound::Ready(Frame::InferErr {
+                    id: 0,
+                    code: ErrCode::BadRequest,
+                    message: format!("{e}"),
+                }));
+                server_initiated_close = true;
+                break;
+            }
+        }
+    }
+    drop(out_tx); // writer drains pending replies, then exits
+    let _ = writer.join();
+    if server_initiated_close {
+        // closing with unread bytes in the receive buffer makes the
+        // kernel send RST, which can discard the error reply before the
+        // peer reads it — half-close and briefly drain so the reply
+        // survives the teardown
+        drain_before_close(&mut stream);
+    }
+}
+
+/// Send FIN, then swallow whatever the peer already has in flight
+/// (bounded by a few poll ticks) so the final close is a FIN, not an
+/// RST that would race the just-written reply off the peer's buffer.
+fn drain_before_close(stream: &mut TcpStream) {
+    use std::io::Read;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut buf = [0u8; 4096];
+    for _ in 0..8 {
+        match stream.read(&mut buf) {
+            Ok(0) => return,  // peer closed too — clean
+            Ok(_) => {}       // discard
+            Err(_) => return, // timeout (buffer empty) or peer reset
+        }
+    }
+}
+
+/// Handle one decoded frame; returns false when the connection should
+/// close (shutdown acknowledged or a reply-type frame arrived).
+fn dispatch(
+    frame: Frame,
+    server: &Arc<Server>,
+    models: &[ModelInfo],
+    out_tx: &Sender<Outbound>,
+    shutdown_requested: &AtomicBool,
+) -> bool {
+    match frame {
+        Frame::Infer { id, model, input } => {
+            let reply = match server.admit(&model, input) {
+                Ok(Admission::Queued(rx)) => Outbound::Pending { id, rx },
+                Ok(Admission::Busy) => Outbound::Ready(Frame::InferErr {
+                    id,
+                    code: ErrCode::Busy,
+                    message: "admission queue full".into(),
+                }),
+                Err(e) => Outbound::Ready(Frame::InferErr {
+                    id,
+                    code: ErrCode::Exec,
+                    message: format!("{e}"),
+                }),
+            };
+            out_tx.send(reply).is_ok()
+        }
+        Frame::Stats => {
+            let st = server.stats();
+            out_tx
+                .send(Outbound::Ready(Frame::StatsReply {
+                    completed: st.completed.get(),
+                    rejected: st.rejected.get(),
+                    errors: st.errors.get(),
+                    failed_workers: st.failed_workers.get(),
+                    batches: st.batches.get(),
+                    batched_rows: st.batched_rows.get(),
+                }))
+                .is_ok()
+        }
+        Frame::ListModels => out_tx
+            .send(Outbound::Ready(Frame::ModelList { models: models.to_vec() }))
+            .is_ok(),
+        Frame::Shutdown => {
+            // acknowledge first so the client sees the accept before the
+            // listener starts tearing down
+            let _ = out_tx.send(Outbound::Ready(Frame::ShutdownOk));
+            shutdown_requested.store(true, Ordering::SeqCst);
+            false
+        }
+        // reply-type frames have no business arriving at the server;
+        // name only the kind — Debug-printing the frame would let a
+        // hostile 16 MiB payload amplify into a huge format allocation
+        other @ (Frame::InferOk { .. }
+        | Frame::InferErr { .. }
+        | Frame::StatsReply { .. }
+        | Frame::ModelList { .. }
+        | Frame::ShutdownOk) => {
+            let _ = out_tx.send(Outbound::Ready(Frame::InferErr {
+                id: 0,
+                code: ErrCode::BadRequest,
+                message: format!("unexpected reply-type frame {} sent to server", other.kind()),
+            }));
+            false
+        }
+    }
+}
+
+/// Drain the outbound queue in order, awaiting each admitted request's
+/// reply.  Exits when the reader hangs up (channel closes) or the socket
+/// dies; either way remaining receivers just drop, which the coordinator
+/// tolerates (a dropped reply sender is counted by the caller side only).
+fn writer_loop(
+    stream: TcpStream,
+    server: Arc<Server>,
+    out_rx: Receiver<Outbound>,
+) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(msg) = out_rx.recv() {
+        let frame = match msg {
+            Outbound::Ready(f) => f,
+            Outbound::Pending { id, rx } => match server.await_reply(rx) {
+                Ok(resp) => Frame::InferOk {
+                    id,
+                    queue_us: resp.queue_us,
+                    exec_us: resp.exec_us,
+                    batch_size: resp.batch_size as u32,
+                    output: resp.output,
+                },
+                Err(e) => {
+                    Frame::InferErr { id, code: ErrCode::Exec, message: format!("{e}") }
+                }
+            },
+        };
+        if frame.write_to(&mut w).is_err() {
+            return;
+        }
+        // replies are latency-sensitive: flush per frame (pipelined
+        // writes still coalesce inside the BufWriter between syscalls)
+        if std::io::Write::flush(&mut w).is_err() {
+            return;
+        }
+    }
+}

@@ -4,9 +4,16 @@
 //! ```text
 //!                                                     ┌► tn-executor-0 ─┐
 //! callers ── admission queue ──► tn-batcher ── batch ──┼► tn-executor-1 ─┼─► replies
-//!             (bounded; try_infer   (max_batch /  queue └► tn-executor-N ─┘
-//!              rejects when full)    max_delay)
+//!             (bounded; admit       (max_batch /  queue └► tn-executor-N ─┘
+//!              sheds when full)      max_delay)
 //! ```
+//!
+//! Admission is transport-agnostic: in-process callers ([`Server::infer`]
+//! / [`Server::try_infer`]) and the TCP front-end's per-connection
+//! readers (`coordinator::net`) feed the same bounded queue through
+//! [`Server::admit`], so backpressure ([`Admission::Busy`] → a `Busy`
+//! wire reply instead of a hang) and [`ServerStats`] are shared across
+//! every way into the server.
 //!
 //! The batch queue is a single `mpsc` receiver shared by all workers
 //! behind a mutex (the std-only stand-in for a multi-consumer channel).
@@ -80,6 +87,20 @@ impl ServerStats {
             self.batched_rows.get() as f64 / b as f64
         }
     }
+}
+
+/// Where a request's reply arrives; `Err` carries a failure message.
+pub type ReplyReceiver = Receiver<std::result::Result<InferResponse, String>>;
+
+/// Outcome of a non-blocking [`Server::admit`].
+pub enum Admission {
+    /// Admitted — await the receiver (via [`Server::await_reply`], which
+    /// also records true e2e latency).
+    Queued(ReplyReceiver),
+    /// Admission queue full: load shed (already counted in
+    /// [`ServerStats::rejected`]).  Transports turn this into a `Busy`
+    /// wire reply; in-process callers into an error.
+    Busy,
 }
 
 /// A running coordinator.  Dropping (or calling [`Server::shutdown`])
@@ -162,8 +183,11 @@ impl Server {
         &self.stats
     }
 
-    /// Blocking inference: enqueue and wait for the reply.
-    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<InferResponse> {
+    /// Build one admission-queue entry + its reply receiver.  The single
+    /// place an `InferRequest` is constructed, shared by the blocking and
+    /// non-blocking paths so ids, timestamps and reply plumbing cannot
+    /// drift between transports.
+    fn new_request(&self, model: &str, input: Vec<f32>) -> (InferRequest, ReplyReceiver) {
         let (reply_tx, reply_rx) = channel();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -172,6 +196,13 @@ impl Server {
             enqueued: Instant::now(),
             reply: reply_tx,
         };
+        (req, reply_rx)
+    }
+
+    /// Blocking inference: enqueue (waiting for queue space if needed)
+    /// and wait for the reply.
+    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<InferResponse> {
+        let (req, reply_rx) = self.new_request(model, input);
         self.tx
             .as_ref()
             .ok_or_else(|| Error::Coordinator("server shut down".into()))?
@@ -180,27 +211,23 @@ impl Server {
         self.receive(reply_rx)
     }
 
-    /// Non-blocking admission: rejects instead of waiting when the queue
-    /// is full (returns the reply receiver to await later).
-    pub fn try_infer(
-        &self,
-        model: &str,
-        input: Vec<f32>,
-    ) -> Result<Receiver<std::result::Result<InferResponse, String>>> {
-        let (reply_tx, reply_rx) = channel();
-        let req = InferRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            model: model.to_string(),
-            input,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        };
-        match self.tx.as_ref().ok_or_else(|| Error::Coordinator("server shut down".into()))?.try_send(req)
+    /// Non-blocking, transport-agnostic admission: `try_send` into the
+    /// bounded queue, shedding load ([`Admission::Busy`], counted in
+    /// [`ServerStats::rejected`]) instead of waiting when it is full.
+    /// Every transport — in-process `try_infer` and the TCP front-end —
+    /// goes through here, so backpressure and stats stay shared.
+    pub fn admit(&self, model: &str, input: Vec<f32>) -> Result<Admission> {
+        let (req, reply_rx) = self.new_request(model, input);
+        match self
+            .tx
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("server shut down".into()))?
+            .try_send(req)
         {
-            Ok(()) => Ok(reply_rx),
+            Ok(()) => Ok(Admission::Queued(reply_rx)),
             Err(TrySendError::Full(_)) => {
                 self.stats.rejected.inc();
-                Err(Error::Coordinator("admission queue full".into()))
+                Ok(Admission::Busy)
             }
             Err(TrySendError::Disconnected(_)) => {
                 Err(Error::Coordinator("admission queue closed".into()))
@@ -208,18 +235,22 @@ impl Server {
         }
     }
 
-    /// Await a receiver from [`Server::try_infer`].
-    pub fn await_reply(
-        &self,
-        rx: Receiver<std::result::Result<InferResponse, String>>,
-    ) -> Result<InferResponse> {
+    /// Non-blocking admission for in-process callers: rejects with an
+    /// error instead of waiting when the queue is full (returns the
+    /// reply receiver to await later).
+    pub fn try_infer(&self, model: &str, input: Vec<f32>) -> Result<ReplyReceiver> {
+        match self.admit(model, input)? {
+            Admission::Queued(rx) => Ok(rx),
+            Admission::Busy => Err(Error::Coordinator("admission queue full".into())),
+        }
+    }
+
+    /// Await a receiver from [`Server::try_infer`] / [`Server::admit`].
+    pub fn await_reply(&self, rx: ReplyReceiver) -> Result<InferResponse> {
         self.receive(rx)
     }
 
-    fn receive(
-        &self,
-        rx: Receiver<std::result::Result<InferResponse, String>>,
-    ) -> Result<InferResponse> {
+    fn receive(&self, rx: ReplyReceiver) -> Result<InferResponse> {
         match rx.recv() {
             Ok(Ok(resp)) => {
                 // true end-to-end latency: wall clock from enqueue to
@@ -529,6 +560,47 @@ mod tests {
         // now every worker has recorded its init failure
         assert_eq!(server.stats().failed_workers.get(), 3);
         server.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn admit_sheds_load_when_queue_full_and_counts_rejections() {
+        // a stalling executor keeps the pipeline occupied: admission(1) +
+        // batcher(1) + batch queue(1) + executing(1) absorb at most 4
+        // requests, so a burst of 16 non-blocking admissions must shed —
+        // and every shed must land in stats.rejected
+        struct Stall;
+        impl BatchExecutor for Stall {
+            fn execute(&mut self, _m: &str, x: Vec<f32>, _r: usize) -> Result<(Vec<f32>, usize)> {
+                std::thread::sleep(Duration::from_millis(30));
+                let n = x.len();
+                Ok((x, n))
+            }
+            fn input_dim(&self, _m: &str) -> Result<usize> {
+                Ok(2)
+            }
+        }
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(0) },
+            queue_capacity: 1,
+            batch_queue_capacity: 1,
+            executor_threads: 1,
+        };
+        let server = Server::start(cfg, || Ok(Stall)).unwrap();
+        let mut queued = Vec::new();
+        let mut busy = 0u64;
+        for _ in 0..16 {
+            match server.admit("m", vec![1.0, 2.0]).unwrap() {
+                Admission::Queued(rx) => queued.push(rx),
+                Admission::Busy => busy += 1,
+            }
+        }
+        assert!(busy >= 1, "16 instant admissions into a 4-slot pipeline must shed");
+        assert_eq!(server.stats().rejected.get(), busy);
+        // the admitted ones all complete — shedding never drops a queued reply
+        for rx in queued {
+            server.await_reply(rx).unwrap();
+        }
+        server.shutdown();
     }
 
     #[test]

@@ -1,0 +1,693 @@
+//! The binary wire protocol spoken between [`crate::coordinator::net`]
+//! (the TCP front-end) and [`crate::coordinator::client`] (DESIGN.md §12).
+//!
+//! Every frame is length-prefixed and checksummed:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic  b"TN"
+//! 2       1     protocol version (= VERSION)
+//! 3       1     frame type
+//! 4       4     payload length, u32 LE  (hard cap: MAX_PAYLOAD)
+//! 8       4     CRC32 (IEEE) over bytes [version, type, len, payload], u32 LE
+//! 12      len   payload
+//! ```
+//!
+//! Decoding hard-rejects anything malformed — wrong magic or version,
+//! unknown frame type, oversized length, truncated payload, checksum
+//! mismatch, trailing payload bytes — with a clean [`Error::Wire`],
+//! never a panic and never a silently wrong payload (the CRC covers the
+//! type byte and the length, so any single corrupted bit anywhere in a
+//! frame is detected; `rust/tests/proptests.rs` flips bits to prove it).
+//!
+//! All integers are little-endian; `f32` values travel as their LE bit
+//! pattern, so an inference round-trip over TCP is bitwise exact
+//! (`rust/tests/remote_serving.rs` asserts remote == in-process).
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+
+/// First two bytes of every frame.
+pub const MAGIC: [u8; 2] = *b"TN";
+/// Protocol version; bumped on any layout change (decoders hard-reject
+/// other versions).
+pub const VERSION: u8 = 1;
+/// Hard cap on a frame's payload (16 MiB) — an admission bound, not a
+/// tuning knob: a header announcing more than this is rejected before
+/// any allocation.
+pub const MAX_PAYLOAD: u32 = 1 << 24;
+/// Bytes in the fixed frame header.
+pub const HEADER_LEN: usize = 12;
+
+/// Machine-readable failure class carried by [`Frame::InferErr`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Admission queue full — load shed; retry later (maps to
+    /// `ServerStats::rejected` on the server).
+    Busy = 1,
+    /// The request itself was malformed (bad frame, unexpected type).
+    BadRequest = 2,
+    /// Admission succeeded but execution failed (unknown model, dim
+    /// mismatch, executor error).
+    Exec = 3,
+}
+
+impl ErrCode {
+    fn from_u8(v: u8) -> Result<ErrCode> {
+        match v {
+            1 => Ok(ErrCode::Busy),
+            2 => Ok(ErrCode::BadRequest),
+            3 => Ok(ErrCode::Exec),
+            other => Err(Error::Wire(format!("unknown error code {other}"))),
+        }
+    }
+}
+
+/// One served model as advertised by [`Frame::ModelList`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub input_dim: u32,
+    pub output_dim: u32,
+}
+
+/// A typed protocol frame.  Requests flow client → server (`Infer`,
+/// `Stats`, `ListModels`, `Shutdown`); replies flow server → client.
+/// Replies on one connection arrive in request order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Run `input` through `model`; `id` is echoed in the reply.
+    Infer { id: u64, model: String, input: Vec<f32> },
+    /// Successful inference reply (server-side timings included).
+    InferOk { id: u64, queue_us: u64, exec_us: u64, batch_size: u32, output: Vec<f32> },
+    /// Failed inference reply; `code` distinguishes load-shedding
+    /// ([`ErrCode::Busy`]) from real failures.
+    InferErr { id: u64, code: ErrCode, message: String },
+    /// Request a [`Frame::StatsReply`] snapshot.
+    Stats,
+    /// Counter snapshot of the server's shared `ServerStats`.
+    StatsReply {
+        completed: u64,
+        rejected: u64,
+        errors: u64,
+        failed_workers: u64,
+        batches: u64,
+        batched_rows: u64,
+    },
+    /// Request the served model lineup.
+    ListModels,
+    /// The served model lineup.
+    ModelList { models: Vec<ModelInfo> },
+    /// Ask the server process to shut down (acknowledged first).
+    Shutdown,
+    /// Acknowledges [`Frame::Shutdown`]; the listener stops accepting
+    /// after this is written.
+    ShutdownOk,
+}
+
+const T_INFER: u8 = 1;
+const T_INFER_OK: u8 = 2;
+const T_INFER_ERR: u8 = 3;
+const T_STATS: u8 = 4;
+const T_STATS_REPLY: u8 = 5;
+const T_LIST_MODELS: u8 = 6;
+const T_MODEL_LIST: u8 = 7;
+const T_SHUTDOWN: u8 = 8;
+const T_SHUTDOWN_OK: u8 = 9;
+
+/// Byte-at-a-time CRC32 lookup table, built at compile time (std-only:
+/// a const block, no build script).
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven —
+/// the checksum runs twice per frame per direction, so it must stay
+/// well under the transport cost it guards.  CRC32 detects every
+/// single-bit and every burst-≤32 error, which is exactly the guarantee
+/// the corruption proptests pin down.
+pub fn crc32(chunks: &[&[u8]]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for chunk in chunks {
+        for &b in *chunk {
+            crc = CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+        }
+    }
+    !crc
+}
+
+/// A validated frame header.  [`Header::decode`] checks magic, version
+/// and the length bound; the CRC and frame type are checked against the
+/// payload by [`decode_body`] (the payload must be read first).
+#[derive(Clone, Copy, Debug)]
+pub struct Header {
+    pub frame_type: u8,
+    pub len: u32,
+    crc: u32,
+}
+
+impl Header {
+    pub fn decode(bytes: &[u8; HEADER_LEN]) -> Result<Header> {
+        if bytes[0..2] != MAGIC {
+            return Err(Error::Wire(format!(
+                "bad magic {:02x}{:02x} (want {:02x}{:02x})",
+                bytes[0], bytes[1], MAGIC[0], MAGIC[1]
+            )));
+        }
+        if bytes[2] != VERSION {
+            return Err(Error::Wire(format!(
+                "protocol version {} (this build speaks {VERSION})",
+                bytes[2]
+            )));
+        }
+        let len = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        if len > MAX_PAYLOAD {
+            return Err(Error::Wire(format!("payload of {len} bytes exceeds cap {MAX_PAYLOAD}")));
+        }
+        let crc = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        Ok(Header { frame_type: bytes[3], len, crc })
+    }
+}
+
+/// Decode a payload against its validated header: CRC first (over
+/// version + type + length + payload), then a strict type-directed parse
+/// that must consume the payload exactly.
+pub fn decode_body(header: &Header, payload: &[u8]) -> Result<Frame> {
+    if payload.len() != header.len as usize {
+        return Err(Error::Wire(format!(
+            "payload is {} bytes, header announced {}",
+            payload.len(),
+            header.len
+        )));
+    }
+    let covered = [VERSION, header.frame_type];
+    let want = crc32(&[&covered, &header.len.to_le_bytes(), payload]);
+    if want != header.crc {
+        return Err(Error::Wire(format!(
+            "checksum mismatch: header {:08x}, computed {want:08x}",
+            header.crc
+        )));
+    }
+    let mut r = Cursor { buf: payload, pos: 0 };
+    let frame = match header.frame_type {
+        T_INFER => {
+            let id = r.u64()?;
+            let model = r.short_string("model name")?;
+            let input = r.f32_vec()?;
+            Frame::Infer { id, model, input }
+        }
+        T_INFER_OK => {
+            let id = r.u64()?;
+            let queue_us = r.u64()?;
+            let exec_us = r.u64()?;
+            let batch_size = r.u32()?;
+            let output = r.f32_vec()?;
+            Frame::InferOk { id, queue_us, exec_us, batch_size, output }
+        }
+        T_INFER_ERR => {
+            let id = r.u64()?;
+            let code = ErrCode::from_u8(r.u8()?)?;
+            let message = r.long_string("error message")?;
+            Frame::InferErr { id, code, message }
+        }
+        T_STATS => Frame::Stats,
+        T_STATS_REPLY => Frame::StatsReply {
+            completed: r.u64()?,
+            rejected: r.u64()?,
+            errors: r.u64()?,
+            failed_workers: r.u64()?,
+            batches: r.u64()?,
+            batched_rows: r.u64()?,
+        },
+        T_LIST_MODELS => Frame::ListModels,
+        T_MODEL_LIST => {
+            let count = r.u16()? as usize;
+            let mut models = Vec::new();
+            for _ in 0..count {
+                let name = r.short_string("model name")?;
+                let input_dim = r.u32()?;
+                let output_dim = r.u32()?;
+                models.push(ModelInfo { name, input_dim, output_dim });
+            }
+            Frame::ModelList { models }
+        }
+        T_SHUTDOWN => Frame::Shutdown,
+        T_SHUTDOWN_OK => Frame::ShutdownOk,
+        other => return Err(Error::Wire(format!("unknown frame type {other}"))),
+    };
+    r.finish()?;
+    Ok(frame)
+}
+
+impl Frame {
+    /// Short name of the frame kind — for diagnostics; never includes
+    /// the payload (a hostile frame can carry megabytes).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::Infer { .. } => "Infer",
+            Frame::InferOk { .. } => "InferOk",
+            Frame::InferErr { .. } => "InferErr",
+            Frame::Stats => "Stats",
+            Frame::StatsReply { .. } => "StatsReply",
+            Frame::ListModels => "ListModels",
+            Frame::ModelList { .. } => "ModelList",
+            Frame::Shutdown => "Shutdown",
+            Frame::ShutdownOk => "ShutdownOk",
+        }
+    }
+
+    fn frame_type(&self) -> u8 {
+        match self {
+            Frame::Infer { .. } => T_INFER,
+            Frame::InferOk { .. } => T_INFER_OK,
+            Frame::InferErr { .. } => T_INFER_ERR,
+            Frame::Stats => T_STATS,
+            Frame::StatsReply { .. } => T_STATS_REPLY,
+            Frame::ListModels => T_LIST_MODELS,
+            Frame::ModelList { .. } => T_MODEL_LIST,
+            Frame::Shutdown => T_SHUTDOWN,
+            Frame::ShutdownOk => T_SHUTDOWN_OK,
+        }
+    }
+
+    fn payload(&self) -> Result<Vec<u8>> {
+        let mut w = Vec::new();
+        match self {
+            Frame::Infer { id, model, input } => {
+                w.extend_from_slice(&id.to_le_bytes());
+                put_short_string(&mut w, model, "model name")?;
+                put_f32_vec(&mut w, input);
+            }
+            Frame::InferOk { id, queue_us, exec_us, batch_size, output } => {
+                w.extend_from_slice(&id.to_le_bytes());
+                w.extend_from_slice(&queue_us.to_le_bytes());
+                w.extend_from_slice(&exec_us.to_le_bytes());
+                w.extend_from_slice(&batch_size.to_le_bytes());
+                put_f32_vec(&mut w, output);
+            }
+            Frame::InferErr { id, code, message } => {
+                w.extend_from_slice(&id.to_le_bytes());
+                w.push(*code as u8);
+                put_long_string(&mut w, message);
+            }
+            Frame::Stats | Frame::ListModels | Frame::Shutdown | Frame::ShutdownOk => {}
+            Frame::StatsReply { completed, rejected, errors, failed_workers, batches, batched_rows } => {
+                for v in [completed, rejected, errors, failed_workers, batches, batched_rows] {
+                    w.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::ModelList { models } => {
+                let count = u16::try_from(models.len()).map_err(|_| {
+                    Error::Wire(format!("{} models exceed the u16 lineup cap", models.len()))
+                })?;
+                w.extend_from_slice(&count.to_le_bytes());
+                for m in models {
+                    put_short_string(&mut w, &m.name, "model name")?;
+                    w.extend_from_slice(&m.input_dim.to_le_bytes());
+                    w.extend_from_slice(&m.output_dim.to_le_bytes());
+                }
+            }
+        }
+        Ok(w)
+    }
+
+    /// Serialize into one contiguous header + payload buffer.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let payload = self.payload()?;
+        if payload.len() > MAX_PAYLOAD as usize {
+            return Err(Error::Wire(format!(
+                "frame payload of {} bytes exceeds cap {MAX_PAYLOAD}",
+                payload.len()
+            )));
+        }
+        let len = payload.len() as u32;
+        let ftype = self.frame_type();
+        let crc = crc32(&[&[VERSION, ftype], &len.to_le_bytes(), &payload]);
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(ftype);
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&payload);
+        Ok(out)
+    }
+
+    /// Decode exactly one frame from `bytes` (the whole slice must be the
+    /// frame — trailing bytes reject).  The buffer-level entry point the
+    /// corruption proptests drive.
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        if bytes.len() < HEADER_LEN {
+            return Err(Error::Wire(format!(
+                "{} bytes is shorter than the {HEADER_LEN}-byte header",
+                bytes.len()
+            )));
+        }
+        let mut head = [0u8; HEADER_LEN];
+        head.copy_from_slice(&bytes[..HEADER_LEN]);
+        let header = Header::decode(&head)?;
+        decode_body(&header, &bytes[HEADER_LEN..])
+    }
+
+    /// Write the encoded frame (no flush — callers batch then flush).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let bytes = self.encode()?;
+        w.write_all(&bytes).map_err(|e| Error::Net(format!("write frame: {e}")))
+    }
+
+    /// Read exactly one frame from a blocking reader.  EOF before the
+    /// first header byte returns `Ok(None)` (clean close); EOF anywhere
+    /// after is a truncation error.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+        match read_frame(r, || false)? {
+            ReadOutcome::Frame(f) => Ok(Some(f)),
+            // Stopped is unreachable with a constant-false should_stop;
+            // fold it into the clean-close case rather than panic
+            ReadOutcome::Eof | ReadOutcome::Stopped => Ok(None),
+        }
+    }
+}
+
+/// Outcome of one [`read_frame`] attempt.
+pub enum ReadOutcome {
+    Frame(Frame),
+    /// clean EOF at a frame boundary (peer closed)
+    Eof,
+    /// `should_stop` returned true while the read was idle
+    Stopped,
+}
+
+/// Read one frame from `r`, polling `should_stop` whenever the reader
+/// reports a timeout (`WouldBlock`/`TimedOut` — how a socket with a
+/// read timeout idles).  The single framed-read implementation: the
+/// blocking client wraps it with a constant-false `should_stop`
+/// ([`Frame::read_from`]) and the server's connection readers pass
+/// their stop flag, so header/payload sequencing and truncation
+/// handling cannot drift between the two sides.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    mut should_stop: impl FnMut() -> bool,
+) -> Result<ReadOutcome> {
+    let mut head = [0u8; HEADER_LEN];
+    match read_full(r, &mut head, &mut should_stop)? {
+        Filled::Stopped => return Ok(ReadOutcome::Stopped),
+        Filled::Eof(0) => return Ok(ReadOutcome::Eof),
+        Filled::Eof(n) => {
+            return Err(Error::Wire(format!(
+                "connection closed after {n} of {HEADER_LEN} header bytes"
+            )))
+        }
+        Filled::Full => {}
+    }
+    let header = Header::decode(&head)?;
+    let mut payload = vec![0u8; header.len as usize];
+    match read_full(r, &mut payload, &mut should_stop)? {
+        Filled::Stopped => return Ok(ReadOutcome::Stopped),
+        Filled::Eof(n) => {
+            return Err(Error::Wire(format!(
+                "connection closed after {n} of {} payload bytes",
+                payload.len()
+            )))
+        }
+        Filled::Full => {}
+    }
+    Ok(ReadOutcome::Frame(decode_body(&header, &payload)?))
+}
+
+enum Filled {
+    Full,
+    /// EOF after this many of the wanted bytes
+    Eof(usize),
+    Stopped,
+}
+
+/// `read_exact` that reports EOF position, treats timeouts as polls of
+/// `should_stop`, and maps io errors to [`Error::Net`].
+fn read_full<R: Read>(
+    r: &mut R,
+    buf: &mut [u8],
+    should_stop: &mut impl FnMut() -> bool,
+) -> Result<Filled> {
+    let mut done = 0;
+    while done < buf.len() {
+        match r.read(&mut buf[done..]) {
+            Ok(0) => return Ok(Filled::Eof(done)),
+            Ok(n) => done += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if should_stop() {
+                    return Ok(Filled::Stopped);
+                }
+            }
+            Err(e) => return Err(Error::Net(format!("read frame: {e}"))),
+        }
+    }
+    Ok(Filled::Full)
+}
+
+fn put_short_string(w: &mut Vec<u8>, s: &str, what: &str) -> Result<()> {
+    let len = u16::try_from(s.len())
+        .map_err(|_| Error::Wire(format!("{what} of {} bytes exceeds the u16 cap", s.len())))?;
+    w.extend_from_slice(&len.to_le_bytes());
+    w.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn put_long_string(w: &mut Vec<u8>, s: &str) {
+    // messages are server-generated; truncate rather than fail so an
+    // error reply can always be delivered
+    let bytes = s.as_bytes();
+    let take = bytes.len().min(MAX_PAYLOAD as usize / 2);
+    w.extend_from_slice(&(take as u32).to_le_bytes());
+    w.extend_from_slice(&bytes[..take]);
+}
+
+fn put_f32_vec(w: &mut Vec<u8>, xs: &[f32]) {
+    w.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        w.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked payload reader; every draw past the end is a clean
+/// [`Error::Wire`], and [`Cursor::finish`] rejects trailing bytes.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len()).ok_or_else(|| {
+            Error::Wire(format!(
+                "truncated payload: {what} needs {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len()
+            ))
+        })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2, "u16")?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn string(&mut self, len: usize, what: &str) -> Result<String> {
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Wire(format!("{what} is not valid utf-8")))
+    }
+
+    fn short_string(&mut self, what: &str) -> Result<String> {
+        let len = self.u16()? as usize;
+        self.string(len, what)
+    }
+
+    fn long_string(&mut self, what: &str) -> Result<String> {
+        let len = self.u32()? as usize;
+        self.string(len, what)
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // checked: on 32-bit targets a hostile count would otherwise wrap
+        // the multiply (debug panic / silently short vector)
+        let byte_len = n
+            .checked_mul(4)
+            .ok_or_else(|| Error::Wire(format!("f32 count {n} overflows the byte length")))?;
+        let bytes = self.take(byte_len, "f32 values")?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Wire(format!(
+                "{} trailing payload bytes after a complete frame",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Infer { id: 7, model: "tt_layer".into(), input: vec![1.0, -2.5, 0.0] },
+            Frame::InferOk {
+                id: 7,
+                queue_us: 120,
+                exec_us: 340,
+                batch_size: 4,
+                output: vec![0.5; 6],
+            },
+            Frame::InferErr { id: 9, code: ErrCode::Busy, message: "admission queue full".into() },
+            Frame::Stats,
+            Frame::StatsReply {
+                completed: 10,
+                rejected: 2,
+                errors: 1,
+                failed_workers: 0,
+                batches: 5,
+                batched_rows: 10,
+            },
+            Frame::ListModels,
+            Frame::ModelList {
+                models: vec![
+                    ModelInfo { name: "tt_layer".into(), input_dim: 1024, output_dim: 1024 },
+                    ModelInfo { name: "mnist_net".into(), input_dim: 1024, output_dim: 10 },
+                ],
+            },
+            Frame::Shutdown,
+            Frame::ShutdownOk,
+        ]
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips() {
+        for f in sample_frames() {
+            let bytes = f.encode().unwrap();
+            let back = Frame::decode(&bytes).unwrap();
+            assert_eq!(back, f, "{f:?}");
+            // and through the streaming reader
+            let mut r = std::io::Cursor::new(bytes);
+            assert_eq!(Frame::read_from(&mut r).unwrap(), Some(f));
+            assert_eq!(Frame::read_from(&mut r).unwrap(), None, "clean EOF after one frame");
+        }
+    }
+
+    #[test]
+    fn infer_f32_payload_is_bitwise() {
+        let input = vec![f32::MIN_POSITIVE, -0.0, 1.5e-42, f32::MAX];
+        let f = Frame::Infer { id: 1, model: "m".into(), input: input.clone() };
+        match Frame::decode(&f.encode().unwrap()).unwrap() {
+            Frame::Infer { input: back, .. } => {
+                let want: Vec<u32> = input.iter().map(|x| x.to_bits()).collect();
+                let got: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_type_and_oversize_reject() {
+        let good = Frame::Stats.encode().unwrap();
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(Frame::decode(&bad), Err(Error::Wire(m)) if m.contains("magic")));
+        let mut bad = good.clone();
+        bad[2] = VERSION + 1;
+        assert!(matches!(Frame::decode(&bad), Err(Error::Wire(m)) if m.contains("version")));
+        let mut bad = good.clone();
+        bad[3] = 200; // unknown type (also breaks the crc; both are clean errors)
+        assert!(Frame::decode(&bad).is_err());
+        let mut bad = good;
+        bad[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(Frame::decode(&bad), Err(Error::Wire(m)) if m.contains("cap")));
+    }
+
+    #[test]
+    fn truncations_and_trailing_bytes_reject() {
+        let bytes = Frame::Infer { id: 3, model: "tt".into(), input: vec![1.0, 2.0] }
+            .encode()
+            .unwrap();
+        for cut in 0..bytes.len() {
+            assert!(Frame::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut padded = bytes;
+        padded.push(0);
+        assert!(Frame::decode(&padded).is_err(), "trailing byte");
+    }
+
+    #[test]
+    fn checksum_catches_payload_corruption() {
+        let bytes =
+            Frame::Infer { id: 3, model: "tt".into(), input: vec![1.0, 2.0] }.encode().unwrap();
+        // flip one payload bit: the value would still parse, so only the
+        // crc stands between this and a silently wrong input vector
+        let mut bad = bytes;
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        assert!(
+            matches!(Frame::decode(&bad), Err(Error::Wire(m)) if m.contains("checksum")),
+            "payload bit flip must fail the crc"
+        );
+    }
+
+    #[test]
+    fn streaming_reader_reports_mid_frame_eof() {
+        let bytes = Frame::Stats.encode().unwrap();
+        let mut r = std::io::Cursor::new(&bytes[..HEADER_LEN - 3]);
+        let err = Frame::read_from(&mut r).unwrap_err();
+        assert!(format!("{err}").contains("header"), "{err}");
+    }
+
+    #[test]
+    fn oversized_encode_rejects() {
+        let f = Frame::Infer {
+            id: 1,
+            model: "m".into(),
+            input: vec![0.0; MAX_PAYLOAD as usize / 4 + 8],
+        };
+        assert!(f.encode().is_err());
+    }
+}

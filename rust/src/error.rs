@@ -28,6 +28,19 @@ pub enum Error {
     /// state/architecture mismatch — see `runtime::checkpoint`).
     Checkpoint(String),
 
+    /// Wire-protocol violation (bad magic/version, oversized or
+    /// truncated frame, checksum mismatch — see `coordinator::wire`).
+    Wire(String),
+
+    /// Network transport failure (connect/read/write on the TCP
+    /// front-end or client — see `coordinator::net` / `coordinator::client`).
+    Net(String),
+
+    /// Server-side load shed: the admission queue was full and the
+    /// request was answered with a retryable `Busy` wire reply — not a
+    /// failure of the request itself (see `coordinator::wire::ErrCode`).
+    Busy(String),
+
     /// Configuration file / CLI problems.
     Config(String),
 
@@ -43,6 +56,9 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
+            Error::Wire(m) => write!(f, "wire error: {m}"),
+            Error::Net(m) => write!(f, "net error: {m}"),
+            Error::Busy(m) => write!(f, "server busy: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }
@@ -79,6 +95,12 @@ mod tests {
     fn display_includes_category_and_message() {
         assert_eq!(format!("{}", Error::Shape("2x3 vs 4x5".into())), "shape error: 2x3 vs 4x5");
         assert_eq!(format!("{}", Error::Config("bad flag".into())), "config error: bad flag");
+        assert_eq!(format!("{}", Error::Wire("bad magic".into())), "wire error: bad magic");
+        assert_eq!(format!("{}", Error::Net("refused".into())), "net error: refused");
+        assert_eq!(
+            format!("{}", Error::Busy("admission queue full".into())),
+            "server busy: admission queue full"
+        );
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(format!("{io}").contains("gone"));
     }

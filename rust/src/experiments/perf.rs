@@ -9,17 +9,21 @@
 //! no dependencies, like everything else in the crate.
 
 use crate::coordinator::{
-    BatchPolicy, EchoExecutor, ModelRegistry, NativeExecutor, Server, ServerConfig,
+    is_busy, BatchPolicy, Client, EchoExecutor, ModelInfo, ModelRegistry, NativeExecutor,
+    NetServer, Server, ServerConfig,
 };
 use crate::error::Result;
+use crate::metrics::Histogram;
 use crate::tensor::{matmul_bt, Tensor};
 use crate::tt::{MatvecScratch, TtMatrix, TtShape};
 use crate::util::bench::{black_box, Bencher};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threads::num_threads;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One dense-vs-TT matvec configuration (a Table-3-style cell).
@@ -179,6 +183,98 @@ pub fn drive_clients(
     t0.elapsed().as_secs_f64()
 }
 
+/// What [`drive_remote_clients`] observed, from the client's side of the
+/// wire: true end-to-end latency including both network hops.
+pub struct RemoteDrive {
+    pub wall_seconds: f64,
+    pub completed: u64,
+    /// `Busy` replies (server-side load shedding; retryable, not failures)
+    pub busy: u64,
+    /// transport or execution failures
+    pub failed: u64,
+    /// client-observed send → reply latency
+    pub e2e: Histogram,
+}
+
+/// Fire exactly `n_requests` random-normal inputs at `model` over TCP
+/// from `connections` independent [`Client`] connections, each keeping
+/// up to `pipeline` requests in flight.  The remote counterpart of
+/// [`drive_clients`], shared by `tensornet client`, the `remote_tt`
+/// bench sweep and `examples/serve_tt.rs` so the driven workload cannot
+/// drift between the CLI and the perf trajectory.
+pub fn drive_remote_clients(
+    addr: &str,
+    model: &str,
+    dim: usize,
+    n_requests: usize,
+    connections: usize,
+    pipeline: usize,
+) -> RemoteDrive {
+    let connections = connections.max(1);
+    let pipeline = pipeline.max(1);
+    let completed = AtomicU64::new(0);
+    let busy = AtomicU64::new(0);
+    let failed = AtomicU64::new(0);
+    let e2e = Histogram::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..connections {
+            let mine = n_requests / connections + usize::from(c < n_requests % connections);
+            let (completed, busy, failed, e2e) = (&completed, &busy, &failed, &e2e);
+            s.spawn(move || {
+                let mut client = match Client::connect(addr) {
+                    Ok(cl) => cl,
+                    Err(e) => {
+                        eprintln!("client {c}: {e}");
+                        failed.fetch_add(mine as u64, Ordering::Relaxed);
+                        return;
+                    }
+                };
+                let mut rng = Rng::new(0x4E37_0000 ^ c as u64);
+                let mut sent_at: VecDeque<Instant> = VecDeque::new();
+                let mut sent = 0usize;
+                let mut done = 0usize;
+                while done < mine {
+                    while sent < mine && sent_at.len() < pipeline {
+                        let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(1.0)).collect();
+                        if let Err(e) = client.send(model, &x) {
+                            eprintln!("client {c}: {e}");
+                            // the connection is gone: everything unanswered
+                            // plus everything unsent fails
+                            failed.fetch_add((mine - done) as u64, Ordering::Relaxed);
+                            return;
+                        }
+                        sent_at.push_back(Instant::now());
+                        sent += 1;
+                    }
+                    let sent_instant = sent_at.pop_front().expect("pipeline is non-empty");
+                    match client.recv() {
+                        Ok(_) => {
+                            e2e.record(sent_instant.elapsed());
+                            completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) if is_busy(&e) => {
+                            busy.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            eprintln!("client {c}: {e}");
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    done += 1;
+                }
+            });
+        }
+    });
+    RemoteDrive {
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        completed: completed.into_inner(),
+        busy: busy.into_inner(),
+        failed: failed.into_inner(),
+        e2e,
+    }
+}
+
 /// Coordinator throughput/latency over the echo backend (isolates
 /// coordination overhead from model compute) for a small policy sweep.
 pub fn bench_coordinator(
@@ -285,6 +381,11 @@ pub fn bench_native_serving(
         obj.insert("clients".to_string(), num(clients as f64));
         obj.insert("completed".to_string(), num(served as f64));
         obj.insert("errors".to_string(), num(st.errors.get() as f64));
+        // load-shedding and pool degradation are part of the trajectory:
+        // a policy change that silently starts rejecting would otherwise
+        // look like a latency win
+        obj.insert("rejected".to_string(), num(st.rejected.get() as f64));
+        obj.insert("failed_workers".to_string(), num(st.failed_workers.get() as f64));
         obj.insert("req_per_s".to_string(), num(served as f64 / wall));
         obj.insert("mean_batch".to_string(), num(st.mean_batch_size()));
         obj.insert("p50_us".to_string(), num(st.e2e.quantile_us(0.5)));
@@ -296,6 +397,79 @@ pub fn bench_native_serving(
                 st.mean_batch_size(),
                 st.e2e.quantile_us(0.5),
                 st.e2e.quantile_us(0.99),
+            );
+        }
+        entries.push(Json::Obj(obj));
+    }
+    Ok(entries)
+}
+
+/// Remote-TT serving sweep: the same native `tt_layer` model behind the
+/// batcher, but reached over loopback TCP through the wire protocol —
+/// swept over `(connections, max_batch)`.  Against the in-process
+/// `native_tt` sweep above, the delta is pure transport cost (framing +
+/// two loopback hops + the per-connection reader/writer pair), which is
+/// exactly what EXPERIMENTS.md §Perf tracks for remote serving.
+pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>> {
+    let registry = ModelRegistry::standard();
+    let model = "tt_layer";
+    let dim = registry.input_dim(model)?;
+    let pipeline = 4usize;
+    let sweep = [(1usize, 1usize), (2, 32), (4, 32), (8, 32)];
+    let mut entries = Vec::new();
+    for (connections, max_batch) in sweep {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch, max_delay: Duration::from_micros(500) },
+            queue_capacity: 4096,
+            batch_queue_capacity: 16,
+            executor_threads: 2,
+        };
+        let reg = registry.clone();
+        let server =
+            Arc::new(Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?);
+        let net = NetServer::start(
+            server.clone(),
+            "127.0.0.1:0",
+            vec![ModelInfo {
+                name: model.to_string(),
+                input_dim: dim as u32,
+                output_dim: dim as u32,
+            }],
+        )?;
+        let addr = net.local_addr().to_string();
+        // warm the lazily-built model out of the timed region (same
+        // rationale as the native sweep; the warmup rides its own
+        // connection so the timed clients start clean)
+        Client::connect(&addr)?.infer(model, &vec![0.0; dim])?;
+        let drive = drive_remote_clients(&addr, model, dim, n_requests, connections, pipeline);
+        let st = server.stats();
+        let mean_batch = st.mean_batch_size();
+        net.shutdown();
+        let failed_workers = server.stats().failed_workers.get();
+        drop(server); // last Arc: joins batcher + executor pool
+        let wall = drive.wall_seconds.max(1e-9);
+        let mut obj = BTreeMap::new();
+        obj.insert("model".to_string(), Json::Str(model.to_string()));
+        obj.insert("connections".to_string(), num(connections as f64));
+        obj.insert("max_batch".to_string(), num(max_batch as f64));
+        obj.insert("pipeline".to_string(), num(pipeline as f64));
+        obj.insert("completed".to_string(), num(drive.completed as f64));
+        obj.insert("busy".to_string(), num(drive.busy as f64));
+        obj.insert("failed".to_string(), num(drive.failed as f64));
+        obj.insert("failed_workers".to_string(), num(failed_workers as f64));
+        obj.insert("req_per_s".to_string(), num(drive.completed as f64 / wall));
+        obj.insert("mean_batch".to_string(), num(mean_batch));
+        // client-observed e2e: includes framing + both loopback hops
+        obj.insert("p50_us".to_string(), num(drive.e2e.quantile_us(0.5)));
+        obj.insert("p99_us".to_string(), num(drive.e2e.quantile_us(0.99)));
+        if verbose {
+            println!(
+                "  conns={connections}  max_batch={max_batch:<4} {:>9.0} req/s  mean batch {:.1}  p50 {:.0}µs p99 {:.0}µs  busy {}",
+                drive.completed as f64 / wall,
+                mean_batch,
+                drive.e2e.quantile_us(0.5),
+                drive.e2e.quantile_us(0.99),
+                drive.busy,
             );
         }
         entries.push(Json::Obj(obj));
@@ -360,8 +534,15 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
     }
     let native_requests = if quick { 1_000 } else { 5_000 };
     let native = bench_native_serving(native_requests, clients, verbose)?;
-    let coord_report =
-        report("coordinator", quick, vec![("entries", coord), ("native_tt", native)]);
+    if verbose {
+        println!("== remote TT serving sweep (connections x max_batch, loopback TCP)");
+    }
+    let remote = bench_remote_serving(native_requests, verbose)?;
+    let coord_report = report(
+        "coordinator",
+        quick,
+        vec![("entries", coord), ("native_tt", native), ("remote_tt", remote)],
+    );
 
     let paths = vec![
         write_report(out_dir, "BENCH_tt_matvec.json", &tt_report)?,
@@ -442,6 +623,31 @@ mod tests {
             assert_eq!(e.get("completed").unwrap().as_usize(), Some(24));
             assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
             assert_eq!(e.get("model").unwrap().as_str(), Some("tt_layer"));
+            // load-shedding visibility: every entry carries the counters
+            assert_eq!(e.get("rejected").unwrap().as_usize(), Some(0));
+            assert_eq!(e.get("failed_workers").unwrap().as_usize(), Some(0));
+        }
+    }
+
+    #[test]
+    fn remote_serving_sweep_covers_connection_scaling() {
+        let entries = bench_remote_serving(24, false).unwrap();
+        assert_eq!(entries.len(), 4);
+        let conns: Vec<usize> = entries
+            .iter()
+            .map(|e| e.get("connections").unwrap().as_usize().unwrap())
+            .collect();
+        assert!(conns.contains(&1) && conns.iter().any(|&c| c > 1), "{conns:?}");
+        for e in &entries {
+            assert_eq!(e.get("failed").unwrap().as_usize(), Some(0));
+            assert_eq!(e.get("failed_workers").unwrap().as_usize(), Some(0));
+            // every request either completed or was load-shed with Busy
+            let done = e.get("completed").unwrap().as_usize().unwrap()
+                + e.get("busy").unwrap().as_usize().unwrap();
+            assert_eq!(done, 24);
+            assert!(e.get("completed").unwrap().as_usize().unwrap() > 0);
+            assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(e.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
         }
     }
 

@@ -19,18 +19,27 @@
 //!                                              TT-SVD a dense checkpoint
 //! tensornet serve      [--backend native|pjrt] [--executor-threads N]
 //!                      [--models DIR]          serve native zoo models,
-//!                                              trained checkpoints, or AOT
-//!                                              artifacts
+//!                      [--listen ADDR]         trained checkpoints, or AOT
+//!                                              artifacts; --listen exposes
+//!                                              the server over TCP
+//! tensornet client     --connect ADDR [--model NAME] [--requests N]
+//!                      [--connections C] [--pipeline P] [--shutdown]
+//!                                              drive a remote server over
+//!                                              the wire protocol
 //! tensornet inspect    [--artifacts DIR]       list artifacts + variants
 //! ```
 //!
 //! `train --save` → `compress` → `serve --models` is the paper's full
-//! train → compress(TT-SVD) → fine-tune → deploy lifecycle (§3.1, §5).
+//! train → compress(TT-SVD) → fine-tune → deploy lifecycle (§3.1, §5);
+//! `serve --listen` + `client --connect` is the same server reached over
+//! the TCP wire protocol (DESIGN.md §12).
 
 use std::path::Path;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 use tensornet::coordinator::{
-    BatchPolicy, ModelRegistry, NativeExecutor, PjrtExecutor, Server, ServerConfig,
+    BatchPolicy, Client, ModelInfo, ModelRegistry, NativeExecutor, NetServer, PjrtExecutor,
+    Server, ServerConfig, ServerStats,
 };
 use tensornet::data::{global_contrast_normalize, synth_mnist};
 use tensornet::error::Result;
@@ -72,6 +81,7 @@ fn run(args: Args) -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("compress") => cmd_compress(&args),
         Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
         Some("inspect") => cmd_inspect(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
@@ -96,13 +106,18 @@ fn print_usage() {
          \u{20}  compress --from CKPT --to DIR [--rank 8] [--eps 0]  TT-SVD dense checkpoint layers\n\
          \u{20}        [--ms 4,4,4,4,4] [--ns 4,4,4,4,4]              into a TT checkpoint\n\
          \u{20}  serve [--backend native|pjrt] [--model tt_layer]    serve models behind the batcher\n\
-         \u{20}        [--models DIR]                                 (native: zoo models or trained\n\
+         \u{20}        [--models DIR] [--listen ADDR]                 (native: zoo models or trained\n\
          \u{20}        [--executor-threads N] [--requests 200]        checkpoints from --models DIR;\n\
-         \u{20}        [--max-batch 32] [--max-delay-ms 2]            pjrt: AOT artifacts)\n\
+         \u{20}        [--max-batch 32] [--max-delay-ms 2]            pjrt: AOT artifacts); --listen\n\
+         \u{20}                                                       serves TCP until a wire Shutdown\n\
+         \u{20}  client --connect ADDR [--model NAME]                drive a remote server: N requests\n\
+         \u{20}        [--requests 100] [--connections 1]             over C connections, P pipelined\n\
+         \u{20}        [--pipeline 4] [--shutdown]                    each; --shutdown stops the server\n\
          \u{20}  inspect                                             list artifacts\n\
          common flags: --quick, --artifacts DIR (default ./artifacts)\n\
          lifecycle:  train --model fc --save c/dense  ->  compress --from c/dense --to c/tt\n\
-         \u{20}           ->  train --init-from c/tt --save c/tt2  ->  serve --models c --model tt2"
+         \u{20}           ->  train --init-from c/tt --save c/tt2  ->  serve --models c --model tt2\n\
+         remote:     serve --listen 127.0.0.1:7070  ->  client --connect 127.0.0.1:7070"
     );
 }
 
@@ -375,6 +390,21 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The serve end-of-run summary — load-shedding (`rejected`) and pool
+/// degradation (`failed workers`) included, so a run that silently shed
+/// or limped is visible in the log, not just in the exit code.
+fn print_serve_summary(stats: &ServerStats, wall: f64) {
+    println!("completed:  {}", stats.completed.get());
+    println!("rejected:   {} (admission queue full)", stats.rejected.get());
+    println!("errors:     {}", stats.errors.get());
+    println!("failed workers: {}", stats.failed_workers.get());
+    println!("throughput: {:.1} req/s (wall {:.2}s)", stats.completed.get() as f64 / wall, wall);
+    println!("mean batch: {:.2}", stats.mean_batch_size());
+    println!("e2e:   {}", stats.e2e.summary());
+    println!("exec:  {}", stats.exec.summary());
+    println!("queue: {}", stats.queue.summary());
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "native");
     let dir = args.get_or("artifacts", "artifacts");
@@ -384,6 +414,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.get_usize("max-batch", 32)?;
     let max_delay_ms = args.get_usize("max-delay-ms", 2)?;
     let executor_threads = args.get_usize("executor-threads", 1)?;
+    let listen = args.get("listen");
 
     let cfg = ServerConfig {
         policy: BatchPolicy {
@@ -393,7 +424,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         executor_threads,
         ..Default::default()
     };
-    let (server, dim, model) = match backend.as_str() {
+    let (server, dim, model, lineup) = match backend.as_str() {
         "native" => {
             // --models DIR swaps the seed-deterministic zoo for trained
             // checkpoints; without an explicit --model the first (sorted)
@@ -413,13 +444,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 || "native backend".to_string(),
                 |d| format!("checkpoints in {d}"),
             );
-            println!(
-                "== serving '{model}' ({source}) \
-                 ({n_requests} requests, {concurrency} clients, {executor_threads} executor threads)"
-            );
+            println!("== serving '{model}' ({source}, {executor_threads} executor threads)");
+            // the full registry is advertised over the wire, not just the
+            // locally-driven model
+            let lineup: Vec<ModelInfo> = registry
+                .names()
+                .iter()
+                .map(|n| {
+                    let spec = registry.spec(n).expect("name is registered");
+                    ModelInfo {
+                        name: n.to_string(),
+                        input_dim: spec.input_dim() as u32,
+                        output_dim: spec.output_dim() as u32,
+                    }
+                })
+                .collect();
             // unknown --model errors here, listing the registered names
             let dim = registry.input_dim(&model)?;
-            (Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone())))?, dim, model)
+            (
+                Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone())))?,
+                dim,
+                model,
+                lineup,
+            )
         }
         "pjrt" => {
             if models_dir.is_some() {
@@ -430,8 +477,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             let model = args.get_or("model", "tt_layer");
             println!(
-                "== serving '{model}' from {dir} \
-                 ({n_requests} requests, {concurrency} clients, {executor_threads} executor threads)"
+                "== serving '{model}' from {dir} ({executor_threads} executor threads)"
             );
             // discover input dim from the manifest
             let manifest = Manifest::load(&dir)?;
@@ -448,8 +494,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     ))
                 })?;
             let dim = spec.runtime_inputs()[0].shape[1];
+            let out_dim = spec.outputs[0].shape[1];
+            let lineup = vec![ModelInfo {
+                name: model.clone(),
+                input_dim: dim as u32,
+                output_dim: out_dim as u32,
+            }];
             let dir2 = dir.clone();
-            (Server::start(cfg, move || PjrtExecutor::new(&dir2))?, dim, model)
+            (Server::start(cfg, move || PjrtExecutor::new(&dir2))?, dim, model, lineup)
         }
         other => {
             return Err(tensornet::error::Error::Config(format!(
@@ -458,15 +510,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
 
+    if let Some(addr) = listen {
+        // daemon mode: requests arrive over TCP; runs until a client's
+        // wire Shutdown frame (tensornet client --shutdown)
+        let server = Arc::new(server);
+        let net = NetServer::start(server.clone(), addr, lineup)?;
+        let t0 = Instant::now();
+        // the bound address line is the machine-readable handshake the CI
+        // loopback smoke greps for — keep the format stable
+        println!("listening on {}", net.local_addr());
+        net.wait_for_shutdown();
+        println!("wire shutdown received — draining connections");
+        net.shutdown();
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let stats = server.stats();
+        print_serve_summary(stats, wall);
+        // remote request errors belong to the clients that sent them; the
+        // daemon's own health gate is the executor pool
+        if stats.failed_workers.get() > 0 {
+            return Err(tensornet::error::Error::Coordinator(format!(
+                "{} executor workers failed init",
+                stats.failed_workers.get()
+            )));
+        }
+        return Ok(());
+    }
+
+    println!("driving {n_requests} requests from {concurrency} in-process clients");
     let wall = drive_clients(&server, &model, dim, n_requests, concurrency);
     let stats = server.stats();
-    println!("completed:  {}", stats.completed.get());
-    println!("errors:     {}", stats.errors.get());
-    println!("throughput: {:.1} req/s (wall {:.2}s)", stats.completed.get() as f64 / wall, wall);
-    println!("mean batch: {:.2}", stats.mean_batch_size());
-    println!("e2e:   {}", stats.e2e.summary());
-    println!("exec:  {}", stats.exec.summary());
-    println!("queue: {}", stats.queue.summary());
+    print_serve_summary(stats, wall);
     // gate on completions and pool health, not just counted errors: a
     // reply channel dropped by a dying worker fails the caller without
     // touching stats.errors, and a worker whose init failed leaves the
@@ -480,6 +553,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats.completed.get(),
             stats.errors.get(),
             stats.failed_workers.get()
+        )));
+    }
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("connect").ok_or_else(|| {
+        tensornet::error::Error::Config("client needs --connect <addr> (as printed by serve --listen)".into())
+    })?;
+    let n_requests = args.get_usize("requests", 100)?;
+    let connections = args.get_usize("connections", 1)?.max(1);
+    let pipeline = args.get_usize("pipeline", 4)?.max(1);
+
+    // the probe connection discovers the lineup and, at the end, fetches
+    // server-side stats / requests shutdown — the drive uses its own
+    // connections so the probe never skews timings
+    let mut probe = Client::connect(addr)?;
+    let lineup = probe.list_models()?;
+    if lineup.is_empty() {
+        return Err(tensornet::error::Error::Coordinator(format!(
+            "{addr} advertises no models"
+        )));
+    }
+    let described: Vec<String> = lineup
+        .iter()
+        .map(|m| format!("{} ({}->{})", m.name, m.input_dim, m.output_dim))
+        .collect();
+    println!("== {addr} serves: {}", described.join(", "));
+    let (model, dim) = match args.get("model") {
+        Some(want) => match lineup.iter().find(|m| m.name == want) {
+            Some(m) => (m.name.clone(), m.input_dim as usize),
+            None => {
+                let names: Vec<&str> = lineup.iter().map(|m| m.name.as_str()).collect();
+                return Err(tensornet::error::Error::Config(format!(
+                    "model '{want}' not served (available: {})",
+                    names.join(", ")
+                )));
+            }
+        },
+        None => (lineup[0].name.clone(), lineup[0].input_dim as usize),
+    };
+
+    println!(
+        "== driving {n_requests} requests at '{model}' over {connections} connection(s), \
+         {pipeline} pipelined each"
+    );
+    let drive = drive_remote_clients(addr, &model, dim, n_requests, connections, pipeline);
+    let wall = drive.wall_seconds.max(1e-9);
+    println!("completed:  {}", drive.completed);
+    println!("busy:       {} (load shed by the server)", drive.busy);
+    println!("failed:     {}", drive.failed);
+    println!("throughput: {:.1} req/s (wall {:.2}s)", drive.completed as f64 / wall, wall);
+    println!("e2e:   {}", drive.e2e.summary());
+    if let Ok(st) = probe.stats() {
+        println!(
+            "server: completed {} rejected {} errors {} failed_workers {}",
+            st.completed, st.rejected, st.errors, st.failed_workers
+        );
+    }
+    if args.flag("shutdown") {
+        probe.shutdown_server()?;
+        println!("server shutdown acknowledged");
+    }
+    // busy is load shedding (the server behaving as designed under
+    // pressure); transport/execution failures and zero progress are not
+    if drive.failed > 0 || drive.completed == 0 {
+        return Err(tensornet::error::Error::Coordinator(format!(
+            "{} of {n_requests} requests completed, {} failed, {} shed",
+            drive.completed, drive.failed, drive.busy
         )));
     }
     Ok(())

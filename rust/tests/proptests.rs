@@ -2,6 +2,7 @@
 //! harness — proptest is unavailable offline; failures print the case
 //! index and master seed for exact replay).
 
+use tensornet::coordinator::wire::{ErrCode, Frame, ModelInfo};
 use tensornet::coordinator::{choose_variant, BatchAssembler, BatchPolicy};
 use tensornet::linalg::{qr_mat, svd_mat, Mat};
 use tensornet::nn::{Layer, LayerState, TtLinear};
@@ -281,6 +282,124 @@ fn prop_checkpoint_rejects_random_truncations() {
         Ok(())
     });
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// wire codec
+// ---------------------------------------------------------------------------
+
+fn random_name(rng: &mut Rng, max_len: usize) -> String {
+    const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_";
+    let len = gen::int(rng, 0, max_len);
+    (0..len).map(|_| CHARS[rng.below(CHARS.len())] as char).collect()
+}
+
+/// Arbitrary f32 payloads, including denormals/NaN/inf bit patterns —
+/// the wire moves bits, so every pattern must survive.
+fn random_f32_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let len = gen::int(rng, 0, max_len);
+    (0..len)
+        .map(|_| {
+            if rng.uniform() < 0.25 {
+                f32::from_bits(rng.next_u64() as u32)
+            } else {
+                rng.normal_f32(1.0)
+            }
+        })
+        .collect()
+}
+
+fn random_err_code(rng: &mut Rng) -> ErrCode {
+    match rng.below(3) {
+        0 => ErrCode::Busy,
+        1 => ErrCode::BadRequest,
+        _ => ErrCode::Exec,
+    }
+}
+
+fn random_frame(rng: &mut Rng) -> Frame {
+    match rng.below(9) {
+        0 => Frame::Infer {
+            id: rng.next_u64(),
+            model: random_name(rng, 24),
+            input: random_f32_vec(rng, 64),
+        },
+        1 => Frame::InferOk {
+            id: rng.next_u64(),
+            queue_us: rng.next_u64(),
+            exec_us: rng.next_u64(),
+            batch_size: rng.next_u64() as u32,
+            output: random_f32_vec(rng, 64),
+        },
+        2 => Frame::InferErr {
+            id: rng.next_u64(),
+            code: random_err_code(rng),
+            message: random_name(rng, 80),
+        },
+        3 => Frame::Stats,
+        4 => Frame::StatsReply {
+            completed: rng.next_u64(),
+            rejected: rng.next_u64(),
+            errors: rng.next_u64(),
+            failed_workers: rng.next_u64(),
+            batches: rng.next_u64(),
+            batched_rows: rng.next_u64(),
+        },
+        5 => Frame::ListModels,
+        6 => Frame::ModelList {
+            models: (0..gen::int(rng, 0, 5))
+                .map(|_| ModelInfo {
+                    name: random_name(rng, 24),
+                    input_dim: rng.next_u64() as u32,
+                    output_dim: rng.next_u64() as u32,
+                })
+                .collect(),
+        },
+        7 => Frame::Shutdown,
+        _ => Frame::ShutdownOk,
+    }
+}
+
+#[test]
+fn prop_wire_frames_roundtrip_bitwise() {
+    // encode -> decode -> re-encode must reproduce the exact bytes: the
+    // byte-level comparison catches any f32 canonicalization or field
+    // reordering that a structural comparison would miss
+    check(cfg(120), "wire-roundtrip", |rng| {
+        let frame = random_frame(rng);
+        let bytes = frame.encode().map_err(|e| e.to_string())?;
+        let back = Frame::decode(&bytes).map_err(|e| format!("decode of {frame:?}: {e}"))?;
+        let again = back.encode().map_err(|e| e.to_string())?;
+        if again != bytes {
+            return Err(format!("re-encode differs for {frame:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_rejects_truncations_and_bit_flips() {
+    // mirror of prop_checkpoint_rejects_random_truncations: any strict
+    // prefix of a valid frame and any single corrupted bit must decode
+    // to a clean error — never a panic, never a silently wrong payload
+    // (the header CRC covers type, length and payload)
+    check(cfg(120), "wire-corruption", |rng| {
+        let frame = random_frame(rng);
+        let bytes = frame.encode().map_err(|e| e.to_string())?;
+        let cut = gen::int(rng, 0, bytes.len().saturating_sub(1));
+        if Frame::decode(&bytes[..cut]).is_ok() {
+            return Err(format!("decode succeeded on {cut}/{} bytes of {frame:?}", bytes.len()));
+        }
+        let bit = gen::int(rng, 0, bytes.len() * 8 - 1);
+        let mut flipped = bytes.clone();
+        flipped[bit / 8] ^= 1 << (bit % 8);
+        if Frame::decode(&flipped).is_ok() {
+            return Err(format!(
+                "decode succeeded with bit {bit} flipped in {frame:?} — corrupt payload accepted"
+            ));
+        }
+        Ok(())
+    });
 }
 
 // ---------------------------------------------------------------------------

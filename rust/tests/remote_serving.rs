@@ -1,0 +1,277 @@
+//! Integration: the TCP front-end (`NetServer` + wire protocol +
+//! `Client`) against the in-process coordinator.
+//!
+//! The core claim is transport transparency: a request served over
+//! loopback TCP must produce BITWISE the same output as `Server::infer`
+//! on the same seed-deterministic model — the wire moves f32s as LE bit
+//! patterns and the admission path is shared, so nothing may drift.
+//! Around that: protocol robustness (a malformed frame closes only its
+//! own connection, with an error reply) and shared backpressure (a full
+//! admission queue becomes a `Busy` reply, never a hang).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+use tensornet::coordinator::wire;
+use tensornet::coordinator::{
+    is_busy, BatchExecutor, BatchPolicy, Client, ErrCode, Frame, ModelInfo, ModelRegistry,
+    ModelSpec, NativeExecutor, NetServer, Server, ServerConfig,
+};
+use tensornet::error::Result;
+use tensornet::util::rng::Rng;
+
+const SEED: u64 = 0xD15C_0BA1;
+const MS: [usize; 3] = [4, 4, 4];
+const NS: [usize; 3] = [4, 4, 4];
+const RANK: usize = 3;
+const DIM: usize = 64;
+
+fn small_registry() -> ModelRegistry {
+    let mut r = ModelRegistry::new();
+    r.register(
+        "tt_small",
+        ModelSpec::TtLayer { ms: MS.to_vec(), ns: NS.to_vec(), rank: RANK, seed: SEED },
+    );
+    r
+}
+
+/// Native server + TCP front-end on an OS-assigned loopback port.
+fn start_remote(executor_threads: usize, max_batch: usize) -> (Arc<Server>, NetServer, String) {
+    let registry = small_registry();
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch, max_delay: Duration::from_millis(2) },
+        queue_capacity: 1024,
+        batch_queue_capacity: 8,
+        executor_threads,
+    };
+    let server = Arc::new(
+        Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap(),
+    );
+    let net = NetServer::start(
+        server.clone(),
+        "127.0.0.1:0",
+        vec![ModelInfo { name: "tt_small".into(), input_dim: DIM as u32, output_dim: DIM as u32 }],
+    )
+    .unwrap();
+    let addr = net.local_addr().to_string();
+    (server, net, addr)
+}
+
+#[test]
+fn remote_infer_bitwise_matches_in_process_infer() {
+    let (server, net, addr) = start_remote(2, 8);
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let server = &server;
+            let addr = addr.as_str();
+            s.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut rng = Rng::new(2000 + c);
+                for i in 0..20 {
+                    let x: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(1.0)).collect();
+                    let remote = client.infer("tt_small", &x).unwrap();
+                    let local = server.infer("tt_small", x).unwrap();
+                    let remote_bits: Vec<u32> =
+                        remote.output.iter().map(|v| v.to_bits()).collect();
+                    let local_bits: Vec<u32> =
+                        local.output.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        remote_bits, local_bits,
+                        "client {c} request {i}: TCP output differs from in-process"
+                    );
+                    assert!(remote.batch_size >= 1);
+                }
+            });
+        }
+    });
+    // both transports landed in the same shared stats
+    assert_eq!(server.stats().completed.get(), 4 * 20 * 2);
+    assert_eq!(server.stats().errors.get(), 0);
+    net.shutdown();
+    drop(server); // joins batcher + pool
+}
+
+#[test]
+fn pipelined_requests_reply_in_order() {
+    let (server, net, addr) = start_remote(1, 16);
+    let mut client = Client::connect(&addr).unwrap();
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Vec<f32>> =
+        (0..10).map(|_| (0..DIM).map(|_| rng.normal_f32(1.0)).collect()).collect();
+    let mut ids = Vec::new();
+    for x in &inputs {
+        ids.push(client.send("tt_small", x).unwrap());
+    }
+    assert_eq!(client.in_flight(), 10);
+    for (i, x) in inputs.iter().enumerate() {
+        let resp = client.recv().unwrap();
+        assert_eq!(resp.id, ids[i], "replies must arrive in send order");
+        let want = server.infer("tt_small", x.clone()).unwrap();
+        assert_eq!(resp.output, want.output, "pipelined request {i}");
+    }
+    assert_eq!(client.in_flight(), 0);
+    net.shutdown();
+    drop(server);
+}
+
+#[test]
+fn malformed_frame_gets_error_reply_and_only_that_connection_dies() {
+    let (server, net, addr) = start_remote(1, 8);
+
+    // a healthy connection opened BEFORE the attack must survive it
+    let mut healthy = Client::connect(&addr).unwrap();
+    let ok = healthy.infer("tt_small", &vec![0.25; DIM]).unwrap();
+    assert_eq!(ok.output.len(), DIM);
+
+    // raw garbage: wrong magic, never a valid frame
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    raw.write_all(&[0xFFu8; 64]).unwrap();
+    raw.flush().unwrap();
+    // the server replies with a BadRequest error frame, then closes
+    let reply = Frame::read_from(&mut raw).unwrap().expect("an error reply, not silence");
+    match reply {
+        Frame::InferErr { code, message, .. } => {
+            assert_eq!(code, ErrCode::BadRequest, "{message}");
+        }
+        other => panic!("expected InferErr, got {other:?}"),
+    }
+    assert_eq!(
+        Frame::read_from(&mut raw).unwrap(),
+        None,
+        "the offending connection must be closed after the error reply"
+    );
+
+    // a truncated frame (valid header, missing payload bytes) also
+    // closes cleanly with an error reply
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    let valid = Frame::Infer { id: 1, model: "tt_small".into(), input: vec![0.0; DIM] }
+        .encode()
+        .unwrap();
+    raw.write_all(&valid[..valid.len() - 7]).unwrap();
+    raw.flush().unwrap();
+    raw.shutdown(std::net::Shutdown::Write).unwrap();
+    let reply = Frame::read_from(&mut raw).unwrap().expect("truncation must be answered");
+    assert!(matches!(reply, Frame::InferErr { code: ErrCode::BadRequest, .. }), "{reply:?}");
+
+    // the listener and the healthy connection keep serving
+    let ok = healthy.infer("tt_small", &vec![0.5; DIM]).unwrap();
+    assert_eq!(ok.output.len(), DIM);
+    let mut fresh = Client::connect(&addr).unwrap();
+    assert_eq!(fresh.infer("tt_small", &vec![1.0; DIM]).unwrap().output.len(), DIM);
+    assert_eq!(server.stats().failed_workers.get(), 0);
+    net.shutdown();
+    drop(server);
+}
+
+/// Executor that stalls long enough for a burst to pile up behind it.
+struct Stall;
+impl BatchExecutor for Stall {
+    fn execute(&mut self, _m: &str, x: Vec<f32>, _rows: usize) -> Result<(Vec<f32>, usize)> {
+        std::thread::sleep(Duration::from_millis(150));
+        let n = x.len();
+        Ok((x, n))
+    }
+    fn input_dim(&self, _m: &str) -> Result<usize> {
+        Ok(2)
+    }
+}
+
+#[test]
+fn full_admission_queue_returns_busy_and_nothing_hangs() {
+    // tiny pipeline: admission(1) + batcher(1) + batch queue(1) +
+    // executing(1) absorb at most 4 requests while Stall sleeps, so a
+    // pipelined burst of 8 must see Busy replies for the overflow
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(0) },
+        queue_capacity: 1,
+        batch_queue_capacity: 1,
+        executor_threads: 1,
+    };
+    let server = Arc::new(Server::start(cfg, || Ok(Stall)).unwrap());
+    let net = NetServer::start(
+        server.clone(),
+        "127.0.0.1:0",
+        vec![ModelInfo { name: "stall".into(), input_dim: 2, output_dim: 2 }],
+    )
+    .unwrap();
+    let mut client = Client::connect(&net.local_addr().to_string()).unwrap();
+
+    let burst = 8;
+    for i in 0..burst {
+        client.send("stall", &[i as f32, 0.0]).unwrap();
+    }
+    let mut completed = 0u64;
+    let mut busy = 0u64;
+    for _ in 0..burst {
+        match client.recv() {
+            Ok(resp) => {
+                assert_eq!(resp.output.len(), 2);
+                completed += 1;
+            }
+            Err(e) if is_busy(&e) => busy += 1,
+            Err(e) => panic!("unexpected failure: {e}"),
+        }
+    }
+    assert_eq!(completed + busy, burst);
+    assert!(busy >= 1, "an 8-burst into a 4-slot pipeline must shed");
+    assert!(completed >= 1, "admitted requests must still complete");
+    // the shed count is visible in the server's shared stats
+    assert_eq!(server.stats().rejected.get(), busy);
+    net.shutdown();
+    drop(server);
+}
+
+#[test]
+fn control_frames_and_wire_shutdown() {
+    let (server, net, addr) = start_remote(1, 8);
+    let mut client = Client::connect(&addr).unwrap();
+
+    let models = client.list_models().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].name, "tt_small");
+    assert_eq!(models[0].input_dim, DIM as u32);
+    assert_eq!(models[0].output_dim, DIM as u32);
+
+    client.infer("tt_small", &vec![0.1; DIM]).unwrap();
+    let st = client.stats().unwrap();
+    assert_eq!(st.completed, 1);
+    assert_eq!(st.failed_workers, 0);
+
+    // an Exec failure (unknown model) keeps the connection usable
+    let err = client.infer("nope", &vec![0.0; DIM]).unwrap_err();
+    assert!(format!("{err}").contains("unknown model"), "{err}");
+    client.infer("tt_small", &vec![0.2; DIM]).unwrap();
+
+    assert!(!net.shutdown_requested());
+    client.shutdown_server().unwrap();
+    assert!(net.shutdown_requested(), "Shutdown frame must raise the flag");
+    net.shutdown();
+    drop(server);
+}
+
+#[test]
+fn oversized_frame_header_is_rejected_before_allocation() {
+    let (server, net, addr) = start_remote(1, 8);
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    // hand-build a header announcing a payload over the cap
+    let oversize: u32 = wire::MAX_PAYLOAD + 1;
+    let mut header = Vec::new();
+    header.extend_from_slice(&wire::MAGIC);
+    header.push(wire::VERSION);
+    header.push(1); // Infer
+    header.extend_from_slice(&oversize.to_le_bytes());
+    header.extend_from_slice(&0u32.to_le_bytes());
+    raw.write_all(&header).unwrap();
+    raw.flush().unwrap();
+    let reply = Frame::read_from(&mut raw).unwrap().expect("oversize must be answered");
+    match reply {
+        Frame::InferErr { code, message, .. } => {
+            assert_eq!(code, ErrCode::BadRequest);
+            assert!(message.contains("cap"), "{message}");
+        }
+        other => panic!("expected InferErr, got {other:?}"),
+    }
+    net.shutdown();
+    drop(server);
+}
