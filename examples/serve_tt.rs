@@ -61,7 +61,8 @@ fn main() -> tensornet::Result<()> {
         let resp = warm.infer(model, &vec![0.0; dim])?;
         assert_eq!(resp.output.len(), dim);
 
-        let drive = drive_remote_clients(&addr, model, dim, n_requests, connections, 4);
+        let drive =
+            drive_remote_clients(&addr, &[(model.to_string(), dim)], n_requests, connections, 4);
         assert_eq!(drive.failed, 0, "remote serving errors — see stderr");
         let st = server.stats();
         println!("  throughput:  {:.0} req/s", drive.completed as f64 / drive.wall_seconds);

@@ -1,11 +1,27 @@
-//! Dynamic batching: group waiting requests up to `max_batch`, never
-//! holding the first request longer than `max_delay`.
+//! Dynamic batching: group waiting requests **per model** up to
+//! `max_batch`, never holding a group's first request longer than
+//! `max_delay`.
 //!
 //! The decision logic lives in the pure [`BatchAssembler`] (unit- and
 //! property-tested without threads or clocks); the thread loop in
 //! `server.rs` just feeds it wall-clock events.
+//!
+//! Guarantees (pinned by `rust/tests/proptests.rs`):
+//!
+//! * **No cross-model batch** — every emitted [`Batch`] holds requests
+//!   for exactly one model; traffic for other models never flushes it.
+//! * **FIFO within a model** — requests for one model are emitted in
+//!   arrival order, batch after batch.
+//! * **Bounded hold** — each group's deadline is its first request's
+//!   arrival + `max_delay`; [`BatchAssembler::poll`] emits *every*
+//!   group whose deadline has passed (oldest deadline first), and
+//!   [`BatchAssembler::deadline`] reports the minimum deadline across
+//!   groups so the batcher thread always wakes in time.
+//! * **No request lost or duplicated** — `push`/`poll`/`flush` together
+//!   emit each request exactly once.
 
 use crate::coordinator::request::InferRequest;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -28,61 +44,111 @@ pub struct Batch {
     pub requests: Vec<InferRequest>,
 }
 
-/// Pure batching state machine.  Requests for different models never share
-/// a batch; each model keys its own pending group.
+/// Pure batching state machine: a keyed map of pending groups, one per
+/// model, each with its own deadline.  Interleaved multi-model traffic
+/// accumulates per model instead of flushing on every model switch —
+/// the head-of-line-blocking fix that keeps mixed-tenant batches full.
+///
+/// Map entries persist after a flush (the drained `Vec` stays keyed
+/// under its model, empty); an empty group is invisible to
+/// `deadline`/`poll`/`flush` and costs one map entry per model name
+/// ever seen.  The TCP front-end validates names against the served
+/// lineup before admission (`coordinator::net`), so remote peers
+/// cannot grow this map; in-process callers are the same trust domain
+/// as the code.
 #[derive(Debug)]
 pub struct BatchAssembler {
     policy: BatchPolicy,
-    pending: Vec<InferRequest>, // all same model
+    /// model → FIFO of waiting requests; a non-empty group's deadline
+    /// is its first request's arrival + `max_delay`
+    pending: BTreeMap<String, Vec<InferRequest>>,
 }
 
 impl BatchAssembler {
     pub fn new(policy: BatchPolicy) -> Self {
-        BatchAssembler { policy, pending: Vec::new() }
+        BatchAssembler { policy, pending: BTreeMap::new() }
     }
 
+    /// Total waiting requests across all model groups.
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.pending.values().map(|g| g.len()).sum()
     }
 
-    /// Offer a request.  Returns a full batch if this request completed
-    /// one (or if it belongs to a different model than the pending group,
-    /// which flushes the group first — in that case the request is queued
-    /// for the next batch).
-    pub fn push(&mut self, req: InferRequest) -> Vec<Batch> {
-        let mut out = Vec::new();
-        if let Some(first) = self.pending.first() {
-            if first.model != req.model {
-                out.push(self.flush().expect("non-empty pending"));
-            }
-        }
-        self.pending.push(req);
-        if self.pending.len() >= self.policy.max_batch {
-            out.push(self.flush().expect("full batch"));
-        }
-        out
+    /// Number of models with at least one waiting request.
+    pub fn pending_models(&self) -> usize {
+        self.pending.values().filter(|g| !g.is_empty()).count()
     }
 
-    /// Deadline of the currently-pending group (first-request arrival +
-    /// max_delay), if any.
+    /// Offer a request: it joins its model's pending group (created on
+    /// first arrival; the group's deadline is this request's arrival +
+    /// `max_delay`).  Returns the full batch iff this request filled
+    /// its group to `max_batch` — no other group is touched, so a model
+    /// switch in the arrival stream never flushes anyone early.
+    pub fn push(&mut self, req: InferRequest) -> Option<Batch> {
+        if !self.pending.contains_key(&req.model) {
+            self.pending.insert(req.model.clone(), Vec::new());
+        }
+        let cap = self.policy.max_batch;
+        let group = self.pending.get_mut(&req.model).expect("inserted above");
+        group.push(req);
+        if group.len() >= cap {
+            let requests = std::mem::take(group);
+            return Some(Batch { model: requests[0].model.clone(), requests });
+        }
+        None
+    }
+
+    /// The earliest deadline across all pending groups (each group's is
+    /// its first request's arrival + `max_delay`), if any — the instant
+    /// the batcher thread must wake by.
     pub fn deadline(&self) -> Option<Instant> {
-        self.pending.first().map(|r| r.enqueued + self.policy.max_delay)
+        self.pending
+            .values()
+            .filter_map(|g| g.first().map(|r| r.enqueued + self.policy.max_delay))
+            .min()
     }
 
-    /// Flush if `now` has passed the pending group's deadline.
-    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
-        match self.deadline() {
-            Some(d) if now >= d => self.flush(),
-            _ => None,
-        }
+    /// Emit **every** group whose deadline has passed at `now`, oldest
+    /// deadline first.  (A single-group poll could only ever flush one
+    /// model per wakeup, starving the rest under mixed traffic.)
+    pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
+        self.drain_due(Some(now))
     }
 
-    /// Unconditionally emit whatever is pending (shutdown path).
-    pub fn flush(&mut self) -> Option<Batch> {
-        if self.pending.is_empty() {
+    /// Unconditionally emit every pending group (shutdown path), oldest
+    /// deadline first.
+    pub fn flush(&mut self) -> Vec<Batch> {
+        self.drain_due(None)
+    }
+
+    /// Drain every group whose deadline is `<= cutoff` (`None` = all),
+    /// oldest deadline first.
+    fn drain_due(&mut self, cutoff: Option<Instant>) -> Vec<Batch> {
+        let mut due: Vec<(Instant, String)> = self
+            .pending
+            .iter()
+            .filter_map(|(m, g)| {
+                // cutoff check before the name clone: the common
+                // nothing-due poll allocates nothing
+                let d = g.first()?.enqueued + self.policy.max_delay;
+                if cutoff.is_some_and(|now| d > now) {
+                    return None;
+                }
+                Some((d, m.clone()))
+            })
+            .collect();
+        due.sort_by_key(|(d, _)| *d);
+        due.into_iter().filter_map(|(_, m)| self.take(&m)).collect()
+    }
+
+    /// Drain one model's group into a batch; `None` if it has nothing
+    /// waiting.
+    fn take(&mut self, model: &str) -> Option<Batch> {
+        let group = self.pending.get_mut(model)?;
+        if group.is_empty() {
             return None;
         }
-        let requests = std::mem::take(&mut self.pending);
+        let requests = std::mem::take(group);
         Some(Batch { model: requests[0].model.clone(), requests })
     }
 }
@@ -105,11 +171,10 @@ mod tests {
     fn fills_to_max_batch() {
         let mut a = BatchAssembler::new(policy(3, 100));
         let t = Instant::now();
-        assert!(a.push(req(1, "tt", t)).is_empty());
-        assert!(a.push(req(2, "tt", t)).is_empty());
-        let batches = a.push(req(3, "tt", t));
-        assert_eq!(batches.len(), 1);
-        assert_eq!(batches[0].requests.len(), 3);
+        assert!(a.push(req(1, "tt", t)).is_none());
+        assert!(a.push(req(2, "tt", t)).is_none());
+        let batch = a.push(req(3, "tt", t)).expect("third request fills the group");
+        assert_eq!(batch.requests.len(), 3);
         assert_eq!(a.pending_len(), 0);
     }
 
@@ -118,42 +183,110 @@ mod tests {
         let mut a = BatchAssembler::new(policy(10, 5));
         let t0 = Instant::now();
         a.push(req(1, "tt", t0));
-        assert!(a.poll(t0).is_none()); // too early
+        assert!(a.poll(t0).is_empty()); // too early
         let late = t0 + Duration::from_millis(6);
-        let b = a.poll(late).expect("deadline passed");
-        assert_eq!(b.requests.len(), 1);
-        assert!(a.poll(late).is_none()); // nothing left
+        let batches = a.poll(late);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 1);
+        assert!(a.poll(late).is_empty()); // nothing left
     }
 
     #[test]
-    fn model_switch_flushes_group() {
-        let mut a = BatchAssembler::new(policy(10, 100));
+    fn interleaved_models_accumulate_independently() {
+        // the head-of-line-blocking regression: an a/b/a/b arrival
+        // stream must NOT flush a group on every model switch
+        let mut a = BatchAssembler::new(policy(3, 100));
+        let t = Instant::now();
+        assert!(a.push(req(1, "tt", t)).is_none());
+        assert!(a.push(req(2, "fc", t)).is_none(), "model switch must not flush");
+        assert!(a.push(req(3, "tt", t)).is_none());
+        assert!(a.push(req(4, "fc", t)).is_none());
+        let batch = a.push(req(5, "tt", t)).expect("tt group filled to 3");
+        assert_eq!(batch.model, "tt");
+        assert_eq!(
+            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 3, 5]
+        );
+        assert_eq!(a.pending_len(), 2); // both fc requests still waiting
+        assert_eq!(a.pending_models(), 1);
+    }
+
+    #[test]
+    fn no_batch_ever_mixes_models() {
+        let mut a = BatchAssembler::new(policy(2, 100));
+        let t = Instant::now();
+        let mut batches = Vec::new();
+        for (id, m) in [(1, "x"), (2, "y"), (3, "x"), (4, "y")] {
+            batches.extend(a.push(req(id, m, t)));
+        }
+        batches.extend(a.flush());
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert!(b.requests.iter().all(|r| r.model == b.model), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn deadline_is_min_across_groups() {
+        let mut a = BatchAssembler::new(policy(10, 10));
+        let t0 = Instant::now();
+        a.push(req(1, "late", t0 + Duration::from_millis(5)));
+        a.push(req(2, "early", t0));
+        assert_eq!(a.deadline(), Some(t0 + Duration::from_millis(10)));
+        // polling at the early group's deadline flushes only that group
+        let batches = a.poll(t0 + Duration::from_millis(10));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].model, "early");
+        assert_eq!(a.deadline(), Some(t0 + Duration::from_millis(15)));
+    }
+
+    #[test]
+    fn poll_emits_every_expired_group_oldest_first() {
+        let mut a = BatchAssembler::new(policy(10, 10));
+        let t0 = Instant::now();
+        a.push(req(1, "b_second", t0 + Duration::from_millis(2)));
+        a.push(req(2, "a_first", t0));
+        let batches = a.poll(t0 + Duration::from_millis(20));
+        assert_eq!(batches.len(), 2, "one wakeup must flush every expired group");
+        assert_eq!(batches[0].model, "a_first"); // oldest deadline first
+        assert_eq!(batches[1].model, "b_second");
+        assert_eq!(a.pending_len(), 0);
+    }
+
+    #[test]
+    fn fifo_within_model_across_batches() {
+        let mut a = BatchAssembler::new(policy(2, 100));
+        let t = Instant::now();
+        let mut emitted = Vec::new();
+        for id in 1..=5 {
+            emitted.extend(a.push(req(id, "tt", t)));
+        }
+        emitted.extend(a.flush());
+        let ids: Vec<u64> =
+            emitted.iter().flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn flush_emits_all_groups() {
+        let mut a = BatchAssembler::new(policy(10, 1));
         let t = Instant::now();
         a.push(req(1, "tt", t));
-        a.push(req(2, "tt", t));
-        let batches = a.push(req(3, "fc", t));
-        assert_eq!(batches.len(), 1);
-        assert_eq!(batches[0].model, "tt");
-        assert_eq!(batches[0].requests.len(), 2);
-        assert_eq!(a.pending_len(), 1); // the fc request waits
+        a.push(req(2, "fc", t));
+        a.push(req(3, "tt", t));
+        let batches = a.flush();
+        assert_eq!(batches.len(), 2);
+        let total: usize = batches.iter().map(|b| b.requests.len()).sum();
+        assert_eq!(total, 3);
+        assert!(a.flush().is_empty());
     }
 
     #[test]
-    fn fifo_within_batch() {
-        let mut a = BatchAssembler::new(policy(4, 100));
-        let t = Instant::now();
-        for id in 1..=3 {
-            a.push(req(id, "tt", t));
-        }
-        let b = a.flush().unwrap();
-        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
-        assert_eq!(ids, vec![1, 2, 3]);
-    }
-
-    #[test]
-    fn empty_flush_is_none() {
+    fn empty_flush_is_empty() {
         let mut a = BatchAssembler::new(policy(4, 1));
-        assert!(a.flush().is_none());
+        assert!(a.flush().is_empty());
         assert!(a.deadline().is_none());
+        assert_eq!(a.pending_len(), 0);
+        assert_eq!(a.pending_models(), 0);
     }
 }

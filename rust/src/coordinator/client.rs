@@ -10,7 +10,7 @@
 //! bitwise identical to the in-process call
 //! (`rust/tests/remote_serving.rs` holds both against each other).
 
-use crate::coordinator::wire::{ErrCode, Frame, ModelInfo};
+use crate::coordinator::wire::{ErrCode, Frame, ModelInfo, ModelStatsEntry};
 use crate::error::{Error, Result};
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Write};
@@ -36,8 +36,11 @@ pub struct RemoteResponse {
     pub batch_size: usize,
 }
 
-/// Counter snapshot returned by [`Client::stats`].
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// Counter snapshot returned by [`Client::stats`].  `per_model` breaks
+/// the aggregates down by model name (sorted), so a remote operator can
+/// read each model's batch efficiency
+/// ([`ModelStatsEntry::mean_batch_size`]) straight off the wire.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RemoteStats {
     pub completed: u64,
     pub rejected: u64,
@@ -45,6 +48,7 @@ pub struct RemoteStats {
     pub failed_workers: u64,
     pub batches: u64,
     pub batched_rows: u64,
+    pub per_model: Vec<ModelStatsEntry>,
 }
 
 /// One blocking connection to a `tensornet serve --listen` front-end.
@@ -146,13 +150,27 @@ impl Client {
         self.recv()
     }
 
-    /// Snapshot the server's counters.
+    /// Snapshot the server's counters (aggregate + per-model).
     pub fn stats(&mut self) -> Result<RemoteStats> {
         self.control(Frame::Stats)?;
         match self.read_reply()? {
-            Frame::StatsReply { completed, rejected, errors, failed_workers, batches, batched_rows } => {
-                Ok(RemoteStats { completed, rejected, errors, failed_workers, batches, batched_rows })
-            }
+            Frame::StatsReply {
+                completed,
+                rejected,
+                errors,
+                failed_workers,
+                batches,
+                batched_rows,
+                per_model,
+            } => Ok(RemoteStats {
+                completed,
+                rejected,
+                errors,
+                failed_workers,
+                batches,
+                batched_rows,
+                per_model,
+            }),
             other => Err(Error::Wire(format!("expected StatsReply, got {other:?}"))),
         }
     }

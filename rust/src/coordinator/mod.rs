@@ -3,9 +3,11 @@
 //! Table 3 of the paper is a *serving* measurement — per-request latency
 //! of a TT-layer vs its dense counterpart at batch 1 and batch 100.  This
 //! module is the production driver around that: a request router over
-//! model variants, a dynamic batcher (max-batch / max-delay policy, the
-//! vLLM-style knobs), an executor worker pool, bounded queues for
-//! backpressure, and latency histograms.  Two serving backends share the
+//! model variants, a dynamic batcher (per-model batch groups under a
+//! max-batch / max-delay policy, the vLLM-style knobs — interleaved
+//! multi-model traffic batches per model instead of flushing on every
+//! model switch), an executor worker pool, bounded queues for
+//! backpressure, and latency histograms (aggregate + per-model).  Two serving backends share the
 //! [`BatchExecutor`] trait: [`NativeExecutor`] runs real in-process
 //! TT/dense models (the default — fully functional offline), and
 //! [`PjrtExecutor`] runs AOT artifacts (stubbed offline).
@@ -43,6 +45,6 @@ pub use native::{ModelRegistry, ModelSpec, NativeExecutor};
 pub use net::NetServer;
 pub use request::{InferRequest, InferResponse};
 pub use router::{choose_variant, Router};
-pub use server::{Admission, ReplyReceiver, Server, ServerConfig, ServerStats};
-pub use wire::{ErrCode, Frame, ModelInfo};
+pub use server::{Admission, ModelStats, ReplyReceiver, Server, ServerConfig, ServerStats};
+pub use wire::{ErrCode, Frame, ModelInfo, ModelStatsEntry};
 pub use worker::{BatchExecutor, EchoExecutor, PjrtExecutor};

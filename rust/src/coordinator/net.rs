@@ -22,7 +22,11 @@
 //! A malformed frame (bad magic/version/checksum, unknown type,
 //! truncation) gets a best-effort `InferErr`/`BadRequest` reply and
 //! closes *that* connection only — the listener and every other
-//! connection keep serving (`rust/tests/remote_serving.rs`).
+//! connection keep serving (`rust/tests/remote_serving.rs`).  Model
+//! names are validated against the advertised lineup before admission:
+//! client-controlled garbage names are answered with an `InferErr`
+//! instead of planting permanent batcher-group / per-model-stats
+//! entries keyed by attacker-chosen bytes.
 
 use crate::coordinator::server::{Admission, Server};
 use crate::coordinator::wire::{self, ErrCode, Frame, ModelInfo, ReadOutcome};
@@ -284,6 +288,30 @@ fn dispatch(
 ) -> bool {
     match frame {
         Frame::Infer { id, model, input } => {
+            // validate the name against the advertised lineup BEFORE
+            // admission: model names are client-controlled bytes, and an
+            // unknown one would otherwise plant a permanent batcher
+            // group + stats entry per unique name (unbounded memory on a
+            // long-lived listener, and past 65535 names every
+            // StatsReply would fail its u16 cap)
+            if !models.iter().any(|m| m.name == model) {
+                // still a request error: the serve summary / StatsReply
+                // must not read `errors 0` while a misconfigured client
+                // gets a stream of failures (pre-admission, so there is
+                // no per-model entry to attribute it to)
+                server.stats().errors.inc();
+                let served: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+                return out_tx
+                    .send(Outbound::Ready(Frame::InferErr {
+                        id,
+                        code: ErrCode::Exec,
+                        message: format!(
+                            "unknown model '{model}' (served: {})",
+                            served.join(", ")
+                        ),
+                    }))
+                    .is_ok();
+            }
             let reply = match server.admit(&model, input) {
                 Ok(Admission::Queued(rx)) => Outbound::Pending { id, rx },
                 Ok(Admission::Busy) => Outbound::Ready(Frame::InferErr {
@@ -301,6 +329,20 @@ fn dispatch(
         }
         Frame::Stats => {
             let st = server.stats();
+            // per-model block: remote operators see each model's batch
+            // efficiency, not just the aggregate (which can hide one
+            // model batching well while another runs at batch 1)
+            let per_model = st
+                .per_model()
+                .into_iter()
+                .map(|(name, m)| wire::ModelStatsEntry {
+                    name,
+                    completed: m.completed.get(),
+                    errors: m.errors.get(),
+                    batches: m.batches.get(),
+                    batched_rows: m.batched_rows.get(),
+                })
+                .collect();
             out_tx
                 .send(Outbound::Ready(Frame::StatsReply {
                     completed: st.completed.get(),
@@ -309,6 +351,7 @@ fn dispatch(
                     failed_workers: st.failed_workers.get(),
                     batches: st.batches.get(),
                     batched_rows: st.batched_rows.get(),
+                    per_model,
                 }))
                 .is_ok()
         }

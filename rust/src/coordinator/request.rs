@@ -20,6 +20,9 @@ pub struct InferRequest {
 #[derive(Clone, Debug)]
 pub struct InferResponse {
     pub id: u64,
+    /// the model that served this request (routes the reply into the
+    /// right per-model histogram in `ServerStats`)
+    pub model: String,
     pub output: Vec<f32>,
     /// time from enqueue to execution start (admission + batching +
     /// batch-queue wait)

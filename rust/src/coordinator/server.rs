@@ -26,9 +26,10 @@ use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::worker::BatchExecutor;
 use crate::error::{Error, Result};
 use crate::metrics::{Counter, Histogram, Meter};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Server wiring knobs.
@@ -57,6 +58,33 @@ impl Default for ServerConfig {
     }
 }
 
+/// Per-model serving metrics, keyed by model name inside
+/// [`ServerStats`].  The aggregate counters can hide one model
+/// batching at `max_batch` while another degenerates to batch-size-1;
+/// these are what `stats()` printing, the wire `StatsReply` and
+/// `Client::stats` surface so per-model batch efficiency is observable.
+#[derive(Debug, Default)]
+pub struct ModelStats {
+    pub completed: Counter,
+    pub errors: Counter,
+    pub batches: Counter,
+    pub batched_rows: Counter,
+    /// wall-clock enqueue → reply receipt for this model's requests
+    pub e2e: Histogram,
+}
+
+impl ModelStats {
+    /// Mean rows per executed batch of this model.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_rows.get() as f64 / b as f64
+        }
+    }
+}
+
 /// Shared serving metrics.
 #[derive(Debug, Default)]
 pub struct ServerStats {
@@ -75,6 +103,12 @@ pub struct ServerStats {
     pub throughput: Meter,
     pub batches: Counter,
     pub batched_rows: Counter,
+    /// per-model counters/histograms, created lazily on first traffic
+    /// for models the executor actually resolves (arbitrary unknown
+    /// names never plant entries — see `run_batch`); behind an RwLock
+    /// so concurrent reply threads share a read lock and only a
+    /// first-ever-traffic miss takes the write lock
+    per_model: RwLock<BTreeMap<String, Arc<ModelStats>>>,
 }
 
 impl ServerStats {
@@ -86,6 +120,43 @@ impl ServerStats {
         } else {
             self.batched_rows.get() as f64 / b as f64
         }
+    }
+
+    /// Get-or-create the stats for `model`.  Steady state is a shared
+    /// read lock + map lookup + `Arc` clone (concurrent reply threads
+    /// don't serialize); only the first traffic a model ever sees takes
+    /// the write lock.  Recording happens on the returned handle — the
+    /// executor takes one per *batch*.
+    pub fn model(&self, model: &str) -> Arc<ModelStats> {
+        {
+            let guard = match self.per_model.read() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            if let Some(s) = guard.get(model) {
+                return s.clone();
+            }
+        }
+        let mut guard = match self.per_model.write() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        // re-check under the write lock: another thread may have won
+        // the race between our read miss and here
+        guard
+            .entry(model.to_string())
+            .or_insert_with(|| Arc::new(ModelStats::default()))
+            .clone()
+    }
+
+    /// Snapshot of every model's stats, sorted by name (stable print
+    /// and wire order).
+    pub fn per_model(&self) -> Vec<(String, Arc<ModelStats>)> {
+        let guard = match self.per_model.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        guard.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
     }
 }
 
@@ -257,7 +328,9 @@ impl Server {
                 // reply receipt.  (This used to be queue_us + exec_us,
                 // which silently dropped batch-queue wait and the reply
                 // hop.)
-                self.stats.e2e.record(resp.enqueued.elapsed());
+                let e2e = resp.enqueued.elapsed();
+                self.stats.e2e.record(e2e);
+                self.stats.model(&resp.model).e2e.record(e2e);
                 Ok(resp)
             }
             Ok(Err(msg)) => Err(Error::Coordinator(msg)),
@@ -298,6 +371,10 @@ fn recv_shared(shared: &Mutex<Receiver<Batch>>) -> Option<Batch> {
     rx.recv().ok()
 }
 
+/// Feed wall-clock events into the per-model [`BatchAssembler`]: wake
+/// at the MIN deadline across groups, and on every wake emit each full
+/// or expired group (the assembler hands back every due model in one
+/// `poll`, so no model waits on another's traffic).
 fn batcher_loop(rx: Receiver<InferRequest>, btx: SyncSender<Batch>, policy: BatchPolicy) {
     let mut asm = BatchAssembler::new(policy);
     loop {
@@ -307,28 +384,30 @@ fn batcher_loop(rx: Receiver<InferRequest>, btx: SyncSender<Batch>, policy: Batc
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                for batch in asm.push(req) {
+                if let Some(batch) = asm.push(req) {
                     if btx.send(batch).is_err() {
                         return;
                     }
                 }
-                if let Some(batch) = asm.poll(Instant::now()) {
+                for batch in asm.poll(Instant::now()) {
                     if btx.send(batch).is_err() {
                         return;
                     }
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
-                if let Some(batch) = asm.poll(Instant::now()) {
+                for batch in asm.poll(Instant::now()) {
                     if btx.send(batch).is_err() {
                         return;
                     }
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
-                // flush and exit
-                if let Some(batch) = asm.flush() {
-                    let _ = btx.send(batch);
+                // flush every group and exit
+                for batch in asm.flush() {
+                    if btx.send(batch).is_err() {
+                        return;
+                    }
                 }
                 return;
             }
@@ -342,10 +421,16 @@ fn run_batch(batch: Batch, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
     let dim = match exec.input_dim(&batch.model) {
         Ok(d) => d,
         Err(e) => {
+            // model unknown to the executor: aggregate errors only — a
+            // per-model entry here would let arbitrary (in-process)
+            // names grow the stats map without bound
             fail_batch(batch, &format!("input_dim: {e}"), stats);
             return;
         }
     };
+    // the executor resolved the model, so it's safe to key stats by it:
+    // one per-model lookup per batch; counters below record on the Arc
+    let mstats = stats.model(&batch.model);
     // assemble the batch matrix; reject rows with bad dims individually
     let mut x = Vec::with_capacity(rows * dim);
     let mut ok_requests = Vec::with_capacity(rows);
@@ -355,6 +440,7 @@ fn run_batch(batch: Batch, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
             ok_requests.push(req);
         } else {
             stats.errors.inc();
+            mstats.errors.inc();
             let _ = req.reply.send(Err(format!(
                 "input dim {} != expected {dim}",
                 req.input.len()
@@ -375,6 +461,7 @@ fn run_batch(batch: Batch, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
                 );
                 for req in ok_requests {
                     stats.errors.inc();
+                    mstats.errors.inc();
                     let _ = req.reply.send(Err(msg.clone()));
                 }
                 return;
@@ -383,6 +470,8 @@ fn run_batch(batch: Batch, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
             stats.exec.record(t0.elapsed());
             stats.batches.inc();
             stats.batched_rows.add(ok_requests.len() as u64);
+            mstats.batches.inc();
+            mstats.batched_rows.add(ok_requests.len() as u64);
             stats.throughput.mark(ok_requests.len() as u64);
             let bs = ok_requests.len();
             for (i, req) in ok_requests.into_iter().enumerate() {
@@ -390,6 +479,7 @@ fn run_batch(batch: Batch, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
                 stats.queue.record(Duration::from_micros(queue_us));
                 let resp = InferResponse {
                     id: req.id,
+                    model: req.model,
                     output: y[i * out_dim..(i + 1) * out_dim].to_vec(),
                     queue_us,
                     exec_us,
@@ -399,6 +489,7 @@ fn run_batch(batch: Batch, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
                 // count BEFORE replying: callers may read stats the
                 // instant their reply lands
                 stats.completed.inc();
+                mstats.completed.inc();
                 let _ = req.reply.send(Ok(resp));
             }
         }
@@ -406,12 +497,17 @@ fn run_batch(batch: Batch, exec: &mut dyn BatchExecutor, stats: &ServerStats) {
             let msg = format!("execute failed: {e}");
             for req in ok_requests {
                 stats.errors.inc();
+                mstats.errors.inc();
                 let _ = req.reply.send(Err(msg.clone()));
             }
         }
     }
 }
 
+/// Fail every request of a batch whose model never resolved (executor
+/// init failure, unknown model).  Aggregate errors only: keying stats
+/// by an unresolved, caller-controlled name would create a permanent
+/// map entry per unique garbage name.
 fn fail_batch(batch: Batch, msg: &str, stats: &ServerStats) {
     for req in batch.requests {
         stats.errors.inc();
@@ -600,6 +696,46 @@ mod tests {
         for rx in queued {
             server.await_reply(rx).unwrap();
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn per_model_stats_split_interleaved_traffic() {
+        let server = echo_server(8, 1);
+        for i in 0..6 {
+            let model = if i % 2 == 0 { "a" } else { "b" };
+            server.infer(model, vec![0.0; 4]).unwrap();
+        }
+        let per_model = server.stats().per_model();
+        let names: Vec<&str> = per_model.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a", "b"], "sorted snapshot");
+        for (name, m) in &per_model {
+            assert_eq!(m.completed.get(), 3, "{name}");
+            assert_eq!(m.errors.get(), 0, "{name}");
+            assert!(m.batches.get() >= 1, "{name}");
+            assert_eq!(m.batched_rows.get(), 3, "{name}");
+            assert_eq!(m.e2e.count(), 3, "{name}");
+            assert!(m.mean_batch_size() >= 1.0, "{name}");
+        }
+        // aggregate and per-model views agree
+        assert_eq!(server.stats().completed.get(), 6);
+        assert_eq!(
+            per_model.iter().map(|(_, m)| m.batched_rows.get()).sum::<u64>(),
+            server.stats().batched_rows.get()
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn per_model_errors_are_counted() {
+        let server = echo_server(4, 1);
+        // dim 2 != EchoExecutor dim 4 → per-request rejection
+        let _ = server.infer("bad", vec![1.0, 2.0]).unwrap_err();
+        let per_model = server.stats().per_model();
+        let (name, m) = &per_model[0];
+        assert_eq!(name, "bad");
+        assert_eq!(m.errors.get(), 1);
+        assert_eq!(m.completed.get(), 0);
         server.shutdown();
     }
 

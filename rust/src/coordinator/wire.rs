@@ -30,8 +30,8 @@ use std::io::{Read, Write};
 /// First two bytes of every frame.
 pub const MAGIC: [u8; 2] = *b"TN";
 /// Protocol version; bumped on any layout change (decoders hard-reject
-/// other versions).
-pub const VERSION: u8 = 1;
+/// other versions).  v2 added the per-model block to `StatsReply`.
+pub const VERSION: u8 = 2;
 /// Hard cap on a frame's payload (16 MiB) — an admission bound, not a
 /// tuning knob: a header announcing more than this is rejected before
 /// any allocation.
@@ -71,6 +71,30 @@ pub struct ModelInfo {
     pub output_dim: u32,
 }
 
+/// One model's counter snapshot inside [`Frame::StatsReply`] — the wire
+/// image of the server's per-model `ModelStats`, so remote operators
+/// can see per-model batch efficiency (`batched_rows / batches`)
+/// without shell access to the server.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ModelStatsEntry {
+    pub name: String,
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+}
+
+impl ModelStatsEntry {
+    /// Mean rows per executed batch of this model.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_rows as f64 / self.batches as f64
+        }
+    }
+}
+
 /// A typed protocol frame.  Requests flow client → server (`Infer`,
 /// `Stats`, `ListModels`, `Shutdown`); replies flow server → client.
 /// Replies on one connection arrive in request order.
@@ -85,7 +109,8 @@ pub enum Frame {
     InferErr { id: u64, code: ErrCode, message: String },
     /// Request a [`Frame::StatsReply`] snapshot.
     Stats,
-    /// Counter snapshot of the server's shared `ServerStats`.
+    /// Counter snapshot of the server's shared `ServerStats`, including
+    /// the per-model block (v2).
     StatsReply {
         completed: u64,
         rejected: u64,
@@ -93,6 +118,7 @@ pub enum Frame {
         failed_workers: u64,
         batches: u64,
         batched_rows: u64,
+        per_model: Vec<ModelStatsEntry>,
     },
     /// Request the served model lineup.
     ListModels,
@@ -223,14 +249,34 @@ pub fn decode_body(header: &Header, payload: &[u8]) -> Result<Frame> {
             Frame::InferErr { id, code, message }
         }
         T_STATS => Frame::Stats,
-        T_STATS_REPLY => Frame::StatsReply {
-            completed: r.u64()?,
-            rejected: r.u64()?,
-            errors: r.u64()?,
-            failed_workers: r.u64()?,
-            batches: r.u64()?,
-            batched_rows: r.u64()?,
-        },
+        T_STATS_REPLY => {
+            let completed = r.u64()?;
+            let rejected = r.u64()?;
+            let errors = r.u64()?;
+            let failed_workers = r.u64()?;
+            let batches = r.u64()?;
+            let batched_rows = r.u64()?;
+            let count = r.u16()? as usize;
+            let mut per_model = Vec::new();
+            for _ in 0..count {
+                per_model.push(ModelStatsEntry {
+                    name: r.short_string("model name")?,
+                    completed: r.u64()?,
+                    errors: r.u64()?,
+                    batches: r.u64()?,
+                    batched_rows: r.u64()?,
+                });
+            }
+            Frame::StatsReply {
+                completed,
+                rejected,
+                errors,
+                failed_workers,
+                batches,
+                batched_rows,
+                per_model,
+            }
+        }
         T_LIST_MODELS => Frame::ListModels,
         T_MODEL_LIST => {
             let count = r.u16()? as usize;
@@ -303,9 +349,27 @@ impl Frame {
                 put_long_string(&mut w, message);
             }
             Frame::Stats | Frame::ListModels | Frame::Shutdown | Frame::ShutdownOk => {}
-            Frame::StatsReply { completed, rejected, errors, failed_workers, batches, batched_rows } => {
+            Frame::StatsReply {
+                completed,
+                rejected,
+                errors,
+                failed_workers,
+                batches,
+                batched_rows,
+                per_model,
+            } => {
                 for v in [completed, rejected, errors, failed_workers, batches, batched_rows] {
                     w.extend_from_slice(&v.to_le_bytes());
+                }
+                let count = u16::try_from(per_model.len()).map_err(|_| {
+                    Error::Wire(format!("{} models exceed the u16 stats cap", per_model.len()))
+                })?;
+                w.extend_from_slice(&count.to_le_bytes());
+                for m in per_model {
+                    put_short_string(&mut w, &m.name, "model name")?;
+                    for v in [m.completed, m.errors, m.batches, m.batched_rows] {
+                        w.extend_from_slice(&v.to_le_bytes());
+                    }
                 }
             }
             Frame::ModelList { models } => {
@@ -588,6 +652,31 @@ mod tests {
                 failed_workers: 0,
                 batches: 5,
                 batched_rows: 10,
+                per_model: vec![
+                    ModelStatsEntry {
+                        name: "tt_layer".into(),
+                        completed: 6,
+                        errors: 0,
+                        batches: 2,
+                        batched_rows: 6,
+                    },
+                    ModelStatsEntry {
+                        name: "fc_mnist".into(),
+                        completed: 4,
+                        errors: 1,
+                        batches: 3,
+                        batched_rows: 4,
+                    },
+                ],
+            },
+            Frame::StatsReply {
+                completed: 0,
+                rejected: 0,
+                errors: 0,
+                failed_workers: 0,
+                batches: 0,
+                batched_rows: 0,
+                per_model: vec![],
             },
             Frame::ListModels,
             Frame::ModelList {

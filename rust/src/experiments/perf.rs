@@ -3,7 +3,8 @@
 //! the Table-3 regime of (rank, batch) configurations, TT-SVD
 //! decomposition, and coordinator throughput/latency — emitted as
 //! machine-readable `BENCH_tt_matvec.json` / `BENCH_coordinator.json`
-//! (echo policy sweep + native-TT serving sweep) so
+//! (echo policy sweep + native-TT, mixed-model and remote-TT serving
+//! sweeps) so
 //! every future PR is judged against a recorded trajectory instead of
 //! anecdotes.  Built on `util::bench` (runner) and `util::json` (writer);
 //! no dependencies, like everything else in the crate.
@@ -166,6 +167,22 @@ pub fn drive_clients(
     n_requests: usize,
     clients: usize,
 ) -> f64 {
+    drive_mixed_clients(server, &[(model.to_string(), dim)], n_requests, clients)
+}
+
+/// Multi-model counterpart of [`drive_clients`]: each client thread
+/// strictly interleaves `models` round-robin (1:1:…), so consecutive
+/// arrivals at the batcher almost always switch models — the workload
+/// the per-model batch groups exist for (a single-group assembler
+/// collapses it to batch-size ~1).  Clients start phase-shifted so the
+/// in-flight mix stays balanced across models.
+pub fn drive_mixed_clients(
+    server: &Server,
+    models: &[(String, usize)],
+    n_requests: usize,
+    clients: usize,
+) -> f64 {
+    assert!(!models.is_empty(), "drive_mixed_clients needs at least one model");
     let clients = clients.max(1);
     let t0 = Instant::now();
     std::thread::scope(|s| {
@@ -173,8 +190,9 @@ pub fn drive_clients(
             let mine = n_requests / clients + usize::from(c < n_requests % clients);
             s.spawn(move || {
                 let mut rng = Rng::new(0xD21F_E000 ^ c as u64);
-                for _ in 0..mine {
-                    let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(1.0)).collect();
+                for i in 0..mine {
+                    let (model, dim) = &models[(c + i) % models.len()];
+                    let x: Vec<f32> = (0..*dim).map(|_| rng.normal_f32(1.0)).collect();
                     let _ = server.infer(model, x);
                 }
             });
@@ -196,20 +214,22 @@ pub struct RemoteDrive {
     pub e2e: Histogram,
 }
 
-/// Fire exactly `n_requests` random-normal inputs at `model` over TCP
-/// from `connections` independent [`Client`] connections, each keeping
-/// up to `pipeline` requests in flight.  The remote counterpart of
-/// [`drive_clients`], shared by `tensornet client`, the `remote_tt`
-/// bench sweep and `examples/serve_tt.rs` so the driven workload cannot
-/// drift between the CLI and the perf trajectory.
+/// Fire exactly `n_requests` random-normal inputs over TCP from
+/// `connections` independent [`Client`] connections, each keeping up to
+/// `pipeline` requests in flight and interleaving `models` round-robin
+/// (1:1:… — one entry means single-model traffic).  The remote
+/// counterpart of [`drive_mixed_clients`], shared by `tensornet
+/// client`, the `remote_tt` bench sweep and `examples/serve_tt.rs` so
+/// the driven workload cannot drift between the CLI and the perf
+/// trajectory.
 pub fn drive_remote_clients(
     addr: &str,
-    model: &str,
-    dim: usize,
+    models: &[(String, usize)],
     n_requests: usize,
     connections: usize,
     pipeline: usize,
 ) -> RemoteDrive {
+    assert!(!models.is_empty(), "drive_remote_clients needs at least one model");
     let connections = connections.max(1);
     let pipeline = pipeline.max(1);
     let completed = AtomicU64::new(0);
@@ -236,7 +256,8 @@ pub fn drive_remote_clients(
                 let mut done = 0usize;
                 while done < mine {
                     while sent < mine && sent_at.len() < pipeline {
-                        let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32(1.0)).collect();
+                        let (model, dim) = &models[(c + sent) % models.len()];
+                        let x: Vec<f32> = (0..*dim).map(|_| rng.normal_f32(1.0)).collect();
                         if let Err(e) = client.send(model, &x) {
                             eprintln!("client {c}: {e}");
                             // the connection is gone: everything unanswered
@@ -404,6 +425,111 @@ pub fn bench_native_serving(
     Ok(entries)
 }
 
+/// Mixed-model serving sweep (`mixed_tt`): interleaved
+/// tt_layer/fc_mnist/mnist_net traffic through one server, swept over
+/// (models, clients, max_batch), reporting per-model mean batch size.
+/// The regression this pins: the old single-group assembler flushed its
+/// pending batch on every model switch, so a 1:1 two-model interleave
+/// collapsed to mean batch ~1.0 no matter the policy; the per-model
+/// assembler must hold each model's mean batch near
+/// min(clients / models, max_batch).
+pub fn bench_mixed_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>> {
+    let registry = ModelRegistry::standard();
+    let lineups: [&[&str]; 2] =
+        [&["tt_layer", "fc_mnist"], &["tt_layer", "fc_mnist", "mnist_net"]];
+    // (lineup, clients, max_batch): two-model interleave at two policies,
+    // then the full three-model mix
+    let sweep = [(0usize, 16usize, 8usize), (0, 16, 32), (1, 24, 8)];
+    let mut entries = Vec::new();
+    for (li, clients, max_batch) in sweep {
+        let names = lineups[li];
+        let models: Vec<(String, usize)> = names
+            .iter()
+            .map(|n| Ok((n.to_string(), registry.input_dim(n)?)))
+            .collect::<Result<_>>()?;
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch, max_delay: Duration::from_millis(2) },
+            queue_capacity: 4096,
+            batch_queue_capacity: 16,
+            executor_threads: 2,
+        };
+        let reg = registry.clone();
+        let server = Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?;
+        // warm every model's lazy build out of the timed region (one
+        // request each — one worker per model; the other pays its tiny
+        // build on first traffic, as in the native sweep).  The warmup
+        // is subtracted from the counters below so completed / batches /
+        // rows / mean_batch reflect only the driven interleave; its e2e
+        // sample (which includes the model build) cannot be removed from
+        // the histogram — it surfaces only in max, and in p99 only when
+        // a model sees fewer than ~100 requests, far below this suite's
+        // request counts.
+        for (name, dim) in &models {
+            server.infer(name, vec![0.0; *dim])?;
+        }
+        let wall = drive_mixed_clients(&server, &models, n_requests, clients).max(1e-9);
+        let st = server.stats();
+        let served = st.completed.get().saturating_sub(models.len() as u64);
+        let mut per_model = Vec::new();
+        for (name, m) in st.per_model() {
+            // minus this model's warmup: 1 completed request = 1
+            // batch-of-1 (it ran alone, before the drive started)
+            let completed = m.completed.get().saturating_sub(1);
+            let batches = m.batches.get().saturating_sub(1);
+            let rows = m.batched_rows.get().saturating_sub(1);
+            let mut mo = BTreeMap::new();
+            mo.insert("model".to_string(), Json::Str(name));
+            mo.insert("completed".to_string(), num(completed as f64));
+            mo.insert("errors".to_string(), num(m.errors.get() as f64));
+            mo.insert("batches".to_string(), num(batches as f64));
+            mo.insert("rows".to_string(), num(rows as f64));
+            mo.insert(
+                "mean_batch".to_string(),
+                num(if batches == 0 { 0.0 } else { rows as f64 / batches as f64 }),
+            );
+            mo.insert("p50_us".to_string(), num(m.e2e.quantile_us(0.5)));
+            mo.insert("p99_us".to_string(), num(m.e2e.quantile_us(0.99)));
+            per_model.push(Json::Obj(mo));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert(
+            "models".to_string(),
+            Json::Arr(names.iter().map(|n| Json::Str(n.to_string())).collect()),
+        );
+        obj.insert("clients".to_string(), num(clients as f64));
+        obj.insert("max_batch".to_string(), num(max_batch as f64));
+        obj.insert("completed".to_string(), num(served as f64));
+        obj.insert("errors".to_string(), num(st.errors.get() as f64));
+        obj.insert("rejected".to_string(), num(st.rejected.get() as f64));
+        obj.insert("req_per_s".to_string(), num(served as f64 / wall));
+        // same warmup adjustment as the per-model numbers (one batch of
+        // one row per model), so aggregate rows/batches reconcile with
+        // the per_model entries in this same object
+        let agg_batches = st.batches.get().saturating_sub(models.len() as u64);
+        let agg_rows = st.batched_rows.get().saturating_sub(models.len() as u64);
+        obj.insert(
+            "mean_batch".to_string(),
+            num(if agg_batches == 0 { 0.0 } else { agg_rows as f64 / agg_batches as f64 }),
+        );
+        obj.insert("per_model".to_string(), Json::Arr(per_model));
+        if verbose {
+            let batches: Vec<String> = st
+                .per_model()
+                .iter()
+                .map(|(n, m)| format!("{n} {:.1}", m.mean_batch_size()))
+                .collect();
+            println!(
+                "  models={:<28} clients={clients:<3} max_batch={max_batch:<4} {:>9.0} req/s  mean batch per model: {}",
+                names.join("+"),
+                served as f64 / wall,
+                batches.join("  "),
+            );
+        }
+        entries.push(Json::Obj(obj));
+    }
+    Ok(entries)
+}
+
 /// Remote-TT serving sweep: the same native `tt_layer` model behind the
 /// batcher, but reached over loopback TCP through the wire protocol —
 /// swept over `(connections, max_batch)`.  Against the in-process
@@ -441,7 +567,13 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
         // rationale as the native sweep; the warmup rides its own
         // connection so the timed clients start clean)
         Client::connect(&addr)?.infer(model, &vec![0.0; dim])?;
-        let drive = drive_remote_clients(&addr, model, dim, n_requests, connections, pipeline);
+        let drive = drive_remote_clients(
+            &addr,
+            &[(model.to_string(), dim)],
+            n_requests,
+            connections,
+            pipeline,
+        );
         let st = server.stats();
         let mean_batch = st.mean_batch_size();
         net.shutdown();
@@ -535,13 +667,22 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
     let native_requests = if quick { 1_000 } else { 5_000 };
     let native = bench_native_serving(native_requests, clients, verbose)?;
     if verbose {
+        println!("== mixed-model serving sweep (models x clients x max_batch, interleaved)");
+    }
+    let mixed = bench_mixed_serving(native_requests, verbose)?;
+    if verbose {
         println!("== remote TT serving sweep (connections x max_batch, loopback TCP)");
     }
     let remote = bench_remote_serving(native_requests, verbose)?;
     let coord_report = report(
         "coordinator",
         quick,
-        vec![("entries", coord), ("native_tt", native), ("remote_tt", remote)],
+        vec![
+            ("entries", coord),
+            ("native_tt", native),
+            ("mixed_tt", mixed),
+            ("remote_tt", remote),
+        ],
     );
 
     let paths = vec![
@@ -627,6 +768,37 @@ mod tests {
             assert_eq!(e.get("rejected").unwrap().as_usize(), Some(0));
             assert_eq!(e.get("failed_workers").unwrap().as_usize(), Some(0));
         }
+    }
+
+    #[test]
+    fn mixed_serving_sweep_reports_per_model_batch_sizes() {
+        let entries = bench_mixed_serving(48, false).unwrap();
+        assert_eq!(entries.len(), 3);
+        for e in &entries {
+            let names = e.get("models").unwrap().as_arr().unwrap();
+            assert!(names.len() >= 2, "mixed sweep must interleave >= 2 models");
+            assert_eq!(e.get("errors").unwrap().as_usize(), Some(0));
+            assert_eq!(e.get("rejected").unwrap().as_usize(), Some(0));
+            assert_eq!(e.get("completed").unwrap().as_usize(), Some(48));
+            assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
+            let per_model = e.get("per_model").unwrap().as_arr().unwrap();
+            assert_eq!(per_model.len(), names.len());
+            let mut completed_sum = 0usize;
+            for m in per_model {
+                assert!(m.get("model").unwrap().as_str().is_some());
+                completed_sum += m.get("completed").unwrap().as_usize().unwrap();
+                assert_eq!(m.get("errors").unwrap().as_usize(), Some(0));
+                assert!(m.get("mean_batch").unwrap().as_f64().unwrap() > 0.0);
+                assert!(m.get("batches").unwrap().as_usize().unwrap() >= 1);
+            }
+            assert_eq!(completed_sum, 48, "per-model completions must cover the drive");
+        }
+        // the lineup grows across the sweep (2, 2, 3 models)
+        let sizes: Vec<usize> = entries
+            .iter()
+            .map(|e| e.get("models").unwrap().as_arr().unwrap().len())
+            .collect();
+        assert!(sizes.contains(&2) && sizes.contains(&3), "{sizes:?}");
     }
 
     #[test]

@@ -22,10 +22,12 @@
 //!                      [--listen ADDR]         trained checkpoints, or AOT
 //!                                              artifacts; --listen exposes
 //!                                              the server over TCP
-//! tensornet client     --connect ADDR [--model NAME] [--requests N]
+//! tensornet client     --connect ADDR [--model A[,B,..]] [--requests N]
 //!                      [--connections C] [--pipeline P] [--shutdown]
 //!                                              drive a remote server over
-//!                                              the wire protocol
+//!                                              the wire protocol; a comma-
+//!                                              separated --model list
+//!                                              interleaves models 1:1
 //! tensornet inspect    [--artifacts DIR]       list artifacts + variants
 //! ```
 //!
@@ -110,9 +112,11 @@ fn print_usage() {
          \u{20}        [--executor-threads N] [--requests 200]        checkpoints from --models DIR;\n\
          \u{20}        [--max-batch 32] [--max-delay-ms 2]            pjrt: AOT artifacts); --listen\n\
          \u{20}                                                       serves TCP until a wire Shutdown\n\
-         \u{20}  client --connect ADDR [--model NAME]                drive a remote server: N requests\n\
+         \u{20}  client --connect ADDR [--model A[,B,..]]            drive a remote server: N requests\n\
          \u{20}        [--requests 100] [--connections 1]             over C connections, P pipelined\n\
-         \u{20}        [--pipeline 4] [--shutdown]                    each; --shutdown stops the server\n\
+         \u{20}        [--pipeline 4] [--shutdown]                    each; a comma-separated --model\n\
+         \u{20}                                                       list interleaves models 1:1;\n\
+         \u{20}                                                       --shutdown stops the server\n\
          \u{20}  inspect                                             list artifacts\n\
          common flags: --quick, --artifacts DIR (default ./artifacts)\n\
          lifecycle:  train --model fc --save c/dense  ->  compress --from c/dense --to c/tt\n\
@@ -392,17 +396,40 @@ fn cmd_compress(args: &Args) -> Result<()> {
 
 /// The serve end-of-run summary — load-shedding (`rejected`) and pool
 /// degradation (`failed workers`) included, so a run that silently shed
-/// or limped is visible in the log, not just in the exit code.
+/// or limped is visible in the log, not just in the exit code; the
+/// per-model block makes batch efficiency visible per model (the
+/// aggregate can hide one model batching well while another runs at
+/// batch 1).  The CI interleave smoke greps the per-model lines — keep
+/// the format stable.
 fn print_serve_summary(stats: &ServerStats, wall: f64) {
     println!("completed:  {}", stats.completed.get());
     println!("rejected:   {} (admission queue full)", stats.rejected.get());
     println!("errors:     {}", stats.errors.get());
     println!("failed workers: {}", stats.failed_workers.get());
     println!("throughput: {:.1} req/s (wall {:.2}s)", stats.completed.get() as f64 / wall, wall);
+    // the Meter clocks from the first executed batch, so worker init and
+    // lazy model builds don't deflate the executor-side rate the way the
+    // wall-clock number above includes them
+    println!("exec rate:  {:.1} rows/s (since first batch)", stats.throughput.per_second());
     println!("mean batch: {:.2}", stats.mean_batch_size());
     println!("e2e:   {}", stats.e2e.summary());
     println!("exec:  {}", stats.exec.summary());
     println!("queue: {}", stats.queue.summary());
+    let per_model = stats.per_model();
+    if !per_model.is_empty() {
+        println!("per-model:");
+        for (name, m) in per_model {
+            println!(
+                "  {name:<12} completed {} errors {} batches {} rows {} mean batch {:.2}  e2e {}",
+                m.completed.get(),
+                m.errors.get(),
+                m.batches.get(),
+                m.batched_rows.get(),
+                m.mean_batch_size(),
+                m.e2e.summary(),
+            );
+        }
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -479,27 +506,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!(
                 "== serving '{model}' from {dir} ({executor_threads} executor threads)"
             );
-            // discover input dim from the manifest
             let manifest = Manifest::load(&dir)?;
-            let spec = manifest
+            // advertise EVERY artifact, not just the driven model — the
+            // TCP front-end validates requests against this lineup, and
+            // the executor can serve any artifact (same policy as the
+            // native branch's full-registry lineup above).  The manifest
+            // is external on-disk data: an artifact without a [batch,
+            // dim]-shaped runtime input or output is skipped, not a
+            // panic source.
+            let mut lineup: Vec<ModelInfo> = manifest
                 .artifacts
                 .iter()
-                .find(|a| a.name.starts_with(&model))
+                .filter_map(|a| {
+                    let input_dim = *a.runtime_inputs().first()?.shape.get(1)?;
+                    let output_dim = *a.outputs.first()?.shape.get(1)?;
+                    Some(ModelInfo {
+                        name: a.name.clone(),
+                        input_dim: input_dim as u32,
+                        output_dim: output_dim as u32,
+                    })
+                })
+                .collect();
+            // resolve the driven model from the lineup (prefix match, as
+            // before) — a malformed artifact spec surfaces here as a
+            // clean Config error, never an index panic
+            let resolved = lineup
+                .iter()
+                .find(|m| m.name.starts_with(&model))
+                .cloned()
                 .ok_or_else(|| {
                     let names: Vec<&str> =
-                        manifest.artifacts.iter().map(|a| a.name.as_str()).collect();
+                        lineup.iter().map(|m| m.name.as_str()).collect();
                     tensornet::error::Error::Config(format!(
-                        "no artifacts match '{model}' (available: {})",
+                        "no servable artifacts match '{model}' (available: {})",
                         names.join(", ")
                     ))
                 })?;
-            let dim = spec.runtime_inputs()[0].shape[1];
-            let out_dim = spec.outputs[0].shape[1];
-            let lineup = vec![ModelInfo {
-                name: model.clone(),
-                input_dim: dim as u32,
-                output_dim: out_dim as u32,
-            }];
+            let dim = resolved.input_dim as usize;
+            let out_dim = resolved.output_dim as usize;
+            if !lineup.iter().any(|m| m.name == model) {
+                // `--model` may be a prefix of an artifact name; keep it
+                // reachable over the wire under the name clients use
+                lineup.push(ModelInfo {
+                    name: model.clone(),
+                    input_dim: dim as u32,
+                    output_dim: out_dim as u32,
+                });
+            }
             let dir2 = dir.clone();
             (Server::start(cfg, move || PjrtExecutor::new(&dir2))?, dim, model, lineup)
         }
@@ -581,25 +634,41 @@ fn cmd_client(args: &Args) -> Result<()> {
         .map(|m| format!("{} ({}->{})", m.name, m.input_dim, m.output_dim))
         .collect();
     println!("== {addr} serves: {}", described.join(", "));
-    let (model, dim) = match args.get("model") {
-        Some(want) => match lineup.iter().find(|m| m.name == want) {
-            Some(m) => (m.name.clone(), m.input_dim as usize),
+    // --model takes a comma-separated list; multiple names drive
+    // interleaved (round-robin 1:1) multi-model traffic — the workload
+    // the server's per-model batch groups exist for
+    let want: Vec<String> = match args.get("model") {
+        Some(spec) => spec
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => vec![lineup[0].name.clone()],
+    };
+    if want.is_empty() {
+        return Err(tensornet::error::Error::Config("--model lists no model names".into()));
+    }
+    let mut models: Vec<(String, usize)> = Vec::with_capacity(want.len());
+    for w in &want {
+        match lineup.iter().find(|m| m.name == *w) {
+            Some(m) => models.push((m.name.clone(), m.input_dim as usize)),
             None => {
                 let names: Vec<&str> = lineup.iter().map(|m| m.name.as_str()).collect();
                 return Err(tensornet::error::Error::Config(format!(
-                    "model '{want}' not served (available: {})",
+                    "model '{w}' not served (available: {})",
                     names.join(", ")
                 )));
             }
-        },
-        None => (lineup[0].name.clone(), lineup[0].input_dim as usize),
-    };
+        }
+    }
 
     println!(
-        "== driving {n_requests} requests at '{model}' over {connections} connection(s), \
-         {pipeline} pipelined each"
+        "== driving {n_requests} requests at '{}' over {connections} connection(s), \
+         {pipeline} pipelined each{}",
+        want.join("', '"),
+        if models.len() > 1 { " (interleaved 1:1)" } else { "" },
     );
-    let drive = drive_remote_clients(addr, &model, dim, n_requests, connections, pipeline);
+    let drive = drive_remote_clients(addr, &models, n_requests, connections, pipeline);
     let wall = drive.wall_seconds.max(1e-9);
     println!("completed:  {}", drive.completed);
     println!("busy:       {} (load shed by the server)", drive.busy);
@@ -611,6 +680,12 @@ fn cmd_client(args: &Args) -> Result<()> {
             "server: completed {} rejected {} errors {} failed_workers {}",
             st.completed, st.rejected, st.errors, st.failed_workers
         );
+        for m in &st.per_model {
+            println!(
+                "server per-model: {:<12} completed {} errors {} batches {} rows {} mean batch {:.2}",
+                m.name, m.completed, m.errors, m.batches, m.batched_rows, m.mean_batch_size(),
+            );
+        }
     }
     if args.flag("shutdown") {
         probe.shutdown_server()?;

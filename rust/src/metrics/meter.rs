@@ -25,11 +25,20 @@ impl Counter {
     }
 }
 
-/// Throughput meter: events per second since construction/reset.
+/// Throughput meter: events per second since the FIRST `mark`.
+///
+/// The clock starts at the first event, not at construction — a meter
+/// built before worker spawn / lazy model build would otherwise fold
+/// that idle time into every rate it ever reports, silently deflating
+/// serve/bench throughput.
 #[derive(Debug)]
 pub struct Meter {
     count: Counter,
-    started: Instant,
+    created: Instant,
+    /// nanoseconds after `created` of the first `mark`; 0 = none yet
+    /// (a real first mark in the construction nanosecond is clamped to
+    /// 1ns so it never reads as "unset")
+    first_mark_ns: AtomicU64,
 }
 
 impl Default for Meter {
@@ -40,10 +49,21 @@ impl Default for Meter {
 
 impl Meter {
     pub fn new() -> Self {
-        Meter { count: Counter::new(), started: Instant::now() }
+        Meter { count: Counter::new(), created: Instant::now(), first_mark_ns: AtomicU64::new(0) }
     }
 
     pub fn mark(&self, n: u64) {
+        if self.first_mark_ns.load(Ordering::Relaxed) == 0 {
+            let ns = (self.created.elapsed().as_nanos() as u64).max(1);
+            // only the first marker wins; a concurrent earlier mark keeps
+            // its (earlier) timestamp
+            let _ = self.first_mark_ns.compare_exchange(
+                0,
+                ns,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+        }
         self.count.add(n);
     }
 
@@ -51,12 +71,18 @@ impl Meter {
         self.count.get()
     }
 
+    /// Events per second over the window from the first `mark` to now;
+    /// 0.0 before any event.
     pub fn per_second(&self) -> f64 {
-        let secs = self.started.elapsed().as_secs_f64();
-        if secs <= 0.0 {
+        let first_ns = self.first_mark_ns.load(Ordering::Relaxed);
+        if first_ns == 0 {
             return 0.0;
         }
-        self.count.get() as f64 / secs
+        let elapsed_ns = (self.created.elapsed().as_nanos() as u64).saturating_sub(first_ns);
+        if elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.count.get() as f64 / (elapsed_ns as f64 / 1e9)
     }
 }
 
@@ -79,5 +105,38 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(5));
         assert!(m.per_second() > 0.0);
         assert_eq!(m.count(), 100);
+    }
+
+    #[test]
+    fn meter_is_zero_before_any_mark() {
+        let m = Meter::new();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert_eq!(m.per_second(), 0.0);
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn meter_clock_starts_at_first_mark_not_construction() {
+        use std::time::Duration;
+        // two meters with identical counts and identical post-mark
+        // windows, but m_idle spends 400ms idle before its first mark.
+        // With the clock at construction both rates would be equal
+        // (same construction→measure span); with the clock at the first
+        // mark, m_idle's window is ~400ms shorter, so its rate must be
+        // clearly higher.  (Sleeps only overshoot; the 1.2 margin fails
+        // only if the mark→measure gap stalls for over ~1.9s, far past
+        // normal scheduler noise on a loaded CI box.)
+        let m_fresh = Meter::new();
+        m_fresh.mark(1000);
+        let m_idle = Meter::new();
+        std::thread::sleep(Duration::from_millis(400)); // worker-init style idle
+        m_idle.mark(1000);
+        std::thread::sleep(Duration::from_millis(100));
+        let fresh = m_fresh.per_second(); // window ≈ 500ms
+        let idle = m_idle.per_second(); // window ≈ 100ms — idle excluded
+        assert!(
+            idle > fresh * 1.2,
+            "idle-before-first-mark must not deflate the rate: idle {idle:.0}/s vs fresh {fresh:.0}/s"
+        );
     }
 }

@@ -5,7 +5,6 @@
 //! cost per row), and it needs no locks at all.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Number of worker threads to use (cached `available_parallelism`).
 pub fn num_threads() -> usize {
@@ -53,6 +52,14 @@ where
 }
 
 /// Parallel map over indices `0..n`, collecting results in order.
+///
+/// Each thread maps one contiguous index region into its own local
+/// `Vec` — no shared lock on the hot path, no index tagging, no final
+/// sort (the old implementation took a results mutex once per item and
+/// sorted the whole pair-vector afterwards).  The ordered-results
+/// contract holds by construction: regions are concatenated in index
+/// order.  Static partitioning matches `parallel_chunks_mut` and is the
+/// right shape for our uniform-cost workloads.
 pub fn parallel_map<R: Send, F>(n: usize, f: F) -> Vec<R>
 where
     F: Fn(usize) -> R + Sync,
@@ -61,23 +68,27 @@ where
     if threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
-    let next = AtomicUsize::new(0);
-    let results = Mutex::new(Vec::<(usize, R)>::with_capacity(n));
+    let per = n.div_ceil(threads);
+    let mut out = Vec::with_capacity(n);
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    return;
-                }
-                let r = f(i);
-                results.lock().unwrap().push((i, r));
-            });
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let f = &f;
+                let start = (t * per).min(n);
+                let end = ((t + 1) * per).min(n);
+                s.spawn(move || (start..end).map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(part) => out.extend(part),
+                // rethrow with the original payload so a worker's panic
+                // message survives (expect() would bury it in `Any`)
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
         }
     });
-    let mut pairs = results.into_inner().unwrap();
-    pairs.sort_by_key(|(i, _)| *i);
-    pairs.into_iter().map(|(_, r)| r).collect()
+    out
 }
 
 #[cfg(test)]
@@ -129,6 +140,28 @@ mod tests {
         for (i, &x) in out.iter().enumerate() {
             assert_eq!(x, i * i);
         }
+    }
+
+    #[test]
+    fn map_order_preserved_under_skewed_work() {
+        // early indices do far more work than late ones, so threads
+        // finish out of order — results must still come back in index
+        // order, for an n that doesn't divide evenly into regions
+        let n = 257;
+        let out = parallel_map(n, |i| {
+            let mut acc = i as u64;
+            for k in 0..((n - i) * 50) as u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            std::hint::black_box(acc);
+            i
+        });
+        assert_eq!(out, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_item() {
+        assert_eq!(parallel_map(1, |i| i + 41), vec![41]);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! harness — proptest is unavailable offline; failures print the case
 //! index and master seed for exact replay).
 
-use tensornet::coordinator::wire::{ErrCode, Frame, ModelInfo};
+use tensornet::coordinator::wire::{ErrCode, Frame, ModelInfo, ModelStatsEntry};
 use tensornet::coordinator::{choose_variant, BatchAssembler, BatchPolicy};
 use tensornet::linalg::{qr_mat, svd_mat, Mat};
 use tensornet::nn::{Layer, LayerState, TtLinear};
@@ -344,6 +344,15 @@ fn random_frame(rng: &mut Rng) -> Frame {
             failed_workers: rng.next_u64(),
             batches: rng.next_u64(),
             batched_rows: rng.next_u64(),
+            per_model: (0..gen::int(rng, 0, 4))
+                .map(|_| ModelStatsEntry {
+                    name: random_name(rng, 24),
+                    completed: rng.next_u64(),
+                    errors: rng.next_u64(),
+                    batches: rng.next_u64(),
+                    batched_rows: rng.next_u64(),
+                })
+                .collect(),
         },
         5 => Frame::ListModels,
         6 => Frame::ModelList {
@@ -432,47 +441,100 @@ fn prop_gemm_associates_with_identity_and_transpose() {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn prop_batcher_never_exceeds_max_and_preserves_fifo() {
-    check(cfg(60), "batcher", |rng| {
+fn prop_batcher_per_model_groups_hold_all_invariants() {
+    // Random interleaved multi-model request streams against a
+    // simulated clock.  The invariants of the per-model assembler:
+    //  * no batch exceeds max_batch, and a push-triggered flush is
+    //    exactly max_batch (only the group that filled flushes)
+    //  * no batch mixes models
+    //  * no request is lost or duplicated, and FIFO holds within each
+    //    model (the emitted id sequence per model equals the pushed one)
+    //  * deadline scheduling: after poll(now), no pending group's
+    //    deadline (first arrival + max_delay) has passed — every
+    //    request is emitted by the time its group's deadline is polled
+    check(cfg(80), "batcher", |rng| {
+        use std::collections::BTreeMap;
         use std::sync::mpsc::channel;
         use std::time::{Duration, Instant};
         let max_batch = gen::int(rng, 1, 8);
-        let policy = BatchPolicy { max_batch, max_delay: Duration::from_millis(5) };
+        let max_delay = Duration::from_millis(gen::int(rng, 1, 25) as u64);
+        let policy = BatchPolicy { max_batch, max_delay };
         let mut asm = BatchAssembler::new(policy);
-        let t0 = Instant::now();
-        let n = gen::int(rng, 1, 40);
-        let mut emitted_ids: Vec<u64> = Vec::new();
-        let mut pushed = 0u64;
-        for i in 0..n {
-            let model = if rng.uniform() < 0.8 { "a" } else { "b" };
-            let (tx, _rx) = channel();
-            let req = tensornet::coordinator::InferRequest {
-                id: i as u64,
-                model: model.into(),
-                input: vec![],
-                enqueued: t0,
-                reply: tx,
-            };
-            pushed += 1;
-            for batch in asm.push(req) {
+        let models = ["a", "b", "c"];
+        let mut now = Instant::now();
+        let mut next_id = 0u64;
+        let mut pushed: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+        let mut emitted: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+        let record =
+            |batch: &tensornet::coordinator::Batch,
+             emitted: &mut BTreeMap<String, Vec<u64>>|
+             -> Result<(), String> {
+                if batch.requests.is_empty() {
+                    return Err("empty batch emitted".into());
+                }
                 if batch.requests.len() > max_batch {
                     return Err(format!("batch {} > max {max_batch}", batch.requests.len()));
                 }
-                emitted_ids.extend(batch.requests.iter().map(|r| r.id));
+                for r in &batch.requests {
+                    if r.model != batch.model {
+                        return Err(format!(
+                            "mixed-model batch: {} inside a {} batch",
+                            r.model, batch.model
+                        ));
+                    }
+                }
+                emitted
+                    .entry(batch.model.clone())
+                    .or_default()
+                    .extend(batch.requests.iter().map(|r| r.id));
+                Ok(())
+            };
+        for _ in 0..gen::int(rng, 1, 80) {
+            if rng.uniform() < 0.7 {
+                // push a request for a random model at the current time
+                let model = models[rng.below(models.len())];
+                let (tx, _rx) = channel();
+                let req = tensornet::coordinator::InferRequest {
+                    id: next_id,
+                    model: model.into(),
+                    input: vec![],
+                    enqueued: now,
+                    reply: tx,
+                };
+                pushed.entry(model.into()).or_default().push(next_id);
+                next_id += 1;
+                if let Some(batch) = asm.push(req) {
+                    if batch.requests.len() != max_batch {
+                        return Err(format!(
+                            "push flushed a batch of {} != max_batch {max_batch}",
+                            batch.requests.len()
+                        ));
+                    }
+                    record(&batch, &mut emitted)?;
+                }
+            } else {
+                // advance the clock and poll for expired groups
+                now += Duration::from_millis(gen::int(rng, 0, 40) as u64);
+                for batch in asm.poll(now) {
+                    record(&batch, &mut emitted)?;
+                }
+                // nothing overdue may remain pending after a poll
+                if let Some(d) = asm.deadline() {
+                    if d <= now {
+                        return Err("poll left an expired group pending".into());
+                    }
+                }
             }
         }
-        if let Some(batch) = asm.flush() {
-            emitted_ids.extend(batch.requests.iter().map(|r| r.id));
+        for batch in asm.flush() {
+            record(&batch, &mut emitted)?;
         }
-        // no request lost or duplicated
-        if emitted_ids.len() != pushed as usize {
-            return Err(format!("{} emitted of {pushed}", emitted_ids.len()));
+        if asm.pending_len() != 0 {
+            return Err(format!("{} requests left after flush", asm.pending_len()));
         }
-        let mut sorted = emitted_ids.clone();
-        sorted.sort();
-        sorted.dedup();
-        if sorted.len() != emitted_ids.len() {
-            return Err("duplicated request".into());
+        // exact per-model sequence match = no loss, no duplication, FIFO
+        if emitted != pushed {
+            return Err(format!("emitted {emitted:?} != pushed {pushed:?}"));
         }
         Ok(())
     });

@@ -237,11 +237,28 @@ fn control_frames_and_wire_shutdown() {
     let st = client.stats().unwrap();
     assert_eq!(st.completed, 1);
     assert_eq!(st.failed_workers, 0);
+    // the per-model block travels over the wire: one entry per served
+    // model, counters matching the aggregate
+    assert_eq!(st.per_model.len(), 1);
+    assert_eq!(st.per_model[0].name, "tt_small");
+    assert_eq!(st.per_model[0].completed, 1);
+    assert_eq!(st.per_model[0].errors, 0);
+    assert!(st.per_model[0].batches >= 1);
+    assert_eq!(st.per_model[0].batched_rows, 1);
+    assert!((st.per_model[0].mean_batch_size() - 1.0).abs() < 1e-12);
 
     // an Exec failure (unknown model) keeps the connection usable
     let err = client.infer("nope", &vec![0.0; DIM]).unwrap_err();
     assert!(format!("{err}").contains("unknown model"), "{err}");
     client.infer("tt_small", &vec![0.2; DIM]).unwrap();
+    // and a client-controlled garbage name must NOT plant a permanent
+    // per-model stats entry (unbounded memory on a long-lived listener)
+    let st = client.stats().unwrap();
+    assert!(
+        st.per_model.iter().all(|m| m.name == "tt_small"),
+        "unknown remote model planted a stats entry: {:?}",
+        st.per_model
+    );
 
     assert!(!net.shutdown_requested());
     client.shutdown_server().unwrap();
