@@ -62,7 +62,7 @@ fn main() -> tensornet::Result<()> {
         assert_eq!(resp.output.len(), dim);
 
         let drive =
-            drive_remote_clients(&addr, &[(model.to_string(), dim)], n_requests, connections, 4);
+            drive_remote_clients(&addr, &[(model.to_string(), dim)], n_requests, connections, 4, None);
         assert_eq!(drive.failed, 0, "remote serving errors — see stderr");
         let st = server.stats();
         println!("  throughput:  {:.0} req/s", drive.completed as f64 / drive.wall_seconds);

@@ -3,18 +3,20 @@
 //! One [`Client`] owns one connection.  [`Client::infer`] is the simple
 //! request/reply call; [`Client::send`] + [`Client::recv`] expose the
 //! same pipelining the transport supports — many in-flight requests per
-//! connection, replies arriving in request order (the server's
-//! per-connection writer guarantees it, and `recv` verifies the id).
+//! connection, replies arriving in request order (the server's reactor
+//! settles each connection's reply queue in order, and `recv` verifies
+//! the id).
 //!
 //! f32 payloads travel as LE bit patterns, so a remote inference is
 //! bitwise identical to the in-process call
 //! (`rust/tests/remote_serving.rs` holds both against each other).
 
-use crate::coordinator::wire::{ErrCode, Frame, ModelInfo, ModelStatsEntry};
+use crate::coordinator::wire::{self, ErrCode, Frame, ModelInfo, ModelStatsEntry, ReadOutcome};
 use crate::error::{Error, Result};
 use std::collections::VecDeque;
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
 /// True when `err` is the server's load-shed reply ([`ErrCode::Busy`],
 /// i.e. the admission queue was full) — retryable, unlike real failures.
@@ -60,16 +62,65 @@ pub struct Client {
     /// ids of sent-but-unanswered `Infer`s, oldest first (replies are
     /// in request order per connection)
     in_flight: VecDeque<u64>,
+    /// when set, `recv` and the control calls give up after this long
+    /// without reply bytes instead of blocking forever
+    read_timeout: Option<Duration>,
 }
 
 impl Client {
     /// Connect to `addr` (as printed by `serve --listen`, e.g.
-    /// `127.0.0.1:7070`).
+    /// `127.0.0.1:7070`).  No timeouts: calls block until the server
+    /// answers or closes.  Use [`Client::connect_timeout`] when the
+    /// server may be unreachable or hung.
     pub fn connect(addr: &str) -> Result<Client> {
         let stream =
             TcpStream::connect(addr).map_err(|e| Error::Net(format!("connect {addr}: {e}")))?;
+        Client::from_stream(stream, addr)
+    }
+
+    /// Like [`Client::connect`] but bounded: connection establishment
+    /// gives up after `timeout`, and the same bound is installed as the
+    /// read timeout for every subsequent reply wait (a hung server
+    /// surfaces as [`Error::Net`] instead of blocking the caller
+    /// forever).
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Client> {
+        // TcpStream::connect_timeout wants a resolved SocketAddr; try
+        // every resolution like TcpStream::connect does
+        let addrs: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Net(format!("resolve {addr}: {e}")))?
+            .collect();
+        if addrs.is_empty() {
+            return Err(Error::Net(format!("resolve {addr}: no addresses")));
+        }
+        let mut last_err = None;
+        let mut stream = None;
+        for sa in &addrs {
+            match TcpStream::connect_timeout(sa, timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = match stream {
+            Some(s) => s,
+            None => {
+                let e = last_err.expect("at least one address was tried");
+                return Err(Error::Net(format!("connect {addr} (timeout {timeout:?}): {e}")));
+            }
+        };
+        let mut client = Client::from_stream(stream, addr)?;
+        client.set_read_timeout(Some(timeout))?;
+        Ok(client)
+    }
+
+    fn from_stream(stream: TcpStream, addr: &str) -> Result<Client> {
         let _ = stream.set_nodelay(true);
-        let peer = stream.peer_addr().map_err(|e| Error::Net(format!("peer_addr: {e}")))?;
+        let peer = stream
+            .peer_addr()
+            .map_err(|e| Error::Net(format!("peer_addr ({addr}): {e}")))?;
         let write_half =
             stream.try_clone().map_err(|e| Error::Net(format!("clone stream: {e}")))?;
         Ok(Client {
@@ -78,7 +129,22 @@ impl Client {
             peer,
             next_id: 1,
             in_flight: VecDeque::new(),
+            read_timeout: None,
         })
+    }
+
+    /// Install (or clear, with `None`) a bound on how long a reply wait
+    /// may block.  When it fires, the pending call fails with
+    /// [`Error::Net`]; the connection's framing state is then unknown
+    /// (the reply may arrive later, mid-stream), so callers should
+    /// reconnect rather than keep using this client.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader
+            .get_ref()
+            .set_read_timeout(timeout)
+            .map_err(|e| Error::Net(format!("set_read_timeout: {e}")))?;
+        self.read_timeout = timeout;
+        Ok(())
     }
 
     pub fn peer_addr(&self) -> SocketAddr {
@@ -205,9 +271,17 @@ impl Client {
     }
 
     fn read_reply(&mut self) -> Result<Frame> {
-        match Frame::read_from(&mut self.reader)? {
-            Some(f) => Ok(f),
-            None => Err(Error::Net("server closed the connection".into())),
+        // the shared framed reader treats a socket-level timeout as a
+        // "should I stop?" poll; with a read timeout installed the
+        // answer is always yes — one timeout means give up
+        let timed = self.read_timeout.is_some();
+        match wire::read_frame(&mut self.reader, || timed)? {
+            ReadOutcome::Frame(f) => Ok(f),
+            ReadOutcome::Eof => Err(Error::Net("server closed the connection".into())),
+            ReadOutcome::Stopped => Err(Error::Net(format!(
+                "read timed out after {:?} — connection state unknown, reconnect",
+                self.read_timeout.expect("Stopped only with a timeout installed")
+            ))),
         }
     }
 }

@@ -2,25 +2,25 @@
 //!
 //! Table 3 of the paper is a *serving* measurement — per-request latency
 //! of a TT-layer vs its dense counterpart at batch 1 and batch 100.  This
-//! module is the production driver around that: a request router over
-//! model variants, a dynamic batcher (per-model batch groups under a
-//! max-batch / max-delay policy, the vLLM-style knobs — interleaved
-//! multi-model traffic batches per model instead of flushing on every
-//! model switch), an executor worker pool, bounded queues for
-//! backpressure, and latency histograms (aggregate + per-model).  Two serving backends share the
-//! [`BatchExecutor`] trait: [`NativeExecutor`] runs real in-process
-//! TT/dense models (the default — fully functional offline), and
-//! [`PjrtExecutor`] runs AOT artifacts (stubbed offline).
+//! module is the production driver around that: a dynamic batcher
+//! (per-model batch groups under a max-batch / max-delay policy, the
+//! vLLM-style knobs — interleaved multi-model traffic batches per model
+//! instead of flushing on every model switch), an executor worker pool,
+//! bounded queues for backpressure, and latency histograms (aggregate +
+//! per-model).  Two serving backends share the [`BatchExecutor`] trait:
+//! [`NativeExecutor`] runs real in-process TT/dense models (the default
+//! — fully functional offline), and [`PjrtExecutor`] runs AOT artifacts
+//! (stubbed offline; its variant [`Router`] lives with it in `worker`).
 //!
 //! Thread model (no async runtime in the offline build — plain OS threads
 //! and channels, which is the right shape for CPU inference anyway):
 //!
 //! ```text
-//! remote   ── tn-net-accept ── per-conn reader ─┐          ┌► executor-0 ─┐
-//! clients      (wire frames)   (admit / shed)   ├► bounded ─► batcher ────┼► executor-1 ─┼─► reply
-//!                                               │  queue      (max_batch/ └► executor-N ─┘
-//! in-process callers (infer / try_infer) ───────┘ (admission)  max_delay)  (each worker owns
-//!                                                                          executor + scratch)
+//! remote   ── tn-net-accept ── tn-net-io-{k} ─┐          ┌► executor-0 ─┐
+//! clients      (listener)      reactor sweeps ├► bounded ─► batcher ────┼► executor-1 ─┼─► reply
+//!                              all conns      │  queue      (max_batch/ └► executor-N ─┘
+//! in-process callers (infer / try_infer) ─────┘ (admission)  max_delay)  (each worker owns
+//!                                                                        executor + scratch)
 //! ```
 //!
 //! Admission is transport-agnostic (S12 in DESIGN.md): the TCP
@@ -34,7 +34,6 @@ mod client;
 mod native;
 mod net;
 mod request;
-mod router;
 mod server;
 pub mod wire;
 mod worker;
@@ -44,7 +43,6 @@ pub use client::{is_busy, Client, RemoteResponse, RemoteStats};
 pub use native::{ModelRegistry, ModelSpec, NativeExecutor};
 pub use net::NetServer;
 pub use request::{InferRequest, InferResponse};
-pub use router::{choose_variant, Router};
 pub use server::{Admission, ModelStats, ReplyReceiver, Server, ServerConfig, ServerStats};
 pub use wire::{ErrCode, Frame, ModelInfo, ModelStatsEntry};
-pub use worker::{BatchExecutor, EchoExecutor, PjrtExecutor};
+pub use worker::{choose_variant, BatchExecutor, EchoExecutor, PjrtExecutor, Router};

@@ -1,23 +1,35 @@
-//! TCP front-end over the coordinator (DESIGN.md §12): an accept loop
-//! plus a reader/writer thread pair per connection, speaking the
-//! [`crate::coordinator::wire`] protocol and feeding the *same* bounded
-//! admission queue as in-process callers ([`Server::admit`]).
+//! TCP front-end over the coordinator (DESIGN.md §12): a std-only
+//! readiness reactor speaking the [`crate::coordinator::wire`] protocol
+//! and feeding the *same* bounded admission queue as in-process callers
+//! ([`Server::admit`]).
 //!
 //! ```text
-//! tn-net-accept ──► tn-net-conn (reader)  ──admit──►  admission queue ──► batcher ──► pool
-//!   (listener)        │  decode frames                     │
-//!                     │  Busy/Stats/ListModels          reply rx
-//!                     ▼                                     ▼
-//!                  tn-net-write (writer) ◄── in-order outbound queue ◄── await_reply
+//! tn-net-accept ──round-robin──► tn-net-io-{k}   (k < io_threads, default 1)
+//!   (listener)                     │ sweeps Vec<Conn> state machines:
+//!                                  │   read   socket → FrameDecoder → dispatch ──admit──► queue ──► batcher ──► pool
+//!                                  │   settle head of in-order outbound queue ◄── Server::try_reply
+//!                                  │   write  non-blocking, partial-write aware
+//!                                  └── FIN-then-drain teardown per connection
 //! ```
 //!
-//! The reader never blocks on a reply: admitted requests hand their
-//! reply receiver to the writer through an in-order outbound queue, so a
-//! connection can pipeline many in-flight requests while the reader
-//! keeps admitting (or shedding — a full admission queue becomes an
-//! immediate `Busy` reply, counted in `ServerStats::rejected` like every
-//! other transport).  Replies are written strictly in request order; the
-//! client relies on that.
+//! Unlike the previous design (a reader/writer thread pair per
+//! connection), *one* I/O thread carries every connection assigned to
+//! it: all sockets are non-blocking, each connection is a state machine
+//! owning a partial-frame read buffer ([`wire::FrameDecoder`]), an
+//! in-order outbound reply queue, and a partially-written output
+//! buffer.  The reactor never blocks on any single connection — reads
+//! and writes stop at `WouldBlock`, and admitted requests are settled
+//! by *polling* the coordinator's reply channel ([`Server::try_reply`])
+//! instead of parking a thread in `await_reply` per request.  That is
+//! what lets hundreds of connections share one or two transport
+//! threads instead of costing two OS threads each.
+//!
+//! Replies are written strictly in request order per connection — only
+//! the *head* of the outbound queue may settle, so a slow request holds
+//! back later replies on its own connection (the client relies on
+//! in-order delivery) but never any other connection.  A full admission
+//! queue becomes an immediate `Busy` reply, counted in
+//! `ServerStats::rejected` like every other transport.
 //!
 //! A malformed frame (bad magic/version/checksum, unknown type,
 //! truncation) gets a best-effort `InferErr`/`BadRequest` reply and
@@ -29,47 +41,370 @@
 //! entries keyed by attacker-chosen bytes.
 
 use crate::coordinator::server::{Admission, Server};
-use crate::coordinator::wire::{self, ErrCode, Frame, ModelInfo, ReadOutcome};
+use crate::coordinator::wire::{self, ErrCode, Frame, ModelInfo};
 use crate::error::{Error, Result};
-use std::io::BufWriter;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// How long a blocked accept/read waits before re-checking the stop flag
-/// (bounds shutdown latency, not throughput — a frame mid-flight is
-/// never interrupted).
+/// How long a blocked accept (or an idle reactor with no connections)
+/// waits before re-checking the stop flag.  Bounds shutdown latency,
+/// not throughput — a frame mid-flight is never interrupted.
 const POLL: Duration = Duration::from_millis(25);
 
-/// What the reader hands the writer, in request order.
+/// Sleep between sweeps when no connection made progress.  This is the
+/// price of a std-only reactor (no epoll): a short doze instead of a
+/// readiness wakeup.  500µs keeps idle CPU negligible while adding at
+/// most half a millisecond to request latency — well under the
+/// batcher's own `max_delay`.
+const IDLE_TICK: Duration = Duration::from_micros(500);
+
+/// Most bytes pulled off one socket per sweep, so a firehosing client
+/// cannot starve its neighbours on the same I/O thread.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Stop promoting replies into the write buffer once this many bytes
+/// are already waiting on a slow socket; the queue keeps them until the
+/// peer drains.  Purely a memory bound — order is unaffected.
+const WBUF_SOFT_CAP: usize = 1 << 20;
+
+/// After sending FIN, how long to keep swallowing the peer's in-flight
+/// bytes so the final close is a FIN, not an RST that would race the
+/// just-written error reply off the peer's buffer.
+const FIN_DRAIN: Duration = Duration::from_millis(200);
+
+/// Upper bound on reactor teardown: when [`NetServer::shutdown`] is
+/// called, connections get this long to settle pending replies and
+/// flush before being dropped.
+const STOP_DRAIN: Duration = Duration::from_secs(5);
+
+/// One queued reply, in request order.
 enum Outbound {
     /// A reply that is already known (Busy, stats, errors, ...).
     Ready(Frame),
-    /// An admitted request: the writer awaits the coordinator's reply
-    /// (through [`Server::await_reply`], so remote requests land in the
-    /// same e2e histogram as in-process ones).
+    /// An admitted request: the reactor polls the coordinator's reply
+    /// channel (through [`Server::try_reply`], so remote requests land
+    /// in the same e2e histogram as in-process ones).
     Pending { id: u64, rx: crate::coordinator::server::ReplyReceiver },
 }
 
+/// Connection lifecycle.  Every path out of `Open` flushes queued
+/// replies before the socket dies.
+enum Phase {
+    /// Reading requests, settling and writing replies.
+    Open,
+    /// Peer sent a clean FIN: no more requests will arrive, but queued
+    /// replies are still settled and written (the peer half-closed its
+    /// write side and may well be reading).
+    PeerClosed,
+    /// We decided to close (protocol error, shutdown ack, reactor
+    /// stop): settle + flush everything outbound, then FIN.
+    Closing,
+    /// FIN sent; swallowing whatever the peer still has in flight,
+    /// bounded by [`FIN_DRAIN`].
+    Draining { since: Instant },
+}
+
+/// What one sweep of one connection reported back to the reactor loop.
+struct Sweep {
+    /// Bytes moved or replies settled — the reactor skips its idle doze.
+    progress: bool,
+    /// False once the connection is finished (or broken) and must be
+    /// removed from the sweep list.
+    keep: bool,
+}
+
+/// Per-connection state machine.  All I/O is non-blocking; the owning
+/// reactor thread calls [`Conn::sweep`] repeatedly and nothing here
+/// ever blocks it.
+struct Conn {
+    stream: TcpStream,
+    peer: SocketAddr,
+    decoder: wire::FrameDecoder,
+    /// Replies in request order; only the head may settle.
+    outbound: VecDeque<Outbound>,
+    /// Encoded-but-unwritten reply bytes, with `wpos` marking the
+    /// partially-written prefix already accepted by the kernel.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    phase: Phase,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: SocketAddr) -> Option<Conn> {
+        if stream.set_nonblocking(true).is_err() {
+            return None;
+        }
+        let _ = stream.set_nodelay(true);
+        Some(Conn {
+            stream,
+            peer,
+            decoder: wire::FrameDecoder::new(),
+            outbound: VecDeque::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            phase: Phase::Open,
+        })
+    }
+
+    /// Reactor stop: finish what is queued, then FIN — never cut a
+    /// connection with replies still owed.
+    fn begin_close(&mut self) {
+        if matches!(self.phase, Phase::Open | Phase::PeerClosed) {
+            self.phase = Phase::Closing;
+        }
+    }
+
+    /// One pass of the connection state machine: read what the socket
+    /// has, settle what the coordinator finished, write what the peer
+    /// will take, and advance teardown.
+    fn sweep(
+        &mut self,
+        server: &Arc<Server>,
+        models: &[ModelInfo],
+        shutdown_requested: &AtomicBool,
+    ) -> Sweep {
+        let mut progress = false;
+        if matches!(self.phase, Phase::Open)
+            && !self.read_ready(&mut progress, server, models, shutdown_requested)
+        {
+            return Sweep { progress: true, keep: false };
+        }
+        if !self.promote(&mut progress, server) {
+            return Sweep { progress: true, keep: false };
+        }
+        if !self.write_ready(&mut progress) {
+            return Sweep { progress: true, keep: false };
+        }
+        let flushed = self.outbound.is_empty() && self.wpos == self.wbuf.len();
+        match self.phase {
+            Phase::Open => {}
+            Phase::PeerClosed => {
+                if flushed {
+                    // both sides done; nothing unread, so close is a FIN
+                    return Sweep { progress: true, keep: false };
+                }
+            }
+            Phase::Closing => {
+                if flushed {
+                    let _ = self.stream.shutdown(std::net::Shutdown::Write);
+                    self.phase = Phase::Draining { since: Instant::now() };
+                    progress = true;
+                }
+            }
+            Phase::Draining { since } => {
+                if !self.drain_reads(&mut progress) || since.elapsed() >= FIN_DRAIN {
+                    return Sweep { progress: true, keep: false };
+                }
+            }
+        }
+        Sweep { progress, keep: true }
+    }
+
+    /// Pull at most [`READ_CHUNK`] bytes and decode every complete
+    /// frame they finish.  Returns false when the connection is broken
+    /// beyond a reply (hard I/O error).
+    fn read_ready(
+        &mut self,
+        progress: &mut bool,
+        server: &Arc<Server>,
+        models: &[ModelInfo],
+        shutdown_requested: &AtomicBool,
+    ) -> bool {
+        let mut chunk = [0u8; READ_CHUNK];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => {
+                *progress = true;
+                if self.decoder.pending() > 0 {
+                    // mid-frame hangup: same contract as the old
+                    // blocking read path — the truncation is answered,
+                    // then the connection closes
+                    self.outbound.push_back(Outbound::Ready(Frame::InferErr {
+                        id: 0,
+                        code: ErrCode::BadRequest,
+                        message: format!(
+                            "connection closed mid-frame with {} bytes buffered",
+                            self.decoder.pending()
+                        ),
+                    }));
+                    self.phase = Phase::Closing;
+                } else {
+                    self.phase = Phase::PeerClosed;
+                }
+                true
+            }
+            Ok(n) => {
+                *progress = true;
+                self.decoder.feed(&chunk[..n]);
+                loop {
+                    match self.decoder.next_frame() {
+                        Ok(Some(frame)) => {
+                            if !dispatch(
+                                frame,
+                                server,
+                                models,
+                                &mut self.outbound,
+                                shutdown_requested,
+                            ) {
+                                self.phase = Phase::Closing;
+                                break;
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            // protocol violation: reply (best-effort)
+                            // and close this connection; the listener
+                            // keeps serving everyone else
+                            self.outbound.push_back(Outbound::Ready(Frame::InferErr {
+                                id: 0,
+                                code: ErrCode::BadRequest,
+                                message: format!("{e}"),
+                            }));
+                            self.phase = Phase::Closing;
+                            break;
+                        }
+                    }
+                }
+                true
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => true,
+            Err(e) => {
+                eprintln!("tn-net-io {}: read: {e}", self.peer);
+                false
+            }
+        }
+    }
+
+    /// Settle replies at the head of the outbound queue into encoded
+    /// bytes.  Only the head may settle — replies go out strictly in
+    /// request order, so a later-finished reply waits behind an earlier
+    /// pending one (on this connection only).
+    fn promote(&mut self, progress: &mut bool, server: &Arc<Server>) -> bool {
+        loop {
+            if self.wbuf.len() - self.wpos >= WBUF_SOFT_CAP {
+                return true; // slow peer: keep replies queued, not buffered
+            }
+            let settled = match self.outbound.front() {
+                None => return true,
+                Some(Outbound::Ready(_)) => None,
+                Some(Outbound::Pending { id, rx }) => match server.try_reply(rx) {
+                    None => return true, // head still in flight
+                    Some(res) => Some(match res {
+                        Ok(resp) => Frame::InferOk {
+                            id: *id,
+                            queue_us: resp.queue_us,
+                            exec_us: resp.exec_us,
+                            batch_size: resp.batch_size as u32,
+                            output: resp.output,
+                        },
+                        Err(e) => Frame::InferErr {
+                            id: *id,
+                            code: ErrCode::Exec,
+                            message: format!("{e}"),
+                        },
+                    }),
+                },
+            };
+            let frame = match settled {
+                Some(f) => {
+                    self.outbound.pop_front();
+                    f
+                }
+                None => match self.outbound.pop_front() {
+                    Some(Outbound::Ready(f)) => f,
+                    _ => return true,
+                },
+            };
+            match frame.encode() {
+                Ok(bytes) => {
+                    self.wbuf.extend_from_slice(&bytes);
+                    *progress = true;
+                }
+                Err(e) => {
+                    eprintln!("tn-net-io {}: encode reply: {e}", self.peer);
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Push buffered reply bytes into the socket until it pushes back.
+    fn write_ready(&mut self, progress: &mut bool) -> bool {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    self.wpos += n;
+                    *progress = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    eprintln!("tn-net-io {}: write: {e}", self.peer);
+                    return false;
+                }
+            }
+        }
+        if self.wpos > 0 && self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        true
+    }
+
+    /// Post-FIN: discard the peer's in-flight bytes (bounded per sweep)
+    /// so the close is graceful.  Returns false once the peer is done.
+    fn drain_reads(&mut self, progress: &mut bool) -> bool {
+        let mut chunk = [0u8; 4096];
+        for _ in 0..8 {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return false,  // peer closed too — clean
+                Ok(_) => *progress = true, // discard
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return false, // reset — nothing left to save
+            }
+        }
+        true
+    }
+}
+
 /// A running TCP listener bound to a [`Server`].  Dropping (or calling
-/// [`NetServer::shutdown`]) stops accepting, closes every connection at
-/// its next poll tick and joins all transport threads; the `Server`
-/// itself stays up (it may have other front-ends).
+/// [`NetServer::shutdown`]) stops accepting, drains every connection
+/// (bounded by [`STOP_DRAIN`]) and joins all transport threads; the
+/// `Server` itself stays up (it may have other front-ends).
 pub struct NetServer {
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
     shutdown_requested: Arc<AtomicBool>,
-    accept: Option<std::thread::JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    io_threads: usize,
 }
 
 impl NetServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an OS-assigned port) and
-    /// start serving `server` over it.  `models` is the lineup
-    /// advertised to `ListModels` clients.
+    /// start serving `server` over it with a single I/O thread.
+    /// `models` is the lineup advertised to `ListModels` clients.
     pub fn start(server: Arc<Server>, addr: &str, models: Vec<ModelInfo>) -> Result<NetServer> {
+        NetServer::start_with(server, addr, models, 1)
+    }
+
+    /// Like [`NetServer::start`] but with `io_threads` reactor threads
+    /// (clamped to at least 1); accepted connections are dealt
+    /// round-robin across them.  Total transport threads =
+    /// `io_threads` + 1 accept thread, independent of connection count.
+    pub fn start_with(
+        server: Arc<Server>,
+        addr: &str,
+        models: Vec<ModelInfo>,
+        io_threads: usize,
+    ) -> Result<NetServer> {
+        let io_threads = io_threads.max(1);
         let listener =
             TcpListener::bind(addr).map_err(|e| Error::Net(format!("bind {addr}: {e}")))?;
         listener
@@ -79,28 +414,72 @@ impl NetServer {
             listener.local_addr().map_err(|e| Error::Net(format!("local_addr: {e}")))?;
         let stop = Arc::new(AtomicBool::new(false));
         let shutdown_requested = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
-            Arc::new(Mutex::new(Vec::new()));
 
+        let mut threads = Vec::with_capacity(io_threads + 1);
+        let mut txs: Vec<Sender<(TcpStream, SocketAddr)>> = Vec::with_capacity(io_threads);
+        for k in 0..io_threads {
+            let (tx, rx) = channel();
+            let handle = {
+                let server = server.clone();
+                let models = models.clone();
+                let stop = stop.clone();
+                let shutdown_requested = shutdown_requested.clone();
+                std::thread::Builder::new()
+                    .name(format!("tn-net-io-{k}"))
+                    .spawn(move || io_loop(rx, server, models, stop, shutdown_requested))
+            };
+            match handle {
+                Ok(h) => {
+                    threads.push(h);
+                    txs.push(tx);
+                }
+                Err(e) => {
+                    stop.store(true, Ordering::SeqCst);
+                    drop(txs);
+                    for h in threads {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Net(format!("spawn io thread {k}: {e}")));
+                }
+            }
+        }
         let accept = {
             let stop = stop.clone();
-            let shutdown_requested = shutdown_requested.clone();
-            let conns = conns.clone();
             std::thread::Builder::new()
                 .name("tn-net-accept".into())
-                .spawn(move || {
-                    accept_loop(listener, server, models, stop, shutdown_requested, conns)
-                })
-                .map_err(|e| Error::Net(format!("spawn accept loop: {e}")))?
+                .spawn(move || accept_loop(listener, stop, txs))
         };
+        match accept {
+            Ok(h) => threads.push(h),
+            Err(e) => {
+                stop.store(true, Ordering::SeqCst);
+                for h in threads {
+                    let _ = h.join();
+                }
+                return Err(Error::Net(format!("spawn accept loop: {e}")));
+            }
+        }
 
-        Ok(NetServer { local_addr, stop, shutdown_requested, accept: Some(accept), conns })
+        Ok(NetServer { local_addr, stop, shutdown_requested, threads, io_threads })
     }
 
     /// The bound address — the port is meaningful when `start` was given
     /// port 0.
     pub fn local_addr(&self) -> SocketAddr {
         self.local_addr
+    }
+
+    /// Number of reactor (I/O) threads sweeping connections.
+    pub fn io_threads(&self) -> usize {
+        self.io_threads
+    }
+
+    /// Total OS threads owned by this transport: the reactor threads
+    /// plus the accept thread.  Constant in the number of connections —
+    /// the whole point of the reactor (the previous design spawned a
+    /// reader/writer pair per connection).
+    pub fn transport_threads(&self) -> usize {
+        self.threads.len()
     }
 
     /// True once a client's `Shutdown` frame has been acknowledged.
@@ -116,22 +495,15 @@ impl NetServer {
         }
     }
 
-    /// Stop accepting, close every connection at its next poll tick and
-    /// join all transport threads.
+    /// Stop accepting, drain and close every connection and join all
+    /// transport threads.
     pub fn shutdown(mut self) {
         self.stop_and_join();
     }
 
     fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        }
-        let handles: Vec<_> = match self.conns.lock() {
-            Ok(mut g) => g.drain(..).collect(),
-            Err(poisoned) => poisoned.into_inner().drain(..).collect(),
-        };
-        for h in handles {
+        for h in self.threads.drain(..) {
             let _ = h.join();
         }
     }
@@ -145,39 +517,19 @@ impl Drop for NetServer {
 
 fn accept_loop(
     listener: TcpListener,
-    server: Arc<Server>,
-    models: Vec<ModelInfo>,
     stop: Arc<AtomicBool>,
-    shutdown_requested: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    txs: Vec<Sender<(TcpStream, SocketAddr)>>,
 ) {
+    let mut next = 0usize;
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, peer)) => {
-                // the listener is non-blocking so the stop flag stays
-                // responsive; each accepted socket goes back to blocking
-                // reads with a timeout (the reader's stop poll)
-                if stream.set_nonblocking(false).is_err()
-                    || stream.set_read_timeout(Some(POLL)).is_err()
-                {
-                    continue;
+                // hand off round-robin; the reactor thread makes the
+                // socket non-blocking and owns it from here
+                if txs[next % txs.len()].send((stream, peer)).is_err() {
+                    return; // reactor gone — shutting down
                 }
-                let _ = stream.set_nodelay(true);
-                let server = server.clone();
-                let models = models.clone();
-                let stop = stop.clone();
-                let shutdown_requested = shutdown_requested.clone();
-                let handle = std::thread::Builder::new()
-                    .name("tn-net-conn".into())
-                    .spawn(move || {
-                        connection_loop(stream, peer, server, models, stop, shutdown_requested)
-                    });
-                if let (Ok(h), Ok(mut guard)) = (handle, conns.lock()) {
-                    // reap finished connections so a long-lived listener
-                    // doesn't accumulate handles
-                    guard.retain(|j| !j.is_finished());
-                    guard.push(h);
-                }
+                next = next.wrapping_add(1);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(POLL);
@@ -191,99 +543,83 @@ fn accept_loop(
     }
 }
 
-/// One connection: decode → dispatch loop, with the in-order writer on
-/// its own thread so admitted requests pipeline.
-fn connection_loop(
-    mut stream: TcpStream,
-    peer: SocketAddr,
+/// One reactor thread: sweep every connection assigned to it, never
+/// blocking on any single one.  Blocks on the intake channel only while
+/// it has no connections at all (an idle reactor burns no CPU).
+fn io_loop(
+    rx_new: Receiver<(TcpStream, SocketAddr)>,
     server: Arc<Server>,
     models: Vec<ModelInfo>,
     stop: Arc<AtomicBool>,
     shutdown_requested: Arc<AtomicBool>,
 ) {
-    let write_stream = match stream.try_clone() {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("tn-net-conn {peer}: clone stream: {e}");
-            return;
-        }
-    };
-    let (out_tx, out_rx): (Sender<Outbound>, Receiver<Outbound>) = channel();
-    let writer = {
-        let server = server.clone();
-        std::thread::Builder::new()
-            .name("tn-net-write".into())
-            .spawn(move || writer_loop(write_stream, server, out_rx))
-    };
-    let writer = match writer {
-        Ok(w) => w,
-        Err(e) => {
-            eprintln!("tn-net-conn {peer}: spawn writer: {e}");
-            return;
-        }
-    };
-
-    // true when this side decided to close (protocol error, shutdown, …)
-    // rather than the peer hanging up first
-    let mut server_initiated_close = false;
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut stop_deadline: Option<Instant> = None;
     loop {
-        // the shared framed reader (coordinator::wire): the 25ms socket
-        // read timeout is its poll tick for our stop flag
-        match wire::read_frame(&mut stream, || stop.load(Ordering::SeqCst)) {
-            Ok(ReadOutcome::Eof) | Ok(ReadOutcome::Stopped) => break,
-            Ok(ReadOutcome::Frame(frame)) => {
-                if !dispatch(frame, &server, &models, &out_tx, &shutdown_requested) {
-                    server_initiated_close = true;
-                    break;
+        let stopping = stop.load(Ordering::SeqCst);
+        if stopping && stop_deadline.is_none() {
+            stop_deadline = Some(Instant::now() + STOP_DRAIN);
+            for c in conns.iter_mut() {
+                c.begin_close();
+            }
+        }
+
+        // intake: park on the channel when idle, otherwise just drain it
+        if conns.is_empty() && !stopping {
+            match rx_new.recv_timeout(POLL) {
+                Ok((s, peer)) => {
+                    if let Some(c) = Conn::new(s, peer) {
+                        conns.push(c);
+                    }
                 }
-            }
-            Err(e) => {
-                // protocol violation: reply (best-effort) and close this
-                // connection; the listener keeps serving everyone else
-                let _ = out_tx.send(Outbound::Ready(Frame::InferErr {
-                    id: 0,
-                    code: ErrCode::BadRequest,
-                    message: format!("{e}"),
-                }));
-                server_initiated_close = true;
-                break;
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return,
             }
         }
-    }
-    drop(out_tx); // writer drains pending replies, then exits
-    let _ = writer.join();
-    if server_initiated_close {
-        // closing with unread bytes in the receive buffer makes the
-        // kernel send RST, which can discard the error reply before the
-        // peer reads it — half-close and briefly drain so the reply
-        // survives the teardown
-        drain_before_close(&mut stream);
+        while let Ok((s, peer)) = rx_new.try_recv() {
+            if stopping {
+                continue; // refused: dropping the socket sends FIN/RST
+            }
+            if let Some(c) = Conn::new(s, peer) {
+                conns.push(c);
+            }
+        }
+        if stopping {
+            if conns.is_empty() {
+                return;
+            }
+            if stop_deadline.map_or(false, |d| Instant::now() >= d) {
+                return; // drain cap hit: cut remaining connections
+            }
+        }
+
+        // sweep every connection once; removal is swap_remove, order of
+        // service across connections carries no guarantees
+        let mut progress = false;
+        let mut i = 0;
+        while i < conns.len() {
+            let s = conns[i].sweep(&server, &models, &shutdown_requested);
+            progress |= s.progress;
+            if s.keep {
+                i += 1;
+            } else {
+                conns.swap_remove(i);
+            }
+        }
+        if !progress && !conns.is_empty() {
+            std::thread::sleep(IDLE_TICK);
+        }
     }
 }
 
-/// Send FIN, then swallow whatever the peer already has in flight
-/// (bounded by a few poll ticks) so the final close is a FIN, not an
-/// RST that would race the just-written reply off the peer's buffer.
-fn drain_before_close(stream: &mut TcpStream) {
-    use std::io::Read;
-    let _ = stream.shutdown(std::net::Shutdown::Write);
-    let mut buf = [0u8; 4096];
-    for _ in 0..8 {
-        match stream.read(&mut buf) {
-            Ok(0) => return,  // peer closed too — clean
-            Ok(_) => {}       // discard
-            Err(_) => return, // timeout (buffer empty) or peer reset
-        }
-    }
-}
-
-/// Handle one decoded frame; returns false when the connection should
-/// close (shutdown acknowledged or a reply-type frame arrived).
+/// Handle one decoded frame by queuing its reply; returns false when
+/// the connection should close (shutdown acknowledged or a reply-type
+/// frame arrived).
 fn dispatch(
     frame: Frame,
     server: &Arc<Server>,
     models: &[ModelInfo],
-    out_tx: &Sender<Outbound>,
+    outbound: &mut VecDeque<Outbound>,
     shutdown_requested: &AtomicBool,
 ) -> bool {
     match frame {
@@ -301,16 +637,12 @@ fn dispatch(
                 // no per-model entry to attribute it to)
                 server.stats().errors.inc();
                 let served: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
-                return out_tx
-                    .send(Outbound::Ready(Frame::InferErr {
-                        id,
-                        code: ErrCode::Exec,
-                        message: format!(
-                            "unknown model '{model}' (served: {})",
-                            served.join(", ")
-                        ),
-                    }))
-                    .is_ok();
+                outbound.push_back(Outbound::Ready(Frame::InferErr {
+                    id,
+                    code: ErrCode::Exec,
+                    message: format!("unknown model '{model}' (served: {})", served.join(", ")),
+                }));
+                return true;
             }
             let reply = match server.admit(&model, input) {
                 Ok(Admission::Queued(rx)) => Outbound::Pending { id, rx },
@@ -325,7 +657,8 @@ fn dispatch(
                     message: format!("{e}"),
                 }),
             };
-            out_tx.send(reply).is_ok()
+            outbound.push_back(reply);
+            true
         }
         Frame::Stats => {
             let st = server.stats();
@@ -343,25 +676,25 @@ fn dispatch(
                     batched_rows: m.batched_rows.get(),
                 })
                 .collect();
-            out_tx
-                .send(Outbound::Ready(Frame::StatsReply {
-                    completed: st.completed.get(),
-                    rejected: st.rejected.get(),
-                    errors: st.errors.get(),
-                    failed_workers: st.failed_workers.get(),
-                    batches: st.batches.get(),
-                    batched_rows: st.batched_rows.get(),
-                    per_model,
-                }))
-                .is_ok()
+            outbound.push_back(Outbound::Ready(Frame::StatsReply {
+                completed: st.completed.get(),
+                rejected: st.rejected.get(),
+                errors: st.errors.get(),
+                failed_workers: st.failed_workers.get(),
+                batches: st.batches.get(),
+                batched_rows: st.batched_rows.get(),
+                per_model,
+            }));
+            true
         }
-        Frame::ListModels => out_tx
-            .send(Outbound::Ready(Frame::ModelList { models: models.to_vec() }))
-            .is_ok(),
+        Frame::ListModels => {
+            outbound.push_back(Outbound::Ready(Frame::ModelList { models: models.to_vec() }));
+            true
+        }
         Frame::Shutdown => {
             // acknowledge first so the client sees the accept before the
             // listener starts tearing down
-            let _ = out_tx.send(Outbound::Ready(Frame::ShutdownOk));
+            outbound.push_back(Outbound::Ready(Frame::ShutdownOk));
             shutdown_requested.store(true, Ordering::SeqCst);
             false
         }
@@ -373,49 +706,12 @@ fn dispatch(
         | Frame::StatsReply { .. }
         | Frame::ModelList { .. }
         | Frame::ShutdownOk) => {
-            let _ = out_tx.send(Outbound::Ready(Frame::InferErr {
+            outbound.push_back(Outbound::Ready(Frame::InferErr {
                 id: 0,
                 code: ErrCode::BadRequest,
                 message: format!("unexpected reply-type frame {} sent to server", other.kind()),
             }));
             false
-        }
-    }
-}
-
-/// Drain the outbound queue in order, awaiting each admitted request's
-/// reply.  Exits when the reader hangs up (channel closes) or the socket
-/// dies; either way remaining receivers just drop, which the coordinator
-/// tolerates (a dropped reply sender is counted by the caller side only).
-fn writer_loop(
-    stream: TcpStream,
-    server: Arc<Server>,
-    out_rx: Receiver<Outbound>,
-) {
-    let mut w = BufWriter::new(stream);
-    while let Ok(msg) = out_rx.recv() {
-        let frame = match msg {
-            Outbound::Ready(f) => f,
-            Outbound::Pending { id, rx } => match server.await_reply(rx) {
-                Ok(resp) => Frame::InferOk {
-                    id,
-                    queue_us: resp.queue_us,
-                    exec_us: resp.exec_us,
-                    batch_size: resp.batch_size as u32,
-                    output: resp.output,
-                },
-                Err(e) => {
-                    Frame::InferErr { id, code: ErrCode::Exec, message: format!("{e}") }
-                }
-            },
-        };
-        if frame.write_to(&mut w).is_err() {
-            return;
-        }
-        // replies are latency-sensitive: flush per frame (pipelined
-        // writes still coalesce inside the BufWriter between syscalls)
-        if std::io::Write::flush(&mut w).is_err() {
-            return;
         }
     }
 }

@@ -28,7 +28,9 @@ use crate::error::{Error, Result};
 use crate::metrics::{Counter, Histogram, Meter};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -321,9 +323,37 @@ impl Server {
         self.receive(rx)
     }
 
+    /// Non-blocking counterpart of [`Server::await_reply`] for
+    /// reactor-style transports that multiplex many connections on one
+    /// thread and therefore may never block on a single reply.  `None`
+    /// means still pending — poll again later; `Some` is the settled
+    /// reply, with e2e latency recorded exactly like the blocking path
+    /// (both funnel through the same settling point, so remote requests
+    /// land in the same histograms however they are delivered).
+    pub fn try_reply(&self, rx: &ReplyReceiver) -> Option<Result<InferResponse>> {
+        match rx.try_recv() {
+            Ok(res) => Some(self.settle(res)),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                Some(Err(Error::Coordinator("reply channel dropped".into())))
+            }
+        }
+    }
+
     fn receive(&self, rx: ReplyReceiver) -> Result<InferResponse> {
         match rx.recv() {
-            Ok(Ok(resp)) => {
+            Ok(res) => self.settle(res),
+            Err(_) => Err(Error::Coordinator("reply channel dropped".into())),
+        }
+    }
+
+    /// Record stats and map failures for one delivered reply — the
+    /// single settling point shared by the blocking (`await_reply`) and
+    /// non-blocking (`try_reply`) delivery paths, so latency accounting
+    /// cannot drift between them.
+    fn settle(&self, res: std::result::Result<InferResponse, String>) -> Result<InferResponse> {
+        match res {
+            Ok(resp) => {
                 // true end-to-end latency: wall clock from enqueue to
                 // reply receipt.  (This used to be queue_us + exec_us,
                 // which silently dropped batch-queue wait and the reply
@@ -333,8 +363,7 @@ impl Server {
                 self.stats.model(&resp.model).e2e.record(e2e);
                 Ok(resp)
             }
-            Ok(Err(msg)) => Err(Error::Coordinator(msg)),
-            Err(_) => Err(Error::Coordinator("reply channel dropped".into())),
+            Err(msg) => Err(Error::Coordinator(msg)),
         }
     }
 
@@ -617,6 +646,47 @@ mod tests {
             e2e >= 35_000.0,
             "e2e max {e2e}µs must include the second request's batch-queue wait (~40ms)"
         );
+    }
+
+    #[test]
+    fn try_reply_polls_without_blocking_and_records_e2e() {
+        // Reactor transports poll replies instead of parking a thread
+        // per request: while the executor is still sleeping, try_reply
+        // must return None immediately; once the reply lands it must
+        // settle it with the same e2e accounting as await_reply.
+        struct Slow;
+        impl BatchExecutor for Slow {
+            fn execute(&mut self, _m: &str, x: Vec<f32>, _r: usize) -> Result<(Vec<f32>, usize)> {
+                std::thread::sleep(Duration::from_millis(30));
+                let n = x.len();
+                Ok((x, n))
+            }
+            fn input_dim(&self, _m: &str) -> Result<usize> {
+                Ok(2)
+            }
+        }
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(0) },
+            ..Default::default()
+        };
+        let server = Server::start(cfg, || Ok(Slow)).unwrap();
+        let rx = server.try_infer("m", vec![5.0, 6.0]).unwrap();
+        assert!(
+            server.try_reply(&rx).is_none(),
+            "reply cannot have settled before the 30ms execution"
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let resp = loop {
+            match server.try_reply(&rx) {
+                Some(res) => break res.unwrap(),
+                None => {
+                    assert!(Instant::now() < deadline, "reply never settled");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        };
+        assert_eq!(resp.output, vec![5.0, 6.0]);
+        assert_eq!(server.stats().e2e.count(), 1, "try_reply must record e2e latency");
     }
 
     #[test]

@@ -490,6 +490,91 @@ pub fn read_frame<R: Read>(
     Ok(ReadOutcome::Frame(decode_body(&header, &payload)?))
 }
 
+/// Incremental frame decoder for non-blocking transports (the reactor
+/// in [`crate::coordinator::net`]): buffer bytes exactly as the socket
+/// delivers them ([`FrameDecoder::feed`]) and pull complete frames out
+/// ([`FrameDecoder::next_frame`]) — one read may carry half a frame or
+/// several pipelined ones, and the decoder owes a frame only once its
+/// last byte has arrived.
+///
+/// Validation is byte-for-byte the blocking path's: headers go through
+/// [`Header::decode`] (so a hostile length is rejected the moment the
+/// 12th header byte lands, before any payload is buffered) and payloads
+/// through [`decode_body`] (CRC, strict type-directed parse, no
+/// trailing bytes).  A returned error poisons the stream — the caller
+/// must answer `BadRequest` and close, same as the one-shot path
+/// (`rust/tests/proptests.rs` feeds every frame byte-at-a-time and at
+/// random split points to pin the two paths together).
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// consumed prefix of `buf` (compacted on the next `feed`, so a
+    /// burst of small pipelined frames doesn't memmove per frame)
+    pos: usize,
+    /// header of the frame currently being assembled, once its 12 bytes
+    /// have arrived and validated
+    header: Option<Header>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Buffer incoming bytes.  Call [`FrameDecoder::next_frame`] until
+    /// it returns `Ok(None)` to drain every frame they completed.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Try to decode the next complete frame from the buffered bytes.
+    /// `Ok(None)` means "need more bytes"; an error is a protocol
+    /// violation and the connection must close (decoder state is spent).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        let header = match self.header {
+            Some(h) => h,
+            None => {
+                if self.buf.len() - self.pos < HEADER_LEN {
+                    return Ok(None);
+                }
+                let mut head = [0u8; HEADER_LEN];
+                head.copy_from_slice(&self.buf[self.pos..self.pos + HEADER_LEN]);
+                // magic/version/length-cap errors fire HERE — an
+                // announced 4 GiB payload rejects on its 12th byte, with
+                // nothing buffered beyond what the socket already gave us
+                let h = Header::decode(&head)?;
+                self.pos += HEADER_LEN;
+                self.header = Some(h);
+                h
+            }
+        };
+        let need = header.len as usize;
+        if self.buf.len() - self.pos < need {
+            return Ok(None);
+        }
+        let frame = decode_body(&header, &self.buf[self.pos..self.pos + need])?;
+        self.pos += need;
+        self.header = None;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        }
+        Ok(Some(frame))
+    }
+
+    /// Bytes of an incomplete frame currently buffered — 0 exactly when
+    /// the fed stream ended on a frame boundary.  Lets a transport tell
+    /// a clean peer close from a mid-frame truncation.
+    pub fn pending(&self) -> usize {
+        (self.buf.len() - self.pos)
+            + if self.header.is_some() { HEADER_LEN } else { 0 }
+    }
+}
+
 enum Filled {
     Full,
     /// EOF after this many of the wanted bytes
@@ -768,6 +853,73 @@ mod tests {
         let mut r = std::io::Cursor::new(&bytes[..HEADER_LEN - 3]);
         let err = Frame::read_from(&mut r).unwrap_err();
         assert!(format!("{err}").contains("header"), "{err}");
+    }
+
+    #[test]
+    fn incremental_decoder_byte_at_a_time_matches_one_shot() {
+        for f in sample_frames() {
+            let bytes = f.encode().unwrap();
+            let mut dec = FrameDecoder::new();
+            for (i, b) in bytes.iter().enumerate() {
+                dec.feed(std::slice::from_ref(b));
+                let got = dec.next_frame().unwrap();
+                if i + 1 < bytes.len() {
+                    assert!(got.is_none(), "{f:?}: frame surfaced at byte {}", i + 1);
+                    assert!(dec.pending() > 0);
+                } else {
+                    assert_eq!(got, Some(f.clone()), "{f:?}");
+                }
+            }
+            assert_eq!(dec.pending(), 0, "{f:?}: boundary after the last byte");
+            assert_eq!(dec.next_frame().unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn incremental_decoder_drains_pipelined_frames_from_one_chunk() {
+        let frames = sample_frames();
+        let stream: Vec<u8> =
+            frames.iter().flat_map(|f| f.encode().unwrap()).collect();
+        let mut dec = FrameDecoder::new();
+        dec.feed(&stream);
+        let mut got = Vec::new();
+        while let Some(f) = dec.next_frame().unwrap() {
+            got.push(f);
+        }
+        assert_eq!(got, frames);
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn incremental_decoder_rejects_oversize_at_the_header() {
+        // the hostile length must reject as soon as the 12th byte lands,
+        // with no payload ever buffered
+        let mut head = Vec::new();
+        head.extend_from_slice(&MAGIC);
+        head.push(VERSION);
+        head.push(T_INFER);
+        head.extend_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        head.extend_from_slice(&0u32.to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        dec.feed(&head[..HEADER_LEN - 1]);
+        assert!(dec.next_frame().unwrap().is_none());
+        dec.feed(&head[HEADER_LEN - 1..]);
+        let err = dec.next_frame().unwrap_err();
+        assert!(format!("{err}").contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn incremental_decoder_rejects_garbage_and_corruption() {
+        let mut dec = FrameDecoder::new();
+        dec.feed(&[0xFF; HEADER_LEN]);
+        assert!(dec.next_frame().is_err(), "wrong magic");
+
+        let mut bad = Frame::Stats.encode().unwrap();
+        let last = bad.len() - 1;
+        bad[last] ^= 1; // corrupt the CRC byte
+        let mut dec = FrameDecoder::new();
+        dec.feed(&bad);
+        assert!(dec.next_frame().is_err(), "checksum mismatch");
     }
 
     #[test]

@@ -6,8 +6,12 @@
 //! dense models, fully functional offline) or served over AOT artifacts
 //! ([`PjrtExecutor`]).  The PJRT executor pads each batch up to the
 //! routed artifact variant and slices the padding back off.
+//!
+//! The variant [`Router`] lives here (not as its own module) because the
+//! AOT artifact path is its *only* consumer: the native serving path has
+//! exactly one implementation per model name, so there is nothing to
+//! route.  Keeping it next to [`PjrtExecutor`] makes that scope visible.
 
-use crate::coordinator::router::Router;
 use crate::error::{Error, Result};
 use crate::runtime::{CompiledModel, Manifest, PjrtClient, RuntimeInput};
 use std::collections::BTreeMap;
@@ -48,6 +52,73 @@ impl BatchExecutor for EchoExecutor {
 
     fn input_dim(&self, _model: &str) -> Result<usize> {
         Ok(self.dim)
+    }
+}
+
+/// Pick the smallest variant size `>= batch`, or the largest available if
+/// none fits (the worker will then split the batch).
+pub fn choose_variant(sizes: &[usize], batch: usize) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for &s in sizes {
+        if s >= batch {
+            best = Some(match best {
+                Some(b) => b.min(s),
+                None => s,
+            });
+        }
+    }
+    best.or_else(|| sizes.iter().copied().max())
+}
+
+/// Maps logical model names (`"tt"`, `"fc"`, ...) to their AOT artifact
+/// variants (`batch size -> artifact name`) — the pipeline emits
+/// fixed-batch executables (e.g. `b1` and `b32`); the router picks the
+/// smallest variant that fits and [`PjrtExecutor`] pads the remainder.
+/// Used only by the AOT artifact path; native serving needs no routing.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    models: BTreeMap<String, BTreeMap<usize, String>>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Router::default()
+    }
+
+    /// Register an artifact as the `batch`-sized variant of `model`.
+    pub fn register(&mut self, model: &str, batch: usize, artifact: &str) {
+        self.models.entry(model.to_string()).or_default().insert(batch, artifact.to_string());
+    }
+
+    /// Auto-register from manifest naming convention `<model>_b<batch>`.
+    pub fn register_convention(&mut self, artifact_names: &[String]) {
+        for name in artifact_names {
+            if let Some(pos) = name.rfind("_b") {
+                if let Ok(batch) = name[pos + 2..].parse::<usize>() {
+                    self.register(&name[..pos], batch, name);
+                }
+            }
+        }
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn variants(&self, model: &str) -> Option<Vec<usize>> {
+        self.models.get(model).map(|v| v.keys().copied().collect())
+    }
+
+    /// Resolve `(artifact_name, variant_batch)` for a request batch size.
+    pub fn route(&self, model: &str, batch: usize) -> Result<(String, usize)> {
+        let variants = self
+            .models
+            .get(model)
+            .ok_or_else(|| Error::Coordinator(format!("unknown model '{model}'")))?;
+        let sizes: Vec<usize> = variants.keys().copied().collect();
+        let size = choose_variant(&sizes, batch)
+            .ok_or_else(|| Error::Coordinator(format!("model '{model}' has no variants")))?;
+        Ok((variants[&size].clone(), size))
     }
 }
 
@@ -165,6 +236,39 @@ impl BatchExecutor for PjrtExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn choose_smallest_fitting() {
+        assert_eq!(choose_variant(&[1, 32, 100], 1), Some(1));
+        assert_eq!(choose_variant(&[1, 32, 100], 2), Some(32));
+        assert_eq!(choose_variant(&[1, 32, 100], 32), Some(32));
+        assert_eq!(choose_variant(&[1, 32, 100], 99), Some(100));
+        // nothing fits: take the largest (worker splits)
+        assert_eq!(choose_variant(&[1, 32], 50), Some(32));
+        assert_eq!(choose_variant(&[], 1), None);
+    }
+
+    #[test]
+    fn convention_registration() {
+        let mut r = Router::new();
+        r.register_convention(&[
+            "tt_layer_b1".into(),
+            "tt_layer_b32".into(),
+            "fc_mnist_b1".into(),
+            "weird-name".into(),
+        ]);
+        assert_eq!(r.variants("tt_layer"), Some(vec![1, 32]));
+        assert_eq!(r.variants("fc_mnist"), Some(vec![1]));
+        assert!(r.variants("weird-name").is_none());
+        let (art, size) = r.route("tt_layer", 7).unwrap();
+        assert_eq!((art.as_str(), size), ("tt_layer_b32", 32));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let r = Router::new();
+        assert!(r.route("nope", 1).is_err());
+    }
 
     #[test]
     fn echo_roundtrip() {

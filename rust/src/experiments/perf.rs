@@ -13,7 +13,7 @@ use crate::coordinator::{
     is_busy, BatchPolicy, Client, EchoExecutor, ModelInfo, ModelRegistry, NativeExecutor,
     NetServer, Server, ServerConfig,
 };
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::Histogram;
 use crate::tensor::{matmul_bt, Tensor};
 use crate::tt::{MatvecScratch, TtMatrix, TtShape};
@@ -222,12 +222,18 @@ pub struct RemoteDrive {
 /// client`, the `remote_tt` bench sweep and `examples/serve_tt.rs` so
 /// the driven workload cannot drift between the CLI and the perf
 /// trajectory.
+///
+/// `timeout` (when `Some`) bounds both connection establishment and
+/// every reply wait; a timed-out connection is abandoned — the framing
+/// state is unknown mid-stream, so its unanswered and unsent requests
+/// all count as failed rather than risking misattributed replies.
 pub fn drive_remote_clients(
     addr: &str,
     models: &[(String, usize)],
     n_requests: usize,
     connections: usize,
     pipeline: usize,
+    timeout: Option<Duration>,
 ) -> RemoteDrive {
     assert!(!models.is_empty(), "drive_remote_clients needs at least one model");
     let connections = connections.max(1);
@@ -242,7 +248,11 @@ pub fn drive_remote_clients(
             let mine = n_requests / connections + usize::from(c < n_requests % connections);
             let (completed, busy, failed, e2e) = (&completed, &busy, &failed, &e2e);
             s.spawn(move || {
-                let mut client = match Client::connect(addr) {
+                let connected = match timeout {
+                    Some(t) => Client::connect_timeout(addr, t),
+                    None => Client::connect(addr),
+                };
+                let mut client = match connected {
                     Ok(cl) => cl,
                     Err(e) => {
                         eprintln!("client {c}: {e}");
@@ -276,6 +286,15 @@ pub fn drive_remote_clients(
                         }
                         Err(e) if is_busy(&e) => {
                             busy.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e @ Error::Net(_)) => {
+                            // transport dead or reply timed out: the
+                            // connection's framing state is unknown, so
+                            // abandon it — everything unanswered plus
+                            // everything unsent fails
+                            eprintln!("client {c}: {e}");
+                            failed.fetch_add((mine - done) as u64, Ordering::Relaxed);
+                            return;
                         }
                         Err(e) => {
                             eprintln!("client {c}: {e}");
@@ -532,18 +551,32 @@ pub fn bench_mixed_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>
 
 /// Remote-TT serving sweep: the same native `tt_layer` model behind the
 /// batcher, but reached over loopback TCP through the wire protocol —
-/// swept over `(connections, max_batch)`.  Against the in-process
-/// `native_tt` sweep above, the delta is pure transport cost (framing +
-/// two loopback hops + the per-connection reader/writer pair), which is
-/// exactly what EXPERIMENTS.md §Perf tracks for remote serving.
+/// swept over `(connections, max_batch, io_threads)`.  Against the
+/// in-process `native_tt` sweep above, the delta is pure transport cost
+/// (framing + two loopback hops + the reactor sweep), which is exactly
+/// what EXPERIMENTS.md §Perf tracks for remote serving.  The high-fan-in
+/// tail of the sweep (64 and 256 connections on 1–2 I/O threads) is the
+/// regime the reactor exists for: the old thread-pair transport spent
+/// 2×connections OS threads there, the reactor spends `io_threads` + 1
+/// regardless — `transport_threads` is recorded in each entry so the
+/// scaling is visible in `BENCH_coordinator.json`.
 pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>> {
     let registry = ModelRegistry::standard();
     let model = "tt_layer";
     let dim = registry.input_dim(model)?;
     let pipeline = 4usize;
-    let sweep = [(1usize, 1usize), (2, 32), (4, 32), (8, 32)];
+    let sweep = [
+        (1usize, 1usize, 1usize),
+        (2, 32, 1),
+        (4, 32, 1),
+        (8, 32, 1),
+        (64, 32, 1),
+        (64, 32, 2),
+        (256, 32, 1),
+        (256, 32, 2),
+    ];
     let mut entries = Vec::new();
-    for (connections, max_batch) in sweep {
+    for (connections, max_batch, io_threads) in sweep {
         let cfg = ServerConfig {
             policy: BatchPolicy { max_batch, max_delay: Duration::from_micros(500) },
             queue_capacity: 4096,
@@ -553,7 +586,7 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
         let reg = registry.clone();
         let server =
             Arc::new(Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?);
-        let net = NetServer::start(
+        let net = NetServer::start_with(
             server.clone(),
             "127.0.0.1:0",
             vec![ModelInfo {
@@ -561,8 +594,10 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
                 input_dim: dim as u32,
                 output_dim: dim as u32,
             }],
+            io_threads,
         )?;
         let addr = net.local_addr().to_string();
+        let transport_threads = net.transport_threads();
         // warm the lazily-built model out of the timed region (same
         // rationale as the native sweep; the warmup rides its own
         // connection so the timed clients start clean)
@@ -573,6 +608,7 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
             n_requests,
             connections,
             pipeline,
+            None,
         );
         let st = server.stats();
         let mean_batch = st.mean_batch_size();
@@ -585,6 +621,8 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
         obj.insert("connections".to_string(), num(connections as f64));
         obj.insert("max_batch".to_string(), num(max_batch as f64));
         obj.insert("pipeline".to_string(), num(pipeline as f64));
+        obj.insert("io_threads".to_string(), num(io_threads as f64));
+        obj.insert("transport_threads".to_string(), num(transport_threads as f64));
         obj.insert("completed".to_string(), num(drive.completed as f64));
         obj.insert("busy".to_string(), num(drive.busy as f64));
         obj.insert("failed".to_string(), num(drive.failed as f64));
@@ -596,7 +634,7 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
         obj.insert("p99_us".to_string(), num(drive.e2e.quantile_us(0.99)));
         if verbose {
             println!(
-                "  conns={connections}  max_batch={max_batch:<4} {:>9.0} req/s  mean batch {:.1}  p50 {:.0}µs p99 {:.0}µs  busy {}",
+                "  conns={connections:<4} max_batch={max_batch:<4} io={io_threads} {:>9.0} req/s  mean batch {:.1}  p50 {:.0}µs p99 {:.0}µs  busy {}",
                 drive.completed as f64 / wall,
                 mean_batch,
                 drive.e2e.quantile_us(0.5),
@@ -671,7 +709,7 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
     }
     let mixed = bench_mixed_serving(native_requests, verbose)?;
     if verbose {
-        println!("== remote TT serving sweep (connections x max_batch, loopback TCP)");
+        println!("== remote TT serving sweep (connections x max_batch x io_threads, loopback TCP)");
     }
     let remote = bench_remote_serving(native_requests, verbose)?;
     let coord_report = report(
@@ -804,12 +842,13 @@ mod tests {
     #[test]
     fn remote_serving_sweep_covers_connection_scaling() {
         let entries = bench_remote_serving(24, false).unwrap();
-        assert_eq!(entries.len(), 4);
+        assert_eq!(entries.len(), 8);
         let conns: Vec<usize> = entries
             .iter()
             .map(|e| e.get("connections").unwrap().as_usize().unwrap())
             .collect();
-        assert!(conns.contains(&1) && conns.iter().any(|&c| c > 1), "{conns:?}");
+        // the sweep must reach the high-fan-in regime the reactor is for
+        assert!(conns.contains(&1) && conns.contains(&256), "{conns:?}");
         for e in &entries {
             assert_eq!(e.get("failed").unwrap().as_usize(), Some(0));
             assert_eq!(e.get("failed_workers").unwrap().as_usize(), Some(0));
@@ -820,6 +859,11 @@ mod tests {
             assert!(e.get("completed").unwrap().as_usize().unwrap() > 0);
             assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
             assert!(e.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
+            // thread accounting: the transport spends io_threads + accept,
+            // never 2x connections
+            let io = e.get("io_threads").unwrap().as_usize().unwrap();
+            assert!(io >= 1);
+            assert_eq!(e.get("transport_threads").unwrap().as_usize(), Some(io + 1));
         }
     }
 

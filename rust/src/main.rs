@@ -20,11 +20,12 @@
 //! tensornet serve      [--backend native|pjrt] [--executor-threads N]
 //!                      [--models DIR]          serve native zoo models,
 //!                      [--listen ADDR]         trained checkpoints, or AOT
-//!                                              artifacts; --listen exposes
-//!                                              the server over TCP
+//!                      [--io-threads N]        artifacts; --listen exposes
+//!                                              the server over TCP (N
+//!                                              reactor threads, default 1)
 //! tensornet client     --connect ADDR [--model A[,B,..]] [--requests N]
 //!                      [--connections C] [--pipeline P] [--shutdown]
-//!                                              drive a remote server over
+//!                      [--timeout-ms T]        drive a remote server over
 //!                                              the wire protocol; a comma-
 //!                                              separated --model list
 //!                                              interleaves models 1:1
@@ -111,12 +112,15 @@ fn print_usage() {
          \u{20}        [--models DIR] [--listen ADDR]                 (native: zoo models or trained\n\
          \u{20}        [--executor-threads N] [--requests 200]        checkpoints from --models DIR;\n\
          \u{20}        [--max-batch 32] [--max-delay-ms 2]            pjrt: AOT artifacts); --listen\n\
-         \u{20}                                                       serves TCP until a wire Shutdown\n\
+         \u{20}        [--io-threads 1]                               serves TCP until a wire Shutdown\n\
+         \u{20}                                                       (reactor I/O threads, default 1)\n\
          \u{20}  client --connect ADDR [--model A[,B,..]]            drive a remote server: N requests\n\
          \u{20}        [--requests 100] [--connections 1]             over C connections, P pipelined\n\
-         \u{20}        [--pipeline 4] [--shutdown]                    each; a comma-separated --model\n\
-         \u{20}                                                       list interleaves models 1:1;\n\
-         \u{20}                                                       --shutdown stops the server\n\
+         \u{20}        [--pipeline 4] [--timeout-ms 30000]            each; a comma-separated --model\n\
+         \u{20}        [--shutdown]                                   list interleaves models 1:1;\n\
+         \u{20}                                                       --timeout-ms bounds connect+read\n\
+         \u{20}                                                       (0 = no timeout); --shutdown\n\
+         \u{20}                                                       stops the server\n\
          \u{20}  inspect                                             list artifacts\n\
          common flags: --quick, --artifacts DIR (default ./artifacts)\n\
          lifecycle:  train --model fc --save c/dense  ->  compress --from c/dense --to c/tt\n\
@@ -441,6 +445,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.get_usize("max-batch", 32)?;
     let max_delay_ms = args.get_usize("max-delay-ms", 2)?;
     let executor_threads = args.get_usize("executor-threads", 1)?;
+    let io_threads = args.get_usize("io-threads", 1)?.max(1);
     let listen = args.get("listen");
 
     let cfg = ServerConfig {
@@ -567,11 +572,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // daemon mode: requests arrive over TCP; runs until a client's
         // wire Shutdown frame (tensornet client --shutdown)
         let server = Arc::new(server);
-        let net = NetServer::start(server.clone(), addr, lineup)?;
+        let net = NetServer::start_with(server.clone(), addr, lineup, io_threads)?;
         let t0 = Instant::now();
         // the bound address line is the machine-readable handshake the CI
         // loopback smoke greps for — keep the format stable
         println!("listening on {}", net.local_addr());
+        println!(
+            "transport: {} reactor thread(s) + accept ({} total)",
+            net.io_threads(),
+            net.transport_threads()
+        );
         net.wait_for_shutdown();
         println!("wire shutdown received — draining connections");
         net.shutdown();
@@ -618,11 +628,18 @@ fn cmd_client(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 100)?;
     let connections = args.get_usize("connections", 1)?.max(1);
     let pipeline = args.get_usize("pipeline", 4)?.max(1);
+    // bound on connect + each reply wait, so a hung or unreachable
+    // server fails the CLI instead of blocking it forever; 0 disables
+    let timeout_ms = args.get_usize("timeout-ms", 30_000)?;
+    let timeout = (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms as u64));
 
     // the probe connection discovers the lineup and, at the end, fetches
     // server-side stats / requests shutdown — the drive uses its own
     // connections so the probe never skews timings
-    let mut probe = Client::connect(addr)?;
+    let mut probe = match timeout {
+        Some(t) => Client::connect_timeout(addr, t)?,
+        None => Client::connect(addr)?,
+    };
     let lineup = probe.list_models()?;
     if lineup.is_empty() {
         return Err(tensornet::error::Error::Coordinator(format!(
@@ -668,7 +685,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         want.join("', '"),
         if models.len() > 1 { " (interleaved 1:1)" } else { "" },
     );
-    let drive = drive_remote_clients(addr, &models, n_requests, connections, pipeline);
+    let drive = drive_remote_clients(addr, &models, n_requests, connections, pipeline, timeout);
     let wall = drive.wall_seconds.max(1e-9);
     println!("completed:  {}", drive.completed);
     println!("busy:       {} (load shed by the server)", drive.busy);

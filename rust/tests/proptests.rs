@@ -2,7 +2,7 @@
 //! harness — proptest is unavailable offline; failures print the case
 //! index and master seed for exact replay).
 
-use tensornet::coordinator::wire::{ErrCode, Frame, ModelInfo, ModelStatsEntry};
+use tensornet::coordinator::wire::{ErrCode, Frame, FrameDecoder, ModelInfo, ModelStatsEntry};
 use tensornet::coordinator::{choose_variant, BatchAssembler, BatchPolicy};
 use tensornet::linalg::{qr_mat, svd_mat, Mat};
 use tensornet::nn::{Layer, LayerState, TtLinear};
@@ -406,6 +406,86 @@ fn prop_wire_rejects_truncations_and_bit_flips() {
             return Err(format!(
                 "decode succeeded with bit {bit} flipped in {frame:?} — corrupt payload accepted"
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_incremental_decoder_matches_one_shot() {
+    // slow-loris: feed every frame to the incremental decoder ONE BYTE
+    // at a time — no frame may surface before the last byte, the decoded
+    // frame must equal the one-shot decode, and its re-encode must be
+    // byte-identical (so the reactor path cannot drift from read_frame)
+    check(cfg(120), "wire-incremental", |rng| {
+        let frame = random_frame(rng);
+        let bytes = frame.encode().map_err(|e| e.to_string())?;
+        let one_shot = Frame::decode(&bytes).map_err(|e| e.to_string())?;
+        let mut dec = FrameDecoder::new();
+        for (i, b) in bytes.iter().enumerate() {
+            dec.feed(std::slice::from_ref(b));
+            match dec.next_frame().map_err(|e| format!("byte {i}: {e}"))? {
+                Some(got) => {
+                    if i + 1 != bytes.len() {
+                        return Err(format!(
+                            "frame surfaced after {} of {} bytes of {frame:?}",
+                            i + 1,
+                            bytes.len()
+                        ));
+                    }
+                    if got != one_shot {
+                        return Err(format!("incremental {got:?} != one-shot {one_shot:?}"));
+                    }
+                    let again = got.encode().map_err(|e| e.to_string())?;
+                    if again != bytes {
+                        return Err(format!("re-encode differs for {frame:?}"));
+                    }
+                }
+                None => {
+                    if i + 1 == bytes.len() {
+                        return Err(format!("no frame after all {} bytes", bytes.len()));
+                    }
+                    if dec.pending() == 0 {
+                        return Err(format!("pending() == 0 with {} bytes buffered", i + 1));
+                    }
+                }
+            }
+        }
+        if dec.pending() != 0 {
+            return Err(format!("pending() == {} after a complete frame", dec.pending()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_decoder_random_splits_stream() {
+    // a pipelined stream of 1..=4 frames, fed at random split points,
+    // must decode to exactly the original frames in order with nothing
+    // left buffered — whatever the chunk boundaries
+    check(cfg(120), "wire-splits", |rng| {
+        let n = gen::int(rng, 1, 4);
+        let frames: Vec<Frame> = (0..n).map(|_| random_frame(rng)).collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&f.encode().map_err(|e| e.to_string())?);
+        }
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut pos = 0usize;
+        while pos < stream.len() {
+            let take = gen::int(rng, 1, (stream.len() - pos).min(97));
+            dec.feed(&stream[pos..pos + take]);
+            pos += take;
+            while let Some(f) = dec.next_frame().map_err(|e| e.to_string())? {
+                got.push(f);
+            }
+        }
+        if got != frames {
+            return Err(format!("decoded {} frames, sent {}: order or content drifted", got.len(), frames.len()));
+        }
+        if dec.pending() != 0 {
+            return Err(format!("{} bytes left buffered after a clean stream", dec.pending()));
         }
         Ok(())
     });

@@ -12,13 +12,14 @@
 use std::io::Write;
 use std::net::TcpStream;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use tensornet::coordinator::wire;
 use tensornet::coordinator::{
     is_busy, BatchExecutor, BatchPolicy, Client, ErrCode, Frame, ModelInfo, ModelRegistry,
     ModelSpec, NativeExecutor, NetServer, Server, ServerConfig,
 };
-use tensornet::error::Result;
+use tensornet::error::{Error, Result};
+use tensornet::experiments::drive_remote_clients;
 use tensornet::util::rng::Rng;
 
 const SEED: u64 = 0xD15C_0BA1;
@@ -265,6 +266,125 @@ fn control_frames_and_wire_shutdown() {
     assert!(net.shutdown_requested(), "Shutdown frame must raise the flag");
     net.shutdown();
     drop(server);
+}
+
+#[test]
+fn reactor_single_io_thread_serves_256_connections_in_order() {
+    // the acceptance bar for the reactor: one I/O thread, 256 concurrent
+    // pipelined connections, zero lost or duplicated replies, and a
+    // transport thread count independent of the connection count.
+    // Per-connection reply order is asserted inside Client::recv (an
+    // out-of-order id fails the request, which would show up in failed).
+    let registry = small_registry();
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 32, max_delay: Duration::from_millis(1) },
+        queue_capacity: 4096,
+        batch_queue_capacity: 16,
+        executor_threads: 2,
+    };
+    let server = Arc::new(
+        Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap(),
+    );
+    let net = NetServer::start_with(
+        server.clone(),
+        "127.0.0.1:0",
+        vec![ModelInfo { name: "tt_small".into(), input_dim: DIM as u32, output_dim: DIM as u32 }],
+        1,
+    )
+    .unwrap();
+    assert_eq!(net.io_threads(), 1);
+    assert_eq!(net.transport_threads(), 2, "io_threads + accept, not 2x connections");
+    let addr = net.local_addr().to_string();
+
+    let n_requests = 1024usize;
+    let drive =
+        drive_remote_clients(&addr, &[("tt_small".to_string(), DIM)], n_requests, 256, 4, None);
+    assert_eq!(drive.failed, 0, "transport failures (or out-of-order replies)");
+    // the 4096-slot admission queue absorbs 256x4 in-flight: nothing sheds
+    assert_eq!(drive.busy, 0);
+    assert_eq!(drive.completed, n_requests as u64, "every reply, exactly once");
+    assert_eq!(server.stats().completed.get(), n_requests as u64);
+    assert_eq!(server.stats().errors.get(), 0);
+    net.shutdown();
+    drop(server);
+}
+
+#[test]
+fn half_sent_frame_does_not_stall_other_connections() {
+    let (server, net, addr) = start_remote(1, 8);
+    // connection A: send half an Infer frame, then stall mid-frame
+    let mut a = TcpStream::connect(&addr).unwrap();
+    let frame = Frame::Infer { id: 1, model: "tt_small".into(), input: vec![0.5; DIM] }
+        .encode()
+        .unwrap();
+    a.write_all(&frame[..frame.len() / 2]).unwrap();
+    a.flush().unwrap();
+
+    // connection B shares A's (single) reactor thread and must keep
+    // round-tripping while A sits mid-frame
+    let mut b = Client::connect(&addr).unwrap();
+    for i in 0..20 {
+        let resp = b.infer("tt_small", &vec![i as f32 / 20.0; DIM]).unwrap();
+        assert_eq!(resp.output.len(), DIM);
+    }
+
+    // A completes the frame and still gets its reply
+    a.write_all(&frame[frame.len() / 2..]).unwrap();
+    a.flush().unwrap();
+    let reply = Frame::read_from(&mut a).unwrap().expect("completed frame must be answered");
+    match reply {
+        Frame::InferOk { id, output, .. } => {
+            assert_eq!(id, 1);
+            assert_eq!(output.len(), DIM);
+        }
+        other => panic!("expected InferOk, got {other:?}"),
+    }
+    net.shutdown();
+    drop(server);
+}
+
+#[test]
+fn stalled_reader_does_not_block_other_connections() {
+    let (server, net, addr) = start_remote(2, 8);
+    // A pipelines 8 requests and reads nothing: its replies park in the
+    // server's per-connection queue/buffer without occupying the reactor
+    let mut a = Client::connect(&addr).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..8 {
+        ids.push(a.send("tt_small", &vec![i as f32; DIM]).unwrap());
+    }
+    // B, on the same single reactor thread, keeps completing round-trips
+    let mut b = Client::connect(&addr).unwrap();
+    for _ in 0..20 {
+        assert_eq!(b.infer("tt_small", &vec![0.25; DIM]).unwrap().output.len(), DIM);
+    }
+    // A finally reads: all 8 replies arrive, in request order
+    for &want in &ids {
+        assert_eq!(a.recv().unwrap().id, want);
+    }
+    assert_eq!(a.in_flight(), 0);
+    net.shutdown();
+    drop(server);
+}
+
+#[test]
+fn client_read_timeout_surfaces_as_net_error_instead_of_hanging() {
+    // a raw listener that accepts and then never replies
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let hold = std::thread::spawn(move || listener.accept());
+
+    let mut client = Client::connect_timeout(&addr, Duration::from_millis(200)).unwrap();
+    client.send("tt_small", &vec![0.0; DIM]).unwrap();
+    let t0 = Instant::now();
+    let err = client.recv().unwrap_err();
+    assert!(matches!(err, Error::Net(_)), "want Error::Net, got {err:?}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(4),
+        "the 200ms read timeout must fire promptly, waited {:?}",
+        t0.elapsed()
+    );
+    let _ = hold.join();
 }
 
 #[test]
