@@ -24,6 +24,7 @@ fn main() {
             queue_capacity: 4096,
             batch_queue_capacity: 16,
             executor_threads: 1,
+            kernel_threads: 0,
         };
         let server = Arc::new(
             Server::start(cfg, move || Ok(EchoExecutor { dim, scale: 1.0 })).unwrap(),

@@ -47,6 +47,12 @@ pub struct ServerConfig {
     /// worker builds its own executor via the `Fn` factory, so model
     /// state is never shared across workers.  Clamped to at least 1.
     pub executor_threads: usize,
+    /// kernel threads EACH executor worker may fan out to for one
+    /// batch's tensor work (the intra-batch parallelism of
+    /// `tt/matvec.rs` / `tensor/matmul.rs`).  `0` = auto:
+    /// `num_threads() / executor_threads`, at least 1 — so pool
+    /// parallelism × kernel parallelism never oversubscribes the box.
+    pub kernel_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -56,6 +62,22 @@ impl Default for ServerConfig {
             queue_capacity: 1024,
             batch_queue_capacity: 8,
             executor_threads: 1,
+            kernel_threads: 0,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// The per-worker kernel thread budget this config resolves to:
+    /// `kernel_threads` if set, else `num_threads() / executor_threads`
+    /// clamped to ≥ 1.  Recorded in bench provenance next to each
+    /// throughput number.
+    pub fn effective_kernel_threads(&self) -> usize {
+        let workers = self.executor_threads.max(1);
+        if self.kernel_threads > 0 {
+            self.kernel_threads
+        } else {
+            (crate::util::threads::num_threads() / workers).max(1)
         }
     }
 }
@@ -197,6 +219,7 @@ impl Server {
         F: Fn() -> Result<E> + Send + Sync + 'static,
     {
         let workers = cfg.executor_threads.max(1);
+        let kernel_budget = cfg.effective_kernel_threads();
         let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_capacity);
         let (btx, brx) = sync_channel::<Batch>(cfg.batch_queue_capacity);
         let stats = Arc::new(ServerStats::default());
@@ -219,6 +242,11 @@ impl Server {
             let handle = std::thread::Builder::new()
                 .name(format!("tn-executor-{w}"))
                 .spawn(move || {
+                    // cap this worker's kernel fan-out BEFORE building the
+                    // executor (model construction already runs tensor
+                    // code): with W workers each budgeted cores/W, a full
+                    // pool saturates the box without oversubscribing it
+                    crate::util::threads::set_thread_budget(kernel_budget);
                     let mut exec = match (factory.as_ref())() {
                         Ok(e) => e,
                         Err(e) => {
@@ -750,6 +778,7 @@ mod tests {
             queue_capacity: 1,
             batch_queue_capacity: 1,
             executor_threads: 1,
+            kernel_threads: 0,
         };
         let server = Server::start(cfg, || Ok(Stall)).unwrap();
         let mut queued = Vec::new();
@@ -807,6 +836,26 @@ mod tests {
         assert_eq!(m.errors.get(), 1);
         assert_eq!(m.completed.get(), 0);
         server.shutdown();
+    }
+
+    #[test]
+    fn kernel_thread_budget_math() {
+        use crate::util::threads::num_threads;
+        // explicit knob wins
+        let cfg = ServerConfig { executor_threads: 2, kernel_threads: 3, ..Default::default() };
+        assert_eq!(cfg.effective_kernel_threads(), 3);
+        // auto: cores / workers, at least 1 — the no-oversubscription
+        // invariant is workers × budget ≤ cores (modulo the ≥1 floor)
+        for workers in [1, 2, 4, 1024] {
+            let cfg =
+                ServerConfig { executor_threads: workers, kernel_threads: 0, ..Default::default() };
+            let budget = cfg.effective_kernel_threads();
+            assert!(budget >= 1);
+            assert!(budget == 1 || workers * budget <= num_threads(), "{workers}x{budget}");
+        }
+        // executor_threads 0 is clamped like Server::start clamps it
+        let cfg = ServerConfig { executor_threads: 0, kernel_threads: 0, ..Default::default() };
+        assert_eq!(cfg.effective_kernel_threads(), num_threads());
     }
 
     #[test]

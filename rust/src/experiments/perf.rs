@@ -15,12 +15,12 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::metrics::Histogram;
-use crate::tensor::{matmul_bt, Tensor};
+use crate::tensor::{matmul_bt, simd_name, Tensor};
 use crate::tt::{MatvecScratch, TtMatrix, TtShape};
 use crate::util::bench::{black_box, Bencher};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::threads::num_threads;
+use crate::util::threads::{num_threads, thread_budget};
 use std::collections::{BTreeMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -118,6 +118,11 @@ pub fn bench_tt_matvec(
         obj.insert("batch".to_string(), num(case.batch as f64));
         obj.insert("tt_params".to_string(), num(shape.num_params() as f64));
         obj.insert("dense_params".to_string(), num(shape.dense_params() as f64));
+        // kernel provenance: which dispatch path ran and how many threads
+        // the parallel helpers were allowed — without these, a trajectory
+        // diff cannot tell an ISA regression from a thread-budget change
+        obj.insert("simd".to_string(), Json::Str(simd_name().to_string()));
+        obj.insert("kernel_threads".to_string(), num(thread_budget() as f64));
         obj.insert("dense".to_string(), m_dense.to_json());
         obj.insert("tt".to_string(), m_tt.to_json());
         obj.insert("speedup".to_string(), num(speedup));
@@ -333,6 +338,7 @@ pub fn bench_coordinator(
             queue_capacity: 4096,
             batch_queue_capacity: 16,
             executor_threads: 1,
+            kernel_threads: 0,
         };
         let server = Server::start(cfg, move || Ok(EchoExecutor { dim, scale: 1.0 }))?;
         // NOT drive_clients: this sweep's baseline was recorded with a
@@ -401,7 +407,9 @@ pub fn bench_native_serving(
             queue_capacity: 4096,
             batch_queue_capacity: 16,
             executor_threads: threads,
+            kernel_threads: 0,
         };
+        let kernel_threads = cfg.effective_kernel_threads();
         let reg = registry.clone();
         let server = Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?;
         // warm the lazily-built model out of the timed region (one worker;
@@ -417,6 +425,8 @@ pub fn bench_native_serving(
         let mut obj = BTreeMap::new();
         obj.insert("model".to_string(), Json::Str(model.to_string()));
         obj.insert("executor_threads".to_string(), num(threads as f64));
+        obj.insert("kernel_threads".to_string(), num(kernel_threads as f64));
+        obj.insert("simd".to_string(), Json::Str(simd_name().to_string()));
         obj.insert("max_batch".to_string(), num(max_batch as f64));
         obj.insert("clients".to_string(), num(clients as f64));
         obj.insert("completed".to_string(), num(served as f64));
@@ -471,7 +481,9 @@ pub fn bench_mixed_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>
             queue_capacity: 4096,
             batch_queue_capacity: 16,
             executor_threads: 2,
+            kernel_threads: 0,
         };
+        let kernel_threads = cfg.effective_kernel_threads();
         let reg = registry.clone();
         let server = Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?;
         // warm every model's lazy build out of the timed region (one
@@ -517,6 +529,8 @@ pub fn bench_mixed_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>
         );
         obj.insert("clients".to_string(), num(clients as f64));
         obj.insert("max_batch".to_string(), num(max_batch as f64));
+        obj.insert("kernel_threads".to_string(), num(kernel_threads as f64));
+        obj.insert("simd".to_string(), Json::Str(simd_name().to_string()));
         obj.insert("completed".to_string(), num(served as f64));
         obj.insert("errors".to_string(), num(st.errors.get() as f64));
         obj.insert("rejected".to_string(), num(st.rejected.get() as f64));
@@ -582,7 +596,9 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
             queue_capacity: 4096,
             batch_queue_capacity: 16,
             executor_threads: 2,
+            kernel_threads: 0,
         };
+        let kernel_threads = cfg.effective_kernel_threads();
         let reg = registry.clone();
         let server =
             Arc::new(Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?);
@@ -623,6 +639,8 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
         obj.insert("pipeline".to_string(), num(pipeline as f64));
         obj.insert("io_threads".to_string(), num(io_threads as f64));
         obj.insert("transport_threads".to_string(), num(transport_threads as f64));
+        obj.insert("kernel_threads".to_string(), num(kernel_threads as f64));
+        obj.insert("simd".to_string(), Json::Str(simd_name().to_string()));
         obj.insert("completed".to_string(), num(drive.completed as f64));
         obj.insert("busy".to_string(), num(drive.busy as f64));
         obj.insert("failed".to_string(), num(drive.failed as f64));
@@ -653,6 +671,7 @@ pub fn report(suite: &str, quick: bool, sections: Vec<(&str, Vec<Json>)>) -> Jso
     obj.insert("bench".to_string(), Json::Str(suite.to_string()));
     obj.insert("quick".to_string(), Json::Bool(quick));
     obj.insert("threads".to_string(), num(num_threads() as f64));
+    obj.insert("simd".to_string(), Json::Str(simd_name().to_string()));
     let unix = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -761,6 +780,11 @@ mod tests {
             assert!(e.get("tt").unwrap().get("mean_ms").unwrap().as_f64().unwrap() >= 0.0);
             assert!(e.get("rank").unwrap().as_usize().is_some());
             assert!(e.get("batch").unwrap().as_usize().is_some());
+            // kernel provenance: every entry records which dispatch path
+            // produced it and the thread budget the helpers saw
+            let simd = e.get("simd").unwrap().as_str().unwrap();
+            assert!(simd == "avx2+fma" || simd == "scalar", "{simd}");
+            assert!(e.get("kernel_threads").unwrap().as_usize().unwrap() >= 1);
         }
         // the three (rank, batch) configurations are distinct
         let keys: Vec<(usize, usize)> = entries
@@ -786,6 +810,8 @@ mod tests {
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("tt_matvec"));
         assert!(back.get("ttsvd").unwrap().as_arr().unwrap().len() == 2);
+        let simd = back.get("simd").unwrap().as_str().unwrap().to_string();
+        assert!(simd == "avx2+fma" || simd == "scalar", "{simd}");
     }
 
     #[test]
@@ -805,6 +831,11 @@ mod tests {
             // load-shedding visibility: every entry carries the counters
             assert_eq!(e.get("rejected").unwrap().as_usize(), Some(0));
             assert_eq!(e.get("failed_workers").unwrap().as_usize(), Some(0));
+            // kernel provenance: budget >= 1 always, and the auto split
+            // never hands one worker more than the whole machine
+            let kt = e.get("kernel_threads").unwrap().as_usize().unwrap();
+            assert!((1..=num_threads()).contains(&kt), "{kt}");
+            assert!(e.get("simd").unwrap().as_str().is_some());
         }
     }
 
@@ -821,6 +852,8 @@ mod tests {
             assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
             let per_model = e.get("per_model").unwrap().as_arr().unwrap();
             assert_eq!(per_model.len(), names.len());
+            assert!(e.get("kernel_threads").unwrap().as_usize().unwrap() >= 1);
+            assert!(e.get("simd").unwrap().as_str().is_some());
             let mut completed_sum = 0usize;
             for m in per_model {
                 assert!(m.get("model").unwrap().as_str().is_some());
@@ -864,6 +897,8 @@ mod tests {
             let io = e.get("io_threads").unwrap().as_usize().unwrap();
             assert!(io >= 1);
             assert_eq!(e.get("transport_threads").unwrap().as_usize(), Some(io + 1));
+            assert!(e.get("kernel_threads").unwrap().as_usize().unwrap() >= 1);
+            assert!(e.get("simd").unwrap().as_str().is_some());
         }
     }
 

@@ -21,8 +21,11 @@
 //!                      [--models DIR]          serve native zoo models,
 //!                      [--listen ADDR]         trained checkpoints, or AOT
 //!                      [--io-threads N]        artifacts; --listen exposes
-//!                                              the server over TCP (N
-//!                                              reactor threads, default 1)
+//!                      [--kernel-threads K]    the server over TCP (N
+//!                                              reactor threads, default 1);
+//!                                              K caps each executor
+//!                                              worker's intra-batch kernel
+//!                                              fan-out (0 = cores/workers)
 //! tensornet client     --connect ADDR [--model A[,B,..]] [--requests N]
 //!                      [--connections C] [--pipeline P] [--shutdown]
 //!                      [--timeout-ms T]        drive a remote server over
@@ -112,8 +115,12 @@ fn print_usage() {
          \u{20}        [--models DIR] [--listen ADDR]                 (native: zoo models or trained\n\
          \u{20}        [--executor-threads N] [--requests 200]        checkpoints from --models DIR;\n\
          \u{20}        [--max-batch 32] [--max-delay-ms 2]            pjrt: AOT artifacts); --listen\n\
-         \u{20}        [--io-threads 1]                               serves TCP until a wire Shutdown\n\
-         \u{20}                                                       (reactor I/O threads, default 1)\n\
+         \u{20}        [--io-threads 1] [--kernel-threads 0]          serves TCP until a wire Shutdown\n\
+         \u{20}                                                       (reactor I/O threads, default 1);\n\
+         \u{20}                                                       --kernel-threads caps per-worker\n\
+         \u{20}                                                       tensor fan-out (0 = cores/workers;\n\
+         \u{20}                                                       TENSORNET_THREADS caps the pool,\n\
+         \u{20}                                                       TENSORNET_SIMD=off forces scalar)\n\
          \u{20}  client --connect ADDR [--model A[,B,..]]            drive a remote server: N requests\n\
          \u{20}        [--requests 100] [--connections 1]             over C connections, P pipelined\n\
          \u{20}        [--pipeline 4] [--timeout-ms 30000]            each; a comma-separated --model\n\
@@ -446,6 +453,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_delay_ms = args.get_usize("max-delay-ms", 2)?;
     let executor_threads = args.get_usize("executor-threads", 1)?;
     let io_threads = args.get_usize("io-threads", 1)?.max(1);
+    let kernel_threads = args.get_usize("kernel-threads", 0)?;
     let listen = args.get("listen");
 
     let cfg = ServerConfig {
@@ -454,6 +462,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_delay: Duration::from_millis(max_delay_ms as u64),
         },
         executor_threads,
+        kernel_threads,
         ..Default::default()
     };
     let (server, dim, model, lineup) = match backend.as_str() {
@@ -476,7 +485,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 || "native backend".to_string(),
                 |d| format!("checkpoints in {d}"),
             );
-            println!("== serving '{model}' ({source}, {executor_threads} executor threads)");
+            println!(
+                "== serving '{model}' ({source}, {executor_threads} executor threads x {} kernel threads)",
+                cfg.effective_kernel_threads()
+            );
             // the full registry is advertised over the wire, not just the
             // locally-driven model
             let lineup: Vec<ModelInfo> = registry

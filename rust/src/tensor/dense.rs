@@ -168,14 +168,13 @@ impl Tensor {
         self.permute(&[1, 0])
     }
 
-    /// Elementwise in-place `self += alpha * other`.
+    /// Elementwise in-place `self += alpha * other` — the SGD/momentum
+    /// update loop, routed through the dispatched axpy kernel.
     pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
         if self.shape != other.shape {
             return shape_err(format!("axpy {:?} vs {:?}", self.shape, other.shape));
         }
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += alpha * b;
-        }
+        (crate::tensor::simd::kernels().axpy)(alpha, &other.data, &mut self.data);
         Ok(())
     }
 

@@ -1,38 +1,20 @@
-//! Blocked, rayon-parallel GEMM — the native hot path.
+//! Blocked, parallel GEMM — the native hot path.
 //!
 //! Three variants avoid materializing transposes in the backward pass:
-//! `matmul` (A·B), `matmul_at` (Aᵀ·B), `matmul_bt` (A·Bᵀ).  The kernel is
-//! the classic i-k-j loop: the innermost loop runs along contiguous rows of
-//! B / the output, which auto-vectorizes.  Parallelism is over output row
-//! chunks; small problems stay single-threaded to avoid rayon overhead
-//! (threshold tuned in the perf pass, see EXPERIMENTS.md §Perf).
+//! `matmul` (A·B), `matmul_at` (Aᵀ·B), `matmul_bt` (A·Bᵀ).  Every inner
+//! loop is one of the three [`crate::tensor::simd`] primitives — `axpy`
+//! along contiguous rows of B / the output (the classic i-k-j kernel),
+//! `dot`/`dot4` along contraction rows for the Bᵀ shapes — dispatched
+//! once per process to AVX2+FMA or the scalar fallback.  Parallelism is
+//! over output row chunks, bounded by the caller's
+//! [`crate::util::threads::thread_budget`]; small problems stay
+//! single-threaded (threshold tuned in the perf pass, see EXPERIMENTS.md
+//! §Perf).
 
 use crate::error::{shape_err, Result};
+use crate::tensor::simd::kernels;
 use crate::tensor::Tensor;
-use crate::util::threads::{num_threads, parallel_chunks_mut};
-
-/// Lane-accumulator dot product: the `[f32; 8]` accumulator array is the
-/// shape LLVM reliably auto-vectorizes into SIMD FMAs, and it also breaks
-/// the serial FP dependency chain (perf pass iterations #1/#4).
-#[inline]
-fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 8];
-    let a8 = a.chunks_exact(8);
-    let b8 = b.chunks_exact(8);
-    let tail_a = a8.remainder();
-    let tail_b = b8.remainder();
-    for (ca, cb) in a8.zip(b8) {
-        for l in 0..8 {
-            acc[l] += ca[l] * cb[l];
-        }
-    }
-    let mut tail = 0.0f32;
-    for (x, y) in tail_a.iter().zip(tail_b) {
-        tail += x * y;
-    }
-    acc.iter().sum::<f32>() + tail
-}
+use crate::util::threads::{parallel_chunks_mut, thread_budget};
 
 /// GEMM engine with tuning knobs (shared defaults via free functions).
 #[derive(Clone, Copy, Debug)]
@@ -83,39 +65,34 @@ impl Gemm {
         }
         let ad = a.data();
         let bd = b.data();
+        let kern = kernels();
         let kernel = |i0: usize, rows: &mut [f32]| {
             for (di, orow) in rows.chunks_mut(n).enumerate() {
                 let i = i0 + di;
                 let arow = &ad[i * k..(i + 1) * k];
                 for (kk, &aik) in arow.iter().enumerate() {
                     if aik != 0.0 {
-                        let brow = &bd[kk * n..(kk + 1) * n];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += aik * bv;
-                        }
+                        (kern.axpy)(aik, &bd[kk * n..(kk + 1) * n], orow);
                     }
                 }
             }
         };
         let big = 2 * m * k * n >= self.par_flops;
-        if big && m >= 2 * num_threads() {
+        if big && m >= 2 * thread_budget() {
             // row-parallel with adaptive granularity
-            let cr = (m / (num_threads() * 4)).clamp(1, self.chunk_rows.max(1));
+            let cr = (m / (thread_budget() * 4)).clamp(1, self.chunk_rows.max(1));
             parallel_chunks_mut(&mut out[..], cr * n, |start, rows| {
                 kernel(start / n, rows);
             });
         } else if big && m == 1 && n >= 64 {
             // batch-1 case (Table 3): parallelize over COLUMN blocks of the
             // single output row — perf pass iteration #2
-            let cb = (n / num_threads()).max(32);
+            let cb = (n / thread_budget()).max(32);
             let arow = &ad[..k];
             parallel_chunks_mut(&mut out[..], cb, |col0, cols| {
                 for (kk, &aik) in arow.iter().enumerate() {
                     if aik != 0.0 {
-                        let brow = &bd[kk * n + col0..kk * n + col0 + cols.len()];
-                        for (o, &bv) in cols.iter_mut().zip(brow) {
-                            *o += aik * bv;
-                        }
+                        (kern.axpy)(aik, &bd[kk * n + col0..kk * n + col0 + cols.len()], cols);
                     }
                 }
             });
@@ -146,6 +123,7 @@ impl Gemm {
         }
         let ad = a.data();
         let bd = b.data();
+        let kern = kernels();
         let kernel = |i0: usize, rows: &mut [f32]| {
             // out[i, :] = sum_k a[k, i] * b[k, :]
             for kk in 0..k {
@@ -154,9 +132,7 @@ impl Gemm {
                 for (di, orow) in rows.chunks_mut(n).enumerate() {
                     let aki = arow[i0 + di];
                     if aki != 0.0 {
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += aki * bv;
-                        }
+                        (kern.axpy)(aki, brow, orow);
                     }
                 }
             }
@@ -189,48 +165,108 @@ impl Gemm {
         }
         let ad = a.data();
         let bd = b.data();
+        let kern = kernels();
         // k-blocked path for multi-row batches (perf pass iteration #3):
         // the naive per-row loop streams ALL of B once per output row
         // (41 GB of traffic for the Table-3 batch-100 case).  Blocking the
         // contraction axis keeps the A-panel cache-resident and streams B
-        // exactly once: kb -> j -> i with an unrolled dot over the block.
+        // exactly once per panel: kb -> j -> i with the dot4 micro-kernel
+        // amortizing each B-row load over 4 output rows.  Parallelism is
+        // over output-ROW panels (perf pass iteration #10 — this path
+        // used to return before any parallel dispatch, so the Table-3
+        // batch regime it was built for ran single-threaded); each panel
+        // recomputes its own kc so its A-panel stays ~512 KiB.
         if m >= 8 && k >= 4096 {
-            let kc = (512 * 1024 / (4 * m)).clamp(512, k); // A-panel ~512 KiB
-            for k0 in (0..k).step_by(kc) {
-                let kb = kc.min(k - k0);
-                for j in 0..n {
-                    let brow = &bd[j * k + k0..j * k + k0 + kb];
-                    for i in 0..m {
-                        let arow = &ad[i * k + k0..i * k + k0 + kb];
-                        out[i * n + j] += dot_unrolled(arow, brow);
+            let rows_per = if 2 * m * k * n >= self.par_flops {
+                m.div_ceil(thread_budget()).max(1)
+            } else {
+                m // one panel — parallel_chunks_mut runs it inline
+            };
+            parallel_chunks_mut(&mut out, rows_per * n, |start, rows| {
+                let i0 = start / n;
+                let mp = rows.len() / n; // whole rows: granularity is a multiple of n
+                let kc = (512 * 1024 / (4 * mp)).clamp(512, k);
+                for k0 in (0..k).step_by(kc) {
+                    let kb = kc.min(k - k0);
+                    for j in 0..n {
+                        let brow = &bd[j * k + k0..j * k + k0 + kb];
+                        let mut i = 0;
+                        while i + 4 <= mp {
+                            let base = (i0 + i) * k + k0;
+                            let d = (kern.dot4)(
+                                brow,
+                                &ad[base..base + kb],
+                                &ad[base + k..base + k + kb],
+                                &ad[base + 2 * k..base + 2 * k + kb],
+                                &ad[base + 3 * k..base + 3 * k + kb],
+                            );
+                            rows[i * n + j] += d[0];
+                            rows[(i + 1) * n + j] += d[1];
+                            rows[(i + 2) * n + j] += d[2];
+                            rows[(i + 3) * n + j] += d[3];
+                            i += 4;
+                        }
+                        while i < mp {
+                            let arow = &ad[(i0 + i) * k + k0..(i0 + i) * k + k0 + kb];
+                            rows[i * n + j] += (kern.dot)(arow, brow);
+                            i += 1;
+                        }
                     }
                 }
-            }
+            });
             return Tensor::from_vec(&[m, n], out);
         }
         let kernel = |i0: usize, rows: &mut [f32]| {
             for (di, orow) in rows.chunks_mut(n).enumerate() {
                 let arow = &ad[(i0 + di) * k..(i0 + di + 1) * k];
-                for (j, o) in orow.iter_mut().enumerate() {
-                    *o = dot_unrolled(arow, &bd[j * k..(j + 1) * k]);
+                let mut j = 0;
+                while j + 4 <= n {
+                    let d = (kern.dot4)(
+                        arow,
+                        &bd[j * k..(j + 1) * k],
+                        &bd[(j + 1) * k..(j + 2) * k],
+                        &bd[(j + 2) * k..(j + 3) * k],
+                        &bd[(j + 3) * k..(j + 4) * k],
+                    );
+                    orow[j..j + 4].copy_from_slice(&d);
+                    j += 4;
+                }
+                while j < n {
+                    orow[j] = (kern.dot)(arow, &bd[j * k..(j + 1) * k]);
+                    j += 1;
                 }
             }
         };
         let big = 2 * m * k * n >= self.par_flops;
-        if big && m >= 2 * num_threads() {
-            let cr = (m / (num_threads() * 4)).clamp(1, self.chunk_rows.max(1));
+        if big && m >= 2 * thread_budget() {
+            let cr = (m / (thread_budget() * 4)).clamp(1, self.chunk_rows.max(1));
             parallel_chunks_mut(&mut out, cr * n, |start, rows| {
                 kernel(start / n, rows);
             });
         } else if big && m == 1 && n >= 2 {
             // batch-1 inference: each output column is an independent dot
             // against a row of B — parallelize over column blocks
-            let cb = (n / num_threads()).max(16);
+            let cb = (n / thread_budget()).max(16);
             let arow = &ad[..k];
             parallel_chunks_mut(&mut out, cb, |col0, cols| {
-                for (dj, o) in cols.iter_mut().enumerate() {
+                let nc = cols.len();
+                let mut dj = 0;
+                while dj + 4 <= nc {
                     let j = col0 + dj;
-                    *o = dot_unrolled(arow, &bd[j * k..(j + 1) * k]);
+                    let d = (kern.dot4)(
+                        arow,
+                        &bd[j * k..(j + 1) * k],
+                        &bd[(j + 1) * k..(j + 2) * k],
+                        &bd[(j + 2) * k..(j + 3) * k],
+                        &bd[(j + 3) * k..(j + 4) * k],
+                    );
+                    cols[dj..dj + 4].copy_from_slice(&d);
+                    dj += 4;
+                }
+                while dj < nc {
+                    let j = col0 + dj;
+                    cols[dj] = (kern.dot)(arow, &bd[j * k..(j + 1) * k]);
+                    dj += 1;
                 }
             });
         } else if big && m > 1 {
@@ -267,12 +303,8 @@ pub fn matvec(a: &Tensor, x: &Tensor) -> Result<Tensor> {
     let (m, n) = (a.shape()[0], a.shape()[1]);
     let ad = a.data();
     let xd = x.data();
-    let out: Vec<f32> = (0..m)
-        .map(|i| {
-            let row = &ad[i * n..(i + 1) * n];
-            row.iter().zip(xd).map(|(a, b)| a * b).sum()
-        })
-        .collect();
+    let kern = kernels();
+    let out: Vec<f32> = (0..m).map(|i| (kern.dot)(&ad[i * n..(i + 1) * n], xd)).collect();
     Tensor::from_vec(&[m], out)
 }
 
@@ -345,6 +377,26 @@ mod tests {
         close(&par.matmul_at(&a, &b2).unwrap(), &ser.matmul_at(&a, &b2).unwrap(), 1e-5);
         let c = Tensor::randn(&[250, 120], 1.0, &mut rng);
         close(&par.matmul_bt(&a, &c).unwrap(), &ser.matmul_bt(&a, &c).unwrap(), 1e-5);
+    }
+
+    #[test]
+    fn kblocked_bt_parallel_matches_reference() {
+        // the m >= 8 && k >= 4096 branch — the Table-3 batch regime —
+        // must agree with the generic path whether it runs as one panel
+        // (par_flops = MAX) or many parallel panels (par_flops = 0).
+        // Panel partitioning changes each panel's kc, hence the
+        // summation order, so compare within tolerance, not bitwise.
+        let mut rng = Rng::new(42);
+        let (m, k, n) = (13, 4200, 9); // odd m: dot4 quads + a tail row
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let want = matmul(&a, &b.t2().unwrap()).unwrap();
+        let par = Gemm { par_flops: 0, chunk_rows: 16 };
+        let ser = Gemm { par_flops: usize::MAX, chunk_rows: 16 };
+        close(&par.matmul_bt(&a, &b).unwrap(), &want, 1e-3);
+        close(&ser.matmul_bt(&a, &b).unwrap(), &want, 1e-3);
+        // fixed tuning + fixed kernel selection ⇒ deterministic run-to-run
+        assert_eq!(par.matmul_bt(&a, &b).unwrap(), par.matmul_bt(&a, &b).unwrap());
     }
 
     #[test]

@@ -9,7 +9,9 @@
 mod dense;
 mod matmul;
 mod reshape;
+pub mod simd;
 
 pub use dense::Tensor;
 pub use matmul::{matmul, matmul_at, matmul_bt, matvec, Gemm};
 pub use reshape::{linear_index, multi_index, strides_of};
+pub use simd::{kernels, simd_name, Kernels};

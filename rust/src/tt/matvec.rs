@@ -9,25 +9,38 @@
 //! The permutations around each GEMM are fused into custom pack/unpack
 //! loops (no `Tensor::permute` allocations on the hot path), and
 //! [`MatvecScratch`] lets a serving worker reuse its buffers across calls.
+//!
+//! Large batches take the COOPERATIVE path (perf pass iteration #10):
+//! instead of pack → one big GEMM → unpack as three global passes, the
+//! per-(batch·M_done) groups — which are fully independent — are sliced
+//! across `parallel_chunks_mut` workers, each fusing gather → contract →
+//! scatter for its run of groups.  One hot batch is thereby worked on by
+//! every kernel thread the caller's [`thread_budget`] allows (an
+//! executor-pool worker no longer runs a whole batch alone while sibling
+//! threads idle), and the two full pack/unpack copies of the state
+//! tensor disappear.  Small batches keep the original path, whose
+//! batch-1 column-parallel GEMM is the tuned Table-3 latency case.
 
 use crate::error::{shape_err, Result};
+use crate::tensor::simd::{kernels, Kernels};
 use crate::tensor::{Gemm, Tensor};
 use crate::tt::TtMatrix;
-use crate::util::threads::parallel_chunks_mut;
+use crate::util::threads::{parallel_chunks_mut, thread_budget};
 
 /// Reusable buffers for [`TtMatrix::matvec_with`].
 ///
 /// Three buffers cycle through the sweep: `a` seeds the state buffer
-/// (recycled from the previous call's spent GEMM output), `b` holds the
-/// packed GEMM operand, `c` the GEMM output.  In steady state a serving
-/// worker calling with a fixed input shape performs exactly ONE heap
-/// allocation per call — the buffer that leaves inside the returned
-/// tensor — everything else retains capacity across calls.
+/// (recycled from a previous call's spent buffer), `b` holds the packed
+/// GEMM operand (small-batch path) or the fused path's output, which
+/// swaps with the state buffer per core, `c` the GEMM output.  In steady
+/// state a serving worker calling with a fixed input shape performs
+/// exactly ONE heap allocation per call — the buffer that leaves inside
+/// the returned tensor — everything else retains capacity across calls.
 #[derive(Default, Clone, Debug)]
 pub struct MatvecScratch {
     /// sweep-state buffer; capacity retained across calls
     a: Vec<f32>,
-    /// packed GEMM operand `(rows, r0·n)`
+    /// packed GEMM operand `(rows, r0·n)` / fused-path output
     b: Vec<f32>,
     /// GEMM output `(rows, m·r1)`; donated to `a` at the end of each call
     c: Vec<f32>,
@@ -66,20 +79,60 @@ impl TtMatrix {
             debug_assert_eq!(r, r0);
             let rest = n_rest / n;
             let rows = b * m_done * rest;
+            let groups = b * m_done;
+            let in_block = n * rest * r0;
+            let out_block = rest * m * r1;
 
-            // pack: (B, M, n, rest, r0) -> (B, M, rest, r0, n) flattened
-            // as the GEMM operand (rows, r0*n)
             let src: &[f32] = if k == 0 { x.data() } else { &cur };
-            let packed = pack_a(src, b * m_done, n, rest, r0, &mut scratch.b);
+            if groups >= 4 && groups * in_block.max(out_block) >= (1 << 16) {
+                // cooperative fused path: each group's gather → contract →
+                // scatter is independent, so slice the group range across
+                // the kernel thread budget.  Output goes into `scratch.b`
+                // (free here — no pack operand is materialized) and swaps
+                // with `cur` afterwards, because `cur` IS the input and
+                // in_block ≠ out_block in general (in-place would let one
+                // group's output clobber another's unread input).
+                let core = self.core_mats()[k].data();
+                let kern = kernels();
+                scratch.b.clear();
+                scratch.b.resize(groups * out_block, 0.0);
+                let gpt = groups.div_ceil(thread_budget().min(groups));
+                parallel_chunks_mut(&mut scratch.b, gpt * out_block, |start, dst| {
+                    let g0 = start / out_block;
+                    // one contract accumulator per worker chunk, not per
+                    // group — m·r1 floats, reused down the group run
+                    let mut acc = vec![0.0f32; m * r1];
+                    for (gi, dst_g) in dst.chunks_mut(out_block).enumerate() {
+                        let g = g0 + gi;
+                        contract_group(
+                            &src[g * in_block..(g + 1) * in_block],
+                            core,
+                            n,
+                            rest,
+                            r0,
+                            r1,
+                            &mut acc,
+                            dst_g,
+                            kern,
+                        );
+                    }
+                });
+                std::mem::swap(&mut cur, &mut scratch.b);
+            } else {
+                // pack: (B, M, n, rest, r0) -> (B, M, rest, r0, n)
+                // flattened as the GEMM operand (rows, r0*n)
+                let packed = pack_a(src, groups, n, rest, r0, &mut scratch.b);
 
-            // GEMM against cached core matrix (r0*n, m*r1), written into
-            // the retained scratch buffer — no allocation once warm
-            let a_t = Tensor::from_vec(&[rows, r0 * n], std::mem::take(packed))?;
-            gemm.matmul_into(&a_t, &self.core_mats()[k], &mut scratch.c)?;
-            scratch.b = a_t.into_vec(); // return buffer for reuse
+                // GEMM against cached core matrix (r0*n, m*r1), written
+                // into the retained scratch buffer — no allocation once
+                // warm
+                let a_t = Tensor::from_vec(&[rows, r0 * n], std::mem::take(packed))?;
+                gemm.matmul_into(&a_t, &self.core_mats()[k], &mut scratch.c)?;
+                scratch.b = a_t.into_vec(); // return buffer for reuse
 
-            // unpack: (B, M, rest, m, r1) -> (B, M, m, rest, r1)
-            cur = unpack_out(&scratch.c, b * m_done, rest, m, r1, &mut cur);
+                // unpack: (B, M, rest, m, r1) -> (B, M, m, rest, r1)
+                cur = unpack_out(&scratch.c, groups, rest, m, r1, &mut cur);
+            }
 
             m_done *= m;
             n_rest = rest;
@@ -93,7 +146,54 @@ impl TtMatrix {
         // across serving-worker invocations (this used to be
         // `scratch.a = Vec::new()`, reallocating every call)
         scratch.a = std::mem::take(&mut scratch.c);
+        if scratch.a.capacity() == 0 {
+            // an all-fused sweep never touches the GEMM output buffer;
+            // recycle the fused path's spent input buffer instead so
+            // steady state stays at one allocation per call
+            scratch.a = std::mem::take(&mut scratch.b);
+        }
         Ok(y)
+    }
+}
+
+/// Fused gather → contract → scatter for ONE `(n, rest, r0)` state group
+/// against the `(r0·n, m·r1)` core matrix — the same arithmetic as
+/// pack_a + GEMM row + unpack_one, without materializing either
+/// intermediate.  For each `t < rest`: `acc[(i,s)] = Σ_{j,a}
+/// src[j,t,a] · core[(a,j),(i,s)]` via the axpy kernel over the
+/// contiguous core row, then `acc` scatters into `dst[i,t,s]`.
+#[allow(clippy::too_many_arguments)]
+fn contract_group(
+    src: &[f32],
+    core: &[f32],
+    n: usize,
+    rest: usize,
+    r0: usize,
+    r1: usize,
+    acc: &mut [f32],
+    dst: &mut [f32],
+    kern: &Kernels,
+) {
+    let mr1 = acc.len(); // m * r1
+    let m = mr1 / r1;
+    for t in 0..rest {
+        acc.fill(0.0);
+        for j in 0..n {
+            let s_base = (j * rest + t) * r0;
+            for a in 0..r0 {
+                let v = src[s_base + a];
+                // same sparsity skip as the GEMM kernel (one-hot /
+                // padded inputs make zero entries common)
+                if v != 0.0 {
+                    let row = (a * n + j) * mr1;
+                    (kern.axpy)(v, &core[row..row + mr1], acc);
+                }
+            }
+        }
+        for i in 0..m {
+            let d = (i * rest + t) * r1;
+            dst[d..d + r1].copy_from_slice(&acc[i * r1..(i + 1) * r1]);
+        }
     }
 }
 
@@ -268,6 +368,45 @@ mod tests {
             let _ = tt.matvec_with(&x1, &mut scratch).unwrap();
             let now = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
             assert_eq!(caps, now, "scratch capacities drifted across same-shape calls");
+        }
+    }
+
+    #[test]
+    fn fused_large_batch_matches_small_batch_path() {
+        // a batch big enough to cross the cooperative-path gate
+        // (groups · block ≥ 2¹⁶ at every core) must agree with the
+        // small-batch pack→GEMM→unpack path row for row, and stay
+        // deterministic call-to-call
+        let shape = TtShape::uniform(&[4, 4, 4], &[4, 4, 4], 4).unwrap();
+        let mut rng = Rng::new(9);
+        let tt = TtMatrix::random(&shape, &mut rng).unwrap();
+        let batch = 1200;
+        let x = Tensor::randn(&[batch, shape.n_total()], 1.0, &mut rng);
+        let mut scratch = MatvecScratch::default();
+        let got = tt.matvec_with(&x, &mut scratch).unwrap();
+        assert_eq!(got.shape(), &[batch, shape.m_total()]);
+        // reference: the same rows one at a time (batch 1 stays on the
+        // GEMM path); the two paths sum in different orders → tolerance
+        let n = shape.n_total();
+        let m = shape.m_total();
+        for i in (0..batch).step_by(97) {
+            let row = Tensor::from_vec(&[1, n], x.data()[i * n..(i + 1) * n].to_vec()).unwrap();
+            let want = tt.matvec(&row).unwrap();
+            for (g, w) in got.data()[i * m..(i + 1) * m].iter().zip(want.data()) {
+                assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "row {i}: {g} vs {w}");
+            }
+        }
+        // per-path determinism: identical input + scratch reuse ⇒
+        // bitwise identical output
+        let again = tt.matvec_with(&x, &mut scratch).unwrap();
+        assert_eq!(got, again);
+        // steady state keeps its one-allocation-per-call contract: warm
+        // capacities must not drift across repeated same-shape calls
+        let caps = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
+        for _ in 0..3 {
+            let _ = tt.matvec_with(&x, &mut scratch).unwrap();
+            let now = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
+            assert_eq!(caps, now, "fused-path scratch capacities drifted");
         }
     }
 

@@ -3,23 +3,75 @@
 //! contiguous regions and runs the worker over `granularity`-item chunks;
 //! static partitioning is the right shape for our GEMM row panels (uniform
 //! cost per row), and it needs no locks at all.
+//!
+//! Two knobs bound the fan-out:
+//!
+//! * `TENSORNET_THREADS` caps the machine-wide pool size that
+//!   [`num_threads`] reports (clamped ≥ 1, cached on first read — set it
+//!   before the first parallel call).  Benches and the serve CLI use it
+//!   to pin the kernel thread count for reproducible numbers.
+//! * [`set_thread_budget`] caps the CALLING thread's fan-out only: an
+//!   executor-pool worker sets its budget to `num_threads() /
+//!   executor_threads` so pool parallelism × kernel parallelism never
+//!   oversubscribes the box.  The budget is thread-local, and the scoped
+//!   workers these helpers spawn start with an unset budget — but they
+//!   never spawn further (the helpers are leaves), so there is no nested
+//!   re-expansion to worry about.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads to use (cached `available_parallelism`).
+/// Parse a `TENSORNET_THREADS` value: a thread count clamped to ≥ 1, or
+/// `None` for unparsable input (which falls back to detection).
+pub fn parse_thread_override(val: &str) -> Option<usize> {
+    val.trim().parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// Number of worker threads to use: `TENSORNET_THREADS` if set (clamped
+/// ≥ 1), else `available_parallelism`.  Cached on first call.
 pub fn num_threads() -> usize {
     static N: AtomicUsize = AtomicUsize::new(0);
     let cached = N.load(Ordering::Relaxed);
     if cached != 0 {
         return cached;
     }
-    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let n = std::env::var("TENSORNET_THREADS")
+        .ok()
+        .and_then(|v| parse_thread_override(&v))
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
     N.store(n, Ordering::Relaxed);
     n
 }
 
+thread_local! {
+    /// 0 = unset (use `num_threads()`); otherwise the max fan-out for
+    /// parallel helpers called FROM this thread.
+    static BUDGET: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Cap the fan-out of parallel helpers called from the current thread
+/// (`0` clears the cap).  Thread-local: an executor-pool worker calls
+/// this once at startup so `pool workers × kernel threads ≤ cores`.
+pub fn set_thread_budget(n: usize) {
+    BUDGET.with(|b| b.set(n));
+}
+
+/// Effective thread budget for the current thread: the value set by
+/// [`set_thread_budget`] (never above `num_threads()`), or
+/// `num_threads()` when unset.  Always ≥ 1.
+pub fn thread_budget() -> usize {
+    let b = BUDGET.with(|b| b.get());
+    if b == 0 {
+        num_threads()
+    } else {
+        b.min(num_threads()).max(1)
+    }
+}
+
 /// Run `f(start_item, chunk)` over `granularity`-item chunks of `data`,
-/// spread across up to `num_threads()` OS threads.
+/// spread across up to [`thread_budget`] OS threads.
 ///
 /// Each thread owns a contiguous run of whole chunks (no work stealing, no
 /// locks).  The last chunk may be short.  Serial when one thread suffices.
@@ -29,7 +81,7 @@ where
 {
     let g = granularity.max(1);
     let n_chunks = data.len().div_ceil(g);
-    let threads = num_threads().min(n_chunks);
+    let threads = thread_budget().min(n_chunks);
     if threads <= 1 {
         for (ci, chunk) in data.chunks_mut(g).enumerate() {
             f(ci * g, chunk);
@@ -64,7 +116,7 @@ pub fn parallel_map<R: Send, F>(n: usize, f: F) -> Vec<R>
 where
     F: Fn(usize) -> R + Sync,
 {
-    let threads = num_threads().min(n.max(1));
+    let threads = thread_budget().min(n.max(1));
     if threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
@@ -173,5 +225,59 @@ mod tests {
     #[test]
     fn num_threads_positive() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn thread_override_parses_and_clamps() {
+        assert_eq!(parse_thread_override("4"), Some(4));
+        assert_eq!(parse_thread_override(" 2 "), Some(2));
+        // clamped ≥ 1: `TENSORNET_THREADS=0` means "serial", not "none"
+        assert_eq!(parse_thread_override("0"), Some(1));
+        // garbage falls back to detection
+        assert_eq!(parse_thread_override("lots"), None);
+        assert_eq!(parse_thread_override(""), None);
+        assert_eq!(parse_thread_override("-3"), None);
+    }
+
+    #[test]
+    fn budget_defaults_to_num_threads_and_clamps() {
+        // unset on a fresh test thread
+        assert_eq!(thread_budget(), num_threads());
+        set_thread_budget(1_000_000);
+        assert_eq!(thread_budget(), num_threads(), "budget never exceeds the pool");
+        set_thread_budget(1);
+        assert_eq!(thread_budget(), 1);
+        set_thread_budget(0); // clear for whatever runs next on this thread
+        assert_eq!(thread_budget(), num_threads());
+    }
+
+    #[test]
+    fn budget_one_keeps_work_on_the_caller_thread() {
+        use std::sync::Mutex;
+        set_thread_budget(1);
+        let caller = std::thread::current().id();
+        let seen = Mutex::new(Vec::new());
+        let mut data = vec![0u32; 100];
+        parallel_chunks_mut(&mut data, 10, |start, chunk| {
+            seen.lock().unwrap().push(std::thread::current().id());
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (start + i) as u32;
+            }
+        });
+        set_thread_budget(0);
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 10, "all chunks still processed");
+        assert!(seen.iter().all(|&id| id == caller), "budget 1 must not spawn");
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn budget_is_thread_local() {
+        set_thread_budget(1);
+        let inner = std::thread::spawn(|| thread_budget()).join().unwrap();
+        set_thread_budget(0);
+        assert_eq!(inner, num_threads(), "spawned threads start with an unset budget");
     }
 }

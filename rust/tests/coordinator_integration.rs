@@ -15,6 +15,7 @@ fn echo_server(max_batch: usize, delay_ms: u64, queue: usize) -> Server {
         queue_capacity: queue,
         batch_queue_capacity: 4,
         executor_threads: 1,
+        kernel_threads: 0,
     };
     Server::start(cfg, || Ok(EchoExecutor { dim: 8, scale: 1.0 })).unwrap()
 }
@@ -73,6 +74,7 @@ fn backpressure_rejects_when_full() {
         queue_capacity: 2,
         batch_queue_capacity: 1,
         executor_threads: 1,
+        kernel_threads: 0,
     };
     struct SlowEcho;
     impl tensornet::coordinator::BatchExecutor for SlowEcho {

@@ -41,6 +41,7 @@ fn native_server(executor_threads: usize, max_batch: usize) -> Server {
         queue_capacity: 1024,
         batch_queue_capacity: 8,
         executor_threads,
+        kernel_threads: 0,
     };
     Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap()
 }

@@ -7,7 +7,8 @@ use tensornet::coordinator::{choose_variant, BatchAssembler, BatchPolicy};
 use tensornet::linalg::{qr_mat, svd_mat, Mat};
 use tensornet::nn::{Layer, LayerState, TtLinear};
 use tensornet::runtime::Checkpoint;
-use tensornet::tensor::{matmul, matmul_bt, Tensor};
+use tensornet::tensor::simd::{detected_kernels, scalar_kernels};
+use tensornet::tensor::{matmul, matmul_at, matmul_bt, Tensor};
 use tensornet::tt::{TtMatrix, TtShape, TtVector};
 use tensornet::util::json::Json;
 use tensornet::util::prop::{check, gen, Config};
@@ -510,6 +511,110 @@ fn prop_gemm_associates_with_identity_and_transpose() {
         for (x, y) in abt.data().iter().zip(want.data()) {
             if (x - y).abs() > 1e-4 * (1.0 + y.abs()) {
                 return Err(format!("{x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// simd kernel dispatch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_simd_kernels_match_scalar_on_ragged_lengths() {
+    // dot/axpy/dot4 parity between the detected ISA path and the scalar
+    // fallback, on lengths that deliberately straddle the kernels'
+    // internal strides (32/16/8-lane blocks + scalar tails): 0, 1, <8,
+    // exact multiples of 8, and multiples ± a ragged tail all occur
+    let Some(simd) = detected_kernels() else {
+        eprintln!("skipping SIMD parity: no supported ISA on this host");
+        return;
+    };
+    let scalar = scalar_kernels();
+    check(cfg(120), "simd-parity", |rng| {
+        let n = match rng.below(4) {
+            0 => gen::int(rng, 0, 7),
+            1 => 8 * gen::int(rng, 1, 16),
+            2 => 8 * gen::int(rng, 1, 16) + gen::int(rng, 1, 7),
+            _ => gen::int(rng, 0, 300),
+        };
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+        let ys: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..n).map(|_| rng.normal_f32(1.0)).collect()).collect();
+        // |x·y| can cancel to ~0 while the roundoff scales with the sum
+        // of |x_i y_i| — tolerance must track the latter
+        let mag: f32 = x.iter().zip(&ys[0]).map(|(a, b)| (a * b).abs()).sum();
+        let tol = 1e-4 * (1.0 + mag);
+        let (d_simd, d_scalar) = ((simd.dot)(&x, &ys[0]), (scalar.dot)(&x, &ys[0]));
+        if (d_simd - d_scalar).abs() > tol {
+            return Err(format!("dot n={n}: {d_simd} vs {d_scalar}"));
+        }
+        let d4_simd = (simd.dot4)(&x, &ys[0], &ys[1], &ys[2], &ys[3]);
+        let d4_scalar = (scalar.dot4)(&x, &ys[0], &ys[1], &ys[2], &ys[3]);
+        for (q, (a, b)) in d4_simd.iter().zip(&d4_scalar).enumerate() {
+            if (a - b).abs() > tol {
+                return Err(format!("dot4[{q}] n={n}: {a} vs {b}"));
+            }
+        }
+        if d4_scalar[0].to_bits() != d_scalar.to_bits() {
+            return Err("scalar dot4 lane 0 must be bitwise scalar dot".into());
+        }
+        let alpha = rng.normal_f32(1.0);
+        let mut acc_simd = ys[1].clone();
+        let mut acc_scalar = ys[1].clone();
+        (simd.axpy)(alpha, &x, &mut acc_simd);
+        (scalar.axpy)(alpha, &x, &mut acc_scalar);
+        for (i, (a, b)) in acc_simd.iter().zip(&acc_scalar).enumerate() {
+            // per-element: one fma vs one mul+add, at most 1 ulp apart
+            if (a - b).abs() > 1e-5 * (1.0 + b.abs()) {
+                return Err(format!("axpy[{i}] n={n}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_dispatch_matches_naive_reference() {
+    // the full dispatch stack (matmul / matmul_at / matmul_bt over
+    // whichever Kernels vtable this host selected) against an f64 naive
+    // triple loop, on shapes that hit the dot4 quad path, its remainder
+    // rows, and k < 8 where the 8-lane blocks never engage
+    check(cfg(60), "gemm-dispatch", |rng| {
+        let m = gen::int(rng, 1, 10);
+        let k = match rng.below(3) {
+            0 => gen::int(rng, 1, 7),
+            1 => 8 * gen::int(rng, 1, 8) + gen::int(rng, 0, 7),
+            _ => gen::int(rng, 8, 64),
+        };
+        let n = gen::int(rng, 1, 13);
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let (ad, bd) = (a.data(), b.data());
+        let mut want = vec![0.0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = ad[i * k + kk] as f64;
+                for j in 0..n {
+                    want[i * n + j] += aik * bd[kk * n + j] as f64;
+                }
+            }
+        }
+        let at = a.t2().unwrap();
+        let bt = b.t2().unwrap();
+        for (name, got) in [
+            ("matmul", matmul(&a, &b).map_err(|e| e.to_string())?),
+            ("matmul_at", matmul_at(&at, &b).map_err(|e| e.to_string())?),
+            ("matmul_bt", matmul_bt(&a, &bt).map_err(|e| e.to_string())?),
+        ] {
+            if got.shape() != [m, n] {
+                return Err(format!("{name}: shape {:?}", got.shape()));
+            }
+            for (i, (x, y)) in got.data().iter().zip(&want).enumerate() {
+                if (*x as f64 - y).abs() > 1e-4 * (1.0 + y.abs()) {
+                    return Err(format!("{name}[{i}] ({m}x{k}x{n}): {x} vs {y}"));
+                }
             }
         }
         Ok(())
