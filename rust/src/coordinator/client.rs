@@ -65,6 +65,10 @@ pub struct Client {
     /// when set, `recv` and the control calls give up after this long
     /// without reply bytes instead of blocking forever
     read_timeout: Option<Duration>,
+    /// reused encode buffer: after the first few sends it has grown to
+    /// working-set size and every outgoing frame serializes with zero
+    /// heap allocation (`Frame::encode_into`)
+    ebuf: Vec<u8>,
 }
 
 impl Client {
@@ -130,6 +134,7 @@ impl Client {
             next_id: 1,
             in_flight: VecDeque::new(),
             read_timeout: None,
+            ebuf: Vec::new(),
         })
     }
 
@@ -163,10 +168,19 @@ impl Client {
         let id = self.next_id;
         self.next_id += 1;
         let frame = Frame::Infer { id, model: model.to_string(), input: input.to_vec() };
-        frame.write_to(&mut self.writer)?;
-        self.writer.flush().map_err(|e| Error::Net(format!("flush: {e}")))?;
+        self.write_frame(&frame)?;
         self.in_flight.push_back(id);
         Ok(id)
+    }
+
+    /// Serialize `frame` through the reused encode buffer and flush it.
+    fn write_frame(&mut self, frame: &Frame) -> Result<()> {
+        self.ebuf.clear();
+        frame.encode_into(&mut self.ebuf)?;
+        self.writer
+            .write_all(&self.ebuf)
+            .map_err(|e| Error::Net(format!("write frame: {e}")))?;
+        self.writer.flush().map_err(|e| Error::Net(format!("flush: {e}")))
     }
 
     /// Await the oldest in-flight request's reply.  A `Busy` reply (load
@@ -266,8 +280,7 @@ impl Client {
                 self.in_flight.len()
             )));
         }
-        frame.write_to(&mut self.writer)?;
-        self.writer.flush().map_err(|e| Error::Net(format!("flush: {e}")))
+        self.write_frame(&frame)
     }
 
     fn read_reply(&mut self) -> Result<Frame> {

@@ -28,12 +28,19 @@
 //! in [`Client`]) and in-process callers share the same bounded
 //! admission queue, backpressure ([`Admission::Busy`]) and
 //! [`ServerStats`].
+//!
+//! Above a single process, [`ShardRouter`] (DESIGN.md §13) fronts N
+//! `serve --listen` daemons over the same wire protocol: placement is
+//! discovered from each shard's advertised [`Frame::ModelList`],
+//! replicated models dispatch least-loaded, and a dead shard fails over
+//! with typed errors while survivors keep serving.
 
 mod batcher;
 mod client;
 mod native;
 mod net;
 mod request;
+mod router;
 mod server;
 pub mod wire;
 mod worker;
@@ -42,6 +49,7 @@ pub use batcher::{Batch, BatchAssembler, BatchPolicy};
 pub use client::{is_busy, Client, RemoteResponse, RemoteStats};
 pub use native::{ModelRegistry, ModelSpec, NativeExecutor};
 pub use net::NetServer;
+pub use router::{RouterConfig, ShardRouter, ShardSnapshot};
 pub use request::{InferRequest, InferResponse};
 pub use server::{Admission, ModelStats, ReplyReceiver, Server, ServerConfig, ServerStats};
 pub use wire::{ErrCode, Frame, ModelInfo, ModelStatsEntry};

@@ -320,11 +320,12 @@ impl Conn {
                     _ => return true,
                 },
             };
-            match frame.encode() {
-                Ok(bytes) => {
-                    self.wbuf.extend_from_slice(&bytes);
-                    *progress = true;
-                }
+            // encode straight onto the tail of the connection's write
+            // buffer — steady state serializes every reply with zero
+            // heap allocation (wire.rs `encode_into`); on error the
+            // buffer is restored, so nothing partial ever hits the wire
+            match frame.encode_into(&mut self.wbuf) {
+                Ok(()) => *progress = true,
                 Err(e) => {
                     eprintln!("tn-net-io {}: encode reply: {e}", self.peer);
                     return false;

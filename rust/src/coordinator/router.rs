@@ -1,0 +1,1459 @@
+//! Router tier: sharded multi-process serving (DESIGN.md §13).
+//!
+//! One process, one registry is the single-box throughput ceiling the
+//! ROADMAP names after PRs 6–7 — the batcher, executor pool and kernels
+//! all live inside one address space, so aggregate rows/s tops out at
+//! what one process can sustain.  [`ShardRouter`] lifts that ceiling by
+//! scale-out: a front-end that speaks the *existing* wire protocol on
+//! both sides, fronting N independent `tensornet serve --listen` shard
+//! daemons and multiplying aggregate throughput near-linearly with the
+//! shard count (`sharded_tt` in BENCH_coordinator.json).
+//!
+//! ```text
+//! clients ──► tn-router-accept ──round-robin──► tn-router-io-{k}
+//!                (listener)                        │  sweeps DownConn state machines
+//!                                                  │  (FrameDecoder → dispatch → in-order outbound)
+//!                                                  │        │ least-loaded pick over placement
+//!                                                  │        ▼
+//!                                                  └── ShardLink per shard (pipelined,
+//!                                                      non-blocking, one per io thread)
+//!                                                           │ Infer (rewritten id)  ▲ replies
+//!                                                           ▼                       │ in order
+//!                                                  shard 0 .. shard N-1  (`serve --listen`)
+//! ```
+//!
+//! The router is the PR 6 reactor idiom applied twice: downstream
+//! connections are swept exactly like `net.rs` conns (non-blocking
+//! reads through [`wire::FrameDecoder`], an in-order outbound queue
+//! where only the head settles, partial-write-aware flushing), and each
+//! upstream shard link is the same shape in reverse — a pipelined
+//! non-blocking connection whose in-flight queue settles strictly in
+//! send order (the shard's reactor guarantees in-order replies per
+//! connection).  Every I/O thread owns its own links to every shard, so
+//! the router adds one hop, not one thread per connection, and no lock
+//! sits on the forward path.
+//!
+//! **Placement** is discovered at startup: each shard is probed for its
+//! advertised [`Frame::ModelList`] and the union becomes the router's
+//! lineup.  A model served by several shards is *replicated* — capped
+//! by `--replicas M` (rotated by model index so hot models don't all
+//! pile on shard 0).  **Dispatch** is least-loaded: among a model's
+//! placed shards with a live link, pick the one with the fewest
+//! router-tracked in-flight requests (a shared atomic per shard, exact
+//! and instantaneous); per-model `StatsReply` polling (~200ms, io
+//! thread 0) refreshes each shard's batch counters for the merged
+//! stats the router serves downstream.
+//!
+//! **Failure containment**: a dead shard link fails over — every
+//! in-flight request on it is answered with a typed `Exec` error
+//! (never a hang), the shard is marked unhealthy, survivors keep
+//! serving, and the link redials every ~500ms (a bounded ~50ms
+//! connect attempt; the one place this reactor may stall, chosen over
+//! a dedicated dialer thread).  Requests are never silently re-sent:
+//! an in-flight request on a dead shard may or may not have executed,
+//! so re-dispatching it could double-apply — the client owns the
+//! retry decision.
+
+use crate::coordinator::client::{Client, RemoteStats};
+use crate::coordinator::wire::{self, ErrCode, Frame, ModelInfo, ModelStatsEntry};
+use crate::error::{Error, Result};
+use crate::metrics::Counter;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+// The reactor tuning constants mirror net.rs — same readiness model,
+// same tradeoffs (see the long comments there).
+const POLL: Duration = Duration::from_millis(25);
+const IDLE_TICK: Duration = Duration::from_micros(500);
+const READ_CHUNK: usize = 64 * 1024;
+const WBUF_SOFT_CAP: usize = 1 << 20;
+const FIN_DRAIN: Duration = Duration::from_millis(200);
+const STOP_DRAIN: Duration = Duration::from_secs(5);
+
+/// Period of the per-shard `Stats` poll (io thread 0 only).
+const STATS_POLL: Duration = Duration::from_millis(200);
+/// How long a dead link waits before the next redial attempt.
+const REDIAL: Duration = Duration::from_millis(500);
+/// Bound on one blocking redial `connect` — the only place a router
+/// I/O thread may stall; kept small so a down shard costs at most this
+/// per [`REDIAL`] period.
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(50);
+
+/// Router startup configuration (CLI: `tensornet router`).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Shard addresses (`host:port` of running `serve --listen` daemons).
+    pub shards: Vec<String>,
+    /// Cap on how many shards serve one model (`0` = every shard that
+    /// advertises it).  Replica sets are rotated by model index so
+    /// different models land on different shard subsets.
+    pub replicas: usize,
+    /// Reactor threads sweeping downstream connections; each owns its
+    /// own pipelined link to every shard.
+    pub io_threads: usize,
+    /// Bound on the startup placement probe per shard (startup *fails*
+    /// if any configured shard is unreachable — a fleet with a silently
+    /// missing shard is a misconfiguration, not a degraded mode).
+    pub connect_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            shards: Vec::new(),
+            replicas: 0,
+            io_threads: 1,
+            connect_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Shared per-shard state: identity, health, the least-loaded signal
+/// and forwarding counters.  One per shard, shared by every io thread's
+/// link to it (so least-loaded dispatch sees cross-thread load).
+struct ShardInfo {
+    addr: String,
+    /// models the router PLACED here (the shard may advertise more)
+    models: Vec<String>,
+    healthy: AtomicBool,
+    /// router-tracked outstanding requests — the least-loaded key
+    in_flight: AtomicU64,
+    forwarded: Counter,
+    completed: Counter,
+    errors: Counter,
+    busy: Counter,
+    /// link-death events (each fails over its in-flight requests)
+    failovers: Counter,
+    /// latest polled `StatsReply`, for the merged downstream stats
+    last_poll: Mutex<Option<RemoteStats>>,
+}
+
+/// Point-in-time copy of one shard's router-side state — the
+/// provenance block benches and the CLI summary print.
+#[derive(Clone, Debug)]
+pub struct ShardSnapshot {
+    pub addr: String,
+    pub models: Vec<String>,
+    pub healthy: bool,
+    pub in_flight: u64,
+    pub forwarded: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub busy: u64,
+    pub failovers: u64,
+}
+
+/// Per-model router counters (created lazily on first traffic, same
+/// discipline as `ServerStats`: only placed model names ever get an
+/// entry — the lineup check runs before attribution).
+#[derive(Default)]
+pub struct RouterModelStats {
+    pub completed: Counter,
+    pub errors: Counter,
+    pub busy: Counter,
+}
+
+/// Aggregate router counters, shared across io threads.
+#[derive(Default)]
+pub struct RouterStats {
+    pub completed: Counter,
+    /// non-retryable failures: shard `Exec`/`BadRequest` replies,
+    /// unknown models, failed-over in-flight requests
+    pub errors: Counter,
+    /// retryable shard `Busy` replies forwarded to clients
+    pub busy: Counter,
+    per_model: RwLock<BTreeMap<String, Arc<RouterModelStats>>>,
+}
+
+impl RouterStats {
+    /// Get-or-create the per-model counters for `model` (read-lock fast
+    /// path; the write lock is taken only on first-ever traffic).
+    fn model(&self, model: &str) -> Arc<RouterModelStats> {
+        if let Some(m) = self.per_model.read().unwrap().get(model) {
+            return m.clone();
+        }
+        self.per_model.write().unwrap().entry(model.to_string()).or_default().clone()
+    }
+
+    fn per_model_snapshot(&self) -> Vec<(String, Arc<RouterModelStats>)> {
+        self.per_model.read().unwrap().iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+}
+
+/// Model → placed shard indices.  Built once at startup; placement is
+/// static (shards don't come and go, they only die and redial).
+fn place(
+    lineups: &[Vec<ModelInfo>],
+    replicas: usize,
+) -> Result<(Vec<ModelInfo>, BTreeMap<String, Vec<usize>>)> {
+    let mut union: BTreeMap<String, ModelInfo> = BTreeMap::new();
+    let mut serving: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (si, lineup) in lineups.iter().enumerate() {
+        for m in lineup {
+            match union.get(&m.name) {
+                None => {
+                    union.insert(m.name.clone(), m.clone());
+                }
+                Some(seen) if seen.input_dim != m.input_dim || seen.output_dim != m.output_dim => {
+                    // same name, different tensor shapes: routing a
+                    // request to "whichever replica is idle" would give
+                    // shape-dependent answers — refuse to start
+                    return Err(Error::Coordinator(format!(
+                        "model '{}' advertised with conflicting dims: {}x{} vs {}x{}",
+                        m.name, seen.input_dim, seen.output_dim, m.input_dim, m.output_dim
+                    )));
+                }
+                Some(_) => {}
+            }
+            serving.entry(m.name.clone()).or_default().push(si);
+        }
+    }
+    let mut placement = BTreeMap::new();
+    for (mi, (name, shards)) in serving.into_iter().enumerate() {
+        let placed = if replicas == 0 || shards.len() <= replicas {
+            shards
+        } else {
+            // rotate the replica window by model index so consecutive
+            // models spread over different shard subsets
+            let start = mi % shards.len();
+            (0..replicas).map(|k| shards[(start + k) % shards.len()]).collect()
+        };
+        placement.insert(name, placed);
+    }
+    Ok((union.into_values().collect(), placement))
+}
+
+/// One inference awaiting its upstream reply: the shard link fills the
+/// slot (down-side id already rewritten back in) and the downstream
+/// connection's in-order promote drains it.  `Rc`: both ends live on
+/// the same io thread — slots never cross threads.
+type Slot = Rc<RefCell<Option<Frame>>>;
+
+/// One queued downstream reply, in request order.
+enum Outbound {
+    Ready(Frame),
+    /// forwarded upstream; settles when the link fills the slot
+    Forwarded(Slot),
+}
+
+/// Downstream connection lifecycle — same machine as net.rs `Phase`.
+enum Phase {
+    Open,
+    PeerClosed,
+    Closing,
+    Draining { since: Instant },
+}
+
+struct Sweep {
+    progress: bool,
+    keep: bool,
+}
+
+/// An in-flight entry on a shard link, settled strictly in send order.
+enum UpEntry {
+    Infer { up_id: u64, down_id: u64, model: String, slot: Slot },
+    /// router-issued `Stats` poll (no downstream waiter)
+    Poll,
+}
+
+/// Live socket state of one link; `None` in [`ShardLink`] = link down.
+struct LinkIo {
+    stream: TcpStream,
+    decoder: wire::FrameDecoder,
+    pending: VecDeque<UpEntry>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+}
+
+/// One io thread's pipelined connection to one shard.
+struct ShardLink {
+    shard: Arc<ShardInfo>,
+    io: Option<LinkIo>,
+    next_redial: Instant,
+    next_id: u64,
+}
+
+impl ShardLink {
+    fn new(shard: Arc<ShardInfo>) -> ShardLink {
+        // dial immediately on the first sweep
+        ShardLink { shard, io: None, next_redial: Instant::now(), next_id: 1 }
+    }
+
+    fn alive(&self) -> bool {
+        self.io.is_some()
+    }
+
+    /// Redial a down link, at most once per [`REDIAL`] period.  The
+    /// bounded blocking connect is this reactor's one deliberate stall
+    /// (see [`CONNECT_TIMEOUT`]).
+    fn ensure_connected(&mut self) {
+        if self.io.is_some() || Instant::now() < self.next_redial {
+            return;
+        }
+        self.next_redial = Instant::now() + REDIAL;
+        let addrs: Vec<SocketAddr> = match self.shard.addr.to_socket_addrs() {
+            Ok(a) => a.collect(),
+            Err(_) => return,
+        };
+        for sa in &addrs {
+            let Ok(stream) = TcpStream::connect_timeout(sa, CONNECT_TIMEOUT) else { continue };
+            if stream.set_nonblocking(true).is_err() {
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            self.io = Some(LinkIo {
+                stream,
+                decoder: wire::FrameDecoder::new(),
+                pending: VecDeque::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+            });
+            self.shard.healthy.store(true, Ordering::SeqCst);
+            return;
+        }
+    }
+
+    /// Forward one inference: encode with a rewritten (per-link) id
+    /// straight onto the link's write buffer and queue the reply slot.
+    /// Returns false when the link is down (caller re-picks or errors).
+    fn send_infer(&mut self, down_id: u64, model: String, input: Vec<f32>, slot: Slot) -> bool {
+        let Some(io) = self.io.as_mut() else { return false };
+        let up_id = self.next_id;
+        let frame = Frame::Infer { id: up_id, model: model.clone(), input };
+        // can't exceed the payload cap: the downstream frame this came
+        // from carried the same payload and decoded under it
+        if frame.encode_into(&mut io.wbuf).is_err() {
+            return false;
+        }
+        self.next_id += 1;
+        io.pending.push_back(UpEntry::Infer { up_id, down_id, model, slot });
+        self.shard.in_flight.fetch_add(1, Ordering::Relaxed);
+        self.shard.forwarded.inc();
+        true
+    }
+
+    /// Enqueue a `Stats` poll unless one is already outstanding.
+    fn send_poll(&mut self) {
+        let Some(io) = self.io.as_mut() else { return };
+        if io.pending.iter().any(|e| matches!(e, UpEntry::Poll)) {
+            return;
+        }
+        if Frame::Stats.encode_into(&mut io.wbuf).is_ok() {
+            io.pending.push_back(UpEntry::Poll);
+        }
+    }
+
+    /// Flush queued upstream bytes until the socket pushes back.
+    fn pump_writes(&mut self, progress: &mut bool, stats: &RouterStats) {
+        let mut failure: Option<String> = None;
+        if let Some(io) = self.io.as_mut() {
+            while io.wpos < io.wbuf.len() {
+                match io.stream.write(&io.wbuf[io.wpos..]) {
+                    Ok(0) => {
+                        failure = Some("write: connection closed".into());
+                        break;
+                    }
+                    Ok(n) => {
+                        io.wpos += n;
+                        *progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        failure = Some(format!("write: {e}"));
+                        break;
+                    }
+                }
+            }
+            if failure.is_none() && io.wpos > 0 && io.wpos == io.wbuf.len() {
+                io.wbuf.clear();
+                io.wpos = 0;
+            }
+        }
+        if let Some(why) = failure {
+            self.fail(&why, stats);
+        }
+    }
+
+    /// Pull one [`READ_CHUNK`] off the link and settle every reply it
+    /// completes, strictly head-of-queue.
+    fn pump_reads(&mut self, progress: &mut bool, stats: &RouterStats) {
+        let mut chunk = [0u8; READ_CHUNK];
+        let read = match self.io.as_mut() {
+            Some(io) => io.stream.read(&mut chunk),
+            None => return,
+        };
+        let mut failure: Option<String> = None;
+        match read {
+            Ok(0) => failure = Some("shard closed the connection".into()),
+            Ok(n) => {
+                *progress = true;
+                let io = self.io.as_mut().expect("checked above");
+                io.decoder.feed(&chunk[..n]);
+                loop {
+                    match io.decoder.next_frame() {
+                        Ok(Some(frame)) => {
+                            if let Err(why) = settle(&mut io.pending, &self.shard, frame, stats) {
+                                failure = Some(why);
+                                break;
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            failure = Some(format!("bad frame from shard: {e}"));
+                            break;
+                        }
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => failure = Some(format!("read: {e}")),
+        }
+        if let Some(why) = failure {
+            self.fail(&why, stats);
+        }
+    }
+
+    /// The link died: answer every in-flight request with a typed
+    /// `Exec` error (never a hang, never a silent re-send — the shard
+    /// may have executed it), mark the shard unhealthy and schedule a
+    /// redial.  Survivor shards keep serving untouched.
+    fn fail(&mut self, why: &str, stats: &RouterStats) {
+        let Some(io) = self.io.take() else { return };
+        self.shard.failovers.inc();
+        let in_flight = io.pending.iter().filter(|e| matches!(e, UpEntry::Infer { .. })).count();
+        eprintln!(
+            "tn-router: shard {} failed: {why} ({in_flight} in-flight answered with errors)",
+            self.shard.addr
+        );
+        for entry in io.pending {
+            if let UpEntry::Infer { down_id, model, slot, .. } = entry {
+                self.shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                self.shard.errors.inc();
+                stats.errors.inc();
+                stats.model(&model).errors.inc();
+                slot.borrow_mut().replace(Frame::InferErr {
+                    id: down_id,
+                    code: ErrCode::Exec,
+                    message: format!("shard {} failed mid-request: {why}", self.shard.addr),
+                });
+            }
+        }
+        self.shard.healthy.store(false, Ordering::SeqCst);
+        self.next_redial = Instant::now() + REDIAL;
+    }
+
+    /// Quiet teardown on reactor exit: release the in-flight gauge
+    /// without counting errors (the waiting connections are being torn
+    /// down too — there is no one left to answer).
+    fn abandon(&mut self) {
+        if let Some(io) = self.io.take() {
+            for e in io.pending {
+                if matches!(e, UpEntry::Infer { .. }) {
+                    self.shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Match one shard reply against the head of the link's in-flight
+/// queue; returns the failure reason if the shard broke protocol.
+fn settle(
+    pending: &mut VecDeque<UpEntry>,
+    shard: &ShardInfo,
+    frame: Frame,
+    stats: &RouterStats,
+) -> std::result::Result<(), String> {
+    match pending.pop_front() {
+        None => Err(format!("unsolicited {} with nothing in flight", frame.kind())),
+        Some(UpEntry::Poll) => match frame {
+            Frame::StatsReply {
+                completed,
+                rejected,
+                errors,
+                failed_workers,
+                batches,
+                batched_rows,
+                per_model,
+            } => {
+                *shard.last_poll.lock().unwrap() = Some(RemoteStats {
+                    completed,
+                    rejected,
+                    errors,
+                    failed_workers,
+                    batches,
+                    batched_rows,
+                    per_model,
+                });
+                Ok(())
+            }
+            other => {
+                pending.push_front(UpEntry::Poll);
+                Err(format!("expected StatsReply to a poll, shard sent {}", other.kind()))
+            }
+        },
+        Some(UpEntry::Infer { up_id, down_id, model, slot }) => {
+            let reorder = |pending: &mut VecDeque<UpEntry>, got: &Frame, up_id, down_id, model, slot| {
+                let kind = got.kind();
+                pending.push_front(UpEntry::Infer { up_id, down_id, model, slot });
+                format!("out-of-order reply from shard: {kind} did not match head id {up_id}")
+            };
+            match frame {
+                Frame::InferOk { id, queue_us, exec_us, batch_size, output } => {
+                    if id != up_id {
+                        let f = Frame::InferOk { id, queue_us, exec_us, batch_size, output };
+                        return Err(reorder(pending, &f, up_id, down_id, model, slot));
+                    }
+                    shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    shard.completed.inc();
+                    stats.completed.inc();
+                    stats.model(&model).completed.inc();
+                    slot.borrow_mut().replace(Frame::InferOk {
+                        id: down_id,
+                        queue_us,
+                        exec_us,
+                        batch_size,
+                        output,
+                    });
+                    Ok(())
+                }
+                Frame::InferErr { id, code, message } => {
+                    // id 0 = the shard couldn't attribute the error
+                    if id != 0 && id != up_id {
+                        let f = Frame::InferErr { id, code, message };
+                        return Err(reorder(pending, &f, up_id, down_id, model, slot));
+                    }
+                    shard.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    match code {
+                        ErrCode::Busy => {
+                            shard.busy.inc();
+                            stats.busy.inc();
+                            stats.model(&model).busy.inc();
+                        }
+                        _ => {
+                            shard.errors.inc();
+                            stats.errors.inc();
+                            stats.model(&model).errors.inc();
+                        }
+                    }
+                    slot.borrow_mut().replace(Frame::InferErr { id: down_id, code, message });
+                    Ok(())
+                }
+                other => Err(reorder(pending, &other, up_id, down_id, model, slot)),
+            }
+        }
+    }
+}
+
+/// Everything a downstream sweep needs to dispatch: the io thread's own
+/// links plus the shared routing tables.  Rebuilt per loop iteration —
+/// it's all borrows.
+struct Ctx<'a> {
+    links: &'a mut [ShardLink],
+    shards: &'a [Arc<ShardInfo>],
+    placement: &'a BTreeMap<String, Vec<usize>>,
+    lineup: &'a [ModelInfo],
+    stats: &'a RouterStats,
+    shutdown_requested: &'a AtomicBool,
+}
+
+/// Least-loaded pick: among `model`'s placed shards with a live link on
+/// THIS thread, the one with the fewest router-wide in-flight requests.
+fn pick_shard(ctx: &Ctx, model: &str) -> Option<usize> {
+    ctx.placement
+        .get(model)?
+        .iter()
+        .copied()
+        .filter(|&i| ctx.links[i].alive())
+        .min_by_key(|&i| ctx.shards[i].in_flight.load(Ordering::Relaxed))
+}
+
+/// Handle one decoded downstream frame; false = close the connection.
+fn dispatch(frame: Frame, outbound: &mut VecDeque<Outbound>, ctx: &mut Ctx) -> bool {
+    match frame {
+        Frame::Infer { id, model, input } => {
+            // same pre-attribution lineup check as net.rs: unknown names
+            // are client-controlled bytes and must not plant stats
+            // entries or reach a shard
+            if !ctx.lineup.iter().any(|m| m.name == model) {
+                ctx.stats.errors.inc();
+                let served: Vec<&str> = ctx.lineup.iter().map(|m| m.name.as_str()).collect();
+                outbound.push_back(Outbound::Ready(Frame::InferErr {
+                    id,
+                    code: ErrCode::Exec,
+                    message: format!("unknown model '{model}' (served: {})", served.join(", ")),
+                }));
+                return true;
+            }
+            let Some(si) = pick_shard(ctx, &model) else {
+                // placed shards all dead right now: typed error, the
+                // redial loop may revive them for the client's retry
+                ctx.stats.errors.inc();
+                ctx.stats.model(&model).errors.inc();
+                outbound.push_back(Outbound::Ready(Frame::InferErr {
+                    id,
+                    code: ErrCode::Exec,
+                    message: format!("no live shard serves '{model}'"),
+                }));
+                return true;
+            };
+            let slot: Slot = Rc::new(RefCell::new(None));
+            if ctx.links[si].send_infer(id, model, input, slot.clone()) {
+                outbound.push_back(Outbound::Forwarded(slot));
+            } else {
+                outbound.push_back(Outbound::Ready(Frame::InferErr {
+                    id,
+                    code: ErrCode::Exec,
+                    message: format!("forward to shard {} failed", ctx.shards[si].addr),
+                }));
+            }
+            true
+        }
+        Frame::Stats => {
+            let s = stats_snapshot(ctx.stats, ctx.shards);
+            outbound.push_back(Outbound::Ready(Frame::StatsReply {
+                completed: s.completed,
+                rejected: s.rejected,
+                errors: s.errors,
+                failed_workers: s.failed_workers,
+                batches: s.batches,
+                batched_rows: s.batched_rows,
+                per_model: s.per_model,
+            }));
+            true
+        }
+        Frame::ListModels => {
+            outbound.push_back(Outbound::Ready(Frame::ModelList { models: ctx.lineup.to_vec() }));
+            true
+        }
+        Frame::Shutdown => {
+            // acknowledge, then stop the ROUTER only — the fleet
+            // launcher owns shard lifecycle
+            outbound.push_back(Outbound::Ready(Frame::ShutdownOk));
+            ctx.shutdown_requested.store(true, Ordering::SeqCst);
+            false
+        }
+        other @ (Frame::InferOk { .. }
+        | Frame::InferErr { .. }
+        | Frame::StatsReply { .. }
+        | Frame::ModelList { .. }
+        | Frame::ShutdownOk) => {
+            outbound.push_back(Outbound::Ready(Frame::InferErr {
+                id: 0,
+                code: ErrCode::BadRequest,
+                message: format!("unexpected reply-type frame {} sent to router", other.kind()),
+            }));
+            false
+        }
+    }
+}
+
+/// The merged stats picture the router serves downstream: router-side
+/// counters for request outcomes, shard-poll sums for batching depth.
+fn stats_snapshot(stats: &RouterStats, shards: &[Arc<ShardInfo>]) -> RemoteStats {
+    let mut per: BTreeMap<String, ModelStatsEntry> = BTreeMap::new();
+    for (name, m) in stats.per_model_snapshot() {
+        per.insert(
+            name.clone(),
+            ModelStatsEntry {
+                name,
+                completed: m.completed.get(),
+                errors: m.errors.get(),
+                batches: 0,
+                batched_rows: 0,
+            },
+        );
+    }
+    let mut batches = 0u64;
+    let mut batched_rows = 0u64;
+    let mut failed_workers = 0u64;
+    for sh in shards {
+        if !sh.healthy.load(Ordering::SeqCst) {
+            // surfaced in the same StatsReply field a degraded
+            // executor pool uses: "how many of my workers are gone"
+            failed_workers += 1;
+        }
+        if let Some(poll) = sh.last_poll.lock().unwrap().as_ref() {
+            batches += poll.batches;
+            batched_rows += poll.batched_rows;
+            for pm in &poll.per_model {
+                let e = per.entry(pm.name.clone()).or_insert_with(|| ModelStatsEntry {
+                    name: pm.name.clone(),
+                    ..Default::default()
+                });
+                e.batches += pm.batches;
+                e.batched_rows += pm.batched_rows;
+            }
+        }
+    }
+    RemoteStats {
+        completed: stats.completed.get(),
+        rejected: stats.busy.get(),
+        errors: stats.errors.get(),
+        failed_workers,
+        batches,
+        batched_rows,
+        per_model: per.into_values().collect(),
+    }
+}
+
+/// Downstream connection state machine — net.rs `Conn` with forwarding
+/// instead of local admission.
+struct DownConn {
+    stream: TcpStream,
+    peer: SocketAddr,
+    decoder: wire::FrameDecoder,
+    outbound: VecDeque<Outbound>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    phase: Phase,
+}
+
+impl DownConn {
+    fn new(stream: TcpStream, peer: SocketAddr) -> Option<DownConn> {
+        if stream.set_nonblocking(true).is_err() {
+            return None;
+        }
+        let _ = stream.set_nodelay(true);
+        Some(DownConn {
+            stream,
+            peer,
+            decoder: wire::FrameDecoder::new(),
+            outbound: VecDeque::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            phase: Phase::Open,
+        })
+    }
+
+    fn begin_close(&mut self) {
+        if matches!(self.phase, Phase::Open | Phase::PeerClosed) {
+            self.phase = Phase::Closing;
+        }
+    }
+
+    fn sweep(&mut self, ctx: &mut Ctx) -> Sweep {
+        let mut progress = false;
+        if matches!(self.phase, Phase::Open) && !self.read_ready(&mut progress, ctx) {
+            return Sweep { progress: true, keep: false };
+        }
+        if !self.promote(&mut progress) {
+            return Sweep { progress: true, keep: false };
+        }
+        if !self.write_ready(&mut progress) {
+            return Sweep { progress: true, keep: false };
+        }
+        let flushed = self.outbound.is_empty() && self.wpos == self.wbuf.len();
+        match self.phase {
+            Phase::Open => {}
+            Phase::PeerClosed => {
+                if flushed {
+                    return Sweep { progress: true, keep: false };
+                }
+            }
+            Phase::Closing => {
+                if flushed {
+                    let _ = self.stream.shutdown(std::net::Shutdown::Write);
+                    self.phase = Phase::Draining { since: Instant::now() };
+                    progress = true;
+                }
+            }
+            Phase::Draining { since } => {
+                if !self.drain_reads(&mut progress) || since.elapsed() >= FIN_DRAIN {
+                    return Sweep { progress: true, keep: false };
+                }
+            }
+        }
+        Sweep { progress, keep: true }
+    }
+
+    fn read_ready(&mut self, progress: &mut bool, ctx: &mut Ctx) -> bool {
+        let mut chunk = [0u8; READ_CHUNK];
+        match self.stream.read(&mut chunk) {
+            Ok(0) => {
+                *progress = true;
+                if self.decoder.pending() > 0 {
+                    self.outbound.push_back(Outbound::Ready(Frame::InferErr {
+                        id: 0,
+                        code: ErrCode::BadRequest,
+                        message: format!(
+                            "connection closed mid-frame with {} bytes buffered",
+                            self.decoder.pending()
+                        ),
+                    }));
+                    self.phase = Phase::Closing;
+                } else {
+                    self.phase = Phase::PeerClosed;
+                }
+                true
+            }
+            Ok(n) => {
+                *progress = true;
+                self.decoder.feed(&chunk[..n]);
+                loop {
+                    match self.decoder.next_frame() {
+                        Ok(Some(frame)) => {
+                            if !dispatch(frame, &mut self.outbound, ctx) {
+                                self.phase = Phase::Closing;
+                                break;
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            self.outbound.push_back(Outbound::Ready(Frame::InferErr {
+                                id: 0,
+                                code: ErrCode::BadRequest,
+                                message: format!("{e}"),
+                            }));
+                            self.phase = Phase::Closing;
+                            break;
+                        }
+                    }
+                }
+                true
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => true,
+            Err(e) => {
+                eprintln!("tn-router-io {}: read: {e}", self.peer);
+                false
+            }
+        }
+    }
+
+    /// Settle the head of the in-order outbound queue.  Only the head:
+    /// replies must leave in request order even when they came back
+    /// from different shards at different speeds.
+    fn promote(&mut self, progress: &mut bool) -> bool {
+        loop {
+            if self.wbuf.len() - self.wpos >= WBUF_SOFT_CAP {
+                return true;
+            }
+            // take the forwarded reply (if any) in its own statement so
+            // the slot borrow of the front entry ends before the pop
+            let taken: Option<Frame> = match self.outbound.front() {
+                None => return true,
+                Some(Outbound::Forwarded(slot)) => {
+                    let got = slot.borrow_mut().take();
+                    match got {
+                        None => return true, // shard still working on it
+                        some => some,
+                    }
+                }
+                Some(Outbound::Ready(_)) => None,
+            };
+            let frame = match taken {
+                Some(f) => {
+                    self.outbound.pop_front();
+                    f
+                }
+                None => match self.outbound.pop_front() {
+                    Some(Outbound::Ready(f)) => f,
+                    _ => unreachable!("front() said Ready"),
+                },
+            };
+            // zero-allocation reply path, same as net.rs promote
+            match frame.encode_into(&mut self.wbuf) {
+                Ok(()) => *progress = true,
+                Err(e) => {
+                    eprintln!("tn-router-io {}: encode reply: {e}", self.peer);
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn write_ready(&mut self, progress: &mut bool) -> bool {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    self.wpos += n;
+                    *progress = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    eprintln!("tn-router-io {}: write: {e}", self.peer);
+                    return false;
+                }
+            }
+        }
+        if self.wpos > 0 && self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+        true
+    }
+
+    fn drain_reads(&mut self, progress: &mut bool) -> bool {
+        let mut chunk = [0u8; 4096];
+        for _ in 0..8 {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return false,
+                Ok(_) => *progress = true,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+}
+
+/// A running router: listener + reactor threads fronting the shard
+/// fleet.  Dropping (or [`ShardRouter::shutdown`]) stops accepting,
+/// drains downstream connections (bounded by [`STOP_DRAIN`]) and joins
+/// all threads; the shard daemons are untouched.
+pub struct ShardRouter {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    io_threads: usize,
+    shards: Vec<Arc<ShardInfo>>,
+    stats: Arc<RouterStats>,
+    lineup: Arc<Vec<ModelInfo>>,
+}
+
+impl ShardRouter {
+    /// Probe every configured shard, build the placement, bind `addr`
+    /// and start routing.  Fails if any shard is unreachable or the
+    /// advertised lineups conflict.
+    pub fn start(cfg: RouterConfig, addr: &str) -> Result<ShardRouter> {
+        if cfg.shards.is_empty() {
+            return Err(Error::Net("router needs at least one shard address".into()));
+        }
+        // startup placement probe over the blocking client
+        let mut lineups = Vec::with_capacity(cfg.shards.len());
+        for shard_addr in &cfg.shards {
+            let mut probe =
+                Client::connect_timeout(shard_addr, cfg.connect_timeout).map_err(|e| {
+                    Error::Net(format!("shard {shard_addr} unreachable at startup: {e}"))
+                })?;
+            lineups.push(probe.list_models().map_err(|e| {
+                Error::Net(format!("shard {shard_addr}: ListModels failed: {e}"))
+            })?);
+        }
+        let (lineup, placement) = place(&lineups, cfg.replicas)?;
+        if lineup.is_empty() {
+            return Err(Error::Coordinator("shards advertise no models".into()));
+        }
+        let shards: Vec<Arc<ShardInfo>> = cfg
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(si, a)| {
+                let models = placement
+                    .iter()
+                    .filter(|(_, placed)| placed.contains(&si))
+                    .map(|(name, _)| name.clone())
+                    .collect();
+                Arc::new(ShardInfo {
+                    addr: a.clone(),
+                    models,
+                    healthy: AtomicBool::new(true),
+                    in_flight: AtomicU64::new(0),
+                    forwarded: Counter::new(),
+                    completed: Counter::new(),
+                    errors: Counter::new(),
+                    busy: Counter::new(),
+                    failovers: Counter::new(),
+                    last_poll: Mutex::new(None),
+                })
+            })
+            .collect();
+
+        let io_threads = cfg.io_threads.max(1);
+        let listener =
+            TcpListener::bind(addr).map_err(|e| Error::Net(format!("bind {addr}: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Net(format!("set_nonblocking: {e}")))?;
+        let local_addr =
+            listener.local_addr().map_err(|e| Error::Net(format!("local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shutdown_requested = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(RouterStats::default());
+        let lineup = Arc::new(lineup);
+        let placement = Arc::new(placement);
+
+        let mut threads = Vec::with_capacity(io_threads + 1);
+        let mut txs: Vec<Sender<(TcpStream, SocketAddr)>> = Vec::with_capacity(io_threads);
+        for k in 0..io_threads {
+            let (tx, rx) = channel();
+            let handle = {
+                let shards = shards.clone();
+                let placement = placement.clone();
+                let lineup = lineup.clone();
+                let stats = stats.clone();
+                let stop = stop.clone();
+                let shutdown_requested = shutdown_requested.clone();
+                std::thread::Builder::new().name(format!("tn-router-io-{k}")).spawn(move || {
+                    io_loop(
+                        rx,
+                        shards,
+                        placement,
+                        lineup,
+                        stats,
+                        stop,
+                        shutdown_requested,
+                        k == 0, // only one thread polls shard stats
+                    )
+                })
+            };
+            match handle {
+                Ok(h) => {
+                    threads.push(h);
+                    txs.push(tx);
+                }
+                Err(e) => {
+                    stop.store(true, Ordering::SeqCst);
+                    drop(txs);
+                    for h in threads {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Net(format!("spawn router io thread {k}: {e}")));
+                }
+            }
+        }
+        let accept = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("tn-router-accept".into())
+                .spawn(move || accept_loop(listener, stop, txs))
+        };
+        match accept {
+            Ok(h) => threads.push(h),
+            Err(e) => {
+                stop.store(true, Ordering::SeqCst);
+                for h in threads {
+                    let _ = h.join();
+                }
+                return Err(Error::Net(format!("spawn router accept loop: {e}")));
+            }
+        }
+
+        Ok(ShardRouter {
+            local_addr,
+            stop,
+            shutdown_requested,
+            threads,
+            io_threads,
+            shards,
+            stats,
+            lineup,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn io_threads(&self) -> usize {
+        self.io_threads
+    }
+
+    /// Reactor threads + the accept thread — constant in both the
+    /// connection count and the shard count.
+    pub fn transport_threads(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// The union lineup the router advertises.
+    pub fn lineup(&self) -> &[ModelInfo] {
+        &self.lineup
+    }
+
+    /// The merged router-side stats (same shape a `Client::stats` call
+    /// against the router returns).
+    pub fn remote_stats(&self) -> RemoteStats {
+        stats_snapshot(&self.stats, &self.shards)
+    }
+
+    /// Per-shard provenance: who served what, how much, and how it went.
+    pub fn shard_snapshots(&self) -> Vec<ShardSnapshot> {
+        self.shards
+            .iter()
+            .map(|s| ShardSnapshot {
+                addr: s.addr.clone(),
+                models: s.models.clone(),
+                healthy: s.healthy.load(Ordering::SeqCst),
+                in_flight: s.in_flight.load(Ordering::Relaxed),
+                forwarded: s.forwarded.get(),
+                completed: s.completed.get(),
+                errors: s.errors.get(),
+                busy: s.busy.get(),
+                failovers: s.failovers.get(),
+            })
+            .collect()
+    }
+
+    /// True once a client's `Shutdown` frame has been acknowledged.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Block until a wire `Shutdown` arrives (daemon mode of
+    /// `tensornet router`).
+    pub fn wait_for_shutdown(&self) {
+        while !self.shutdown_requested() {
+            std::thread::sleep(POLL);
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardRouter {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    txs: Vec<Sender<(TcpStream, SocketAddr)>>,
+) {
+    let mut next = 0usize;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if txs[next % txs.len()].send((stream, peer)).is_err() {
+                    return;
+                }
+                next = next.wrapping_add(1);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                eprintln!("tn-router-accept: {e}");
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+/// One router reactor thread: sweep the shard links (redial, poll,
+/// settle replies), then every downstream connection (which dispatches
+/// onto the links), then flush upstream writes — never blocking on any
+/// single socket.
+#[allow(clippy::too_many_arguments)]
+fn io_loop(
+    rx_new: Receiver<(TcpStream, SocketAddr)>,
+    shards: Vec<Arc<ShardInfo>>,
+    placement: Arc<BTreeMap<String, Vec<usize>>>,
+    lineup: Arc<Vec<ModelInfo>>,
+    stats: Arc<RouterStats>,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: Arc<AtomicBool>,
+    poll_stats: bool,
+) {
+    let mut links: Vec<ShardLink> = shards.iter().map(|s| ShardLink::new(s.clone())).collect();
+    let mut conns: Vec<DownConn> = Vec::new();
+    let mut stop_deadline: Option<Instant> = None;
+    let mut next_poll = Instant::now();
+    'reactor: loop {
+        let stopping = stop.load(Ordering::SeqCst);
+        if stopping && stop_deadline.is_none() {
+            stop_deadline = Some(Instant::now() + STOP_DRAIN);
+            for c in conns.iter_mut() {
+                c.begin_close();
+            }
+        }
+
+        // intake: when there are no connections the park on the channel
+        // doubles as the link-maintenance tick (25ms redial/poll cadence
+        // is plenty)
+        if conns.is_empty() && !stopping {
+            match rx_new.recv_timeout(POLL) {
+                Ok((s, peer)) => {
+                    if let Some(c) = DownConn::new(s, peer) {
+                        conns.push(c);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {} // fall through: links still tick
+                Err(RecvTimeoutError::Disconnected) => break 'reactor,
+            }
+        }
+        while let Ok((s, peer)) = rx_new.try_recv() {
+            if stopping {
+                continue;
+            }
+            if let Some(c) = DownConn::new(s, peer) {
+                conns.push(c);
+            }
+        }
+        if stopping {
+            if conns.is_empty() {
+                break 'reactor;
+            }
+            if stop_deadline.is_some_and(|d| Instant::now() >= d) {
+                break 'reactor;
+            }
+        }
+
+        let mut progress = false;
+
+        // upstream first: redial dead links, issue the periodic stats
+        // poll, flush pending writes, settle arrived replies into slots
+        let now = Instant::now();
+        let do_poll = poll_stats && !stopping && now >= next_poll;
+        if do_poll {
+            next_poll = now + STATS_POLL;
+        }
+        for link in links.iter_mut() {
+            if !stopping {
+                link.ensure_connected();
+            }
+            if do_poll {
+                link.send_poll();
+            }
+            link.pump_writes(&mut progress, &stats);
+            link.pump_reads(&mut progress, &stats);
+        }
+
+        // downstream: read + dispatch (fills link wbufs), settle slots
+        // in order, write
+        let mut ctx = Ctx {
+            links: &mut links,
+            shards: &shards,
+            placement: &placement,
+            lineup: &lineup,
+            stats: &stats,
+            shutdown_requested: &shutdown_requested,
+        };
+        let mut i = 0;
+        while i < conns.len() {
+            let s = conns[i].sweep(&mut ctx);
+            progress |= s.progress;
+            if s.keep {
+                i += 1;
+            } else {
+                conns.swap_remove(i);
+            }
+        }
+
+        // push what dispatch just encoded so forwarded requests leave
+        // this sweep, not the next
+        for link in links.iter_mut() {
+            link.pump_writes(&mut progress, &stats);
+        }
+
+        if !progress && !conns.is_empty() {
+            std::thread::sleep(IDLE_TICK);
+        }
+    }
+    for link in links.iter_mut() {
+        link.abandon();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mi(name: &str, din: u32, dout: u32) -> ModelInfo {
+        ModelInfo { name: name.into(), input_dim: din, output_dim: dout }
+    }
+
+    #[test]
+    fn placement_unions_and_replicates() {
+        let lineups = vec![
+            vec![mi("a", 4, 4), mi("b", 8, 2)],
+            vec![mi("a", 4, 4)],
+            vec![mi("b", 8, 2), mi("c", 2, 2)],
+        ];
+        let (lineup, placement) = place(&lineups, 0).unwrap();
+        let names: Vec<&str> = lineup.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        assert_eq!(placement["a"], vec![0, 1]);
+        assert_eq!(placement["b"], vec![0, 2]);
+        assert_eq!(placement["c"], vec![2]);
+    }
+
+    #[test]
+    fn placement_caps_replicas_with_rotation() {
+        let everywhere = vec![mi("a", 4, 4), mi("b", 4, 4), mi("c", 4, 4)];
+        let lineups = vec![everywhere.clone(), everywhere.clone(), everywhere];
+        let (_, placement) = place(&lineups, 1).unwrap();
+        // model index rotates the single replica across shards
+        assert_eq!(placement["a"], vec![0]);
+        assert_eq!(placement["b"], vec![1]);
+        assert_eq!(placement["c"], vec![2]);
+        for placed in placement.values() {
+            assert_eq!(placed.len(), 1);
+        }
+    }
+
+    #[test]
+    fn placement_rejects_conflicting_dims() {
+        let lineups = vec![vec![mi("a", 4, 4)], vec![mi("a", 4, 8)]];
+        let err = place(&lineups, 0).unwrap_err();
+        assert!(format!("{err}").contains("conflicting dims"), "{err}");
+    }
+
+    #[test]
+    fn stats_snapshot_merges_router_counters_and_shard_polls() {
+        let stats = RouterStats::default();
+        stats.completed.add(10);
+        stats.busy.add(2);
+        stats.errors.add(1);
+        stats.model("a").completed.add(7);
+        stats.model("a").errors.add(1);
+        stats.model("b").completed.add(3);
+        let shard = Arc::new(ShardInfo {
+            addr: "x:1".into(),
+            models: vec!["a".into()],
+            healthy: AtomicBool::new(false),
+            in_flight: AtomicU64::new(0),
+            forwarded: Counter::new(),
+            completed: Counter::new(),
+            errors: Counter::new(),
+            busy: Counter::new(),
+            failovers: Counter::new(),
+            last_poll: Mutex::new(Some(RemoteStats {
+                completed: 9,
+                rejected: 0,
+                errors: 0,
+                failed_workers: 0,
+                batches: 4,
+                batched_rows: 9,
+                per_model: vec![ModelStatsEntry {
+                    name: "a".into(),
+                    completed: 9,
+                    errors: 0,
+                    batches: 4,
+                    batched_rows: 9,
+                }],
+            })),
+        });
+        let s = stats_snapshot(&stats, &[shard]);
+        assert_eq!(s.completed, 10, "request outcomes come from ROUTER counters");
+        assert_eq!(s.rejected, 2, "upstream Busy maps to rejected");
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.failed_workers, 1, "one unhealthy shard");
+        assert_eq!(s.batches, 4, "batch depth comes from shard polls");
+        assert_eq!(s.batched_rows, 9);
+        let a = s.per_model.iter().find(|m| m.name == "a").unwrap();
+        assert_eq!((a.completed, a.errors, a.batches, a.batched_rows), (7, 1, 4, 9));
+        let b = s.per_model.iter().find(|m| m.name == "b").unwrap();
+        assert_eq!((b.completed, b.batches), (3, 0));
+    }
+
+    #[test]
+    fn settle_fills_slots_in_order_and_rewrites_ids() {
+        let stats = RouterStats::default();
+        let shard = Arc::new(ShardInfo {
+            addr: "x:1".into(),
+            models: vec!["m".into()],
+            healthy: AtomicBool::new(true),
+            in_flight: AtomicU64::new(2),
+            forwarded: Counter::new(),
+            completed: Counter::new(),
+            errors: Counter::new(),
+            busy: Counter::new(),
+            failovers: Counter::new(),
+            last_poll: Mutex::new(None),
+        });
+        let s1: Slot = Rc::new(RefCell::new(None));
+        let s2: Slot = Rc::new(RefCell::new(None));
+        let mut pending = VecDeque::new();
+        pending.push_back(UpEntry::Infer {
+            up_id: 1,
+            down_id: 41,
+            model: "m".into(),
+            slot: s1.clone(),
+        });
+        pending.push_back(UpEntry::Infer {
+            up_id: 2,
+            down_id: 99,
+            model: "m".into(),
+            slot: s2.clone(),
+        });
+        settle(
+            &mut pending,
+            &shard,
+            Frame::InferOk { id: 1, queue_us: 5, exec_us: 6, batch_size: 1, output: vec![1.0] },
+            &stats,
+        )
+        .unwrap();
+        match s1.borrow().as_ref() {
+            Some(Frame::InferOk { id, output, .. }) => {
+                assert_eq!(*id, 41, "reply id rewritten to the downstream id");
+                assert_eq!(output, &vec![1.0]);
+            }
+            other => panic!("slot 1: {other:?}"),
+        }
+        settle(
+            &mut pending,
+            &shard,
+            Frame::InferErr { id: 2, code: ErrCode::Busy, message: "full".into() },
+            &stats,
+        )
+        .unwrap();
+        match s2.borrow().as_ref() {
+            Some(Frame::InferErr { id, code, .. }) => {
+                assert_eq!(*id, 99);
+                assert_eq!(*code, ErrCode::Busy);
+            }
+            other => panic!("slot 2: {other:?}"),
+        }
+        assert_eq!(shard.in_flight.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.completed.get(), 1);
+        assert_eq!(stats.busy.get(), 1);
+        assert_eq!(shard.completed.get(), 1);
+        assert_eq!(shard.busy.get(), 1);
+    }
+
+    #[test]
+    fn settle_rejects_out_of_order_ids_without_losing_the_entry() {
+        let stats = RouterStats::default();
+        let shard = Arc::new(ShardInfo {
+            addr: "x:1".into(),
+            models: vec![],
+            healthy: AtomicBool::new(true),
+            in_flight: AtomicU64::new(1),
+            forwarded: Counter::new(),
+            completed: Counter::new(),
+            errors: Counter::new(),
+            busy: Counter::new(),
+            failovers: Counter::new(),
+            last_poll: Mutex::new(None),
+        });
+        let slot: Slot = Rc::new(RefCell::new(None));
+        let mut pending = VecDeque::new();
+        pending.push_back(UpEntry::Infer { up_id: 7, down_id: 1, model: "m".into(), slot });
+        let err = settle(
+            &mut pending,
+            &shard,
+            Frame::InferOk { id: 8, queue_us: 0, exec_us: 0, batch_size: 1, output: vec![] },
+            &stats,
+        )
+        .unwrap_err();
+        assert!(err.contains("out-of-order"), "{err}");
+        // the entry is back at the head so fail() can error its slot
+        assert_eq!(pending.len(), 1, "mismatched entry must be reinstated for failover");
+    }
+}

@@ -328,25 +328,28 @@ impl Frame {
         }
     }
 
-    fn payload(&self) -> Result<Vec<u8>> {
-        let mut w = Vec::new();
+    /// Append this frame's payload bytes to `w`.  Writing straight into
+    /// the caller's buffer (instead of returning a fresh `Vec`) is what
+    /// lets [`Frame::encode_into`] serialize a whole frame with zero
+    /// allocations in steady state.
+    fn write_payload(&self, w: &mut Vec<u8>) -> Result<()> {
         match self {
             Frame::Infer { id, model, input } => {
                 w.extend_from_slice(&id.to_le_bytes());
-                put_short_string(&mut w, model, "model name")?;
-                put_f32_vec(&mut w, input);
+                put_short_string(w, model, "model name")?;
+                put_f32_vec(w, input);
             }
             Frame::InferOk { id, queue_us, exec_us, batch_size, output } => {
                 w.extend_from_slice(&id.to_le_bytes());
                 w.extend_from_slice(&queue_us.to_le_bytes());
                 w.extend_from_slice(&exec_us.to_le_bytes());
                 w.extend_from_slice(&batch_size.to_le_bytes());
-                put_f32_vec(&mut w, output);
+                put_f32_vec(w, output);
             }
             Frame::InferErr { id, code, message } => {
                 w.extend_from_slice(&id.to_le_bytes());
                 w.push(*code as u8);
-                put_long_string(&mut w, message);
+                put_long_string(w, message);
             }
             Frame::Stats | Frame::ListModels | Frame::Shutdown | Frame::ShutdownOk => {}
             Frame::StatsReply {
@@ -366,7 +369,7 @@ impl Frame {
                 })?;
                 w.extend_from_slice(&count.to_le_bytes());
                 for m in per_model {
-                    put_short_string(&mut w, &m.name, "model name")?;
+                    put_short_string(w, &m.name, "model name")?;
                     for v in [m.completed, m.errors, m.batches, m.batched_rows] {
                         w.extend_from_slice(&v.to_le_bytes());
                     }
@@ -378,35 +381,63 @@ impl Frame {
                 })?;
                 w.extend_from_slice(&count.to_le_bytes());
                 for m in models {
-                    put_short_string(&mut w, &m.name, "model name")?;
+                    put_short_string(w, &m.name, "model name")?;
                     w.extend_from_slice(&m.input_dim.to_le_bytes());
                     w.extend_from_slice(&m.output_dim.to_le_bytes());
                 }
             }
         }
-        Ok(w)
+        Ok(())
     }
 
     /// Serialize into one contiguous header + payload buffer.
+    ///
+    /// Convenience wrapper over [`Frame::encode_into`]; hot paths (the
+    /// reactor's reply writer, `Client`) reuse a persistent buffer via
+    /// `encode_into` instead so steady state allocates nothing per frame.
     pub fn encode(&self) -> Result<Vec<u8>> {
-        let payload = self.payload()?;
-        if payload.len() > MAX_PAYLOAD as usize {
-            return Err(Error::Wire(format!(
-                "frame payload of {} bytes exceeds cap {MAX_PAYLOAD}",
-                payload.len()
-            )));
-        }
-        let len = payload.len() as u32;
-        let ftype = self.frame_type();
-        let crc = crc32(&[&[VERSION, ftype], &len.to_le_bytes(), &payload]);
-        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        let mut out = Vec::new();
+        self.encode_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Append one encoded frame (header + payload) to `out`.
+    ///
+    /// Bytes already in `out` are left untouched, so a writer can encode
+    /// straight onto the tail of its pending write buffer.  The payload
+    /// is serialized in place and the header's length/CRC words are
+    /// backfilled afterwards — no intermediate payload `Vec`, which is
+    /// the whole point: with a reused buffer this path does zero heap
+    /// allocation once the buffer has grown to working-set size.  On
+    /// error `out` is restored to its original length.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> Result<()> {
+        let start = out.len();
         out.extend_from_slice(&MAGIC);
         out.push(VERSION);
-        out.push(ftype);
-        out.extend_from_slice(&len.to_le_bytes());
-        out.extend_from_slice(&crc.to_le_bytes());
-        out.extend_from_slice(&payload);
-        Ok(out)
+        out.push(self.frame_type());
+        // length + CRC are not known yet; reserve their bytes
+        out.extend_from_slice(&[0u8; 8]);
+        if let Err(e) = self.write_payload(out) {
+            out.truncate(start);
+            return Err(e);
+        }
+        let payload_len = out.len() - start - HEADER_LEN;
+        if payload_len > MAX_PAYLOAD as usize {
+            out.truncate(start);
+            return Err(Error::Wire(format!(
+                "frame payload of {payload_len} bytes exceeds cap {MAX_PAYLOAD}"
+            )));
+        }
+        let len = (payload_len as u32).to_le_bytes();
+        let crc = crc32(&[
+            &[VERSION, self.frame_type()],
+            &len,
+            &out[start + HEADER_LEN..],
+        ])
+        .to_le_bytes();
+        out[start + 4..start + 8].copy_from_slice(&len);
+        out[start + 8..start + 12].copy_from_slice(&crc);
+        Ok(())
     }
 
     /// Decode exactly one frame from `bytes` (the whole slice must be the
@@ -930,5 +961,32 @@ mod tests {
             input: vec![0.0; MAX_PAYLOAD as usize / 4 + 8],
         };
         assert!(f.encode().is_err());
+    }
+
+    #[test]
+    fn encode_into_appends_bytes_identical_to_encode() {
+        let mut buf = vec![0xAB, 0xCD, 0xEF]; // pre-existing tail must survive
+        for f in sample_frames() {
+            let prefix = buf.clone();
+            f.encode_into(&mut buf).unwrap();
+            assert_eq!(&buf[..prefix.len()], &prefix[..], "{f:?}: prefix clobbered");
+            assert_eq!(&buf[prefix.len()..], &f.encode().unwrap()[..], "{f:?}");
+        }
+    }
+
+    #[test]
+    fn encode_into_restores_buffer_on_error() {
+        let mut buf = b"keep".to_vec();
+        let oversize = Frame::Infer {
+            id: 1,
+            model: "m".into(),
+            input: vec![0.0; MAX_PAYLOAD as usize / 4 + 8],
+        };
+        assert!(oversize.encode_into(&mut buf).is_err());
+        assert_eq!(buf, b"keep", "failed encode must not leave partial bytes");
+        // a payload-stage failure (name over the u16 cap) must restore too
+        let bad_name = Frame::Infer { id: 1, model: "x".repeat(70_000), input: vec![] };
+        assert!(bad_name.encode_into(&mut buf).is_err());
+        assert_eq!(buf, b"keep");
     }
 }

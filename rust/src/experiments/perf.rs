@@ -11,7 +11,7 @@
 
 use crate::coordinator::{
     is_busy, BatchPolicy, Client, EchoExecutor, ModelInfo, ModelRegistry, NativeExecutor,
-    NetServer, Server, ServerConfig,
+    NetServer, RouterConfig, Server, ServerConfig, ShardRouter,
 };
 use crate::error::{Error, Result};
 use crate::metrics::Histogram;
@@ -665,6 +665,138 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
     Ok(entries)
 }
 
+/// Sharded serving sweep: N independent shard stacks (each a full
+/// `Server` + `NetServer` on its own loopback port — separate batcher,
+/// admission queue and executor pool, i.e. everything that makes a
+/// process a process short of the address-space boundary) behind one
+/// [`ShardRouter`], driven through the router over loopback TCP.
+/// Swept over `(shards, connections, max_batch)` with the 1-shard row
+/// as the router-overhead baseline: against the same `(connections,
+/// max_batch)` row of `remote_tt`, its delta is the router hop; against
+/// the 2- and 4-shard rows, the scaling curve is the tentpole claim —
+/// aggregate req/s growing near-linearly with shard count once the
+/// offered load (connections × pipeline) saturates a single shard.
+/// Each entry records per-shard provenance (placement, forwarded /
+/// completed counts, failovers) from [`ShardRouter::shard_snapshots`],
+/// so a skewed dispatch or a mid-run failover is visible in the JSON,
+/// not just in the aggregate.
+pub fn bench_sharded_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>> {
+    let registry = ModelRegistry::standard();
+    let model = "tt_layer";
+    let dim = registry.input_dim(model)?;
+    let pipeline = 4usize;
+    let lineup = vec![ModelInfo {
+        name: model.to_string(),
+        input_dim: dim as u32,
+        output_dim: dim as u32,
+    }];
+    // (shards, connections, max_batch): the 16-connection column is the
+    // scaling read 1 -> 2 -> 4; the 64-connection rows probe the
+    // high-fan-in regime where the router's single reactor thread fronts
+    // every downstream connection
+    let sweep = [
+        (1usize, 16usize, 32usize),
+        (2, 16, 32),
+        (4, 16, 32),
+        (1, 64, 32),
+        (4, 64, 32),
+    ];
+    let mut entries = Vec::new();
+    for (n_shards, connections, max_batch) in sweep {
+        let mut shards = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let cfg = ServerConfig {
+                policy: BatchPolicy { max_batch, max_delay: Duration::from_micros(500) },
+                queue_capacity: 4096,
+                batch_queue_capacity: 16,
+                executor_threads: 2,
+                kernel_threads: 0,
+            };
+            let reg = registry.clone();
+            let server =
+                Arc::new(Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?);
+            let net = NetServer::start_with(server.clone(), "127.0.0.1:0", lineup.clone(), 1)?;
+            shards.push((server, net));
+        }
+        let shard_addrs: Vec<String> =
+            shards.iter().map(|(_, net)| net.local_addr().to_string()).collect();
+        // warm every shard's lazily-built model out of the timed region
+        for addr in &shard_addrs {
+            Client::connect(addr)?.infer(model, &vec![0.0; dim])?;
+        }
+        let router = ShardRouter::start(
+            RouterConfig {
+                shards: shard_addrs,
+                replicas: 0,
+                io_threads: 1,
+                connect_timeout: Duration::from_secs(5),
+            },
+            "127.0.0.1:0",
+        )?;
+        let addr = router.local_addr().to_string();
+        let drive = drive_remote_clients(
+            &addr,
+            &[(model.to_string(), dim)],
+            n_requests,
+            connections,
+            pipeline,
+            None,
+        );
+        let router_stats = router.remote_stats();
+        let snaps = router.shard_snapshots();
+        router.shutdown();
+        for (server, net) in shards {
+            net.shutdown();
+            drop(server); // last Arc: joins batcher + executor pool
+        }
+        let wall = drive.wall_seconds.max(1e-9);
+        let mut obj = BTreeMap::new();
+        obj.insert("model".to_string(), Json::Str(model.to_string()));
+        obj.insert("shards".to_string(), num(n_shards as f64));
+        obj.insert("connections".to_string(), num(connections as f64));
+        obj.insert("max_batch".to_string(), num(max_batch as f64));
+        obj.insert("pipeline".to_string(), num(pipeline as f64));
+        obj.insert("simd".to_string(), Json::Str(simd_name().to_string()));
+        obj.insert("completed".to_string(), num(drive.completed as f64));
+        obj.insert("busy".to_string(), num(drive.busy as f64));
+        obj.insert("failed".to_string(), num(drive.failed as f64));
+        obj.insert("router_errors".to_string(), num(router_stats.errors as f64));
+        obj.insert("req_per_s".to_string(), num(drive.completed as f64 / wall));
+        obj.insert("p50_us".to_string(), num(drive.e2e.quantile_us(0.5)));
+        obj.insert("p99_us".to_string(), num(drive.e2e.quantile_us(0.99)));
+        // per-shard provenance: who was placed where and how the load
+        // actually split
+        let shard_entries: Vec<Json> = snaps
+            .iter()
+            .map(|s| {
+                let mut so = BTreeMap::new();
+                so.insert("addr".to_string(), Json::Str(s.addr.clone()));
+                so.insert("models".to_string(), Json::Str(s.models.join(",")));
+                so.insert("replicas_of".to_string(), num(s.models.len() as f64));
+                so.insert("forwarded".to_string(), num(s.forwarded as f64));
+                so.insert("completed".to_string(), num(s.completed as f64));
+                so.insert("errors".to_string(), num(s.errors as f64));
+                so.insert("busy".to_string(), num(s.busy as f64));
+                so.insert("failovers".to_string(), num(s.failovers as f64));
+                so.insert("healthy".to_string(), Json::Bool(s.healthy));
+                Json::Obj(so)
+            })
+            .collect();
+        obj.insert("shard_stats".to_string(), Json::Arr(shard_entries));
+        if verbose {
+            println!(
+                "  shards={n_shards} conns={connections:<4} max_batch={max_batch:<4} {:>9.0} req/s  p50 {:.0}µs p99 {:.0}µs  busy {}",
+                drive.completed as f64 / wall,
+                drive.e2e.quantile_us(0.5),
+                drive.e2e.quantile_us(0.99),
+                drive.busy,
+            );
+        }
+        entries.push(Json::Obj(obj));
+    }
+    Ok(entries)
+}
+
 /// Wrap entries in the report envelope: suite name + environment.
 pub fn report(suite: &str, quick: bool, sections: Vec<(&str, Vec<Json>)>) -> Json {
     let mut obj = BTreeMap::new();
@@ -731,6 +863,10 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
         println!("== remote TT serving sweep (connections x max_batch x io_threads, loopback TCP)");
     }
     let remote = bench_remote_serving(native_requests, verbose)?;
+    if verbose {
+        println!("== sharded TT serving sweep (shards x connections x max_batch, router tier)");
+    }
+    let sharded = bench_sharded_serving(native_requests, verbose)?;
     let coord_report = report(
         "coordinator",
         quick,
@@ -739,6 +875,7 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
             ("native_tt", native),
             ("mixed_tt", mixed),
             ("remote_tt", remote),
+            ("sharded_tt", sharded),
         ],
     );
 
@@ -899,6 +1036,46 @@ mod tests {
             assert_eq!(e.get("transport_threads").unwrap().as_usize(), Some(io + 1));
             assert!(e.get("kernel_threads").unwrap().as_usize().unwrap() >= 1);
             assert!(e.get("simd").unwrap().as_str().is_some());
+        }
+    }
+
+    #[test]
+    fn sharded_serving_sweep_records_shard_provenance() {
+        let entries = bench_sharded_serving(24, false).unwrap();
+        assert_eq!(entries.len(), 5);
+        let shard_counts: Vec<usize> =
+            entries.iter().map(|e| e.get("shards").unwrap().as_usize().unwrap()).collect();
+        // the sweep must cover the 1 -> 2 -> 4 scaling read
+        assert!(
+            shard_counts.contains(&1) && shard_counts.contains(&2) && shard_counts.contains(&4),
+            "{shard_counts:?}"
+        );
+        for e in &entries {
+            let n_shards = e.get("shards").unwrap().as_usize().unwrap();
+            assert_eq!(e.get("failed").unwrap().as_usize(), Some(0));
+            assert_eq!(e.get("router_errors").unwrap().as_usize(), Some(0));
+            // every request either completed or was load-shed upstream
+            let done = e.get("completed").unwrap().as_usize().unwrap()
+                + e.get("busy").unwrap().as_usize().unwrap();
+            assert_eq!(done, 24);
+            assert!(e.get("completed").unwrap().as_usize().unwrap() > 0);
+            assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
+            // per-shard provenance: one block per shard, placement
+            // recorded, counts consistent with the drive
+            let shard_stats = e.get("shard_stats").unwrap().as_arr().unwrap();
+            assert_eq!(shard_stats.len(), n_shards);
+            let mut forwarded_sum = 0usize;
+            for s in shard_stats {
+                assert!(s.get("addr").unwrap().as_str().is_some());
+                assert!(
+                    s.get("models").unwrap().as_str().unwrap().contains("tt_layer"),
+                    "every shard advertises the zoo, so every shard is placed"
+                );
+                forwarded_sum += s.get("forwarded").unwrap().as_usize().unwrap();
+                assert_eq!(s.get("failovers").unwrap().as_usize(), Some(0));
+                assert_eq!(s.get("healthy").unwrap().as_bool(), Some(true));
+            }
+            assert_eq!(forwarded_sum, done, "shard forwards must cover the drive");
         }
     }
 

@@ -32,6 +32,15 @@
 //!                                              the wire protocol; a comma-
 //!                                              separated --model list
 //!                                              interleaves models 1:1
+//! tensornet router     --shards A,B,.. [--listen ADDR] [--replicas M]
+//!                      [--io-threads N]        front N serve daemons:
+//!                                              least-loaded dispatch over
+//!                                              discovered placement, with
+//!                                              failover (DESIGN.md §13)
+//! tensornet fleet      [--shards N] [--listen ADDR] [--replicas M]
+//!                                              launch N serve shards as
+//!                                              child processes + a router
+//!                                              in front, as one command
 //! tensornet inspect    [--artifacts DIR]       list artifacts + variants
 //! ```
 //!
@@ -45,7 +54,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tensornet::coordinator::{
     BatchPolicy, Client, ModelInfo, ModelRegistry, NativeExecutor, NetServer, PjrtExecutor,
-    Server, ServerConfig, ServerStats,
+    RemoteStats, RouterConfig, Server, ServerConfig, ServerStats, ShardRouter, ShardSnapshot,
 };
 use tensornet::data::{global_contrast_normalize, synth_mnist};
 use tensornet::error::Result;
@@ -88,6 +97,8 @@ fn run(args: Args) -> Result<()> {
         Some("compress") => cmd_compress(&args),
         Some("serve") => cmd_serve(&args),
         Some("client") => cmd_client(&args),
+        Some("router") => cmd_router(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("inspect") => cmd_inspect(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
@@ -128,11 +139,22 @@ fn print_usage() {
          \u{20}                                                       --timeout-ms bounds connect+read\n\
          \u{20}                                                       (0 = no timeout); --shutdown\n\
          \u{20}                                                       stops the server\n\
+         \u{20}  router --shards A,B,.. [--listen ADDR]              front running serve daemons:\n\
+         \u{20}        [--replicas M] [--io-threads 1]                placement from each shard's\n\
+         \u{20}        [--timeout-ms 5000]                            ModelList, least-loaded dispatch,\n\
+         \u{20}                                                       failover with typed errors;\n\
+         \u{20}                                                       --replicas caps copies per model\n\
+         \u{20}                                                       (0 = every advertising shard)\n\
+         \u{20}  fleet [--shards 2] [--listen ADDR] [--replicas M]   spawn N serve shards as children\n\
+         \u{20}                                                       + a router in front (serve flags\n\
+         \u{20}                                                       pass through to every shard);\n\
+         \u{20}                                                       one wire Shutdown stops it all\n\
          \u{20}  inspect                                             list artifacts\n\
          common flags: --quick, --artifacts DIR (default ./artifacts)\n\
          lifecycle:  train --model fc --save c/dense  ->  compress --from c/dense --to c/tt\n\
          \u{20}           ->  train --init-from c/tt --save c/tt2  ->  serve --models c --model tt2\n\
-         remote:     serve --listen 127.0.0.1:7070  ->  client --connect 127.0.0.1:7070"
+         remote:     serve --listen 127.0.0.1:7070  ->  client --connect 127.0.0.1:7070\n\
+         sharded:    fleet --shards 4  (or: N x serve --listen + router --shards A,B,..)"
     );
 }
 
@@ -726,6 +748,237 @@ fn cmd_client(args: &Args) -> Result<()> {
         return Err(tensornet::error::Error::Coordinator(format!(
             "{} of {n_requests} requests completed, {} failed, {} shed",
             drive.completed, drive.failed, drive.busy
+        )));
+    }
+    Ok(())
+}
+
+/// The router end-of-run summary.  Same contract as
+/// [`print_serve_summary`]: the CI fleet smoke greps the `rejected:`
+/// and per-model lines — keep the format stable.  `rejected` here is
+/// upstream load shedding (`Busy` replies forwarded from shards);
+/// the shard block is the placement/health provenance.
+fn print_router_summary(stats: &RemoteStats, shards: &[ShardSnapshot], wall: f64) {
+    println!("completed:  {}", stats.completed);
+    println!("rejected:   {} (upstream busy)", stats.rejected);
+    println!("errors:     {}", stats.errors);
+    println!("failed shards: {}", stats.failed_workers);
+    println!("throughput: {:.1} req/s (wall {:.2}s)", stats.completed as f64 / wall, wall);
+    if !stats.per_model.is_empty() {
+        println!("per-model:");
+        for m in &stats.per_model {
+            println!(
+                "  {:<12} completed {} errors {} batches {} rows {} mean batch {:.2}",
+                m.name,
+                m.completed,
+                m.errors,
+                m.batches,
+                m.batched_rows,
+                m.mean_batch_size(),
+            );
+        }
+    }
+    println!("shards:");
+    for s in shards {
+        println!(
+            "  {:<21} {} models [{}] forwarded {} completed {} errors {} busy {} failovers {}",
+            s.addr,
+            if s.healthy { "healthy" } else { "DOWN" },
+            s.models.join(", "),
+            s.forwarded,
+            s.completed,
+            s.errors,
+            s.busy,
+            s.failovers,
+        );
+    }
+}
+
+fn cmd_router(args: &Args) -> Result<()> {
+    let spec = args.get("shards").ok_or_else(|| {
+        tensornet::error::Error::Config(
+            "router needs --shards A,B,... (addresses printed by serve --listen)".into(),
+        )
+    })?;
+    let shards: Vec<String> =
+        spec.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    if shards.is_empty() {
+        return Err(tensornet::error::Error::Config("--shards lists no addresses".into()));
+    }
+    let cfg = RouterConfig {
+        shards,
+        replicas: args.get_usize("replicas", 0)?,
+        io_threads: args.get_usize("io-threads", 1)?.max(1),
+        connect_timeout: Duration::from_millis(args.get_usize("timeout-ms", 5_000)? as u64),
+    };
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let router = ShardRouter::start(cfg, &listen)?;
+    let t0 = Instant::now();
+    // same machine-readable handshake line as serve --listen (CI greps it)
+    println!("listening on {}", router.local_addr());
+    println!(
+        "transport: {} reactor thread(s) + accept ({} total)",
+        router.io_threads(),
+        router.transport_threads()
+    );
+    for s in router.shard_snapshots() {
+        println!("placement: {} serves [{}]", s.addr, s.models.join(", "));
+    }
+    router.wait_for_shutdown();
+    println!("wire shutdown received — draining router");
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = router.remote_stats();
+    let snaps = router.shard_snapshots();
+    router.shutdown();
+    print_router_summary(&stats, &snaps, wall);
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+
+    let n_shards = args.get_usize("shards", 2)?.max(1);
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let exe = std::env::current_exe()
+        .map_err(|e| tensornet::error::Error::Config(format!("current_exe: {e}")))?;
+
+    // spawn the shard daemons: each is a full `serve --listen 127.0.0.1:0`
+    // child process (own registry, own batcher, own executor pool), with
+    // the serve-relevant flags passed through verbatim
+    let mut children = Vec::with_capacity(n_shards);
+    let mut addr_rxs = Vec::with_capacity(n_shards);
+    let mut echo_threads = Vec::with_capacity(n_shards);
+    for k in 0..n_shards {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("serve").arg("--listen").arg("127.0.0.1:0");
+        for flag in [
+            "backend",
+            "models",
+            "artifacts",
+            "executor-threads",
+            "max-batch",
+            "max-delay-ms",
+            "io-threads",
+            "kernel-threads",
+        ] {
+            if let Some(v) = args.get(flag) {
+                cmd.arg(format!("--{flag}")).arg(v);
+            }
+        }
+        cmd.stdout(Stdio::piped());
+        let mut child = cmd
+            .spawn()
+            .map_err(|e| tensornet::error::Error::Config(format!("spawn shard {k}: {e}")))?;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        let (tx, rx) = std::sync::mpsc::channel::<String>();
+        // echo every shard line under a `[shard k]` prefix (so the
+        // router's own unprefixed `listening on` stays unambiguous for
+        // scripts) and capture the shard's bound address from its
+        // handshake line
+        let echo = std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                println!("[shard {k}] {line}");
+                if let Some(addr) = line.strip_prefix("listening on ") {
+                    let _ = tx.send(addr.trim().to_string());
+                }
+            }
+        });
+        children.push(child);
+        addr_rxs.push(rx);
+        echo_threads.push(echo);
+    }
+
+    let shard_addrs: Vec<String> = {
+        let mut addrs = Vec::with_capacity(n_shards);
+        let mut boot_err = None;
+        for (k, rx) in addr_rxs.iter().enumerate() {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(a) => addrs.push(a),
+                Err(_) => {
+                    boot_err =
+                        Some(format!("shard {k} did not print its listen address within 30s"));
+                    break;
+                }
+            }
+        }
+        if let Some(why) = boot_err {
+            for c in children.iter_mut() {
+                let _ = c.kill();
+            }
+            for c in children.iter_mut() {
+                let _ = c.wait();
+            }
+            return Err(tensornet::error::Error::Coordinator(why));
+        }
+        addrs
+    };
+    println!("== fleet: {n_shards} shard(s) up at {}", shard_addrs.join(", "));
+
+    let cfg = RouterConfig {
+        shards: shard_addrs.clone(),
+        replicas: args.get_usize("replicas", 0)?,
+        io_threads: args.get_usize("router-io-threads", 1)?.max(1),
+        connect_timeout: Duration::from_secs(5),
+    };
+    let router = match ShardRouter::start(cfg, &listen) {
+        Ok(r) => r,
+        Err(e) => {
+            for c in children.iter_mut() {
+                let _ = c.kill();
+            }
+            for c in children.iter_mut() {
+                let _ = c.wait();
+            }
+            return Err(e);
+        }
+    };
+    let t0 = Instant::now();
+    println!("listening on {}", router.local_addr());
+    for s in router.shard_snapshots() {
+        println!("placement: {} serves [{}]", s.addr, s.models.join(", "));
+    }
+
+    router.wait_for_shutdown();
+    println!("wire shutdown received — draining router, stopping shards");
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = router.remote_stats();
+    let snaps = router.shard_snapshots();
+    router.shutdown();
+
+    // the one wire Shutdown a client sent the router fans out to the
+    // whole fleet: ask each shard to stop (printing its own summary),
+    // then reap the children
+    let mut shard_failures = 0usize;
+    for addr in &shard_addrs {
+        let stop = Client::connect_timeout(addr, Duration::from_secs(5))
+            .and_then(|mut c| c.shutdown_server());
+        if let Err(e) = stop {
+            eprintln!("fleet: shutdown of shard {addr} failed: {e}");
+            shard_failures += 1;
+        }
+    }
+    for (k, mut child) in children.into_iter().enumerate() {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                eprintln!("fleet: shard {k} exited with {status}");
+                shard_failures += 1;
+            }
+            Err(e) => {
+                eprintln!("fleet: wait on shard {k}: {e}");
+                shard_failures += 1;
+            }
+        }
+    }
+    for t in echo_threads {
+        let _ = t.join();
+    }
+    print_router_summary(&stats, &snaps, wall);
+    if shard_failures > 0 {
+        return Err(tensornet::error::Error::Coordinator(format!(
+            "{shard_failures} shard(s) failed to stop cleanly"
         )));
     }
     Ok(())

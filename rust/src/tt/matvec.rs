@@ -25,7 +25,7 @@ use crate::error::{shape_err, Result};
 use crate::tensor::simd::{kernels, Kernels};
 use crate::tensor::{Gemm, Tensor};
 use crate::tt::TtMatrix;
-use crate::util::threads::{parallel_chunks_mut, thread_budget};
+use crate::util::threads::{parallel_chunks_mut, parallel_chunks_mut2, thread_budget};
 
 /// Reusable buffers for [`TtMatrix::matvec_with`].
 ///
@@ -35,7 +35,10 @@ use crate::util::threads::{parallel_chunks_mut, thread_budget};
 /// swaps with the state buffer per core, `c` the GEMM output.  In steady
 /// state a serving worker calling with a fixed input shape performs
 /// exactly ONE heap allocation per call — the buffer that leaves inside
-/// the returned tensor — everything else retains capacity across calls.
+/// the returned tensor — everything else retains capacity across calls,
+/// and (since every element is overwritten before it is read) the
+/// buffers are resized without re-zeroing, so same-shape calls also do
+/// no per-call memset (see [`resize_for_overwrite`]).
 #[derive(Default, Clone, Debug)]
 pub struct MatvecScratch {
     /// sweep-state buffer; capacity retained across calls
@@ -44,6 +47,10 @@ pub struct MatvecScratch {
     b: Vec<f32>,
     /// GEMM output `(rows, m·r1)`; donated to `a` at the end of each call
     c: Vec<f32>,
+    /// fused-path contract accumulators: one `m·r1` slab per worker
+    /// chunk, grow-only high-water pool (`contract_group` zeroes its
+    /// slab per group-column, so the pool itself is never re-zeroed)
+    acc: Vec<f32>,
 }
 
 impl TtMatrix {
@@ -94,29 +101,39 @@ impl TtMatrix {
                 // group's output clobber another's unread input).
                 let core = self.core_mats()[k].data();
                 let kern = kernels();
-                scratch.b.clear();
-                scratch.b.resize(groups * out_block, 0.0);
+                resize_for_overwrite(&mut scratch.b, groups * out_block);
                 let gpt = groups.div_ceil(thread_budget().min(groups));
-                parallel_chunks_mut(&mut scratch.b, gpt * out_block, |start, dst| {
-                    let g0 = start / out_block;
-                    // one contract accumulator per worker chunk, not per
-                    // group — m·r1 floats, reused down the group run
-                    let mut acc = vec![0.0f32; m * r1];
-                    for (gi, dst_g) in dst.chunks_mut(out_block).enumerate() {
-                        let g = g0 + gi;
-                        contract_group(
-                            &src[g * in_block..(g + 1) * in_block],
-                            core,
-                            n,
-                            rest,
-                            r0,
-                            r1,
-                            &mut acc,
-                            dst_g,
-                            kern,
-                        );
-                    }
-                });
+                // one contract accumulator slab per worker chunk, pooled
+                // in scratch (grow-only: cores of one sweep want
+                // different m·r1, and shrinking would re-zero the grown
+                // tail every call)
+                let n_chunks = groups.div_ceil(gpt);
+                if scratch.acc.len() < n_chunks * m * r1 {
+                    scratch.acc.resize(n_chunks * m * r1, 0.0);
+                }
+                parallel_chunks_mut2(
+                    &mut scratch.b,
+                    gpt * out_block,
+                    &mut scratch.acc,
+                    m * r1,
+                    |start, dst, acc| {
+                        let g0 = start / out_block;
+                        for (gi, dst_g) in dst.chunks_mut(out_block).enumerate() {
+                            let g = g0 + gi;
+                            contract_group(
+                                &src[g * in_block..(g + 1) * in_block],
+                                core,
+                                n,
+                                rest,
+                                r0,
+                                r1,
+                                acc,
+                                dst_g,
+                                kern,
+                            );
+                        }
+                    },
+                );
                 std::mem::swap(&mut cur, &mut scratch.b);
             } else {
                 // pack: (B, M, n, rest, r0) -> (B, M, rest, r0, n)
@@ -153,6 +170,22 @@ impl TtMatrix {
             scratch.a = std::mem::take(&mut scratch.b);
         }
         Ok(y)
+    }
+}
+
+/// Size `buf` to exactly `want` elements WITHOUT re-zeroing retained
+/// memory: shrinking truncates, growing zero-fills only the grown tail,
+/// and the steady-state same-length case does nothing at all.  Only for
+/// buffers whose every element is overwritten before it is read (the
+/// pack/unpack/fused loops below cover their output exactly) — the old
+/// `clear(); resize(n, 0.0)` idiom memset the full buffer on every
+/// call, a pure waste on the serving hot path where the shape never
+/// changes.
+fn resize_for_overwrite(buf: &mut Vec<f32>, want: usize) {
+    if want <= buf.len() {
+        buf.truncate(want);
+    } else {
+        buf.resize(want, 0.0);
     }
 }
 
@@ -206,8 +239,7 @@ fn pack_a<'a>(
     r0: usize,
     buf: &'a mut Vec<f32>,
 ) -> &'a mut Vec<f32> {
-    buf.clear();
-    buf.resize(bm * n * rest * r0, 0.0);
+    resize_for_overwrite(buf, bm * n * rest * r0);
     let block = n * rest * r0;
     if bm >= 4 && bm * block >= 1 << 16 {
         parallel_chunks_mut(buf, block, |start, chunk| {
@@ -251,8 +283,7 @@ fn unpack_out(
     r1: usize,
     out: &mut Vec<f32>,
 ) -> Vec<f32> {
-    out.clear();
-    out.resize(bm * rest * m * r1, 0.0);
+    resize_for_overwrite(out, bm * rest * m * r1);
     let block = rest * m * r1;
     if bm >= 4 && bm * block >= 1 << 16 {
         parallel_chunks_mut(out, block, |start, chunk| {
@@ -363,12 +394,46 @@ mod tests {
         // state allocates only the returned tensor's buffer).
         assert!(scratch.a.capacity() > 0, "state buffer lost its capacity");
         assert!(scratch.b.capacity() > 0, "pack buffer lost its capacity");
-        let caps = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
+        let caps = (
+            scratch.a.capacity(),
+            scratch.b.capacity(),
+            scratch.c.capacity(),
+            scratch.acc.capacity(),
+        );
         for _ in 0..4 {
             let _ = tt.matvec_with(&x1, &mut scratch).unwrap();
-            let now = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
+            let now = (
+                scratch.a.capacity(),
+                scratch.b.capacity(),
+                scratch.c.capacity(),
+                scratch.acc.capacity(),
+            );
             assert_eq!(caps, now, "scratch capacities drifted across same-shape calls");
         }
+
+        // no-memset pin: buffers resized via `resize_for_overwrite` keep
+        // stale contents across shrink/grow cycles, so correctness after
+        // batch-size alternation proves every element really is
+        // overwritten before being read (a refill would mask a gap)
+        let big = tt.matvec_with(&x2, &mut scratch).unwrap();
+        let small = tt.matvec_with(&x1, &mut scratch).unwrap(); // shrink: stale tail retained
+        let big_again = tt.matvec_with(&x2, &mut scratch).unwrap(); // grow over stale data
+        assert_eq!(big, big_again, "stale scratch contents leaked into the output");
+        assert_eq!(small, a1, "shrunken-buffer call diverged");
+    }
+
+    #[test]
+    fn resize_for_overwrite_skips_the_fill() {
+        let mut buf = vec![3.0f32; 8];
+        // same length: must be a no-op, not a clear+refill
+        resize_for_overwrite(&mut buf, 8);
+        assert_eq!(buf, vec![3.0; 8], "same-length resize must not touch contents");
+        // shrink: prefix untouched, no fill
+        resize_for_overwrite(&mut buf, 5);
+        assert_eq!(buf, vec![3.0; 5]);
+        // grow: retained prefix untouched, only the new tail is zeroed
+        resize_for_overwrite(&mut buf, 7);
+        assert_eq!(buf, vec![3.0, 3.0, 3.0, 3.0, 3.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -402,12 +467,23 @@ mod tests {
         assert_eq!(got, again);
         // steady state keeps its one-allocation-per-call contract: warm
         // capacities must not drift across repeated same-shape calls
-        let caps = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
+        let caps = (
+            scratch.a.capacity(),
+            scratch.b.capacity(),
+            scratch.c.capacity(),
+            scratch.acc.capacity(),
+        );
         for _ in 0..3 {
             let _ = tt.matvec_with(&x, &mut scratch).unwrap();
-            let now = (scratch.a.capacity(), scratch.b.capacity(), scratch.c.capacity());
+            let now = (
+                scratch.a.capacity(),
+                scratch.b.capacity(),
+                scratch.c.capacity(),
+                scratch.acc.capacity(),
+            );
             assert_eq!(caps, now, "fused-path scratch capacities drifted");
         }
+        assert!(scratch.acc.capacity() > 0, "fused path must have pooled its accumulators");
     }
 
     #[test]

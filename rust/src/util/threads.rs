@@ -103,6 +103,65 @@ where
     });
 }
 
+/// [`parallel_chunks_mut`] with a second slice split in lockstep: chunk
+/// `i` of `data` (`granularity` items) is paired with chunk `i` of
+/// `aux` (`aux_granularity` items) and both are handed to
+/// `f(start_item, chunk, aux_chunk)`.
+///
+/// `aux` must hold at least one full `aux_granularity` chunk per data
+/// chunk; a longer tail is ignored.  This is how a caller threads
+/// per-worker-chunk scratch (e.g. a contract accumulator) through the
+/// helper without allocating inside the worker: the pool lives in the
+/// caller's reusable storage and each chunk gets a disjoint slab, so
+/// there are still no locks and no sharing.
+pub fn parallel_chunks_mut2<T: Send, U: Send, F>(
+    data: &mut [T],
+    granularity: usize,
+    aux: &mut [U],
+    aux_granularity: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    let g = granularity.max(1);
+    let ga = aux_granularity.max(1);
+    let n_chunks = data.len().div_ceil(g);
+    assert!(
+        aux.len() >= n_chunks * ga,
+        "aux slice holds {} items, {} chunks of {ga} need {}",
+        aux.len(),
+        n_chunks,
+        n_chunks * ga
+    );
+    let threads = thread_budget().min(n_chunks);
+    if threads <= 1 {
+        for (ci, (chunk, aux_chunk)) in data.chunks_mut(g).zip(aux.chunks_mut(ga)).enumerate() {
+            f(ci * g, chunk, aux_chunk);
+        }
+        return;
+    }
+    // same balanced whole-chunk regions as `parallel_chunks_mut`; both
+    // slices split at the same chunk multiples, so pairing survives the
+    // region split
+    let chunks_per_thread = n_chunks.div_ceil(threads);
+    let region = chunks_per_thread * g;
+    let aux_region = chunks_per_thread * ga;
+    std::thread::scope(|s| {
+        for (ri, (region_slice, aux_slice)) in
+            data.chunks_mut(region).zip(aux.chunks_mut(aux_region)).enumerate()
+        {
+            let f = &f;
+            s.spawn(move || {
+                for (ci, (chunk, aux_chunk)) in
+                    region_slice.chunks_mut(g).zip(aux_slice.chunks_mut(ga)).enumerate()
+                {
+                    f(ri * region + ci * g, chunk, aux_chunk);
+                }
+            });
+        }
+    });
+}
+
 /// Parallel map over indices `0..n`, collecting results in order.
 ///
 /// Each thread maps one contiguous index region into its own local
@@ -184,6 +243,62 @@ mod tests {
             }
         });
         assert!(data.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn chunks2_pairs_data_and_aux_in_lockstep() {
+        // 1003 items in 17-item chunks = 59 chunks; each chunk records
+        // its index into its 3-item aux slab, and the data gets the item
+        // index — both must come out consistent for every chunk
+        let mut data = vec![0u32; 1003];
+        let n_chunks = data.len().div_ceil(17);
+        let mut aux = vec![u32::MAX; n_chunks * 3];
+        parallel_chunks_mut2(&mut data, 17, &mut aux, 3, |start, chunk, aux_chunk| {
+            assert_eq!(aux_chunk.len(), 3, "aux chunks are always full length");
+            aux_chunk.fill((start / 17) as u32);
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (start + i) as u32;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+        for (ci, slab) in aux.chunks(3).enumerate() {
+            assert!(slab.iter().all(|&v| v == ci as u32), "chunk {ci} got slab {slab:?}");
+        }
+    }
+
+    #[test]
+    fn chunks2_ignores_oversized_aux_tail() {
+        // a high-water aux pool may be longer than this call needs; the
+        // tail must be left alone
+        let mut data = vec![0u8; 40];
+        let mut aux = vec![7u8; 4 * 2 + 5]; // 4 chunks of 2 + spare tail
+        parallel_chunks_mut2(&mut data, 10, &mut aux, 2, |_, chunk, aux_chunk| {
+            chunk.fill(1);
+            aux_chunk.fill(0);
+        });
+        assert!(data.iter().all(|&x| x == 1));
+        assert!(aux[..8].iter().all(|&x| x == 0));
+        assert!(aux[8..].iter().all(|&x| x == 7), "unused aux tail touched");
+    }
+
+    #[test]
+    fn chunks2_serial_under_budget_one() {
+        set_thread_budget(1);
+        let mut data = vec![0u32; 30];
+        let mut aux = vec![0u32; 3];
+        parallel_chunks_mut2(&mut data, 10, &mut aux, 1, |start, chunk, aux_chunk| {
+            aux_chunk[0] += 1; // each slab seen exactly once
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (start + i) as u32;
+            }
+        });
+        set_thread_budget(0);
+        assert_eq!(aux, vec![1, 1, 1]);
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
     }
 
     #[test]

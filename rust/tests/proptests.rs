@@ -388,6 +388,34 @@ fn prop_wire_frames_roundtrip_bitwise() {
 }
 
 #[test]
+fn prop_wire_encode_into_appends_encode_bytes_exactly() {
+    // the zero-allocation reply path (Frame::encode_into onto a reused
+    // per-connection buffer) must be indistinguishable on the wire from
+    // Frame::encode: appending 1..=3 pipelined frames to a random
+    // (possibly non-empty) prefix preserves the prefix bytes and appends
+    // exactly the bytes encode() would have produced, frame after frame
+    check(cfg(120), "wire-encode-into", |rng| {
+        let prefix: Vec<u8> =
+            (0..gen::int(rng, 0, 32)).map(|_| rng.below(256) as u8).collect();
+        let n = gen::int(rng, 1, 3);
+        let frames: Vec<Frame> = (0..n).map(|_| random_frame(rng)).collect();
+        let mut buf = prefix.clone();
+        let mut want = Vec::new();
+        for f in &frames {
+            f.encode_into(&mut buf).map_err(|e| e.to_string())?;
+            want.extend_from_slice(&f.encode().map_err(|e| e.to_string())?);
+        }
+        if buf[..prefix.len()] != prefix[..] {
+            return Err("encode_into disturbed the existing buffer prefix".into());
+        }
+        if buf[prefix.len()..] != want[..] {
+            return Err(format!("encode_into bytes differ from encode for {frames:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_wire_rejects_truncations_and_bit_flips() {
     // mirror of prop_checkpoint_rejects_random_truncations: any strict
     // prefix of a valid frame and any single corrupted bit must decode

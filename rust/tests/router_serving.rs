@@ -1,0 +1,440 @@
+//! Integration: the router tier (`ShardRouter`) against real shard
+//! stacks over loopback TCP.
+//!
+//! The core claims, in order: routing transparency (a request through
+//! the router is BITWISE identical to the in-process answer — the
+//! router forwards frames, it never touches f32 payloads), least-loaded
+//! dispatch (a stalled replica stops attracting traffic while its
+//! in-flight gauge is up), and failure containment (a shard that dies
+//! mid-request answers its in-flight with typed `Exec` errors — never a
+//! hang — while survivor shards keep serving and the router's stats
+//! record the failover).
+
+use std::io::Write;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+use tensornet::coordinator::{
+    BatchExecutor, BatchPolicy, Client, EchoExecutor, Frame, ModelInfo, ModelRegistry, ModelSpec,
+    NativeExecutor, NetServer, RouterConfig, Server, ServerConfig, ShardRouter,
+};
+use tensornet::error::{Error, Result};
+use tensornet::util::rng::Rng;
+
+const SEED_A: u64 = 0xD15C_0BA1;
+const SEED_B: u64 = 0x0BA1_D15C;
+const MS: [usize; 3] = [4, 4, 4];
+const NS: [usize; 3] = [4, 4, 4];
+const RANK: usize = 3;
+const DIM: usize = 64;
+
+/// Two seed-deterministic TT models — every shard that builds this
+/// registry computes bitwise-identical outputs, which is what makes
+/// "any replica may answer" a testable contract.
+fn mixed_registry() -> ModelRegistry {
+    let mut r = ModelRegistry::new();
+    r.register(
+        "tt_a",
+        ModelSpec::TtLayer { ms: MS.to_vec(), ns: NS.to_vec(), rank: RANK, seed: SEED_A },
+    );
+    r.register(
+        "tt_b",
+        ModelSpec::TtLayer { ms: MS.to_vec(), ns: NS.to_vec(), rank: RANK, seed: SEED_B },
+    );
+    r
+}
+
+fn mixed_lineup() -> Vec<ModelInfo> {
+    ["tt_a", "tt_b"]
+        .iter()
+        .map(|n| ModelInfo {
+            name: n.to_string(),
+            input_dim: DIM as u32,
+            output_dim: DIM as u32,
+        })
+        .collect()
+}
+
+/// One real shard stack (native executors + TCP front-end) on an
+/// OS-assigned loopback port.
+fn start_shard() -> (Arc<Server>, NetServer, String) {
+    let registry = mixed_registry();
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(2) },
+        queue_capacity: 1024,
+        batch_queue_capacity: 8,
+        executor_threads: 2,
+        kernel_threads: 0,
+    };
+    let server = Arc::new(
+        Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap(),
+    );
+    let net = NetServer::start(server.clone(), "127.0.0.1:0", mixed_lineup()).unwrap();
+    let addr = net.local_addr().to_string();
+    (server, net, addr)
+}
+
+fn start_router(shards: Vec<String>) -> ShardRouter {
+    ShardRouter::start(
+        RouterConfig {
+            shards,
+            replicas: 0,
+            io_threads: 1,
+            connect_timeout: Duration::from_secs(5),
+        },
+        "127.0.0.1:0",
+    )
+    .unwrap()
+}
+
+#[test]
+fn routed_infer_bitwise_matches_in_process_under_mixed_load() {
+    let (server_a, net_a, addr_a) = start_shard();
+    let (server_b, net_b, addr_b) = start_shard();
+    let router = start_router(vec![addr_a, addr_b]);
+    let addr = router.local_addr().to_string();
+
+    // the router advertises the union lineup over the wire
+    let mut probe = Client::connect(&addr).unwrap();
+    let lineup = probe.list_models().unwrap();
+    let names: Vec<&str> = lineup.iter().map(|m| m.name.as_str()).collect();
+    assert_eq!(names, vec!["tt_a", "tt_b"]);
+
+    let n_clients = 4u64;
+    let n_each = 20usize;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let server_a = &server_a;
+            let addr = addr.as_str();
+            s.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut rng = Rng::new(9000 + c);
+                for i in 0..n_each {
+                    // interleaved mixed-model traffic, replica-agnostic
+                    let model = if (c as usize + i) % 2 == 0 { "tt_a" } else { "tt_b" };
+                    let x: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(1.0)).collect();
+                    let routed = client.infer(model, &x).unwrap();
+                    // either shard may have answered; both are seeded
+                    // identically, so shard A's in-process answer is THE
+                    // answer
+                    let local = server_a.infer(model, x).unwrap();
+                    let routed_bits: Vec<u32> =
+                        routed.output.iter().map(|v| v.to_bits()).collect();
+                    let local_bits: Vec<u32> =
+                        local.output.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        routed_bits, local_bits,
+                        "client {c} request {i} ({model}): routed output differs"
+                    );
+                }
+            });
+        }
+    });
+
+    let total = n_clients * n_each as u64;
+    let stats = router.remote_stats();
+    assert_eq!(stats.completed, total, "router-side completion count");
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.rejected, 0);
+    // the per-model block merges router outcomes per model
+    let a = stats.per_model.iter().find(|m| m.name == "tt_a").unwrap();
+    let b = stats.per_model.iter().find(|m| m.name == "tt_b").unwrap();
+    assert_eq!(a.completed + b.completed, total);
+    assert_eq!(a.completed, total / 2, "1:1 interleave splits evenly");
+
+    // least-loaded dispatch spread the concurrent load over BOTH shards,
+    // and the forwarded counts reconcile with the drive
+    let snaps = router.shard_snapshots();
+    assert_eq!(snaps.len(), 2);
+    let forwarded: u64 = snaps.iter().map(|s| s.forwarded).sum();
+    assert_eq!(forwarded, total, "every request reached exactly one shard");
+    for s in &snaps {
+        assert!(s.healthy);
+        assert_eq!(s.failovers, 0);
+        assert_eq!(s.errors, 0);
+        assert!(
+            s.forwarded > 0,
+            "4 pipelining clients must spill onto both replicas: {snaps:?}"
+        );
+        assert_eq!(s.in_flight, 0, "gauge must return to zero after the drive");
+    }
+
+    router.shutdown();
+    net_a.shutdown();
+    net_b.shutdown();
+    drop(server_a);
+    drop(server_b);
+}
+
+/// Executor that stalls long enough for the router's in-flight gauge to
+/// see the replica as loaded.
+struct Sleepy(Duration);
+impl BatchExecutor for Sleepy {
+    fn execute(&mut self, _m: &str, x: Vec<f32>, _rows: usize) -> Result<(Vec<f32>, usize)> {
+        std::thread::sleep(self.0);
+        Ok((x, 2))
+    }
+    fn input_dim(&self, _m: &str) -> Result<usize> {
+        Ok(2)
+    }
+}
+
+/// One minimal shard stack with a caller-supplied executor, serving a
+/// 2-dim model named `m`.
+fn start_tiny_shard<E, F>(factory: F) -> (Arc<Server>, NetServer, String)
+where
+    E: BatchExecutor,
+    F: Fn() -> Result<E> + Send + Sync + 'static,
+{
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(0) },
+        queue_capacity: 1024,
+        batch_queue_capacity: 8,
+        executor_threads: 1,
+        kernel_threads: 0,
+    };
+    let server = Arc::new(Server::start(cfg, factory).unwrap());
+    let net = NetServer::start(
+        server.clone(),
+        "127.0.0.1:0",
+        vec![ModelInfo { name: "m".into(), input_dim: 2, output_dim: 2 }],
+    )
+    .unwrap();
+    let addr = net.local_addr().to_string();
+    (server, net, addr)
+}
+
+#[test]
+fn least_loaded_dispatch_skews_to_the_idle_replica() {
+    // replica 0 stalls 50ms per request (and is the tie-break favourite,
+    // being first); replica 1 echoes instantly.  Under sustained
+    // concurrent load — serial callers, so replies settle between
+    // dispatches and the in-flight gauge reflects the stall — the slow
+    // replica only attracts a request when its gauge has drained back
+    // down, so the idle replica takes the overwhelming majority.  (A
+    // single simultaneous burst would split ~evenly instead: with no
+    // replies settled the gauge just ratchets, which is also correct —
+    // load balance is relative to what the router has seen come back.)
+    let (server_slow, net_slow, addr_slow) =
+        start_tiny_shard(|| Ok(Sleepy(Duration::from_millis(50))));
+    let (server_fast, net_fast, addr_fast) =
+        start_tiny_shard(|| Ok(EchoExecutor { dim: 2, scale: 1.0 }));
+    let router = start_router(vec![addr_slow, addr_fast]);
+    let addr = router.local_addr().to_string();
+
+    let n_clients = 4usize;
+    let n_each = 25usize;
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let addr = addr.as_str();
+            s.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for i in 0..n_each {
+                    let ok = client.infer("m", &[(c * n_each + i) as f32, 0.0]).unwrap();
+                    assert_eq!(ok.output[0], (c * n_each + i) as f32);
+                }
+            });
+        }
+    });
+
+    let n = (n_clients * n_each) as u64;
+    let snaps = router.shard_snapshots();
+    let (slow, fast) = (&snaps[0], &snaps[1]);
+    assert_eq!(slow.forwarded + fast.forwarded, n);
+    assert!(
+        slow.forwarded >= 1,
+        "ties break toward the first replica, so the slow one gets the opener"
+    );
+    assert!(
+        fast.forwarded >= 3 * slow.forwarded,
+        "least-loaded dispatch must skew hard to the idle replica: \
+         slow={} fast={}",
+        slow.forwarded,
+        fast.forwarded
+    );
+
+    router.shutdown();
+    net_slow.shutdown();
+    net_fast.shutdown();
+    drop(server_slow);
+    drop(server_fast);
+}
+
+/// A scripted fake shard speaking the wire protocol over a raw
+/// listener: advertises one model, answers control frames and the first
+/// `serve_n` inferences, then drops the connection on the next Infer —
+/// the repeatable stand-in for a shard process dying mid-request.
+fn scripted_dying_shard(serve_n: usize) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let mut served = 0usize;
+        // connection 1 is the router's startup probe; connection 2 the
+        // io thread's link — handled sequentially, same script
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { return };
+            loop {
+                match Frame::read_from(&mut stream) {
+                    Ok(Some(Frame::ListModels)) => {
+                        let reply = Frame::ModelList {
+                            models: vec![ModelInfo {
+                                name: "dying".into(),
+                                input_dim: 2,
+                                output_dim: 2,
+                            }],
+                        };
+                        stream.write_all(&reply.encode().unwrap()).unwrap();
+                    }
+                    Ok(Some(Frame::Stats)) => {
+                        let reply = Frame::StatsReply {
+                            completed: served as u64,
+                            rejected: 0,
+                            errors: 0,
+                            failed_workers: 0,
+                            batches: served as u64,
+                            batched_rows: served as u64,
+                            per_model: Vec::new(),
+                        };
+                        stream.write_all(&reply.encode().unwrap()).unwrap();
+                    }
+                    Ok(Some(Frame::Infer { id, input, .. })) => {
+                        if served >= serve_n {
+                            // die mid-request: close with this Infer (and
+                            // anything pipelined behind it) unanswered
+                            return;
+                        }
+                        served += 1;
+                        let reply = Frame::InferOk {
+                            id,
+                            queue_us: 1,
+                            exec_us: 1,
+                            batch_size: 1,
+                            output: input,
+                        };
+                        stream.write_all(&reply.encode().unwrap()).unwrap();
+                    }
+                    Ok(Some(_)) => return,
+                    Ok(None) => break, // EOF: next connection
+                    Err(_) => return,
+                }
+            }
+        }
+    });
+    (addr, handle)
+}
+
+#[test]
+fn dead_shard_fails_over_with_typed_errors_and_survivor_keeps_serving() {
+    let (addr_dying, fake) = scripted_dying_shard(1);
+    let (server, net, addr_live) = start_tiny_shard(|| Ok(EchoExecutor { dim: 2, scale: 1.0 }));
+    // disjoint lineups: 'dying' only on the fake shard, 'm' only on the
+    // live one — so every assertion knows exactly where a request went
+    let router = start_router(vec![addr_dying, addr_live]);
+    let addr = router.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let lineup = client.list_models().unwrap();
+    let mut names: Vec<&str> = lineup.iter().map(|m| m.name.as_str()).collect();
+    names.sort();
+    assert_eq!(names, vec!["dying", "m"], "union of both shard lineups");
+
+    // the scripted shard answers its first inference normally
+    let ok = client.infer("dying", &[1.5, -2.5]).unwrap();
+    assert_eq!(ok.output, vec![1.5, -2.5]);
+
+    // two pipelined requests hit the dying shard; it drops the
+    // connection — each must come back as a typed Exec error (surfaced
+    // as Error::Coordinator by the client), never a hang.  The first
+    // was necessarily in flight on the link when it died (the script
+    // dies on READING it), so it fails over; the second either failed
+    // over with it or, if the router saw the death first, was refused
+    // up front — both are the typed-error contract
+    client.send("dying", &[3.0, 4.0]).unwrap();
+    client.send("dying", &[5.0, 6.0]).unwrap();
+    for i in 0..2 {
+        let err = client.recv().unwrap_err();
+        match err {
+            Error::Coordinator(msg) => {
+                if i == 0 {
+                    assert!(msg.contains("failed mid-request"), "reply {i}: {msg}");
+                } else {
+                    assert!(
+                        msg.contains("failed mid-request") || msg.contains("no live shard"),
+                        "reply {i}: {msg}"
+                    );
+                }
+            }
+            other => panic!("reply {i}: want a typed Exec error, got {other:?}"),
+        }
+    }
+
+    // the shard is now marked dead: requests for its model are refused
+    // with a typed error (the redial loop cannot revive a gone process)
+    let err = client.infer("dying", &[0.0, 0.0]).unwrap_err();
+    match err {
+        Error::Coordinator(msg) => assert!(msg.contains("no live shard"), "{msg}"),
+        other => panic!("want a typed no-live-shard error, got {other:?}"),
+    }
+
+    // the survivor keeps serving through the same router, same connection
+    for i in 0..10 {
+        let ok = client.infer("m", &[i as f32, 1.0]).unwrap();
+        assert_eq!(ok.output, vec![i as f32, 1.0]);
+    }
+
+    // the failover is recorded: the dead shard's snapshot carries the
+    // failed-over errors, the survivor stays healthy, and the merged
+    // stats expose the dead shard in failed_workers
+    let snaps = router.shard_snapshots();
+    assert!(!snaps[0].healthy, "the dying shard must be marked down");
+    assert!(snaps[0].failovers >= 1);
+    // 2 if both pipelined requests failed over on the link, 1 if the
+    // second was refused before forwarding (see above)
+    assert!((1..=2).contains(&snaps[0].errors), "{snaps:?}");
+    assert!(snaps[1].healthy);
+    assert_eq!(snaps[1].errors, 0);
+    assert_eq!(snaps[1].completed, 10);
+    let stats = router.remote_stats();
+    assert_eq!(stats.failed_workers, 1);
+    assert_eq!(stats.completed, 11, "1 pre-death + 10 survivor");
+    // the 2 dying-shard replies + the final no-live-shard rejection,
+    // every one counted exactly once wherever it was refused
+    assert_eq!(stats.errors, 3);
+
+    router.shutdown();
+    net.shutdown();
+    drop(server);
+    let _ = fake.join();
+}
+
+#[test]
+fn router_rejects_unknown_models_without_touching_shards() {
+    let (server, net, addr_live) = start_tiny_shard(|| Ok(EchoExecutor { dim: 2, scale: 1.0 }));
+    let router = start_router(vec![addr_live]);
+    let mut client = Client::connect(&router.local_addr().to_string()).unwrap();
+
+    let err = client.infer("nope", &[0.0, 0.0]).unwrap_err();
+    match err {
+        Error::Coordinator(msg) => {
+            assert!(msg.contains("unknown model 'nope'"), "{msg}");
+            assert!(msg.contains("m"), "the error must list the lineup: {msg}");
+        }
+        other => panic!("want a typed unknown-model error, got {other:?}"),
+    }
+    // nothing was forwarded, and the garbage name planted no stats entry
+    let snaps = router.shard_snapshots();
+    assert_eq!(snaps[0].forwarded, 0);
+    let stats = router.remote_stats();
+    assert_eq!(stats.errors, 1);
+    assert!(
+        stats.per_model.iter().all(|m| m.name != "nope"),
+        "client-controlled names must not plant per-model entries: {:?}",
+        stats.per_model
+    );
+    // the connection stays usable
+    assert_eq!(client.infer("m", &[7.0, 8.0]).unwrap().output, vec![7.0, 8.0]);
+
+    router.shutdown();
+    net.shutdown();
+    drop(server);
+}
