@@ -25,6 +25,7 @@ fn main() {
             batch_queue_capacity: 16,
             executor_threads: 1,
             kernel_threads: 0,
+            ..Default::default()
         };
         let server = Arc::new(
             Server::start(cfg, move || Ok(EchoExecutor { dim, scale: 1.0 })).unwrap(),

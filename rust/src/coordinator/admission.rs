@@ -1,0 +1,714 @@
+//! Adaptive admission control (S14 in DESIGN.md §14): ticket-based
+//! in-flight bounding with dynamic capacity, overload-mode queueing and
+//! per-model fairness.
+//!
+//! The old admission story was a fixed-depth `sync_channel` shared by
+//! every model and caller: the only knob was reject-when-full, a burst
+//! on one hot model starved every other tenant, and under sustained
+//! overload FIFO ordering guaranteed every admitted request ate the
+//! full queue delay before being served.  This module replaces the
+//! bounded channel with an explicit [`AdmissionController`]:
+//!
+//! * **Tickets.** Every request acquires an [`AdmissionTicket`] before
+//!   entering the (now unbounded) batch pipeline and releases it on
+//!   drop — after the reply is sent, after a failure, or when the
+//!   request is discarded at shutdown.  RAII makes release exactly-once
+//!   on every path, and the outstanding-ticket count bounds the whole
+//!   pipeline (queue + batcher backlog + executing), not just the front
+//!   channel.
+//! * **Dynamic capacity.** With `--latency-target-ms` set, the ticket
+//!   ceiling becomes a measured quantity: ticket held-times (enqueue →
+//!   reply, the server-side e2e) feed a sliding window; every
+//!   `RESIZE_INTERVAL` the controller grows capacity additively
+//!   (`+max(1, cap/8)`) while the window p95 is under target and halves
+//!   it when the p95 overshoots (AIMD, like TCP).  Default off ⇒
+//!   capacity is exactly the configured queue depth, reproducing the
+//!   fixed bounded queue.
+//! * **FIFO→LIFO under sustained overload.** When admission has been
+//!   saturated (admitted == capacity) continuously for
+//!   `overload_after`, the batcher switches to newest-first scheduling:
+//!   for a queue that is doomed anyway, LIFO bounds the tail latency of
+//!   the requests that *do* complete instead of timing everyone out
+//!   equally.  Hysteresis: back to FIFO once admitted ≤ capacity/2.
+//! * **Per-model quotas.** `--quota MODEL=N` reserves N tickets for a
+//!   model; the remaining `capacity − Σ reservations` form a free pool
+//!   any tenant may borrow from.  A quota'd model sheds (typed
+//!   [`ShedKind::Quota`]) only once its reservation *and* the free pool
+//!   are exhausted; an unquota'd model sheds [`ShedKind::Capacity`]
+//!   when the free pool alone is gone.  Capacity never resizes below
+//!   `Σ reservations`, so background tenants keep their guaranteed
+//!   share no matter how hard a hot tenant pushes.
+//!
+//! Sheds carry a retry-after hint (the window's median held-time) that
+//! travels in the wire `Busy` reply so remote clients back off for
+//! roughly one service time instead of hot-looping.
+//!
+//! Modeled on the chroma `AdmissionControllerImpl` exemplar
+//! (SNIPPETS.md §3): same ticket/release shape, same FIFO/LIFO mode
+//! flag; the waiter ring is replaced by a `Condvar` (blocking callers
+//! are in-process threads, not async tasks) and the rate controller by
+//! the latency-target AIMD above.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Sliding window of ticket held-times (µs) the capacity controller and
+/// retry hints are computed from.
+const WINDOW: usize = 256;
+/// Minimum samples before a resize decision (a p95 of three points is
+/// noise).
+const MIN_SAMPLES: usize = 16;
+/// Capacity is re-evaluated at most this often.
+const RESIZE_INTERVAL: Duration = Duration::from_millis(500);
+/// Retry hint when no held-time samples exist yet.
+const DEFAULT_RETRY_MS: u32 = 5;
+
+/// Admission knobs, carried inside `ServerConfig`.  The default is
+/// behaviorally identical to the pre-controller fixed bounded queue:
+/// no resizing, no quotas, FIFO unless saturated for 2 s straight.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// e2e latency target (ms) the capacity controller steers toward;
+    /// `0` disables resizing (capacity stays the configured depth).
+    pub latency_target_ms: u64,
+    /// resize floor; `0` = auto (`max(1, initial/8)`, never below
+    /// `Σ quotas`)
+    pub min_capacity: usize,
+    /// resize ceiling; `0` = auto (`initial × 4`)
+    pub max_capacity: usize,
+    /// how long admission must stay saturated before the batcher flips
+    /// to newest-first (LIFO) scheduling
+    pub overload_after: Duration,
+    /// per-model reserved tickets: `(model, N)`; duplicates sum
+    pub quotas: Vec<(String, usize)>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            latency_target_ms: 0,
+            min_capacity: 0,
+            max_capacity: 0,
+            overload_after: Duration::from_secs(2),
+            quotas: Vec::new(),
+        }
+    }
+}
+
+/// Scheduling order the batcher drains pending groups in (mirrors the
+/// chroma exemplar's `FIFO_MODE`/`LIFO_MODE` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum QueueMode {
+    /// oldest-first (default): fair, optimal when the queue drains
+    Fifo = 0,
+    /// newest-first (sustained overload): bounds the tail latency of
+    /// the requests that will complete, because the backlog is doomed
+    /// to shed anyway
+    Lifo = 1,
+}
+
+impl QueueMode {
+    fn from_u8(v: u8) -> QueueMode {
+        if v == QueueMode::Lifo as u8 { QueueMode::Lifo } else { QueueMode::Fifo }
+    }
+}
+
+/// Why an admission attempt was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedKind {
+    /// global overload: the free ticket pool is exhausted
+    Capacity,
+    /// this model used up its reservation and the free pool — other
+    /// tenants' reservations are protecting them from it
+    Quota,
+}
+
+/// A shed decision: what kind, and how long the caller should wait
+/// before retrying (≈ one observed service time).
+#[derive(Clone, Copy, Debug)]
+pub struct ShedInfo {
+    pub kind: ShedKind,
+    pub retry_after_ms: u32,
+}
+
+/// Which pool a ticket was admitted from — determines which counter
+/// its release decrements.
+#[derive(Clone, Copy, Debug)]
+enum Pool {
+    /// the shared borrowable pool (`capacity − Σ reservations`)
+    Free,
+    /// slot index into `Inner::slots`: a quota'd model's reservation
+    Reserved(usize),
+}
+
+/// One quota'd model's reservation state.
+#[derive(Debug)]
+struct Slot {
+    name: String,
+    quota: usize,
+    /// tickets currently held out of THIS reservation (borrowed free
+    /// tickets count in `Inner::free_used` instead)
+    admitted: usize,
+}
+
+#[derive(Debug)]
+struct Inner {
+    /// current ticket ceiling (fixed unless a latency target is set)
+    capacity: usize,
+    /// total outstanding tickets (= free_used + Σ slots.admitted)
+    admitted: usize,
+    /// outstanding tickets from the free pool
+    free_used: usize,
+    slots: Vec<Slot>,
+    reserved_total: usize,
+    /// last instant admission was observed below capacity — the
+    /// overload clock for the FIFO→LIFO flip
+    last_unsaturated: Instant,
+    /// ring of recent ticket held-times in µs
+    window: Vec<u64>,
+    wpos: usize,
+    wlen: usize,
+    last_resize: Instant,
+    /// provenance for bench entries / the serve summary
+    cap_min: usize,
+    cap_max: usize,
+    mode_flips: u64,
+}
+
+/// Point-in-time view of the controller, for stats printing and bench
+/// provenance.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionSnapshot {
+    pub capacity: usize,
+    pub admitted: usize,
+    pub mode: QueueMode,
+    /// lowest/highest capacity ever reached (== capacity when resizing
+    /// is off)
+    pub capacity_min: usize,
+    pub capacity_max: usize,
+    /// total FIFO↔LIFO transitions
+    pub mode_flips: u64,
+}
+
+/// The controller.  All admission paths (blocking `infer`, non-blocking
+/// `admit`, the TCP front-end) funnel through one instance per
+/// `Server`.
+pub struct AdmissionController {
+    inner: Mutex<Inner>,
+    /// signaled on every release so blocked `admit_blocking` callers
+    /// re-check
+    available: Condvar,
+    /// current `QueueMode`, readable without the lock (the batcher
+    /// polls it on every drain)
+    mode: AtomicU8,
+    /// bumped on every ticket release; the net reactor skips its idle
+    /// doze when this moved since the last sweep (a release means a
+    /// reply is about to need settling)
+    release_epoch: AtomicU64,
+    latency_target: Option<Duration>,
+    overload_after: Duration,
+    cap_floor: usize,
+    cap_ceil: usize,
+}
+
+impl fmt::Debug for AdmissionController {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let snap = self.snapshot();
+        write!(f, "AdmissionController({snap:?})")
+    }
+}
+
+impl AdmissionController {
+    /// Build a controller with `initial` tickets (clamped up to
+    /// `Σ quotas` so every reservation is honorable, and to ≥ 1).
+    pub fn new(initial: usize, cfg: &AdmissionConfig) -> Arc<AdmissionController> {
+        // fold duplicate quota names by summing
+        let mut slots: Vec<Slot> = Vec::new();
+        for (name, n) in &cfg.quotas {
+            match slots.iter_mut().find(|s| s.name == *name) {
+                Some(s) => s.quota += n,
+                None => slots.push(Slot { name: name.clone(), quota: *n, admitted: 0 }),
+            }
+        }
+        let reserved_total: usize = slots.iter().map(|s| s.quota).sum();
+        let capacity = initial.max(reserved_total).max(1);
+        let cap_floor = if cfg.min_capacity > 0 { cfg.min_capacity } else { (capacity / 8).max(1) }
+            .max(reserved_total.max(1));
+        let cap_ceil = if cfg.max_capacity > 0 { cfg.max_capacity } else { capacity * 4 }
+            .max(cap_floor)
+            .max(capacity);
+        let now = Instant::now();
+        Arc::new(AdmissionController {
+            inner: Mutex::new(Inner {
+                capacity,
+                admitted: 0,
+                free_used: 0,
+                slots,
+                reserved_total,
+                last_unsaturated: now,
+                window: vec![0; WINDOW],
+                wpos: 0,
+                wlen: 0,
+                last_resize: now,
+                cap_min: capacity,
+                cap_max: capacity,
+                mode_flips: 0,
+            }),
+            available: Condvar::new(),
+            mode: AtomicU8::new(QueueMode::Fifo as u8),
+            release_epoch: AtomicU64::new(0),
+            latency_target: (cfg.latency_target_ms > 0)
+                .then(|| Duration::from_millis(cfg.latency_target_ms)),
+            overload_after: cfg.overload_after,
+            cap_floor,
+            cap_ceil,
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Non-blocking admission: a ticket, or a typed shed with a retry
+    /// hint.  Every attempt — shed or not — advances the overload
+    /// clock, so a storm of rejected arrivals still flips the mode.
+    pub fn try_admit(self: &Arc<Self>, model: &str) -> std::result::Result<AdmissionTicket, ShedInfo> {
+        let mut inner = self.lock();
+        let now = Instant::now();
+        let res = Self::admit_inner(&mut inner, model);
+        self.update_mode(&mut inner, now);
+        match res {
+            Ok(pool) => {
+                Ok(AdmissionTicket { ctl: self.clone(), pool, acquired: now })
+            }
+            Err(kind) => {
+                Err(ShedInfo { kind, retry_after_ms: Self::retry_hint_ms(&inner) })
+            }
+        }
+    }
+
+    /// Blocking admission: wait (forever — mirrors the old blocking
+    /// send into the bounded queue) until a ticket frees up.  Used by
+    /// in-process `Server::infer`; shutdown resolves naturally because
+    /// draining requests release their tickets on drop.
+    pub fn admit_blocking(self: &Arc<Self>, model: &str) -> AdmissionTicket {
+        let mut inner = self.lock();
+        loop {
+            let now = Instant::now();
+            let res = Self::admit_inner(&mut inner, model);
+            self.update_mode(&mut inner, now);
+            match res {
+                Ok(pool) => {
+                    return AdmissionTicket { ctl: self.clone(), pool, acquired: now };
+                }
+                Err(_) => {
+                    inner = match self.available.wait(inner) {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                }
+            }
+        }
+    }
+
+    /// The admission decision proper.  Quota'd models draw from their
+    /// reservation first, then borrow free tickets; unquota'd models
+    /// only ever use the free pool — that asymmetry is the fairness
+    /// guarantee.
+    fn admit_inner(inner: &mut Inner, model: &str) -> std::result::Result<Pool, ShedKind> {
+        // free pool = capacity − Σ reservations (capacity never resizes
+        // below reserved_total, so this cannot underflow by policy;
+        // saturating_sub guards the force_capacity test hook)
+        let free_pool = inner.capacity.saturating_sub(inner.reserved_total);
+        match inner.slots.iter().position(|s| s.name == model) {
+            Some(i) => {
+                if inner.slots[i].admitted < inner.slots[i].quota {
+                    inner.slots[i].admitted += 1;
+                    inner.admitted += 1;
+                    Ok(Pool::Reserved(i))
+                } else if inner.free_used < free_pool {
+                    inner.free_used += 1;
+                    inner.admitted += 1;
+                    Ok(Pool::Free)
+                } else {
+                    Err(ShedKind::Quota)
+                }
+            }
+            None => {
+                if inner.free_used < free_pool {
+                    inner.free_used += 1;
+                    inner.admitted += 1;
+                    Ok(Pool::Free)
+                } else {
+                    Err(ShedKind::Capacity)
+                }
+            }
+        }
+    }
+
+    /// Release path (only via `AdmissionTicket::drop`): return the
+    /// ticket to its pool, feed the held-time window, re-evaluate mode
+    /// and capacity, wake waiters and the reactor.
+    fn release(&self, pool: Pool, acquired: Instant) {
+        let now = Instant::now();
+        {
+            let mut inner = self.lock();
+            match pool {
+                Pool::Free => inner.free_used = inner.free_used.saturating_sub(1),
+                Pool::Reserved(i) => {
+                    inner.slots[i].admitted = inner.slots[i].admitted.saturating_sub(1)
+                }
+            }
+            inner.admitted = inner.admitted.saturating_sub(1);
+            let held_us = now.duration_since(acquired).as_micros() as u64;
+            let wpos = inner.wpos;
+            inner.window[wpos] = held_us;
+            inner.wpos = (wpos + 1) % WINDOW;
+            inner.wlen = (inner.wlen + 1).min(WINDOW);
+            self.update_mode(&mut inner, now);
+            self.maybe_resize(&mut inner, now, false);
+        }
+        self.release_epoch.fetch_add(1, Ordering::Release);
+        // notify_all, not notify_one: a freed reserved ticket is only
+        // usable by its own model, so the "wrong" single waiter waking
+        // and going back to sleep would strand the right one
+        self.available.notify_all();
+    }
+
+    /// Overload-mode state machine.  Enter LIFO after `overload_after`
+    /// of continuous saturation; leave once admission drains to half
+    /// capacity (hysteresis — a queue oscillating at the brim doesn't
+    /// thrash the order).
+    fn update_mode(&self, inner: &mut Inner, now: Instant) {
+        let saturated = inner.admitted >= inner.capacity;
+        if !saturated {
+            inner.last_unsaturated = now;
+        }
+        match QueueMode::from_u8(self.mode.load(Ordering::Relaxed)) {
+            QueueMode::Fifo => {
+                if saturated
+                    && now.duration_since(inner.last_unsaturated) >= self.overload_after
+                {
+                    self.mode.store(QueueMode::Lifo as u8, Ordering::Relaxed);
+                    inner.mode_flips += 1;
+                }
+            }
+            QueueMode::Lifo => {
+                if inner.admitted * 2 <= inner.capacity {
+                    self.mode.store(QueueMode::Fifo as u8, Ordering::Relaxed);
+                    inner.mode_flips += 1;
+                    inner.last_unsaturated = now;
+                }
+            }
+        }
+    }
+
+    /// AIMD capacity controller: halve when the held-time p95
+    /// overshoots the target, grow `+max(1, cap/8)` when it is under.
+    /// The window is cleared after each decision so the next one is
+    /// based on post-change observations only.
+    fn maybe_resize(&self, inner: &mut Inner, now: Instant, forced: bool) {
+        let target = match self.latency_target {
+            Some(t) => t,
+            None => return,
+        };
+        if !forced && now.duration_since(inner.last_resize) < RESIZE_INTERVAL {
+            return;
+        }
+        if inner.wlen < MIN_SAMPLES {
+            return;
+        }
+        let mut sorted = inner.window[..inner.wlen].to_vec();
+        sorted.sort_unstable();
+        let p95 = sorted[(sorted.len() * 95 / 100).min(sorted.len() - 1)];
+        if p95 > target.as_micros() as u64 {
+            inner.capacity = (inner.capacity / 2).max(self.cap_floor);
+        } else {
+            let grow = (inner.capacity / 8).max(1);
+            inner.capacity = (inner.capacity + grow).min(self.cap_ceil);
+        }
+        inner.cap_min = inner.cap_min.min(inner.capacity);
+        inner.cap_max = inner.cap_max.max(inner.capacity);
+        inner.wpos = 0;
+        inner.wlen = 0;
+        inner.last_resize = now;
+    }
+
+    /// Median observed held-time as the shed retry hint, clamped to
+    /// [1, 1000] ms; `DEFAULT_RETRY_MS` before any sample exists.
+    fn retry_hint_ms(inner: &Inner) -> u32 {
+        if inner.wlen == 0 {
+            return DEFAULT_RETRY_MS;
+        }
+        let mut sorted = inner.window[..inner.wlen].to_vec();
+        sorted.sort_unstable();
+        let p50_us = sorted[sorted.len() / 2];
+        (p50_us / 1000).clamp(1, 1000) as u32
+    }
+
+    /// Current scheduling order — lock-free; the batcher reads this on
+    /// every drain pass.
+    pub fn mode(&self) -> QueueMode {
+        QueueMode::from_u8(self.mode.load(Ordering::Relaxed))
+    }
+
+    /// Monotonic count of ticket releases.  The net reactor compares
+    /// this across sweeps: movement means replies are settling, so it
+    /// skips the idle doze for one pass.
+    pub fn release_epoch(&self) -> u64 {
+        self.release_epoch.load(Ordering::Acquire)
+    }
+
+    pub fn snapshot(&self) -> AdmissionSnapshot {
+        let inner = self.lock();
+        AdmissionSnapshot {
+            capacity: inner.capacity,
+            admitted: inner.admitted,
+            mode: self.mode(),
+            capacity_min: inner.cap_min,
+            capacity_max: inner.cap_max,
+            mode_flips: inner.mode_flips,
+        }
+    }
+
+    /// Ops/test hook: pin capacity (clamped to the floor — quotas stay
+    /// honorable).  Tickets already out stay out; a shrink below the
+    /// outstanding count just blocks new admissions until drained.
+    pub fn force_capacity(&self, cap: usize) {
+        let mut inner = self.lock();
+        inner.capacity = cap.max(self.cap_floor);
+        inner.cap_min = inner.cap_min.min(inner.capacity);
+        inner.cap_max = inner.cap_max.max(inner.capacity);
+        drop(inner);
+        self.available.notify_all();
+    }
+
+    /// Ops/test hook: pin the queue mode (counted as a flip when it
+    /// changes).
+    pub fn force_mode(&self, mode: QueueMode) {
+        let mut inner = self.lock();
+        if self.mode() != mode {
+            self.mode.store(mode as u8, Ordering::Relaxed);
+            inner.mode_flips += 1;
+            inner.last_unsaturated = Instant::now();
+        }
+    }
+
+    /// Test hook: force a resize evaluation now, ignoring
+    /// `RESIZE_INTERVAL` (still requires `MIN_SAMPLES` and a target).
+    #[doc(hidden)]
+    pub fn resize_now(&self) {
+        let mut inner = self.lock();
+        self.maybe_resize(&mut inner, Instant::now(), true);
+    }
+}
+
+/// An admitted request's capacity claim.  Carried inside the
+/// `InferRequest` through the batcher and executor; dropping it — after
+/// the reply send, on failure, or when the request is discarded at
+/// shutdown — releases the claim exactly once.
+pub struct AdmissionTicket {
+    ctl: Arc<AdmissionController>,
+    pool: Pool,
+    acquired: Instant,
+}
+
+impl fmt::Debug for AdmissionTicket {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "AdmissionTicket({:?})", self.pool)
+    }
+}
+
+impl Drop for AdmissionTicket {
+    fn drop(&mut self) {
+        self.ctl.release(self.pool, self.acquired);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_flip() -> AdmissionConfig {
+        AdmissionConfig { overload_after: Duration::from_millis(10), ..Default::default() }
+    }
+
+    #[test]
+    fn default_is_fixed_capacity_fifo() {
+        let ctl = AdmissionController::new(4, &AdmissionConfig::default());
+        let snap = ctl.snapshot();
+        assert_eq!(snap.capacity, 4);
+        assert_eq!(snap.capacity_min, 4);
+        assert_eq!(snap.capacity_max, 4);
+        assert_eq!(snap.mode, QueueMode::Fifo);
+        assert_eq!(snap.mode_flips, 0);
+        // resizing disabled: even a forced evaluation never moves it
+        let _tickets: Vec<_> = (0..4).map(|_| ctl.try_admit("m").unwrap()).collect();
+        ctl.resize_now();
+        assert_eq!(ctl.snapshot().capacity, 4);
+    }
+
+    #[test]
+    fn tickets_release_on_drop() {
+        let ctl = AdmissionController::new(4, &AdmissionConfig::default());
+        let mut held: Vec<_> = (0..4).map(|_| ctl.try_admit("m").unwrap()).collect();
+        let shed = ctl.try_admit("m").unwrap_err();
+        assert_eq!(shed.kind, ShedKind::Capacity);
+        assert!(shed.retry_after_ms >= 1);
+        held.pop(); // drop one → one slot frees
+        let again = ctl.try_admit("m").unwrap();
+        assert_eq!(ctl.snapshot().admitted, 4);
+        drop(again);
+        drop(held);
+        assert_eq!(ctl.snapshot().admitted, 0);
+    }
+
+    #[test]
+    fn quota_reserves_and_borrows() {
+        // capacity 4, "a" reserves 2 → free pool 2
+        let cfg = AdmissionConfig {
+            quotas: vec![("a".into(), 2)],
+            ..Default::default()
+        };
+        let ctl = AdmissionController::new(4, &cfg);
+        // an unquota'd tenant can only ever take the free pool
+        let b1 = ctl.try_admit("b").unwrap();
+        let b2 = ctl.try_admit("b").unwrap();
+        let shed = ctl.try_admit("b").unwrap_err();
+        assert_eq!(shed.kind, ShedKind::Capacity, "free pool gone, reservation untouchable");
+        // "a" still has its full reservation
+        let a1 = ctl.try_admit("a").unwrap();
+        let a2 = ctl.try_admit("a").unwrap();
+        let shed = ctl.try_admit("a").unwrap_err();
+        assert_eq!(shed.kind, ShedKind::Quota, "reservation + free pool both exhausted");
+        // a freed FREE ticket is borrowable by the quota'd model
+        drop(b1);
+        let a3 = ctl.try_admit("a").unwrap();
+        assert_eq!(ctl.snapshot().admitted, 4);
+        drop((a1, a2, a3, b2));
+        assert_eq!(ctl.snapshot().admitted, 0);
+    }
+
+    #[test]
+    fn reserved_release_returns_to_the_reservation() {
+        let cfg = AdmissionConfig { quotas: vec![("a".into(), 1)], ..Default::default() };
+        let ctl = AdmissionController::new(2, &cfg);
+        let a1 = ctl.try_admit("a").unwrap(); // reserved
+        let b1 = ctl.try_admit("b").unwrap(); // free
+        assert_eq!(ctl.try_admit("b").unwrap_err().kind, ShedKind::Capacity);
+        drop(a1); // frees the RESERVATION, not the free pool
+        assert_eq!(
+            ctl.try_admit("b").unwrap_err().kind,
+            ShedKind::Capacity,
+            "a released reserved ticket must not leak into the free pool"
+        );
+        let a2 = ctl.try_admit("a").unwrap();
+        drop((a2, b1));
+    }
+
+    #[test]
+    fn capacity_clamps_to_reservations() {
+        let cfg = AdmissionConfig { quotas: vec![("a".into(), 8)], ..Default::default() };
+        let ctl = AdmissionController::new(2, &cfg);
+        assert_eq!(ctl.snapshot().capacity, 8, "capacity grows to honor reservations");
+        ctl.force_capacity(1);
+        assert_eq!(ctl.snapshot().capacity, 8, "floor keeps quotas honorable");
+    }
+
+    #[test]
+    fn blocking_admit_waits_for_a_release() {
+        let ctl = AdmissionController::new(1, &AdmissionConfig::default());
+        let first = ctl.try_admit("m").unwrap();
+        let ctl2 = ctl.clone();
+        let flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag2 = flag.clone();
+        let waiter = std::thread::spawn(move || {
+            let t = ctl2.admit_blocking("m");
+            flag2.store(true, Ordering::SeqCst);
+            drop(t);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!flag.load(Ordering::SeqCst), "must block while the ticket is held");
+        drop(first);
+        waiter.join().unwrap();
+        assert!(flag.load(Ordering::SeqCst));
+        assert_eq!(ctl.snapshot().admitted, 0);
+    }
+
+    #[test]
+    fn sustained_saturation_flips_to_lifo_and_back() {
+        let ctl = AdmissionController::new(2, &quick_flip());
+        let held: Vec<_> = (0..2).map(|_| ctl.try_admit("m").unwrap()).collect();
+        assert!(ctl.try_admit("m").is_err());
+        assert_eq!(ctl.mode(), QueueMode::Fifo, "not saturated long enough yet");
+        std::thread::sleep(Duration::from_millis(20));
+        // the next attempt observes >10ms of continuous saturation
+        assert!(ctl.try_admit("m").is_err());
+        assert_eq!(ctl.mode(), QueueMode::Lifo);
+        assert_eq!(ctl.snapshot().mode_flips, 1);
+        // draining to ≤ half capacity flips back (releases drive it)
+        drop(held);
+        assert_eq!(ctl.mode(), QueueMode::Fifo);
+        assert_eq!(ctl.snapshot().mode_flips, 2);
+    }
+
+    #[test]
+    fn resize_shrinks_on_overshoot_and_grows_under_target() {
+        // target 1ms, every ticket held ~3ms → p95 overshoots → halve
+        let cfg = AdmissionConfig { latency_target_ms: 1, ..Default::default() };
+        let ctl = AdmissionController::new(8, &cfg);
+        for _ in 0..MIN_SAMPLES {
+            let t = ctl.try_admit("m").unwrap();
+            std::thread::sleep(Duration::from_millis(3));
+            drop(t);
+        }
+        ctl.resize_now();
+        let snap = ctl.snapshot();
+        assert_eq!(snap.capacity, 4, "p95 over target halves capacity");
+        assert_eq!(snap.capacity_min, 4);
+
+        // huge target, instant releases → additive growth, ceiling 4×
+        let cfg = AdmissionConfig { latency_target_ms: 60_000, ..Default::default() };
+        let ctl = AdmissionController::new(8, &cfg);
+        for _ in 0..MIN_SAMPLES {
+            drop(ctl.try_admit("m").unwrap());
+        }
+        ctl.resize_now();
+        let snap = ctl.snapshot();
+        assert_eq!(snap.capacity, 9, "additive increase: +max(1, 8/8)");
+        assert_eq!(snap.capacity_max, 9);
+        assert_eq!(snap.capacity_min, 8);
+    }
+
+    #[test]
+    fn retry_hint_tracks_observed_service_time() {
+        let ctl = AdmissionController::new(1, &AdmissionConfig::default());
+        let held = ctl.try_admit("m").unwrap();
+        // no samples yet → default hint
+        assert_eq!(ctl.try_admit("m").unwrap_err().retry_after_ms, DEFAULT_RETRY_MS);
+        drop(held);
+        let t = ctl.try_admit("m").unwrap();
+        std::thread::sleep(Duration::from_millis(8));
+        drop(t);
+        let held = ctl.try_admit("m").unwrap();
+        let hint = ctl.try_admit("m").unwrap_err().retry_after_ms;
+        assert!((1..=1000).contains(&hint), "hint {hint} out of range");
+        assert!(hint >= 4, "median of one ~8ms sample should hint ≥4ms, got {hint}");
+        drop(held);
+    }
+
+    #[test]
+    fn force_mode_counts_flips() {
+        let ctl = AdmissionController::new(4, &AdmissionConfig::default());
+        ctl.force_mode(QueueMode::Lifo);
+        ctl.force_mode(QueueMode::Lifo); // no-op
+        ctl.force_mode(QueueMode::Fifo);
+        assert_eq!(ctl.snapshot().mode_flips, 2);
+    }
+}

@@ -1,25 +1,37 @@
-//! Dynamic batching: group waiting requests **per model** up to
-//! `max_batch`, never holding a group's first request longer than
-//! `max_delay`.
+//! Dynamic batching: group waiting requests **per model**, emitting up
+//! to `max_batch` at a time and never holding a group's first request
+//! longer than `max_delay`.
 //!
 //! The decision logic lives in the pure [`BatchAssembler`] (unit- and
 //! property-tested without threads or clocks); the thread loop in
-//! `server.rs` just feeds it wall-clock events.
+//! `server.rs` just feeds it wall-clock events.  Since the admission
+//! rework (DESIGN.md §14) the assembler *is* the pipeline's backlog —
+//! groups may hold more than `max_batch` requests (tickets, not a
+//! bounded channel, bound the total) — which is what makes the
+//! overload [`QueueMode`] physically possible: the drain order over a
+//! real backlog is a policy choice, not a channel artifact.
 //!
 //! Guarantees (pinned by `rust/tests/proptests.rs`):
 //!
 //! * **No cross-model batch** — every emitted [`Batch`] holds requests
 //!   for exactly one model; traffic for other models never flushes it.
-//! * **FIFO within a model** — requests for one model are emitted in
-//!   arrival order, batch after batch.
+//! * **FIFO within a model in FIFO mode** — requests for one model are
+//!   emitted in arrival order, batch after batch.  In LIFO mode
+//!   ([`QueueMode::Lifo`], sustained overload) each drain takes the
+//!   *newest* `max_batch` waiters instead — bounding the tail latency
+//!   of the requests that complete — while the group's first (oldest)
+//!   request still anchors the deadline, so a starved old request
+//!   keeps the group eligible on every pass and everything admitted is
+//!   still delivered exactly once.
 //! * **Bounded hold** — each group's deadline is its first request's
-//!   arrival + `max_delay`; [`BatchAssembler::poll`] emits *every*
-//!   group whose deadline has passed (oldest deadline first), and
+//!   arrival + `max_delay`; [`BatchAssembler::pop_ready`] considers
+//!   every group that is full or expired, oldest deadline first, and
 //!   [`BatchAssembler::deadline`] reports the minimum deadline across
 //!   groups so the batcher thread always wakes in time.
-//! * **No request lost or duplicated** — `push`/`poll`/`flush` together
-//!   emit each request exactly once.
+//! * **No request lost or duplicated** — `push`/`pop_ready`/`flush`
+//!   together emit each request exactly once, in either mode.
 
+use crate::coordinator::admission::QueueMode;
 use crate::coordinator::request::InferRequest;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -49,18 +61,18 @@ pub struct Batch {
 /// accumulates per model instead of flushing on every model switch —
 /// the head-of-line-blocking fix that keeps mixed-tenant batches full.
 ///
-/// Map entries persist after a flush (the drained `Vec` stays keyed
-/// under its model, empty); an empty group is invisible to
-/// `deadline`/`poll`/`flush` and costs one map entry per model name
-/// ever seen.  The TCP front-end validates names against the served
-/// lineup before admission (`coordinator::net`), so remote peers
-/// cannot grow this map; in-process callers are the same trust domain
-/// as the code.
+/// Map entries persist after a drain (the emptied `Vec` stays keyed
+/// under its model); an empty group is invisible to
+/// `deadline`/`pop_ready`/`flush` and costs one map entry per model
+/// name ever seen.  The TCP front-end validates names against the
+/// served lineup before admission (`coordinator::net`), so remote
+/// peers cannot grow this map; in-process callers are the same trust
+/// domain as the code.
 #[derive(Debug)]
 pub struct BatchAssembler {
     policy: BatchPolicy,
-    /// model → FIFO of waiting requests; a non-empty group's deadline
-    /// is its first request's arrival + `max_delay`
+    /// model → arrival-ordered waiting requests; a non-empty group's
+    /// deadline is its first (oldest) request's arrival + `max_delay`
     pending: BTreeMap<String, Vec<InferRequest>>,
 }
 
@@ -79,28 +91,19 @@ impl BatchAssembler {
         self.pending.values().filter(|g| !g.is_empty()).count()
     }
 
-    /// Offer a request: it joins its model's pending group (created on
-    /// first arrival; the group's deadline is this request's arrival +
-    /// `max_delay`).  Returns the full batch iff this request filled
-    /// its group to `max_batch` — no other group is touched, so a model
-    /// switch in the arrival stream never flushes anyone early.
-    pub fn push(&mut self, req: InferRequest) -> Option<Batch> {
-        if !self.pending.contains_key(&req.model) {
-            self.pending.insert(req.model.clone(), Vec::new());
-        }
-        let cap = self.policy.max_batch;
-        let group = self.pending.get_mut(&req.model).expect("inserted above");
-        group.push(req);
-        if group.len() >= cap {
-            let requests = std::mem::take(group);
-            return Some(Batch { model: requests[0].model.clone(), requests });
-        }
-        None
+    /// Offer a request: it joins its model's group in arrival order
+    /// (created on first arrival; the group's deadline is its oldest
+    /// request's arrival + `max_delay`).  Never emits — draining is
+    /// [`BatchAssembler::pop_ready`]'s job, so the caller controls the
+    /// order (mode) and the pace (batch-queue backpressure).
+    pub fn push(&mut self, req: InferRequest) {
+        self.pending.entry(req.model.clone()).or_default().push(req);
     }
 
     /// The earliest deadline across all pending groups (each group's is
     /// its first request's arrival + `max_delay`), if any — the instant
-    /// the batcher thread must wake by.
+    /// the batcher thread must wake by.  A full group's deadline is
+    /// *now*: it is ready regardless of age.
     pub fn deadline(&self) -> Option<Instant> {
         self.pending
             .values()
@@ -108,48 +111,61 @@ impl BatchAssembler {
             .min()
     }
 
-    /// Emit **every** group whose deadline has passed at `now`, oldest
-    /// deadline first.  (A single-group poll could only ever flush one
-    /// model per wakeup, starving the rest under mixed traffic.)
-    pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
-        self.drain_due(Some(now))
-    }
-
-    /// Unconditionally emit every pending group (shutdown path), oldest
-    /// deadline first.
-    pub fn flush(&mut self) -> Vec<Batch> {
-        self.drain_due(None)
-    }
-
-    /// Drain every group whose deadline is `<= cutoff` (`None` = all),
-    /// oldest deadline first.
-    fn drain_due(&mut self, cutoff: Option<Instant>) -> Vec<Batch> {
-        let mut due: Vec<(Instant, String)> = self
+    /// Emit the next ready batch at `now`, or `None` when no group is
+    /// full or expired.  Among ready groups the oldest deadline wins
+    /// (no model waits on another's traffic — call again to drain the
+    /// rest).  `mode` picks which end of the group a batch comes from:
+    /// FIFO takes the oldest `max_batch` waiters, LIFO the newest.
+    /// Either way the group keeps arrival order internally, and in
+    /// LIFO the oldest request stays put anchoring the deadline — so
+    /// an overloaded group is re-eligible on every pass and nothing is
+    /// ever stranded.
+    pub fn pop_ready(&mut self, now: Instant, mode: QueueMode) -> Option<Batch> {
+        let model = self
             .pending
             .iter()
             .filter_map(|(m, g)| {
-                // cutoff check before the name clone: the common
-                // nothing-due poll allocates nothing
-                let d = g.first()?.enqueued + self.policy.max_delay;
-                if cutoff.is_some_and(|now| d > now) {
-                    return None;
+                let first = g.first()?;
+                let deadline = first.enqueued + self.policy.max_delay;
+                if g.len() >= self.policy.max_batch || deadline <= now {
+                    Some((deadline, m))
+                } else {
+                    None
                 }
-                Some((d, m.clone()))
             })
-            .collect();
-        due.sort_by_key(|(d, _)| *d);
-        due.into_iter().filter_map(|(_, m)| self.take(&m)).collect()
+            .min()
+            .map(|(_, m)| m.clone())?;
+        let group = self.pending.get_mut(&model).expect("ready group exists");
+        let take = self.policy.max_batch.min(group.len()).max(1);
+        let requests = match mode {
+            // oldest-first: split the tail off, keep it pending
+            QueueMode::Fifo => {
+                let rest = group.split_off(take);
+                std::mem::replace(group, rest)
+            }
+            // newest-first: take the tail, the old backlog keeps waiting
+            // (and keeps the group's deadline expired)
+            QueueMode::Lifo => {
+                let at = group.len() - take;
+                group.split_off(at)
+            }
+        };
+        Some(Batch { model, requests })
     }
 
-    /// Drain one model's group into a batch; `None` if it has nothing
-    /// waiting.
-    fn take(&mut self, model: &str) -> Option<Batch> {
-        let group = self.pending.get_mut(model)?;
-        if group.is_empty() {
-            return None;
+    /// Unconditionally drain every pending group (shutdown path) into
+    /// `max_batch`-sized FIFO batches.
+    pub fn flush(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (model, group) in self.pending.iter_mut() {
+            while !group.is_empty() {
+                let take = self.policy.max_batch.min(group.len());
+                let rest = group.split_off(take);
+                let requests = std::mem::replace(group, rest);
+                out.push(Batch { model: model.clone(), requests });
+            }
         }
-        let requests = std::mem::take(group);
-        Some(Batch { model: requests[0].model.clone(), requests })
+        out
     }
 }
 
@@ -160,20 +176,38 @@ mod tests {
 
     fn req(id: u64, model: &str, t: Instant) -> InferRequest {
         let (tx, _rx) = channel();
-        InferRequest { id, model: model.into(), input: vec![0.0], enqueued: t, reply: tx }
+        InferRequest {
+            id,
+            model: model.into(),
+            input: vec![0.0],
+            enqueued: t,
+            reply: tx,
+            ticket: None,
+        }
     }
 
     fn policy(max_batch: usize, ms: u64) -> BatchPolicy {
         BatchPolicy { max_batch, max_delay: Duration::from_millis(ms) }
     }
 
+    /// Drain everything ready at `now` (what one batcher wakeup does).
+    fn drain(a: &mut BatchAssembler, now: Instant, mode: QueueMode) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while let Some(b) = a.pop_ready(now, mode) {
+            out.push(b);
+        }
+        out
+    }
+
     #[test]
-    fn fills_to_max_batch() {
+    fn full_group_is_ready_immediately() {
         let mut a = BatchAssembler::new(policy(3, 100));
         let t = Instant::now();
-        assert!(a.push(req(1, "tt", t)).is_none());
-        assert!(a.push(req(2, "tt", t)).is_none());
-        let batch = a.push(req(3, "tt", t)).expect("third request fills the group");
+        a.push(req(1, "tt", t));
+        a.push(req(2, "tt", t));
+        assert!(a.pop_ready(t, QueueMode::Fifo).is_none(), "2 < max_batch and not expired");
+        a.push(req(3, "tt", t));
+        let batch = a.pop_ready(t, QueueMode::Fifo).expect("third request fills the group");
         assert_eq!(batch.requests.len(), 3);
         assert_eq!(a.pending_len(), 0);
     }
@@ -183,12 +217,11 @@ mod tests {
         let mut a = BatchAssembler::new(policy(10, 5));
         let t0 = Instant::now();
         a.push(req(1, "tt", t0));
-        assert!(a.poll(t0).is_empty()); // too early
+        assert!(a.pop_ready(t0, QueueMode::Fifo).is_none()); // too early
         let late = t0 + Duration::from_millis(6);
-        let batches = a.poll(late);
-        assert_eq!(batches.len(), 1);
-        assert_eq!(batches[0].requests.len(), 1);
-        assert!(a.poll(late).is_empty()); // nothing left
+        let batch = a.pop_ready(late, QueueMode::Fifo).expect("expired group is ready");
+        assert_eq!(batch.requests.len(), 1);
+        assert!(a.pop_ready(late, QueueMode::Fifo).is_none()); // nothing left
     }
 
     #[test]
@@ -197,16 +230,12 @@ mod tests {
         // stream must NOT flush a group on every model switch
         let mut a = BatchAssembler::new(policy(3, 100));
         let t = Instant::now();
-        assert!(a.push(req(1, "tt", t)).is_none());
-        assert!(a.push(req(2, "fc", t)).is_none(), "model switch must not flush");
-        assert!(a.push(req(3, "tt", t)).is_none());
-        assert!(a.push(req(4, "fc", t)).is_none());
-        let batch = a.push(req(5, "tt", t)).expect("tt group filled to 3");
+        for (id, m) in [(1, "tt"), (2, "fc"), (3, "tt"), (4, "fc"), (5, "tt")] {
+            a.push(req(id, m, t));
+        }
+        let batch = a.pop_ready(t, QueueMode::Fifo).expect("tt group filled to 3");
         assert_eq!(batch.model, "tt");
-        assert_eq!(
-            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
-            vec![1, 3, 5]
-        );
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 5]);
         assert_eq!(a.pending_len(), 2); // both fc requests still waiting
         assert_eq!(a.pending_models(), 1);
     }
@@ -215,10 +244,10 @@ mod tests {
     fn no_batch_ever_mixes_models() {
         let mut a = BatchAssembler::new(policy(2, 100));
         let t = Instant::now();
-        let mut batches = Vec::new();
         for (id, m) in [(1, "x"), (2, "y"), (3, "x"), (4, "y")] {
-            batches.extend(a.push(req(id, m, t)));
+            a.push(req(id, m, t));
         }
+        let mut batches = drain(&mut a, t, QueueMode::Fifo);
         batches.extend(a.flush());
         assert_eq!(batches.len(), 2);
         for b in &batches {
@@ -233,21 +262,21 @@ mod tests {
         a.push(req(1, "late", t0 + Duration::from_millis(5)));
         a.push(req(2, "early", t0));
         assert_eq!(a.deadline(), Some(t0 + Duration::from_millis(10)));
-        // polling at the early group's deadline flushes only that group
-        let batches = a.poll(t0 + Duration::from_millis(10));
-        assert_eq!(batches.len(), 1);
-        assert_eq!(batches[0].model, "early");
+        // popping at the early group's deadline drains only that group
+        let batch = a.pop_ready(t0 + Duration::from_millis(10), QueueMode::Fifo).unwrap();
+        assert_eq!(batch.model, "early");
+        assert!(a.pop_ready(t0 + Duration::from_millis(10), QueueMode::Fifo).is_none());
         assert_eq!(a.deadline(), Some(t0 + Duration::from_millis(15)));
     }
 
     #[test]
-    fn poll_emits_every_expired_group_oldest_first() {
+    fn drain_emits_every_expired_group_oldest_first() {
         let mut a = BatchAssembler::new(policy(10, 10));
         let t0 = Instant::now();
         a.push(req(1, "b_second", t0 + Duration::from_millis(2)));
         a.push(req(2, "a_first", t0));
-        let batches = a.poll(t0 + Duration::from_millis(20));
-        assert_eq!(batches.len(), 2, "one wakeup must flush every expired group");
+        let batches = drain(&mut a, t0 + Duration::from_millis(20), QueueMode::Fifo);
+        assert_eq!(batches.len(), 2, "one wakeup must drain every expired group");
         assert_eq!(batches[0].model, "a_first"); // oldest deadline first
         assert_eq!(batches[1].model, "b_second");
         assert_eq!(a.pending_len(), 0);
@@ -257,10 +286,10 @@ mod tests {
     fn fifo_within_model_across_batches() {
         let mut a = BatchAssembler::new(policy(2, 100));
         let t = Instant::now();
-        let mut emitted = Vec::new();
         for id in 1..=5 {
-            emitted.extend(a.push(req(id, "tt", t)));
+            a.push(req(id, "tt", t));
         }
+        let mut emitted = drain(&mut a, t, QueueMode::Fifo);
         emitted.extend(a.flush());
         let ids: Vec<u64> =
             emitted.iter().flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
@@ -268,16 +297,74 @@ mod tests {
     }
 
     #[test]
-    fn flush_emits_all_groups() {
-        let mut a = BatchAssembler::new(policy(10, 1));
+    fn lifo_takes_the_newest_and_strands_nobody() {
+        // 5 backlogged requests, max_batch 2: LIFO drains newest-first
+        // — [4,5], [2,3], [1] — each batch internally arrival-ordered,
+        // every request delivered exactly once
+        let mut a = BatchAssembler::new(policy(2, 0));
+        let t = Instant::now();
+        for id in 1..=5 {
+            a.push(req(id, "tt", t));
+        }
+        let now = t + Duration::from_millis(1);
+        let batches = drain(&mut a, now, QueueMode::Lifo);
+        let ids: Vec<Vec<u64>> = batches
+            .iter()
+            .map(|b| b.requests.iter().map(|r| r.id).collect())
+            .collect();
+        assert_eq!(ids, vec![vec![4, 5], vec![2, 3], vec![1]]);
+        assert_eq!(a.pending_len(), 0);
+    }
+
+    #[test]
+    fn lifo_keeps_the_oldest_request_anchoring_the_deadline() {
+        let mut a = BatchAssembler::new(policy(2, 10));
+        let t0 = Instant::now();
+        for id in 1..=4 {
+            a.push(req(id, "tt", t0));
+        }
+        // group is full → ready now; LIFO takes the newest two
+        let b = a.pop_ready(t0, QueueMode::Lifo).unwrap();
+        assert_eq!(b.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 4]);
+        // the remainder [1,2] is only half-full, but request 1 still
+        // holds the original deadline — it cannot be starved past it
+        assert_eq!(a.deadline(), Some(t0 + Duration::from_millis(10)));
+        assert!(a.pop_ready(t0, QueueMode::Lifo).is_none());
+        let b = a.pop_ready(t0 + Duration::from_millis(10), QueueMode::Lifo).unwrap();
+        assert_eq!(b.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn backlogged_group_drains_in_max_batch_chunks() {
+        // groups can exceed max_batch now (tickets bound the pipeline,
+        // not the group): a 7-deep backlog drains 3+3+1, never more
+        // than max_batch per batch
+        let mut a = BatchAssembler::new(policy(3, 100));
+        let t = Instant::now();
+        for id in 1..=7 {
+            a.push(req(id, "tt", t));
+        }
+        assert_eq!(a.pending_len(), 7);
+        let batches = drain(&mut a, t + Duration::from_millis(200), QueueMode::Fifo);
+        assert_eq!(
+            batches.iter().map(|b| b.requests.len()).collect::<Vec<_>>(),
+            vec![3, 3, 1]
+        );
+    }
+
+    #[test]
+    fn flush_emits_all_groups_in_chunks() {
+        let mut a = BatchAssembler::new(policy(2, 1));
         let t = Instant::now();
         a.push(req(1, "tt", t));
         a.push(req(2, "fc", t));
         a.push(req(3, "tt", t));
+        a.push(req(4, "tt", t));
         let batches = a.flush();
-        assert_eq!(batches.len(), 2);
+        assert_eq!(batches.len(), 3, "tt (3 deep) chunks into 2+1 at max_batch=2");
         let total: usize = batches.iter().map(|b| b.requests.len()).sum();
-        assert_eq!(total, 3);
+        assert_eq!(total, 4);
+        assert!(batches.iter().all(|b| b.requests.len() <= 2));
         assert!(a.flush().is_empty());
     }
 

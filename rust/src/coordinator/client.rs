@@ -18,10 +18,12 @@ use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
-/// True when `err` is the server's load-shed reply ([`ErrCode::Busy`],
-/// i.e. the admission queue was full) — retryable, unlike real failures.
+/// True when `err` is the server's load-shed reply ([`ErrCode::Busy`]
+/// or [`ErrCode::Quota`], i.e. admission capacity or this model's quota
+/// was exhausted) — retryable, unlike real failures.  The carried
+/// `retry_after_ms` (0 = none) is the server's backoff hint.
 pub fn is_busy(err: &Error) -> bool {
-    matches!(err, Error::Busy(_))
+    matches!(err, Error::Busy { .. })
 }
 
 /// A completed remote inference (the wire image of
@@ -50,6 +52,8 @@ pub struct RemoteStats {
     pub failed_workers: u64,
     pub batches: u64,
     pub batched_rows: u64,
+    /// subset of `rejected` shed against a per-model quota (v3)
+    pub quota_shed: u64,
     pub per_model: Vec<ModelStatsEntry>,
 }
 
@@ -200,7 +204,7 @@ impl Client {
                 }
                 Ok(RemoteResponse { id, output, queue_us, exec_us, batch_size: batch_size as usize })
             }
-            Frame::InferErr { id, code, message } => {
+            Frame::InferErr { id, code, message, retry_after_ms } => {
                 if id != 0 && id != want {
                     return Err(Error::Wire(format!(
                         "out-of-order error reply: got id {id}, expected {want}"
@@ -208,8 +212,12 @@ impl Client {
                 }
                 match code {
                     // typed, so callers classify load shedding without
-                    // parsing the display string (`is_busy`)
-                    ErrCode::Busy => Err(Error::Busy(message)),
+                    // parsing the display string (`is_busy`); both shed
+                    // kinds are retryable — the wire code plus server
+                    // stats carry the capacity-vs-quota distinction
+                    ErrCode::Busy | ErrCode::Quota => {
+                        Err(Error::Busy { message, retry_after_ms })
+                    }
                     ErrCode::BadRequest => Err(Error::Wire(format!("rejected: {message}"))),
                     ErrCode::Exec => Err(Error::Coordinator(message)),
                 }
@@ -241,6 +249,7 @@ impl Client {
                 failed_workers,
                 batches,
                 batched_rows,
+                quota_shed,
                 per_model,
             } => Ok(RemoteStats {
                 completed,
@@ -249,6 +258,7 @@ impl Client {
                 failed_workers,
                 batches,
                 batched_rows,
+                quota_shed,
                 per_model,
             }),
             other => Err(Error::Wire(format!("expected StatsReply, got {other:?}"))),

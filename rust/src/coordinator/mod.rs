@@ -23,11 +23,13 @@
 //!                                                                        executor + scratch)
 //! ```
 //!
-//! Admission is transport-agnostic (S12 in DESIGN.md): the TCP
+//! Admission is transport-agnostic (S12, S14 in DESIGN.md): the TCP
 //! front-end ([`NetServer`], wire protocol in [`wire`], blocking client
-//! in [`Client`]) and in-process callers share the same bounded
-//! admission queue, backpressure ([`Admission::Busy`]) and
-//! [`ServerStats`].
+//! in [`Client`]) and in-process callers draw tickets from the same
+//! [`AdmissionController`] — dynamic capacity, per-model quotas,
+//! FIFO→LIFO overload scheduling — and share backpressure
+//! ([`Admission::Busy`], typed capacity-vs-quota sheds with retry
+//! hints) and [`ServerStats`].
 //!
 //! Above a single process, [`ShardRouter`] (DESIGN.md §13) fronts N
 //! `serve --listen` daemons over the same wire protocol: placement is
@@ -35,6 +37,7 @@
 //! replicated models dispatch least-loaded, and a dead shard fails over
 //! with typed errors while survivors keep serving.
 
+mod admission;
 mod batcher;
 mod client;
 mod native;
@@ -45,6 +48,10 @@ mod server;
 pub mod wire;
 mod worker;
 
+pub use admission::{
+    AdmissionConfig, AdmissionController, AdmissionSnapshot, AdmissionTicket, QueueMode, ShedInfo,
+    ShedKind,
+};
 pub use batcher::{Batch, BatchAssembler, BatchPolicy};
 pub use client::{is_busy, Client, RemoteResponse, RemoteStats};
 pub use native::{ModelRegistry, ModelSpec, NativeExecutor};

@@ -27,9 +27,10 @@
 //! Replies are written strictly in request order per connection — only
 //! the *head* of the outbound queue may settle, so a slow request holds
 //! back later replies on its own connection (the client relies on
-//! in-order delivery) but never any other connection.  A full admission
-//! queue becomes an immediate `Busy` reply, counted in
-//! `ServerStats::rejected` like every other transport.
+//! in-order delivery) but never any other connection.  An admission
+//! shed becomes an immediate `Busy`/`Quota` reply carrying the
+//! controller's retry-after hint, counted in `ServerStats::rejected`
+//! (and `quota_shed` for the quota kind) like every other transport.
 //!
 //! A malformed frame (bad magic/version/checksum, unknown type,
 //! truncation) gets a best-effort `InferErr`/`BadRequest` reply and
@@ -40,6 +41,7 @@
 //! instead of planting permanent batcher-group / per-model-stats
 //! entries keyed by attacker-chosen bytes.
 
+use crate::coordinator::admission::ShedKind;
 use crate::coordinator::server::{Admission, Server};
 use crate::coordinator::wire::{self, ErrCode, Frame, ModelInfo};
 use crate::error::{Error, Result};
@@ -60,7 +62,12 @@ const POLL: Duration = Duration::from_millis(25);
 /// price of a std-only reactor (no epoll): a short doze instead of a
 /// readiness wakeup.  500µs keeps idle CPU negligible while adding at
 /// most half a millisecond to request latency — well under the
-/// batcher's own `max_delay`.
+/// batcher's own `max_delay`.  The doze is *skipped* when a connection
+/// has undelivered replies and an admission ticket was released since
+/// the last sweep (`AdmissionController::release_epoch`) — a release
+/// means a reply just became settleable, so the next sweep should run
+/// immediately instead of taxing every request with a stale half-
+/// millisecond nap.
 const IDLE_TICK: Duration = Duration::from_micros(500);
 
 /// Most bytes pulled off one socket per sweep, so a firehosing client
@@ -135,6 +142,15 @@ struct Conn {
 }
 
 impl Conn {
+    /// True while this connection still owes the peer bytes: queued
+    /// replies (settled or in flight behind the executor) or a
+    /// partially-written output buffer.  The reactor uses this to decide
+    /// whether a released admission ticket warrants skipping the idle
+    /// doze — an all-drained connection gains nothing from a re-sweep.
+    fn has_pending_work(&self) -> bool {
+        !self.outbound.is_empty() || self.wpos < self.wbuf.len()
+    }
+
     fn new(stream: TcpStream, peer: SocketAddr) -> Option<Conn> {
         if stream.set_nonblocking(true).is_err() {
             return None;
@@ -230,6 +246,7 @@ impl Conn {
                             "connection closed mid-frame with {} bytes buffered",
                             self.decoder.pending()
                         ),
+                        retry_after_ms: 0,
                     }));
                     self.phase = Phase::Closing;
                 } else {
@@ -263,6 +280,7 @@ impl Conn {
                                 id: 0,
                                 code: ErrCode::BadRequest,
                                 message: format!("{e}"),
+                                retry_after_ms: 0,
                             }));
                             self.phase = Phase::Closing;
                             break;
@@ -306,6 +324,7 @@ impl Conn {
                             id: *id,
                             code: ErrCode::Exec,
                             message: format!("{e}"),
+                            retry_after_ms: 0,
                         },
                     }),
                 },
@@ -556,6 +575,9 @@ fn io_loop(
 ) {
     let mut conns: Vec<Conn> = Vec::new();
     let mut stop_deadline: Option<Instant> = None;
+    // admission release epoch observed by the previous sweep; a bump
+    // means some ticket released (a reply became settleable) since then
+    let mut last_epoch = server.admission().release_epoch();
     loop {
         let stopping = stop.load(Ordering::SeqCst);
         if stopping && stop_deadline.is_none() {
@@ -608,7 +630,18 @@ fn io_loop(
             }
         }
         if !progress && !conns.is_empty() {
-            std::thread::sleep(IDLE_TICK);
+            // doze only when nothing is about to become settleable: if a
+            // connection still owes replies AND a ticket was released
+            // since the last sweep, re-sweep immediately — the head of
+            // some outbound queue is likely ready now.  With no pending
+            // work (or no release), the doze costs nothing but bounds
+            // the spin on slow peers and in-flight executions.
+            let epoch = server.admission().release_epoch();
+            let owed = conns.iter().any(Conn::has_pending_work);
+            if !(owed && epoch != last_epoch) {
+                std::thread::sleep(IDLE_TICK);
+            }
+            last_epoch = epoch;
         }
     }
 }
@@ -642,20 +675,33 @@ fn dispatch(
                     id,
                     code: ErrCode::Exec,
                     message: format!("unknown model '{model}' (served: {})", served.join(", ")),
+                    retry_after_ms: 0,
                 }));
                 return true;
             }
             let reply = match server.admit(&model, input) {
                 Ok(Admission::Queued(rx)) => Outbound::Pending { id, rx },
-                Ok(Admission::Busy) => Outbound::Ready(Frame::InferErr {
+                // typed shed: the wire code tells the client whether the
+                // whole server was saturated (Busy) or only this model's
+                // quota (Quota), and the hint tells it how long to back
+                // off before retrying
+                Ok(Admission::Busy(info)) => Outbound::Ready(Frame::InferErr {
                     id,
-                    code: ErrCode::Busy,
-                    message: "admission queue full".into(),
+                    code: match info.kind {
+                        ShedKind::Capacity => ErrCode::Busy,
+                        ShedKind::Quota => ErrCode::Quota,
+                    },
+                    message: match info.kind {
+                        ShedKind::Capacity => "admission queue full".into(),
+                        ShedKind::Quota => "model quota exceeded".into(),
+                    },
+                    retry_after_ms: info.retry_after_ms,
                 }),
                 Err(e) => Outbound::Ready(Frame::InferErr {
                     id,
                     code: ErrCode::Exec,
                     message: format!("{e}"),
+                    retry_after_ms: 0,
                 }),
             };
             outbound.push_back(reply);
@@ -675,6 +721,7 @@ fn dispatch(
                     errors: m.errors.get(),
                     batches: m.batches.get(),
                     batched_rows: m.batched_rows.get(),
+                    shed: m.shed.get(),
                 })
                 .collect();
             outbound.push_back(Outbound::Ready(Frame::StatsReply {
@@ -684,6 +731,7 @@ fn dispatch(
                 failed_workers: st.failed_workers.get(),
                 batches: st.batches.get(),
                 batched_rows: st.batched_rows.get(),
+                quota_shed: st.quota_shed.get(),
                 per_model,
             }));
             true
@@ -711,6 +759,7 @@ fn dispatch(
                 id: 0,
                 code: ErrCode::BadRequest,
                 message: format!("unexpected reply-type frame {} sent to server", other.kind()),
+                retry_after_ms: 0,
             }));
             false
         }

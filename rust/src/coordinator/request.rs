@@ -1,5 +1,6 @@
 //! Request / response types crossing the coordinator's queues.
 
+use crate::coordinator::admission::AdmissionTicket;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
@@ -14,6 +15,11 @@ pub struct InferRequest {
     pub enqueued: Instant,
     /// per-request reply channel (`Err` carries a failure message)
     pub reply: Sender<Result<InferResponse, String>>,
+    /// the admission claim this request holds; released (RAII) when the
+    /// request is dropped — after the reply send, on failure, or when
+    /// discarded at shutdown.  `None` only in unit tests that exercise
+    /// the batcher without a controller.
+    pub ticket: Option<AdmissionTicket>,
 }
 
 /// The response delivered back to the caller.

@@ -444,6 +444,7 @@ impl ShardLink {
                     id: down_id,
                     code: ErrCode::Exec,
                     message: format!("shard {} failed mid-request: {why}", self.shard.addr),
+                    retry_after_ms: 0,
                 });
             }
         }
@@ -483,6 +484,7 @@ fn settle(
                 failed_workers,
                 batches,
                 batched_rows,
+                quota_shed,
                 per_model,
             } => {
                 *shard.last_poll.lock().unwrap() = Some(RemoteStats {
@@ -492,6 +494,7 @@ fn settle(
                     failed_workers,
                     batches,
                     batched_rows,
+                    quota_shed,
                     per_model,
                 });
                 Ok(())
@@ -526,15 +529,20 @@ fn settle(
                     });
                     Ok(())
                 }
-                Frame::InferErr { id, code, message } => {
+                Frame::InferErr { id, code, message, retry_after_ms } => {
                     // id 0 = the shard couldn't attribute the error
                     if id != 0 && id != up_id {
-                        let f = Frame::InferErr { id, code, message };
+                        let f = Frame::InferErr { id, code, message, retry_after_ms };
                         return Err(reorder(pending, &f, up_id, down_id, model, slot));
                     }
                     shard.in_flight.fetch_sub(1, Ordering::Relaxed);
                     match code {
-                        ErrCode::Busy => {
+                        // both shed kinds are retryable backpressure,
+                        // not failures; the reply (with the shard's
+                        // retry hint) passes through untouched so the
+                        // client sees the same typed signal it would
+                        // against the shard directly
+                        ErrCode::Busy | ErrCode::Quota => {
                             shard.busy.inc();
                             stats.busy.inc();
                             stats.model(&model).busy.inc();
@@ -545,7 +553,12 @@ fn settle(
                             stats.model(&model).errors.inc();
                         }
                     }
-                    slot.borrow_mut().replace(Frame::InferErr { id: down_id, code, message });
+                    slot.borrow_mut().replace(Frame::InferErr {
+                        id: down_id,
+                        code,
+                        message,
+                        retry_after_ms,
+                    });
                     Ok(())
                 }
                 other => Err(reorder(pending, &other, up_id, down_id, model, slot)),
@@ -591,6 +604,7 @@ fn dispatch(frame: Frame, outbound: &mut VecDeque<Outbound>, ctx: &mut Ctx) -> b
                     id,
                     code: ErrCode::Exec,
                     message: format!("unknown model '{model}' (served: {})", served.join(", ")),
+                    retry_after_ms: 0,
                 }));
                 return true;
             }
@@ -603,6 +617,7 @@ fn dispatch(frame: Frame, outbound: &mut VecDeque<Outbound>, ctx: &mut Ctx) -> b
                     id,
                     code: ErrCode::Exec,
                     message: format!("no live shard serves '{model}'"),
+                    retry_after_ms: 0,
                 }));
                 return true;
             };
@@ -614,6 +629,7 @@ fn dispatch(frame: Frame, outbound: &mut VecDeque<Outbound>, ctx: &mut Ctx) -> b
                     id,
                     code: ErrCode::Exec,
                     message: format!("forward to shard {} failed", ctx.shards[si].addr),
+                    retry_after_ms: 0,
                 }));
             }
             true
@@ -627,6 +643,7 @@ fn dispatch(frame: Frame, outbound: &mut VecDeque<Outbound>, ctx: &mut Ctx) -> b
                 failed_workers: s.failed_workers,
                 batches: s.batches,
                 batched_rows: s.batched_rows,
+                quota_shed: s.quota_shed,
                 per_model: s.per_model,
             }));
             true
@@ -651,6 +668,7 @@ fn dispatch(frame: Frame, outbound: &mut VecDeque<Outbound>, ctx: &mut Ctx) -> b
                 id: 0,
                 code: ErrCode::BadRequest,
                 message: format!("unexpected reply-type frame {} sent to router", other.kind()),
+                retry_after_ms: 0,
             }));
             false
         }
@@ -658,7 +676,12 @@ fn dispatch(frame: Frame, outbound: &mut VecDeque<Outbound>, ctx: &mut Ctx) -> b
 }
 
 /// The merged stats picture the router serves downstream: router-side
-/// counters for request outcomes, shard-poll sums for batching depth.
+/// counters for request outcomes, shard-poll sums for batching depth
+/// and admission sheds.  `rejected` is the router's own observation
+/// (Busy/Quota replies it forwarded); `quota_shed` and per-model `shed`
+/// come from the shard polls only — the shards' admission controllers
+/// are the source of truth for *why* a request was shed, and a shard
+/// may also shed traffic that arrived around the router.
 fn stats_snapshot(stats: &RouterStats, shards: &[Arc<ShardInfo>]) -> RemoteStats {
     let mut per: BTreeMap<String, ModelStatsEntry> = BTreeMap::new();
     for (name, m) in stats.per_model_snapshot() {
@@ -670,11 +693,13 @@ fn stats_snapshot(stats: &RouterStats, shards: &[Arc<ShardInfo>]) -> RemoteStats
                 errors: m.errors.get(),
                 batches: 0,
                 batched_rows: 0,
+                shed: 0,
             },
         );
     }
     let mut batches = 0u64;
     let mut batched_rows = 0u64;
+    let mut quota_shed = 0u64;
     let mut failed_workers = 0u64;
     for sh in shards {
         if !sh.healthy.load(Ordering::SeqCst) {
@@ -685,6 +710,7 @@ fn stats_snapshot(stats: &RouterStats, shards: &[Arc<ShardInfo>]) -> RemoteStats
         if let Some(poll) = sh.last_poll.lock().unwrap().as_ref() {
             batches += poll.batches;
             batched_rows += poll.batched_rows;
+            quota_shed += poll.quota_shed;
             for pm in &poll.per_model {
                 let e = per.entry(pm.name.clone()).or_insert_with(|| ModelStatsEntry {
                     name: pm.name.clone(),
@@ -692,6 +718,7 @@ fn stats_snapshot(stats: &RouterStats, shards: &[Arc<ShardInfo>]) -> RemoteStats
                 });
                 e.batches += pm.batches;
                 e.batched_rows += pm.batched_rows;
+                e.shed += pm.shed;
             }
         }
     }
@@ -702,6 +729,7 @@ fn stats_snapshot(stats: &RouterStats, shards: &[Arc<ShardInfo>]) -> RemoteStats
         failed_workers,
         batches,
         batched_rows,
+        quota_shed,
         per_model: per.into_values().collect(),
     }
 }
@@ -789,6 +817,7 @@ impl DownConn {
                             "connection closed mid-frame with {} bytes buffered",
                             self.decoder.pending()
                         ),
+                        retry_after_ms: 0,
                     }));
                     self.phase = Phase::Closing;
                 } else {
@@ -813,6 +842,7 @@ impl DownConn {
                                 id: 0,
                                 code: ErrCode::BadRequest,
                                 message: format!("{e}"),
+                                retry_after_ms: 0,
                             }));
                             self.phase = Phase::Closing;
                             break;
@@ -1340,12 +1370,14 @@ mod tests {
                 failed_workers: 0,
                 batches: 4,
                 batched_rows: 9,
+                quota_shed: 3,
                 per_model: vec![ModelStatsEntry {
                     name: "a".into(),
                     completed: 9,
                     errors: 0,
                     batches: 4,
                     batched_rows: 9,
+                    shed: 5,
                 }],
             })),
         });
@@ -1356,10 +1388,12 @@ mod tests {
         assert_eq!(s.failed_workers, 1, "one unhealthy shard");
         assert_eq!(s.batches, 4, "batch depth comes from shard polls");
         assert_eq!(s.batched_rows, 9);
+        assert_eq!(s.quota_shed, 3, "quota sheds come from shard polls");
         let a = s.per_model.iter().find(|m| m.name == "a").unwrap();
         assert_eq!((a.completed, a.errors, a.batches, a.batched_rows), (7, 1, 4, 9));
+        assert_eq!(a.shed, 5, "per-model sheds come from shard polls");
         let b = s.per_model.iter().find(|m| m.name == "b").unwrap();
-        assert_eq!((b.completed, b.batches), (3, 0));
+        assert_eq!((b.completed, b.batches, b.shed), (3, 0, 0));
     }
 
     #[test]
@@ -1409,14 +1443,15 @@ mod tests {
         settle(
             &mut pending,
             &shard,
-            Frame::InferErr { id: 2, code: ErrCode::Busy, message: "full".into() },
+            Frame::InferErr { id: 2, code: ErrCode::Busy, message: "full".into(), retry_after_ms: 9 },
             &stats,
         )
         .unwrap();
         match s2.borrow().as_ref() {
-            Some(Frame::InferErr { id, code, .. }) => {
+            Some(Frame::InferErr { id, code, retry_after_ms, .. }) => {
                 assert_eq!(*id, 99);
                 assert_eq!(*code, ErrCode::Busy);
+                assert_eq!(*retry_after_ms, 9, "the shard's retry hint passes through");
             }
             other => panic!("slot 2: {other:?}"),
         }

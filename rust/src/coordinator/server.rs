@@ -1,19 +1,26 @@
-//! The serving front-end: admission queue → batcher thread → executor
+//! The serving front-end: admission tickets → batcher thread → executor
 //! worker pool → per-request replies, with latency/throughput metrics.
 //!
 //! ```text
-//!                                                     ┌► tn-executor-0 ─┐
-//! callers ── admission queue ──► tn-batcher ── batch ──┼► tn-executor-1 ─┼─► replies
-//!             (bounded; admit       (max_batch /  queue └► tn-executor-N ─┘
-//!              sheds when full)      max_delay)
+//!          tickets                                      ┌► tn-executor-0 ─┐
+//! callers ── admission ──► tn-batcher ────── batch ──────┼► tn-executor-1 ─┼─► replies
+//!            controller     (max_batch / max_delay, queue └► tn-executor-N ─┘   (ticket
+//!            (capacity /     FIFO or LIFO drain                                released
+//!             quotas; sheds  under overload)                                   on drop)
+//!             when out of tickets)
 //! ```
 //!
 //! Admission is transport-agnostic: in-process callers ([`Server::infer`]
 //! / [`Server::try_infer`]) and the TCP front-end's per-connection
-//! readers (`coordinator::net`) feed the same bounded queue through
-//! [`Server::admit`], so backpressure ([`Admission::Busy`] → a `Busy`
-//! wire reply instead of a hang) and [`ServerStats`] are shared across
-//! every way into the server.
+//! readers (`coordinator::net`) acquire tickets from the same
+//! [`AdmissionController`] (DESIGN.md §14) through [`Server::admit`],
+//! so backpressure ([`Admission::Busy`] → a typed `Busy` wire reply
+//! with a retry hint instead of a hang) and [`ServerStats`] are shared
+//! across every way into the server.  The ticket rides inside the
+//! request and is released by RAII when the request is dropped — after
+//! the reply send, on failure, or when discarded at shutdown — so the
+//! outstanding-ticket count bounds the *whole* pipeline (the admission
+//! channel itself is unbounded).
 //!
 //! The batch queue is a single `mpsc` receiver shared by all workers
 //! behind a mutex (the std-only stand-in for a multi-consumer channel).
@@ -21,6 +28,9 @@
 //! its own thread*, so non-`Send` executors (PJRT handles) stay
 //! thread-confined and every worker owns its scratch buffers.
 
+use crate::coordinator::admission::{
+    AdmissionConfig, AdmissionController, AdmissionTicket, ShedInfo, ShedKind,
+};
 use crate::coordinator::batcher::{Batch, BatchAssembler, BatchPolicy};
 use crate::coordinator::request::{InferRequest, InferResponse};
 use crate::coordinator::worker::BatchExecutor;
@@ -29,7 +39,8 @@ use crate::metrics::{Counter, Histogram, Meter};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+    TrySendError,
 };
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -38,8 +49,12 @@ use std::time::{Duration, Instant};
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub policy: BatchPolicy,
-    /// admission queue bound — beyond this, `try_infer` rejects
-    /// (backpressure instead of unbounded memory growth)
+    /// initial admission-ticket capacity — the bound on requests in
+    /// flight anywhere in the pipeline (queue + batcher backlog +
+    /// executing); beyond it `try_infer`/`admit` shed (backpressure
+    /// instead of unbounded memory growth).  With
+    /// `admission.latency_target_ms` set this is only the starting
+    /// point: capacity then tracks observed latency.
     pub queue_capacity: usize,
     /// bound on formed batches waiting for the executor pool
     pub batch_queue_capacity: usize,
@@ -53,6 +68,9 @@ pub struct ServerConfig {
     /// `num_threads() / executor_threads`, at least 1 — so pool
     /// parallelism × kernel parallelism never oversubscribes the box.
     pub kernel_threads: usize,
+    /// adaptive-admission knobs (latency target, quotas, overload
+    /// flip).  The default is behaviorally the fixed bounded queue.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServerConfig {
@@ -63,6 +81,7 @@ impl Default for ServerConfig {
             batch_queue_capacity: 8,
             executor_threads: 1,
             kernel_threads: 0,
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -93,6 +112,9 @@ pub struct ModelStats {
     pub errors: Counter,
     pub batches: Counter,
     pub batched_rows: Counter,
+    /// admission sheds for this model — both kinds: out of global
+    /// capacity, or past its quota with the free pool exhausted
+    pub shed: Counter,
     /// wall-clock enqueue → reply receipt for this model's requests
     pub e2e: Histogram,
 }
@@ -119,7 +141,12 @@ pub struct ServerStats {
     /// enqueue → execution start (admission + batching + batch-queue wait)
     pub queue: Histogram,
     pub completed: Counter,
+    /// total admission sheds (every kind; `quota_shed` is the subset)
     pub rejected: Counter,
+    /// sheds typed [`ShedKind::Quota`]: the model exhausted its
+    /// reservation AND the free pool — other tenants' reservations are
+    /// what stopped it (subset of `rejected`)
+    pub quota_shed: Counter,
     pub errors: Counter,
     /// executor workers whose init failed (pool running degraded if
     /// fewer than `executor_threads` remain)
@@ -192,19 +219,26 @@ pub enum Admission {
     /// Admitted — await the receiver (via [`Server::await_reply`], which
     /// also records true e2e latency).
     Queued(ReplyReceiver),
-    /// Admission queue full: load shed (already counted in
-    /// [`ServerStats::rejected`]).  Transports turn this into a `Busy`
-    /// wire reply; in-process callers into an error.
-    Busy,
+    /// Out of tickets: load shed (already counted in
+    /// [`ServerStats::rejected`] and the model's
+    /// [`ModelStats::shed`]).  The [`ShedInfo`] says which kind —
+    /// global capacity vs this model's quota — and how long to back
+    /// off.  Transports turn this into a typed `Busy`/`Quota` wire
+    /// reply; in-process callers into [`Error::Busy`].
+    Busy(ShedInfo),
 }
 
 /// A running coordinator.  Dropping (or calling [`Server::shutdown`])
 /// closes the admission queue, drains in-flight work and joins the
 /// batcher plus every executor worker.
 pub struct Server {
-    tx: Option<SyncSender<InferRequest>>,
+    /// unbounded on purpose: the admission controller's tickets bound
+    /// everything in flight, so the channel never holds more than
+    /// `capacity` requests
+    tx: Option<Sender<InferRequest>>,
     next_id: AtomicU64,
     stats: Arc<ServerStats>,
+    admission: Arc<AdmissionController>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -220,14 +254,16 @@ impl Server {
     {
         let workers = cfg.executor_threads.max(1);
         let kernel_budget = cfg.effective_kernel_threads();
-        let (tx, rx) = sync_channel::<InferRequest>(cfg.queue_capacity);
+        let admission = AdmissionController::new(cfg.queue_capacity, &cfg.admission);
+        let (tx, rx) = channel::<InferRequest>();
         let (btx, brx) = sync_channel::<Batch>(cfg.batch_queue_capacity);
         let stats = Arc::new(ServerStats::default());
 
         let policy = cfg.policy;
+        let ctl = admission.clone();
         let batcher = std::thread::Builder::new()
             .name("tn-batcher".into())
-            .spawn(move || batcher_loop(rx, btx, policy))
+            .spawn(move || batcher_loop(rx, btx, policy, ctl))
             .map_err(|e| Error::Coordinator(format!("spawn batcher: {e}")))?;
         let mut threads = vec![batcher];
 
@@ -277,18 +313,30 @@ impl Server {
             threads.push(handle);
         }
 
-        Ok(Server { tx: Some(tx), next_id: AtomicU64::new(1), stats, threads })
+        Ok(Server { tx: Some(tx), next_id: AtomicU64::new(1), stats, admission, threads })
     }
 
     pub fn stats(&self) -> &ServerStats {
         &self.stats
     }
 
-    /// Build one admission-queue entry + its reply receiver.  The single
-    /// place an `InferRequest` is constructed, shared by the blocking and
-    /// non-blocking paths so ids, timestamps and reply plumbing cannot
-    /// drift between transports.
-    fn new_request(&self, model: &str, input: Vec<f32>) -> (InferRequest, ReplyReceiver) {
+    /// The admission controller — for the net reactor's doze gate
+    /// (release epoch), the serve summary and bench provenance
+    /// (snapshot).
+    pub fn admission(&self) -> &Arc<AdmissionController> {
+        &self.admission
+    }
+
+    /// Build one pipeline entry + its reply receiver.  The single place
+    /// an `InferRequest` is constructed, shared by the blocking and
+    /// non-blocking paths so ids, timestamps, ticket and reply plumbing
+    /// cannot drift between transports.
+    fn new_request(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        ticket: AdmissionTicket,
+    ) -> (InferRequest, ReplyReceiver) {
         let (reply_tx, reply_rx) = channel();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -296,14 +344,17 @@ impl Server {
             input,
             enqueued: Instant::now(),
             reply: reply_tx,
+            ticket: Some(ticket),
         };
         (req, reply_rx)
     }
 
-    /// Blocking inference: enqueue (waiting for queue space if needed)
-    /// and wait for the reply.
+    /// Blocking inference: wait for an admission ticket if none is
+    /// free, then wait for the reply.  Never sheds (mirrors the old
+    /// blocking send into the bounded queue).
     pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<InferResponse> {
-        let (req, reply_rx) = self.new_request(model, input);
+        let ticket = self.admission.admit_blocking(model);
+        let (req, reply_rx) = self.new_request(model, input, ticket);
         self.tx
             .as_ref()
             .ok_or_else(|| Error::Coordinator("server shut down".into()))?
@@ -312,37 +363,52 @@ impl Server {
         self.receive(reply_rx)
     }
 
-    /// Non-blocking, transport-agnostic admission: `try_send` into the
-    /// bounded queue, shedding load ([`Admission::Busy`], counted in
-    /// [`ServerStats::rejected`]) instead of waiting when it is full.
-    /// Every transport — in-process `try_infer` and the TCP front-end —
-    /// goes through here, so backpressure and stats stay shared.
+    /// Non-blocking, transport-agnostic admission: acquire a ticket or
+    /// shed ([`Admission::Busy`] with the typed [`ShedInfo`], counted
+    /// in [`ServerStats::rejected`] / `quota_shed` / the model's
+    /// `shed`) instead of waiting when capacity is out.  Every
+    /// transport — in-process `try_infer` and the TCP front-end — goes
+    /// through here, so backpressure and stats stay shared.
+    ///
+    /// (Per-model shed accounting keys stats by the caller's name; the
+    /// TCP front-end validates names against the served lineup before
+    /// admission, and in-process callers are the code's own trust
+    /// domain, so arbitrary names cannot grow the map.)
     pub fn admit(&self, model: &str, input: Vec<f32>) -> Result<Admission> {
-        let (req, reply_rx) = self.new_request(model, input);
-        match self
-            .tx
-            .as_ref()
-            .ok_or_else(|| Error::Coordinator("server shut down".into()))?
-            .try_send(req)
-        {
-            Ok(()) => Ok(Admission::Queued(reply_rx)),
-            Err(TrySendError::Full(_)) => {
-                self.stats.rejected.inc();
-                Ok(Admission::Busy)
+        match self.admission.try_admit(model) {
+            Ok(ticket) => {
+                let (req, reply_rx) = self.new_request(model, input, ticket);
+                self.tx
+                    .as_ref()
+                    .ok_or_else(|| Error::Coordinator("server shut down".into()))?
+                    .send(req)
+                    .map_err(|_| Error::Coordinator("admission queue closed".into()))?;
+                Ok(Admission::Queued(reply_rx))
             }
-            Err(TrySendError::Disconnected(_)) => {
-                Err(Error::Coordinator("admission queue closed".into()))
+            Err(info) => {
+                self.stats.rejected.inc();
+                if info.kind == ShedKind::Quota {
+                    self.stats.quota_shed.inc();
+                }
+                self.stats.model(model).shed.inc();
+                Ok(Admission::Busy(info))
             }
         }
     }
 
-    /// Non-blocking admission for in-process callers: rejects with an
-    /// error instead of waiting when the queue is full (returns the
-    /// reply receiver to await later).
+    /// Non-blocking admission for in-process callers: rejects with a
+    /// retryable [`Error::Busy`] instead of waiting when out of
+    /// capacity (returns the reply receiver to await later).
     pub fn try_infer(&self, model: &str, input: Vec<f32>) -> Result<ReplyReceiver> {
         match self.admit(model, input)? {
             Admission::Queued(rx) => Ok(rx),
-            Admission::Busy => Err(Error::Coordinator("admission queue full".into())),
+            Admission::Busy(info) => Err(Error::Busy {
+                message: match info.kind {
+                    ShedKind::Capacity => "admission queue full".into(),
+                    ShedKind::Quota => "model quota exceeded".into(),
+                },
+                retry_after_ms: info.retry_after_ms,
+            }),
         }
     }
 
@@ -429,44 +495,77 @@ fn recv_shared(shared: &Mutex<Receiver<Batch>>) -> Option<Batch> {
 }
 
 /// Feed wall-clock events into the per-model [`BatchAssembler`]: wake
-/// at the MIN deadline across groups, and on every wake emit each full
-/// or expired group (the assembler hands back every due model in one
-/// `poll`, so no model waits on another's traffic).
-fn batcher_loop(rx: Receiver<InferRequest>, btx: SyncSender<Batch>, policy: BatchPolicy) {
+/// at the MIN deadline across groups, drain every arrival, then emit
+/// ready batches in the admission controller's current [`QueueMode`]
+/// (FIFO normally, newest-first under sustained overload) for as long
+/// as the batch queue accepts them.
+///
+/// The batch queue is bounded but the admission channel no longer is
+/// (tickets bound the pipeline), so a full batch queue must NOT block
+/// this thread — a blocked batcher couldn't ingest arrivals, and the
+/// backlog ordering decision would be frozen at the wrong moment.
+/// Instead a batch refused by `try_send` is stashed in `stuck` and
+/// retried on a short tick; the assembler keeps accumulating (and
+/// re-ordering, if the mode flips) behind it.
+fn batcher_loop(
+    rx: Receiver<InferRequest>,
+    btx: SyncSender<Batch>,
+    policy: BatchPolicy,
+    ctl: Arc<AdmissionController>,
+) {
     let mut asm = BatchAssembler::new(policy);
+    let mut stuck: Option<Batch> = None;
     loop {
-        let timeout = asm
-            .deadline()
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
+        let timeout = if stuck.is_some() {
+            // executor backpressure: retry the stashed batch soon
+            Duration::from_millis(1)
+        } else {
+            asm.deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(50))
+                .min(Duration::from_millis(50))
+        };
         match rx.recv_timeout(timeout) {
             Ok(req) => {
-                if let Some(batch) = asm.push(req) {
-                    if btx.send(batch).is_err() {
-                        return;
-                    }
-                }
-                for batch in asm.poll(Instant::now()) {
-                    if btx.send(batch).is_err() {
-                        return;
-                    }
+                asm.push(req);
+                // drain the burst in one pass — ordering decisions see
+                // the whole backlog, not one arrival at a time
+                while let Ok(req) = rx.try_recv() {
+                    asm.push(req);
                 }
             }
-            Err(RecvTimeoutError::Timeout) => {
-                for batch in asm.poll(Instant::now()) {
-                    if btx.send(batch).is_err() {
-                        return;
-                    }
-                }
-            }
+            Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
-                // flush every group and exit
+                // shutdown: blocking sends are safe now (no more
+                // arrivals to ingest) and must not drop work
+                if let Some(batch) = stuck.take() {
+                    if btx.send(batch).is_err() {
+                        return;
+                    }
+                }
                 for batch in asm.flush() {
                     if btx.send(batch).is_err() {
                         return;
                     }
                 }
                 return;
+            }
+        }
+        loop {
+            let batch = match stuck.take() {
+                Some(b) => b,
+                None => match asm.pop_ready(Instant::now(), ctl.mode()) {
+                    Some(b) => b,
+                    None => break,
+                },
+            };
+            match btx.try_send(batch) {
+                Ok(()) => {}
+                Err(TrySendError::Full(b)) => {
+                    stuck = Some(b);
+                    break;
+                }
+                Err(TrySendError::Disconnected(_)) => return,
             }
         }
     }
@@ -758,10 +857,9 @@ mod tests {
 
     #[test]
     fn admit_sheds_load_when_queue_full_and_counts_rejections() {
-        // a stalling executor keeps the pipeline occupied: admission(1) +
-        // batcher(1) + batch queue(1) + executing(1) absorb at most 4
-        // requests, so a burst of 16 non-blocking admissions must shed —
-        // and every shed must land in stats.rejected
+        // one admission ticket bounds the whole pipeline: a burst of 16
+        // non-blocking admissions gets exactly 1 in and sheds 15 — and
+        // every shed lands in stats.rejected + the model's shed counter
         struct Stall;
         impl BatchExecutor for Stall {
             fn execute(&mut self, _m: &str, x: Vec<f32>, _r: usize) -> Result<(Vec<f32>, usize)> {
@@ -778,7 +876,7 @@ mod tests {
             queue_capacity: 1,
             batch_queue_capacity: 1,
             executor_threads: 1,
-            kernel_threads: 0,
+            ..Default::default()
         };
         let server = Server::start(cfg, || Ok(Stall)).unwrap();
         let mut queued = Vec::new();
@@ -786,16 +884,127 @@ mod tests {
         for _ in 0..16 {
             match server.admit("m", vec![1.0, 2.0]).unwrap() {
                 Admission::Queued(rx) => queued.push(rx),
-                Admission::Busy => busy += 1,
+                Admission::Busy(info) => {
+                    assert_eq!(info.kind, ShedKind::Capacity, "no quotas configured");
+                    busy += 1;
+                }
             }
         }
-        assert!(busy >= 1, "16 instant admissions into a 4-slot pipeline must shed");
+        assert!(busy >= 1, "16 instant admissions against 1 ticket must shed");
         assert_eq!(server.stats().rejected.get(), busy);
+        assert_eq!(server.stats().quota_shed.get(), 0);
+        assert_eq!(server.stats().model("m").shed.get(), busy);
         // the admitted ones all complete — shedding never drops a queued reply
         for rx in queued {
             server.await_reply(rx).unwrap();
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn quota_shed_is_typed_and_counted_separately() {
+        // capacity 2, "hot" quota 1 → free pool 1.  A stalled executor
+        // holds tickets; "hot" can take its reservation + borrow the
+        // free ticket, then sheds Quota while quota_shed counts it.
+        struct Stall;
+        impl BatchExecutor for Stall {
+            fn execute(&mut self, _m: &str, x: Vec<f32>, _r: usize) -> Result<(Vec<f32>, usize)> {
+                std::thread::sleep(Duration::from_millis(50));
+                let n = x.len();
+                Ok((x, n))
+            }
+            fn input_dim(&self, _m: &str) -> Result<usize> {
+                Ok(2)
+            }
+        }
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(0) },
+            queue_capacity: 2,
+            batch_queue_capacity: 1,
+            executor_threads: 1,
+            admission: AdmissionConfig {
+                quotas: vec![("hot".into(), 1)],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let server = Server::start(cfg, || Ok(Stall)).unwrap();
+        let mut queued = Vec::new();
+        for _ in 0..2 {
+            match server.admit("hot", vec![1.0, 2.0]).unwrap() {
+                Admission::Queued(rx) => queued.push(rx),
+                Admission::Busy(_) => panic!("reservation + free pool hold 2"),
+            }
+        }
+        match server.admit("hot", vec![1.0, 2.0]).unwrap() {
+            Admission::Queued(_) => panic!("capacity 2 is out"),
+            Admission::Busy(info) => assert_eq!(info.kind, ShedKind::Quota),
+        }
+        // an unquota'd tenant sheds Capacity, not Quota
+        match server.admit("bg", vec![1.0, 2.0]).unwrap() {
+            Admission::Queued(_) => panic!("free pool is borrowed away"),
+            Admission::Busy(info) => assert_eq!(info.kind, ShedKind::Capacity),
+        }
+        assert_eq!(server.stats().rejected.get(), 2);
+        assert_eq!(server.stats().quota_shed.get(), 1);
+        assert_eq!(server.stats().model("hot").shed.get(), 1);
+        assert_eq!(server.stats().model("bg").shed.get(), 1);
+        for rx in queued {
+            server.await_reply(rx).unwrap();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn try_infer_shed_is_a_retryable_busy_error() {
+        struct Stall;
+        impl BatchExecutor for Stall {
+            fn execute(&mut self, _m: &str, x: Vec<f32>, _r: usize) -> Result<(Vec<f32>, usize)> {
+                std::thread::sleep(Duration::from_millis(30));
+                let n = x.len();
+                Ok((x, n))
+            }
+            fn input_dim(&self, _m: &str) -> Result<usize> {
+                Ok(2)
+            }
+        }
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 1, max_delay: Duration::from_millis(0) },
+            queue_capacity: 1,
+            ..Default::default()
+        };
+        let server = Server::start(cfg, || Ok(Stall)).unwrap();
+        let rx = server.try_infer("m", vec![1.0, 2.0]).unwrap();
+        match server.try_infer("m", vec![1.0, 2.0]) {
+            Err(Error::Busy { message, retry_after_ms }) => {
+                assert!(message.contains("admission queue full"));
+                assert!(retry_after_ms >= 1);
+            }
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        server.await_reply(rx).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn requests_complete_in_lifo_mode_too() {
+        // force LIFO: everything admitted must still be answered
+        // exactly once (delivery, not order, is the contract)
+        let server = std::sync::Arc::new(echo_server(4, 1));
+        server.admission().force_mode(crate::coordinator::admission::QueueMode::Lifo);
+        let mut handles = Vec::new();
+        for i in 0..12 {
+            let s = server.clone();
+            handles.push(std::thread::spawn(move || {
+                s.infer("m", vec![i as f32; 4]).unwrap()
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.output, vec![i as f32 * 3.0; 4]);
+        }
+        assert_eq!(server.stats().completed.get(), 12);
+        assert_eq!(server.stats().errors.get(), 0);
     }
 
     #[test]

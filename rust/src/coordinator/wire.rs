@@ -30,8 +30,12 @@ use std::io::{Read, Write};
 /// First two bytes of every frame.
 pub const MAGIC: [u8; 2] = *b"TN";
 /// Protocol version; bumped on any layout change (decoders hard-reject
-/// other versions).  v2 added the per-model block to `StatsReply`.
-pub const VERSION: u8 = 2;
+/// other versions).  v2 added the per-model block to `StatsReply`; v3
+/// added the admission fields — a trailing retry-after-ms hint on
+/// `InferErr` (optional on decode: a v3 frame without it reads as hint
+/// 0), `quota_shed` + per-model `shed` in `StatsReply`, and the
+/// `Quota` error code.
+pub const VERSION: u8 = 3;
 /// Hard cap on a frame's payload (16 MiB) — an admission bound, not a
 /// tuning knob: a header announcing more than this is rejected before
 /// any allocation.
@@ -42,14 +46,18 @@ pub const HEADER_LEN: usize = 12;
 /// Machine-readable failure class carried by [`Frame::InferErr`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ErrCode {
-    /// Admission queue full — load shed; retry later (maps to
-    /// `ServerStats::rejected` on the server).
+    /// Global admission capacity exhausted — load shed; retry later
+    /// (maps to `ServerStats::rejected` on the server).
     Busy = 1,
     /// The request itself was malformed (bad frame, unexpected type).
     BadRequest = 2,
     /// Admission succeeded but execution failed (unknown model, dim
     /// mismatch, executor error).
     Exec = 3,
+    /// This model spent its admission quota and the borrowable free
+    /// pool (v3) — load shed like `Busy`, but the overload is the
+    /// model's own traffic, not the server's: other tenants are fine.
+    Quota = 4,
 }
 
 impl ErrCode {
@@ -58,6 +66,7 @@ impl ErrCode {
             1 => Ok(ErrCode::Busy),
             2 => Ok(ErrCode::BadRequest),
             3 => Ok(ErrCode::Exec),
+            4 => Ok(ErrCode::Quota),
             other => Err(Error::Wire(format!("unknown error code {other}"))),
         }
     }
@@ -82,6 +91,9 @@ pub struct ModelStatsEntry {
     pub errors: u64,
     pub batches: u64,
     pub batched_rows: u64,
+    /// admission sheds for this model (v3) — capacity and quota kinds
+    /// combined, so asymmetric-overload fairness is visible per tenant
+    pub shed: u64,
 }
 
 impl ModelStatsEntry {
@@ -105,12 +117,15 @@ pub enum Frame {
     /// Successful inference reply (server-side timings included).
     InferOk { id: u64, queue_us: u64, exec_us: u64, batch_size: u32, output: Vec<f32> },
     /// Failed inference reply; `code` distinguishes load-shedding
-    /// ([`ErrCode::Busy`]) from real failures.
-    InferErr { id: u64, code: ErrCode, message: String },
+    /// ([`ErrCode::Busy`] / [`ErrCode::Quota`]) from real failures.
+    /// `retry_after_ms` (v3, trailing-optional: decodes as 0 when a
+    /// writer omits it) hints how long a shed caller should back off —
+    /// ≈ one observed service time; meaningless (0) on non-shed codes.
+    InferErr { id: u64, code: ErrCode, message: String, retry_after_ms: u32 },
     /// Request a [`Frame::StatsReply`] snapshot.
     Stats,
     /// Counter snapshot of the server's shared `ServerStats`, including
-    /// the per-model block (v2).
+    /// the per-model block (v2) and admission shed counters (v3).
     StatsReply {
         completed: u64,
         rejected: u64,
@@ -118,6 +133,8 @@ pub enum Frame {
         failed_workers: u64,
         batches: u64,
         batched_rows: u64,
+        /// subset of `rejected` that was per-model quota sheds (v3)
+        quota_shed: u64,
         per_model: Vec<ModelStatsEntry>,
     },
     /// Request the served model lineup.
@@ -246,7 +263,10 @@ pub fn decode_body(header: &Header, payload: &[u8]) -> Result<Frame> {
             let id = r.u64()?;
             let code = ErrCode::from_u8(r.u8()?)?;
             let message = r.long_string("error message")?;
-            Frame::InferErr { id, code, message }
+            // trailing-optional (v3): a writer that stops after the
+            // message still decodes — the hint defaults to 0 (none)
+            let retry_after_ms = if r.remaining() > 0 { r.u32()? } else { 0 };
+            Frame::InferErr { id, code, message, retry_after_ms }
         }
         T_STATS => Frame::Stats,
         T_STATS_REPLY => {
@@ -256,6 +276,7 @@ pub fn decode_body(header: &Header, payload: &[u8]) -> Result<Frame> {
             let failed_workers = r.u64()?;
             let batches = r.u64()?;
             let batched_rows = r.u64()?;
+            let quota_shed = r.u64()?;
             let count = r.u16()? as usize;
             let mut per_model = Vec::new();
             for _ in 0..count {
@@ -265,6 +286,7 @@ pub fn decode_body(header: &Header, payload: &[u8]) -> Result<Frame> {
                     errors: r.u64()?,
                     batches: r.u64()?,
                     batched_rows: r.u64()?,
+                    shed: r.u64()?,
                 });
             }
             Frame::StatsReply {
@@ -274,6 +296,7 @@ pub fn decode_body(header: &Header, payload: &[u8]) -> Result<Frame> {
                 failed_workers,
                 batches,
                 batched_rows,
+                quota_shed,
                 per_model,
             }
         }
@@ -346,10 +369,12 @@ impl Frame {
                 w.extend_from_slice(&batch_size.to_le_bytes());
                 put_f32_vec(w, output);
             }
-            Frame::InferErr { id, code, message } => {
+            Frame::InferErr { id, code, message, retry_after_ms } => {
                 w.extend_from_slice(&id.to_le_bytes());
                 w.push(*code as u8);
                 put_long_string(w, message);
+                // always written; decoders treat it as trailing-optional
+                w.extend_from_slice(&retry_after_ms.to_le_bytes());
             }
             Frame::Stats | Frame::ListModels | Frame::Shutdown | Frame::ShutdownOk => {}
             Frame::StatsReply {
@@ -359,9 +384,12 @@ impl Frame {
                 failed_workers,
                 batches,
                 batched_rows,
+                quota_shed,
                 per_model,
             } => {
-                for v in [completed, rejected, errors, failed_workers, batches, batched_rows] {
+                for v in
+                    [completed, rejected, errors, failed_workers, batches, batched_rows, quota_shed]
+                {
                     w.extend_from_slice(&v.to_le_bytes());
                 }
                 let count = u16::try_from(per_model.len()).map_err(|_| {
@@ -370,7 +398,7 @@ impl Frame {
                 w.extend_from_slice(&count.to_le_bytes());
                 for m in per_model {
                     put_short_string(w, &m.name, "model name")?;
-                    for v in [m.completed, m.errors, m.batches, m.batched_rows] {
+                    for v in [m.completed, m.errors, m.batches, m.batched_rows, m.shed] {
                         w.extend_from_slice(&v.to_le_bytes());
                     }
                 }
@@ -734,6 +762,12 @@ impl<'a> Cursor<'a> {
             .collect())
     }
 
+    /// Unread payload bytes — how trailing-optional fields (the v3
+    /// `InferErr` retry hint) test for presence before drawing.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     fn finish(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             return Err(Error::Wire(format!(
@@ -759,7 +793,18 @@ mod tests {
                 batch_size: 4,
                 output: vec![0.5; 6],
             },
-            Frame::InferErr { id: 9, code: ErrCode::Busy, message: "admission queue full".into() },
+            Frame::InferErr {
+                id: 9,
+                code: ErrCode::Busy,
+                message: "admission queue full".into(),
+                retry_after_ms: 7,
+            },
+            Frame::InferErr {
+                id: 10,
+                code: ErrCode::Quota,
+                message: "model quota exceeded".into(),
+                retry_after_ms: 12,
+            },
             Frame::Stats,
             Frame::StatsReply {
                 completed: 10,
@@ -768,6 +813,7 @@ mod tests {
                 failed_workers: 0,
                 batches: 5,
                 batched_rows: 10,
+                quota_shed: 1,
                 per_model: vec![
                     ModelStatsEntry {
                         name: "tt_layer".into(),
@@ -775,6 +821,7 @@ mod tests {
                         errors: 0,
                         batches: 2,
                         batched_rows: 6,
+                        shed: 2,
                     },
                     ModelStatsEntry {
                         name: "fc_mnist".into(),
@@ -782,6 +829,7 @@ mod tests {
                         errors: 1,
                         batches: 3,
                         batched_rows: 4,
+                        shed: 0,
                     },
                 ],
             },
@@ -792,6 +840,7 @@ mod tests {
                 failed_workers: 0,
                 batches: 0,
                 batched_rows: 0,
+                quota_shed: 0,
                 per_model: vec![],
             },
             Frame::ListModels,
@@ -828,6 +877,41 @@ mod tests {
                 let want: Vec<u32> = input.iter().map(|x| x.to_bits()).collect();
                 let got: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
                 assert_eq!(got, want);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infer_err_without_trailing_hint_decodes_as_zero() {
+        // backward-decodability of the v3 retry hint: hand-assemble an
+        // InferErr payload that STOPS after the message (what a v3
+        // writer without the field would send) and check it decodes
+        // with retry_after_ms == 0
+        let msg = b"admission queue full";
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&9u64.to_le_bytes()); // id
+        payload.push(ErrCode::Busy as u8);
+        payload.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+        payload.extend_from_slice(msg);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&MAGIC);
+        frame.push(VERSION);
+        frame.push(T_INFER_ERR);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let crc = crc32(&[
+            &[VERSION, T_INFER_ERR],
+            &(payload.len() as u32).to_le_bytes(),
+            &payload,
+        ]);
+        frame.extend_from_slice(&crc.to_le_bytes());
+        frame.extend_from_slice(&payload);
+        match Frame::decode(&frame).unwrap() {
+            Frame::InferErr { id, code, message, retry_after_ms } => {
+                assert_eq!(id, 9);
+                assert_eq!(code, ErrCode::Busy);
+                assert_eq!(message, "admission queue full");
+                assert_eq!(retry_after_ms, 0, "missing hint must read as none");
             }
             other => panic!("decoded {other:?}"),
         }

@@ -36,10 +36,13 @@ pub enum Error {
     /// front-end or client — see `coordinator::net` / `coordinator::client`).
     Net(String),
 
-    /// Server-side load shed: the admission queue was full and the
-    /// request was answered with a retryable `Busy` wire reply — not a
-    /// failure of the request itself (see `coordinator::wire::ErrCode`).
-    Busy(String),
+    /// Server-side load shed: admission capacity (or this model's
+    /// quota) was exhausted and the request was answered with a
+    /// retryable `Busy` wire reply — not a failure of the request
+    /// itself (see `coordinator::wire::ErrCode`).  `retry_after_ms` is
+    /// the server's backoff hint (≈ one observed service time); `0`
+    /// means the server sent none (pre-v3 peer).
+    Busy { message: String, retry_after_ms: u32 },
 
     /// Configuration file / CLI problems.
     Config(String),
@@ -58,7 +61,7 @@ impl fmt::Display for Error {
             Error::Checkpoint(m) => write!(f, "checkpoint error: {m}"),
             Error::Wire(m) => write!(f, "wire error: {m}"),
             Error::Net(m) => write!(f, "net error: {m}"),
-            Error::Busy(m) => write!(f, "server busy: {m}"),
+            Error::Busy { message, .. } => write!(f, "server busy: {message}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }
@@ -98,7 +101,10 @@ mod tests {
         assert_eq!(format!("{}", Error::Wire("bad magic".into())), "wire error: bad magic");
         assert_eq!(format!("{}", Error::Net("refused".into())), "net error: refused");
         assert_eq!(
-            format!("{}", Error::Busy("admission queue full".into())),
+            format!(
+                "{}",
+                Error::Busy { message: "admission queue full".into(), retry_after_ms: 5 }
+            ),
             "server busy: admission queue full"
         );
         let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();

@@ -10,8 +10,8 @@
 //! no dependencies, like everything else in the crate.
 
 use crate::coordinator::{
-    is_busy, BatchPolicy, Client, EchoExecutor, ModelInfo, ModelRegistry, NativeExecutor,
-    NetServer, RouterConfig, Server, ServerConfig, ShardRouter,
+    AdmissionConfig, BatchPolicy, Client, EchoExecutor, ModelInfo, ModelRegistry,
+    NativeExecutor, NetServer, QueueMode, RouterConfig, Server, ServerConfig, ShardRouter,
 };
 use crate::error::{Error, Result};
 use crate::metrics::Histogram;
@@ -232,6 +232,13 @@ pub struct RemoteDrive {
 /// every reply wait; a timed-out connection is abandoned — the framing
 /// state is unknown mid-stream, so its unanswered and unsent requests
 /// all count as failed rather than risking misattributed replies.
+///
+/// A `Busy` shed reply throttles the connection instead of hot-looping:
+/// the client sleeps the server's `retry_after_ms` hint, doubled per
+/// consecutive shed and capped at 100ms, and resets on any completion.
+/// Under overload the offered rate therefore decays toward what the
+/// server can actually admit (the client half of the admission-control
+/// contract in DESIGN.md §14).
 pub fn drive_remote_clients(
     addr: &str,
     models: &[(String, usize)],
@@ -269,6 +276,7 @@ pub fn drive_remote_clients(
                 let mut sent_at: VecDeque<Instant> = VecDeque::new();
                 let mut sent = 0usize;
                 let mut done = 0usize;
+                let mut consecutive_busy = 0u32;
                 while done < mine {
                     while sent < mine && sent_at.len() < pipeline {
                         let (model, dim) = &models[(c + sent) % models.len()];
@@ -288,9 +296,15 @@ pub fn drive_remote_clients(
                         Ok(_) => {
                             e2e.record(sent_instant.elapsed());
                             completed.fetch_add(1, Ordering::Relaxed);
+                            consecutive_busy = 0;
                         }
-                        Err(e) if is_busy(&e) => {
+                        Err(Error::Busy { retry_after_ms, .. }) => {
                             busy.fetch_add(1, Ordering::Relaxed);
+                            let hint = u64::from(retry_after_ms.max(1));
+                            let delay =
+                                hint.saturating_mul(1 << consecutive_busy.min(10)).min(100);
+                            std::thread::sleep(Duration::from_millis(delay));
+                            consecutive_busy = consecutive_busy.saturating_add(1);
                         }
                         Err(e @ Error::Net(_)) => {
                             // transport dead or reply timed out: the
@@ -339,6 +353,7 @@ pub fn bench_coordinator(
             batch_queue_capacity: 16,
             executor_threads: 1,
             kernel_threads: 0,
+            ..Default::default()
         };
         let server = Server::start(cfg, move || Ok(EchoExecutor { dim, scale: 1.0 }))?;
         // NOT drive_clients: this sweep's baseline was recorded with a
@@ -408,6 +423,7 @@ pub fn bench_native_serving(
             batch_queue_capacity: 16,
             executor_threads: threads,
             kernel_threads: 0,
+            ..Default::default()
         };
         let kernel_threads = cfg.effective_kernel_threads();
         let reg = registry.clone();
@@ -482,6 +498,7 @@ pub fn bench_mixed_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>
             batch_queue_capacity: 16,
             executor_threads: 2,
             kernel_threads: 0,
+            ..Default::default()
         };
         let kernel_threads = cfg.effective_kernel_threads();
         let reg = registry.clone();
@@ -512,6 +529,7 @@ pub fn bench_mixed_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>
             mo.insert("model".to_string(), Json::Str(name));
             mo.insert("completed".to_string(), num(completed as f64));
             mo.insert("errors".to_string(), num(m.errors.get() as f64));
+            mo.insert("shed".to_string(), num(m.shed.get() as f64));
             mo.insert("batches".to_string(), num(batches as f64));
             mo.insert("rows".to_string(), num(rows as f64));
             mo.insert(
@@ -545,6 +563,19 @@ pub fn bench_mixed_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>
             num(if agg_batches == 0 { 0.0 } else { agg_rows as f64 / agg_batches as f64 }),
         );
         obj.insert("per_model".to_string(), Json::Arr(per_model));
+        // admission provenance: how the controller behaved during the
+        // drive — at this sweep's defaults (no latency target, no
+        // quotas) every field must read as "fixed capacity, no flips,
+        // no sheds", and a regression that starts shedding or flipping
+        // shows up in the trajectory JSON, not just in a failing test
+        let adm = server.admission().snapshot();
+        let mut ao = BTreeMap::new();
+        ao.insert("capacity_final".to_string(), num(adm.capacity as f64));
+        ao.insert("capacity_min".to_string(), num(adm.capacity_min as f64));
+        ao.insert("capacity_max".to_string(), num(adm.capacity_max as f64));
+        ao.insert("mode_flips".to_string(), num(adm.mode_flips as f64));
+        ao.insert("quota_shed".to_string(), num(st.quota_shed.get() as f64));
+        obj.insert("admission".to_string(), Json::Obj(ao));
         if verbose {
             let batches: Vec<String> = st
                 .per_model()
@@ -597,6 +628,7 @@ pub fn bench_remote_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json
             batch_queue_capacity: 16,
             executor_threads: 2,
             kernel_threads: 0,
+            ..Default::default()
         };
         let kernel_threads = cfg.effective_kernel_threads();
         let reg = registry.clone();
@@ -711,6 +743,7 @@ pub fn bench_sharded_serving(n_requests: usize, verbose: bool) -> Result<Vec<Jso
                 batch_queue_capacity: 16,
                 executor_threads: 2,
                 kernel_threads: 0,
+                ..Default::default()
             };
             let reg = registry.clone();
             let server =
@@ -797,6 +830,186 @@ pub fn bench_sharded_serving(n_requests: usize, verbose: bool) -> Result<Vec<Jso
     Ok(entries)
 }
 
+/// Overload / fairness sweep (`overload_tt`): one hot tenant
+/// (`tt_layer`) pushed at 1x/4x/16x its baseline offered load against
+/// two background tenants (`fc_mnist`, `mnist_net`) that stay inside
+/// their reserved quotas, all through one admission-controlled server
+/// over loopback TCP.  The fairness claim this pins: the hot tenant's
+/// excess is absorbed as typed shed — its reservation and the free
+/// pool exhaust while other models' reservations stay untouchable —
+/// so every background request completes at every multiplier
+/// (capacity never resizes below Σ reservations).  Each entry records
+/// per-tenant client-side counters, the server's per-model shed
+/// counts, and the admission controller's provenance (capacity
+/// min/max/final, queue-mode flips, quota sheds), so
+/// `BENCH_coordinator.json` shows not just that fairness held but
+/// what the controller did to hold it.
+pub fn bench_overload_serving(n_requests: usize, verbose: bool) -> Result<Vec<Json>> {
+    let registry = ModelRegistry::standard();
+    let hot = "tt_layer";
+    let tenants = [hot, "fc_mnist", "mnist_net"];
+    // hot reserves 4 tickets, each background 8; capacity 32 leaves a
+    // 12-ticket free pool the hot tenant may borrow before it sheds
+    let capacity = 32usize;
+    let quotas: Vec<(String, usize)> =
+        vec![(hot.into(), 4), ("fc_mnist".into(), 8), ("mnist_net".into(), 8)];
+    let mut lineup = Vec::with_capacity(tenants.len());
+    for name in tenants {
+        let spec = registry.spec(name)?;
+        lineup.push(ModelInfo {
+            name: name.to_string(),
+            input_dim: spec.input_dim() as u32,
+            output_dim: spec.output_dim() as u32,
+        });
+    }
+    let mut entries = Vec::new();
+    for hot_mult in [1usize, 4, 16] {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) },
+            queue_capacity: capacity,
+            batch_queue_capacity: 16,
+            executor_threads: 2,
+            kernel_threads: 0,
+            admission: AdmissionConfig {
+                latency_target_ms: 50,
+                quotas: quotas.clone(),
+                ..Default::default()
+            },
+        };
+        let kernel_threads = cfg.effective_kernel_threads();
+        let reg = registry.clone();
+        let server =
+            Arc::new(Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?);
+        let net = NetServer::start_with(server.clone(), "127.0.0.1:0", lineup.clone(), 1)?;
+        let addr = net.local_addr().to_string();
+        // warm every model's lazy build out of the timed region
+        for m in &lineup {
+            Client::connect(&addr)?.infer(&m.name, &vec![0.0; m.input_dim as usize])?;
+        }
+        // hot tenant: offered in-flight (connections × pipeline) scales
+        // with the multiplier; backgrounds: 2 connections × 2 in flight
+        // = 4 concurrent, well inside their 8-ticket reservations, so
+        // every one of their requests must admit and complete
+        let (hot_conns, hot_pipeline) = (4usize, 2 * hot_mult);
+        let (bg_conns, bg_pipeline) = (2usize, 2usize);
+        // (model, dim, requests, connections, pipeline) per tenant
+        let plan: Vec<(String, usize, usize, usize, usize)> = lineup
+            .iter()
+            .map(|m| {
+                let dim = m.input_dim as usize;
+                if m.name == hot {
+                    (m.name.clone(), dim, n_requests * hot_mult, hot_conns, hot_pipeline)
+                } else {
+                    (m.name.clone(), dim, n_requests, bg_conns, bg_pipeline)
+                }
+            })
+            .collect();
+        let t0 = Instant::now();
+        let drives: Vec<RemoteDrive> = std::thread::scope(|s| {
+            let handles: Vec<_> = plan
+                .iter()
+                .map(|(model, dim, reqs, conns, pipe)| {
+                    let addr = &addr;
+                    s.spawn(move || {
+                        drive_remote_clients(
+                            addr,
+                            &[(model.clone(), *dim)],
+                            *reqs,
+                            *conns,
+                            *pipe,
+                            None,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("tenant driver panicked")).collect()
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        let st = server.stats();
+        let adm = server.admission().snapshot();
+        let quota_shed = st.quota_shed.get();
+        let shed_by_model: Vec<(String, u64)> =
+            st.per_model().iter().map(|(n, m)| (n.clone(), m.shed.get())).collect();
+        net.shutdown();
+        drop(server); // last Arc: joins batcher + executor pool
+        let mut total_completed = 0u64;
+        let mut tenant_entries = Vec::new();
+        for ((model, _dim, reqs, conns, pipe), drive) in plan.iter().zip(&drives) {
+            let shed = shed_by_model
+                .iter()
+                .find(|(n, _)| n == model)
+                .map(|(_, s)| *s)
+                .unwrap_or(0);
+            let mut to = BTreeMap::new();
+            to.insert("model".to_string(), Json::Str(model.clone()));
+            to.insert(
+                "role".to_string(),
+                Json::Str(if model == hot { "hot" } else { "background" }.to_string()),
+            );
+            to.insert("requests".to_string(), num(*reqs as f64));
+            to.insert("connections".to_string(), num(*conns as f64));
+            to.insert("pipeline".to_string(), num(*pipe as f64));
+            to.insert("completed".to_string(), num(drive.completed as f64));
+            to.insert("busy".to_string(), num(drive.busy as f64));
+            to.insert("failed".to_string(), num(drive.failed as f64));
+            // server-side shed for this model (client `busy` seen from
+            // the other end of the wire; the two agree when no
+            // connection died mid-drive)
+            to.insert("shed".to_string(), num(shed as f64));
+            to.insert("p50_us".to_string(), num(drive.e2e.quantile_us(0.5)));
+            to.insert("p99_us".to_string(), num(drive.e2e.quantile_us(0.99)));
+            total_completed += drive.completed;
+            tenant_entries.push(Json::Obj(to));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("hot_mult".to_string(), num(hot_mult as f64));
+        obj.insert("hot_model".to_string(), Json::Str(hot.to_string()));
+        obj.insert("capacity".to_string(), num(capacity as f64));
+        obj.insert(
+            "quotas".to_string(),
+            Json::Str("tt_layer=4,fc_mnist=8,mnist_net=8".to_string()),
+        );
+        obj.insert("latency_target_ms".to_string(), num(50.0));
+        obj.insert("max_batch".to_string(), num(8.0));
+        obj.insert("kernel_threads".to_string(), num(kernel_threads as f64));
+        obj.insert("simd".to_string(), Json::Str(simd_name().to_string()));
+        obj.insert("req_per_s".to_string(), num(total_completed as f64 / wall));
+        obj.insert("tenants".to_string(), Json::Arr(tenant_entries));
+        let mut ao = BTreeMap::new();
+        ao.insert("capacity_final".to_string(), num(adm.capacity as f64));
+        ao.insert("capacity_min".to_string(), num(adm.capacity_min as f64));
+        ao.insert("capacity_max".to_string(), num(adm.capacity_max as f64));
+        ao.insert("mode_flips".to_string(), num(adm.mode_flips as f64));
+        ao.insert(
+            "mode_final".to_string(),
+            Json::Str(
+                match adm.mode {
+                    QueueMode::Fifo => "fifo",
+                    QueueMode::Lifo => "lifo",
+                }
+                .to_string(),
+            ),
+        );
+        ao.insert("quota_shed".to_string(), num(quota_shed as f64));
+        obj.insert("admission".to_string(), Json::Obj(ao));
+        if verbose {
+            let hot_drive = &drives[0]; // plan order follows `tenants`: hot first
+            println!(
+                "  hot x{hot_mult:<3} {:>9.0} req/s total  hot completed {} busy {}  quota_shed {}  capacity [{}..{}] flips {}",
+                total_completed as f64 / wall,
+                hot_drive.completed,
+                hot_drive.busy,
+                quota_shed,
+                adm.capacity_min,
+                adm.capacity_max,
+                adm.mode_flips,
+            );
+        }
+        entries.push(Json::Obj(obj));
+    }
+    Ok(entries)
+}
+
 /// Wrap entries in the report envelope: suite name + environment.
 pub fn report(suite: &str, quick: bool, sections: Vec<(&str, Vec<Json>)>) -> Json {
     let mut obj = BTreeMap::new();
@@ -867,6 +1080,13 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
         println!("== sharded TT serving sweep (shards x connections x max_batch, router tier)");
     }
     let sharded = bench_sharded_serving(native_requests, verbose)?;
+    if verbose {
+        println!("== overload fairness sweep (hot tenant at 1x/4x/16x vs quota'd background)");
+    }
+    // smaller base count: the hot tenant multiplies it up to 16x, and
+    // under shed-then-backoff each connection deliberately paces itself
+    let overload_requests = if quick { 300 } else { 1_000 };
+    let overload = bench_overload_serving(overload_requests, verbose)?;
     let coord_report = report(
         "coordinator",
         quick,
@@ -876,6 +1096,7 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
             ("mixed_tt", mixed),
             ("remote_tt", remote),
             ("sharded_tt", sharded),
+            ("overload_tt", overload),
         ],
     );
 
@@ -996,10 +1217,20 @@ mod tests {
                 assert!(m.get("model").unwrap().as_str().is_some());
                 completed_sum += m.get("completed").unwrap().as_usize().unwrap();
                 assert_eq!(m.get("errors").unwrap().as_usize(), Some(0));
+                assert_eq!(m.get("shed").unwrap().as_usize(), Some(0));
                 assert!(m.get("mean_batch").unwrap().as_f64().unwrap() > 0.0);
                 assert!(m.get("batches").unwrap().as_usize().unwrap() >= 1);
             }
             assert_eq!(completed_sum, 48, "per-model completions must cover the drive");
+            // admission provenance at this sweep's defaults: the
+            // controller must be indistinguishable from the old fixed
+            // bounded queue — constant capacity, no flips, no sheds
+            let adm = e.get("admission").unwrap();
+            assert_eq!(adm.get("capacity_final").unwrap().as_usize(), Some(4096));
+            assert_eq!(adm.get("capacity_min").unwrap().as_usize(), Some(4096));
+            assert_eq!(adm.get("capacity_max").unwrap().as_usize(), Some(4096));
+            assert_eq!(adm.get("mode_flips").unwrap().as_usize(), Some(0));
+            assert_eq!(adm.get("quota_shed").unwrap().as_usize(), Some(0));
         }
         // the lineup grows across the sweep (2, 2, 3 models)
         let sizes: Vec<usize> = entries
@@ -1077,6 +1308,51 @@ mod tests {
             }
             assert_eq!(forwarded_sum, done, "shard forwards must cover the drive");
         }
+    }
+
+    #[test]
+    fn overload_sweep_keeps_background_tenants_whole() {
+        let entries = bench_overload_serving(8, false).unwrap();
+        assert_eq!(entries.len(), 3);
+        let mults: Vec<usize> =
+            entries.iter().map(|e| e.get("hot_mult").unwrap().as_usize().unwrap()).collect();
+        assert_eq!(mults, vec![1, 4, 16]);
+        for e in &entries {
+            assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
+            let tenants = e.get("tenants").unwrap().as_arr().unwrap();
+            assert_eq!(tenants.len(), 3);
+            for t in tenants {
+                let requests = t.get("requests").unwrap().as_usize().unwrap();
+                let completed = t.get("completed").unwrap().as_usize().unwrap();
+                let busy = t.get("busy").unwrap().as_usize().unwrap();
+                assert_eq!(t.get("failed").unwrap().as_usize(), Some(0));
+                // every request either completed or was typed-shed
+                assert_eq!(completed + busy, requests);
+                if t.get("role").unwrap().as_str() == Some("background") {
+                    // the fairness claim: reservations keep background
+                    // tenants whole no matter how hard the hot one pushes
+                    assert_eq!(completed, requests, "background tenant was shed");
+                    assert_eq!(t.get("shed").unwrap().as_usize(), Some(0));
+                }
+            }
+            // admission provenance travels with every entry; capacity
+            // never resizes below Σ reservations (4 + 8 + 8) and never
+            // above the 4x auto ceiling
+            let adm = e.get("admission").unwrap();
+            assert!(adm.get("capacity_min").unwrap().as_usize().unwrap() >= 20);
+            assert!(adm.get("capacity_max").unwrap().as_usize().unwrap() <= 128);
+            let mode = adm.get("mode_final").unwrap().as_str().unwrap();
+            assert!(mode == "fifo" || mode == "lifo", "{mode}");
+        }
+        // at 16x the hot tenant must actually shed, typed against its
+        // quota (it exhausted its reservation plus the free pool)
+        let tenants16 = entries[2].get("tenants").unwrap().as_arr().unwrap();
+        let hot16 = &tenants16[0];
+        assert_eq!(hot16.get("role").unwrap().as_str(), Some("hot"));
+        assert!(hot16.get("busy").unwrap().as_usize().unwrap() > 0, "16x overload must shed");
+        assert!(hot16.get("shed").unwrap().as_usize().unwrap() > 0);
+        let adm16 = entries[2].get("admission").unwrap();
+        assert!(adm16.get("quota_shed").unwrap().as_usize().unwrap() > 0);
     }
 
     #[test]

@@ -22,10 +22,16 @@
 //!                      [--listen ADDR]         trained checkpoints, or AOT
 //!                      [--io-threads N]        artifacts; --listen exposes
 //!                      [--kernel-threads K]    the server over TCP (N
-//!                                              reactor threads, default 1);
-//!                                              K caps each executor
-//!                                              worker's intra-batch kernel
-//!                                              fan-out (0 = cores/workers)
+//!                      [--max-queue N]         reactor threads, default 1);
+//!                      [--latency-target-ms T] K caps each executor
+//!                      [--quota M=N[,..]]      worker's intra-batch kernel
+//!                      [--overload-after-ms W] fan-out (0 = cores/workers);
+//!                                              admission: N tickets bound
+//!                                              in-flight work, T > 0 adapts
+//!                                              capacity to a p95 target,
+//!                                              quotas reserve per-model
+//!                                              slots, W ms of saturation
+//!                                              flips the queue FIFO->LIFO
 //! tensornet client     --connect ADDR [--model A[,B,..]] [--requests N]
 //!                      [--connections C] [--pipeline P] [--shutdown]
 //!                      [--timeout-ms T]        drive a remote server over
@@ -53,8 +59,9 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tensornet::coordinator::{
-    BatchPolicy, Client, ModelInfo, ModelRegistry, NativeExecutor, NetServer, PjrtExecutor,
-    RemoteStats, RouterConfig, Server, ServerConfig, ServerStats, ShardRouter, ShardSnapshot,
+    AdmissionConfig, BatchPolicy, Client, ModelInfo, ModelRegistry, NativeExecutor, NetServer,
+    PjrtExecutor, QueueMode, RemoteStats, RouterConfig, Server, ServerConfig, ShardRouter,
+    ShardSnapshot,
 };
 use tensornet::data::{global_contrast_normalize, synth_mnist};
 use tensornet::error::Result;
@@ -127,11 +134,16 @@ fn print_usage() {
          \u{20}        [--executor-threads N] [--requests 200]        checkpoints from --models DIR;\n\
          \u{20}        [--max-batch 32] [--max-delay-ms 2]            pjrt: AOT artifacts); --listen\n\
          \u{20}        [--io-threads 1] [--kernel-threads 0]          serves TCP until a wire Shutdown\n\
-         \u{20}                                                       (reactor I/O threads, default 1);\n\
-         \u{20}                                                       --kernel-threads caps per-worker\n\
-         \u{20}                                                       tensor fan-out (0 = cores/workers;\n\
+         \u{20}        [--max-queue 1024]                             (reactor I/O threads, default 1);\n\
+         \u{20}        [--latency-target-ms 0] [--quota M=N,..]       --kernel-threads caps per-worker\n\
+         \u{20}        [--overload-after-ms 2000]                     tensor fan-out (0 = cores/workers;\n\
          \u{20}                                                       TENSORNET_THREADS caps the pool,\n\
-         \u{20}                                                       TENSORNET_SIMD=off forces scalar)\n\
+         \u{20}                                                       TENSORNET_SIMD=off forces scalar);\n\
+         \u{20}                                                       admission: --max-queue tickets\n\
+         \u{20}                                                       bound in-flight work, a latency\n\
+         \u{20}                                                       target adapts capacity to p95,\n\
+         \u{20}                                                       --quota reserves per-model slots,\n\
+         \u{20}                                                       sustained saturation goes LIFO\n\
          \u{20}  client --connect ADDR [--model A[,B,..]]            drive a remote server: N requests\n\
          \u{20}        [--requests 100] [--connections 1]             over C connections, P pipelined\n\
          \u{20}        [--pipeline 4] [--timeout-ms 30000]            each; a comma-separated --model\n\
@@ -434,9 +446,14 @@ fn cmd_compress(args: &Args) -> Result<()> {
 /// aggregate can hide one model batching well while another runs at
 /// batch 1).  The CI interleave smoke greps the per-model lines — keep
 /// the format stable.
-fn print_serve_summary(stats: &ServerStats, wall: f64) {
+fn print_serve_summary(server: &Server, wall: f64) {
+    let stats = server.stats();
     println!("completed:  {}", stats.completed.get());
-    println!("rejected:   {} (admission queue full)", stats.rejected.get());
+    println!(
+        "rejected:   {} (admission shed; {} against per-model quotas)",
+        stats.rejected.get(),
+        stats.quota_shed.get()
+    );
     println!("errors:     {}", stats.errors.get());
     println!("failed workers: {}", stats.failed_workers.get());
     println!("throughput: {:.1} req/s (wall {:.2}s)", stats.completed.get() as f64 / wall, wall);
@@ -445,6 +462,20 @@ fn print_serve_summary(stats: &ServerStats, wall: f64) {
     // wall-clock number above includes them
     println!("exec rate:  {:.1} rows/s (since first batch)", stats.throughput.per_second());
     println!("mean batch: {:.2}", stats.mean_batch_size());
+    // admission provenance: where the capacity controller ended up and
+    // whether the run ever went into overload (LIFO) mode
+    let adm = server.admission().snapshot();
+    println!(
+        "admission:  capacity {} (observed min {} max {}) mode {} flips {}",
+        adm.capacity,
+        adm.capacity_min,
+        adm.capacity_max,
+        match adm.mode {
+            QueueMode::Fifo => "fifo",
+            QueueMode::Lifo => "lifo",
+        },
+        adm.mode_flips,
+    );
     println!("e2e:   {}", stats.e2e.summary());
     println!("exec:  {}", stats.exec.summary());
     println!("queue: {}", stats.queue.summary());
@@ -453,9 +484,10 @@ fn print_serve_summary(stats: &ServerStats, wall: f64) {
         println!("per-model:");
         for (name, m) in per_model {
             println!(
-                "  {name:<12} completed {} errors {} batches {} rows {} mean batch {:.2}  e2e {}",
+                "  {name:<12} completed {} errors {} shed {} batches {} rows {} mean batch {:.2}  e2e {}",
                 m.completed.get(),
                 m.errors.get(),
+                m.shed.get(),
                 m.batches.get(),
                 m.batched_rows.get(),
                 m.mean_batch_size(),
@@ -463,6 +495,34 @@ fn print_serve_summary(stats: &ServerStats, wall: f64) {
             );
         }
     }
+}
+
+/// Parse `--quota MODEL=N[,MODEL=N...]` into admission reservations.
+fn parse_quotas(spec: Option<&str>) -> Result<Vec<(String, usize)>> {
+    let mut quotas = Vec::new();
+    if let Some(spec) = spec {
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let Some((name, slots)) = part.split_once('=') else {
+                return Err(tensornet::error::Error::Config(format!(
+                    "--quota expects MODEL=N[,MODEL=N...], got '{part}'"
+                )));
+            };
+            let name = name.trim();
+            let slots: usize = slots.trim().parse().map_err(|_| {
+                tensornet::error::Error::Config(format!(
+                    "--quota {part}: '{}' is not a slot count",
+                    slots.trim()
+                ))
+            })?;
+            if name.is_empty() {
+                return Err(tensornet::error::Error::Config(format!(
+                    "--quota {part}: empty model name"
+                )));
+            }
+            quotas.push((name.to_string(), slots));
+        }
+    }
+    Ok(quotas)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -476,6 +536,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let executor_threads = args.get_usize("executor-threads", 1)?;
     let io_threads = args.get_usize("io-threads", 1)?.max(1);
     let kernel_threads = args.get_usize("kernel-threads", 0)?;
+    let queue_capacity = args.get_usize("max-queue", 1024)?.max(1);
+    let latency_target_ms = args.get_usize("latency-target-ms", 0)? as u64;
+    let overload_after_ms = args.get_usize("overload-after-ms", 2_000)?.max(1) as u64;
+    let quotas = parse_quotas(args.get("quota"))?;
     let listen = args.get("listen");
 
     let cfg = ServerConfig {
@@ -485,6 +549,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         executor_threads,
         kernel_threads,
+        queue_capacity,
+        admission: AdmissionConfig {
+            latency_target_ms,
+            overload_after: Duration::from_millis(overload_after_ms),
+            quotas,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let (server, dim, model, lineup) = match backend.as_str() {
@@ -621,7 +692,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         net.shutdown();
         let wall = t0.elapsed().as_secs_f64().max(1e-9);
         let stats = server.stats();
-        print_serve_summary(stats, wall);
+        print_serve_summary(&server, wall);
         // remote request errors belong to the clients that sent them; the
         // daemon's own health gate is the executor pool
         if stats.failed_workers.get() > 0 {
@@ -636,7 +707,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("driving {n_requests} requests from {concurrency} in-process clients");
     let wall = drive_clients(&server, &model, dim, n_requests, concurrency);
     let stats = server.stats();
-    print_serve_summary(stats, wall);
+    print_serve_summary(&server, wall);
     // gate on completions and pool health, not just counted errors: a
     // reply channel dropped by a dying worker fails the caller without
     // touching stats.errors, and a worker whose init failed leaves the
@@ -728,13 +799,13 @@ fn cmd_client(args: &Args) -> Result<()> {
     println!("e2e:   {}", drive.e2e.summary());
     if let Ok(st) = probe.stats() {
         println!(
-            "server: completed {} rejected {} errors {} failed_workers {}",
-            st.completed, st.rejected, st.errors, st.failed_workers
+            "server: completed {} rejected {} errors {} failed_workers {} quota_shed {}",
+            st.completed, st.rejected, st.errors, st.failed_workers, st.quota_shed
         );
         for m in &st.per_model {
             println!(
-                "server per-model: {:<12} completed {} errors {} batches {} rows {} mean batch {:.2}",
-                m.name, m.completed, m.errors, m.batches, m.batched_rows, m.mean_batch_size(),
+                "server per-model: {:<12} completed {} errors {} shed {} batches {} rows {} mean batch {:.2}",
+                m.name, m.completed, m.errors, m.shed, m.batches, m.batched_rows, m.mean_batch_size(),
             );
         }
     }
@@ -760,7 +831,10 @@ fn cmd_client(args: &Args) -> Result<()> {
 /// the shard block is the placement/health provenance.
 fn print_router_summary(stats: &RemoteStats, shards: &[ShardSnapshot], wall: f64) {
     println!("completed:  {}", stats.completed);
-    println!("rejected:   {} (upstream busy)", stats.rejected);
+    println!(
+        "rejected:   {} (upstream busy; {} quota sheds reported by shards)",
+        stats.rejected, stats.quota_shed
+    );
     println!("errors:     {}", stats.errors);
     println!("failed shards: {}", stats.failed_workers);
     println!("throughput: {:.1} req/s (wall {:.2}s)", stats.completed as f64 / wall, wall);
@@ -768,10 +842,11 @@ fn print_router_summary(stats: &RemoteStats, shards: &[ShardSnapshot], wall: f64
         println!("per-model:");
         for m in &stats.per_model {
             println!(
-                "  {:<12} completed {} errors {} batches {} rows {} mean batch {:.2}",
+                "  {:<12} completed {} errors {} shed {} batches {} rows {} mean batch {:.2}",
                 m.name,
                 m.completed,
                 m.errors,
+                m.shed,
                 m.batches,
                 m.batched_rows,
                 m.mean_batch_size(),
@@ -861,6 +936,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             "max-delay-ms",
             "io-threads",
             "kernel-threads",
+            "max-queue",
+            "latency-target-ms",
+            "quota",
+            "overload-after-ms",
         ] {
             if let Some(v) = args.get(flag) {
                 cmd.arg(format!("--{flag}")).arg(v);

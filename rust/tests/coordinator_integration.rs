@@ -16,6 +16,7 @@ fn echo_server(max_batch: usize, delay_ms: u64, queue: usize) -> Server {
         batch_queue_capacity: 4,
         executor_threads: 1,
         kernel_threads: 0,
+        ..Default::default()
     };
     Server::start(cfg, || Ok(EchoExecutor { dim: 8, scale: 1.0 })).unwrap()
 }
@@ -75,6 +76,7 @@ fn backpressure_rejects_when_full() {
         batch_queue_capacity: 1,
         executor_threads: 1,
         kernel_threads: 0,
+        ..Default::default()
     };
     struct SlowEcho;
     impl tensornet::coordinator::BatchExecutor for SlowEcho {

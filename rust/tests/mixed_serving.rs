@@ -52,6 +52,7 @@ fn mixed_server(max_batch: usize, max_delay_ms: u64) -> Server {
         queue_capacity: 1024,
         batch_queue_capacity: 8,
         executor_threads: 2,
+        ..Default::default()
     };
     Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap()
 }

@@ -42,6 +42,7 @@ fn native_server(executor_threads: usize, max_batch: usize) -> Server {
         batch_queue_capacity: 8,
         executor_threads,
         kernel_threads: 0,
+        ..Default::default()
     };
     Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap()
 }

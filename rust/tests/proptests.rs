@@ -311,9 +311,10 @@ fn random_f32_vec(rng: &mut Rng, max_len: usize) -> Vec<f32> {
 }
 
 fn random_err_code(rng: &mut Rng) -> ErrCode {
-    match rng.below(3) {
+    match rng.below(4) {
         0 => ErrCode::Busy,
         1 => ErrCode::BadRequest,
+        2 => ErrCode::Quota,
         _ => ErrCode::Exec,
     }
 }
@@ -336,6 +337,7 @@ fn random_frame(rng: &mut Rng) -> Frame {
             id: rng.next_u64(),
             code: random_err_code(rng),
             message: random_name(rng, 80),
+            retry_after_ms: rng.next_u64() as u32,
         },
         3 => Frame::Stats,
         4 => Frame::StatsReply {
@@ -345,6 +347,7 @@ fn random_frame(rng: &mut Rng) -> Frame {
             failed_workers: rng.next_u64(),
             batches: rng.next_u64(),
             batched_rows: rng.next_u64(),
+            quota_shed: rng.next_u64(),
             per_model: (0..gen::int(rng, 0, 4))
                 .map(|_| ModelStatsEntry {
                     name: random_name(rng, 24),
@@ -352,6 +355,7 @@ fn random_frame(rng: &mut Rng) -> Frame {
                     errors: rng.next_u64(),
                     batches: rng.next_u64(),
                     batched_rows: rng.next_u64(),
+                    shed: rng.next_u64(),
                 })
                 .collect(),
         },
@@ -656,24 +660,33 @@ fn prop_gemm_dispatch_matches_naive_reference() {
 #[test]
 fn prop_batcher_per_model_groups_hold_all_invariants() {
     // Random interleaved multi-model request streams against a
-    // simulated clock.  The invariants of the per-model assembler:
-    //  * no batch exceeds max_batch, and a push-triggered flush is
-    //    exactly max_batch (only the group that filled flushes)
+    // simulated clock, drained as the batcher thread would — in a
+    // queue mode that may flip between wakeups (the admission
+    // controller flips FIFO↔LIFO under overload).  The invariants of
+    // the per-model assembler:
+    //  * no batch exceeds max_batch and none is empty
     //  * no batch mixes models
-    //  * no request is lost or duplicated, and FIFO holds within each
-    //    model (the emitted id sequence per model equals the pushed one)
-    //  * deadline scheduling: after poll(now), no pending group's
-    //    deadline (first arrival + max_delay) has passed — every
-    //    request is emitted by the time its group's deadline is polled
+    //  * no request is lost or duplicated in EITHER mode (per-model
+    //    multiset equality); in pure-FIFO runs the stronger guarantee
+    //    holds — the emitted id sequence per model equals the pushed
+    //    one exactly
+    //  * deadline scheduling: after a drain at `now`, no pending
+    //    group's deadline (first arrival + max_delay) has passed —
+    //    LIFO leaves the oldest request anchoring the deadline, so an
+    //    overloaded group stays eligible and nobody is stranded
     check(cfg(80), "batcher", |rng| {
         use std::collections::BTreeMap;
         use std::sync::mpsc::channel;
         use std::time::{Duration, Instant};
+        use tensornet::coordinator::QueueMode;
         let max_batch = gen::int(rng, 1, 8);
         let max_delay = Duration::from_millis(gen::int(rng, 1, 25) as u64);
         let policy = BatchPolicy { max_batch, max_delay };
         let mut asm = BatchAssembler::new(policy);
         let models = ["a", "b", "c"];
+        // half the cases stay pure FIFO (exact-order check); the rest
+        // flip modes randomly per wakeup (exactly-once check only)
+        let fifo_only = rng.uniform() < 0.5;
         let mut now = Instant::now();
         let mut next_id = 0u64;
         let mut pushed: BTreeMap<String, Vec<u64>> = BTreeMap::new();
@@ -705,6 +718,7 @@ fn prop_batcher_per_model_groups_hold_all_invariants() {
         for _ in 0..gen::int(rng, 1, 80) {
             if rng.uniform() < 0.7 {
                 // push a request for a random model at the current time
+                // (push never emits — draining is the wakeup's job)
                 let model = models[rng.below(models.len())];
                 let (tx, _rx) = channel();
                 let req = tensornet::coordinator::InferRequest {
@@ -713,28 +727,27 @@ fn prop_batcher_per_model_groups_hold_all_invariants() {
                     input: vec![],
                     enqueued: now,
                     reply: tx,
+                    ticket: None,
                 };
                 pushed.entry(model.into()).or_default().push(next_id);
                 next_id += 1;
-                if let Some(batch) = asm.push(req) {
-                    if batch.requests.len() != max_batch {
-                        return Err(format!(
-                            "push flushed a batch of {} != max_batch {max_batch}",
-                            batch.requests.len()
-                        ));
-                    }
-                    record(&batch, &mut emitted)?;
-                }
+                asm.push(req);
             } else {
-                // advance the clock and poll for expired groups
+                // advance the clock and drain every ready group, as one
+                // batcher wakeup does
                 now += Duration::from_millis(gen::int(rng, 0, 40) as u64);
-                for batch in asm.poll(now) {
+                let mode = if fifo_only || rng.uniform() < 0.5 {
+                    QueueMode::Fifo
+                } else {
+                    QueueMode::Lifo
+                };
+                while let Some(batch) = asm.pop_ready(now, mode) {
                     record(&batch, &mut emitted)?;
                 }
-                // nothing overdue may remain pending after a poll
+                // nothing overdue may remain pending after a drain
                 if let Some(d) = asm.deadline() {
                     if d <= now {
-                        return Err("poll left an expired group pending".into());
+                        return Err("drain left an expired group pending".into());
                     }
                 }
             }
@@ -745,9 +758,117 @@ fn prop_batcher_per_model_groups_hold_all_invariants() {
         if asm.pending_len() != 0 {
             return Err(format!("{} requests left after flush", asm.pending_len()));
         }
-        // exact per-model sequence match = no loss, no duplication, FIFO
-        if emitted != pushed {
-            return Err(format!("emitted {emitted:?} != pushed {pushed:?}"));
+        if fifo_only {
+            // exact per-model sequence match = no loss, no duplication,
+            // FIFO within each model
+            if emitted != pushed {
+                return Err(format!("emitted {emitted:?} != pushed {pushed:?}"));
+            }
+        } else {
+            // mode flips reorder — but every request is still delivered
+            // exactly once: per-model id multisets must match
+            let mut e = emitted;
+            let mut p = pushed;
+            for v in e.values_mut() {
+                v.sort_unstable();
+            }
+            for v in p.values_mut() {
+                v.sort_unstable();
+            }
+            if e != p {
+                return Err(format!("multisets differ: emitted {e:?} != pushed {p:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_admission_tickets_conserve_capacity_under_chaos() {
+    // Random sequences of admit / release / forced resizes / mode flips
+    // against the controller's public API.  The invariants:
+    //  * a model holding fewer tickets than its reservation is NEVER
+    //    shed — the fairness guarantee, under any capacity
+    //  * snapshot().admitted always equals the number of live tickets
+    //    (release is exactly-once; no ticket lost or double-released)
+    //  * an unquota'd model is only ever shed as Capacity, never Quota
+    //  * every shed carries a retry hint ≥ 1ms
+    //  * capacity never drops below Σ reservations, however hard
+    //    force_capacity pushes
+    //  * dropping every ticket returns the controller to admitted == 0
+    check(cfg(60), "admission", |rng| {
+        use std::collections::BTreeMap;
+        use tensornet::coordinator::{
+            AdmissionConfig, AdmissionController, AdmissionTicket, QueueMode, ShedKind,
+        };
+        let models = ["hot", "bg", "free"]; // "free" has no quota
+        let quota_hot = gen::int(rng, 1, 4);
+        let quota_bg = gen::int(rng, 1, 4);
+        let initial = gen::int(rng, 1, 16);
+        let acfg = AdmissionConfig {
+            quotas: vec![("hot".into(), quota_hot), ("bg".into(), quota_bg)],
+            ..Default::default()
+        };
+        let ctl = AdmissionController::new(initial, &acfg);
+        let quotas: BTreeMap<&str, usize> =
+            [("hot", quota_hot), ("bg", quota_bg)].into_iter().collect();
+        let mut live: Vec<(&str, AdmissionTicket)> = Vec::new();
+        for _ in 0..gen::int(rng, 1, 120) {
+            match rng.below(8) {
+                0..=3 => {
+                    let model = models[rng.below(models.len())];
+                    let held = live.iter().filter(|(m, _)| *m == model).count();
+                    match ctl.try_admit(model) {
+                        Ok(t) => live.push((model, t)),
+                        Err(info) => {
+                            if quotas.get(model).is_some_and(|q| held < *q) {
+                                return Err(format!(
+                                    "{model} shed while holding {held} < its quota — \
+                                     reservation violated"
+                                ));
+                            }
+                            if model == "free" && info.kind == ShedKind::Quota {
+                                return Err("unquota'd model shed as Quota".into());
+                            }
+                            if info.retry_after_ms < 1 {
+                                return Err("shed without a retry hint".into());
+                            }
+                        }
+                    }
+                }
+                4..=5 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        live.swap_remove(i); // drops the ticket → release
+                    }
+                }
+                6 => ctl.force_capacity(gen::int(rng, 1, 24)),
+                _ => ctl.force_mode(if rng.uniform() < 0.5 {
+                    QueueMode::Fifo
+                } else {
+                    QueueMode::Lifo
+                }),
+            }
+            let snap = ctl.snapshot();
+            if snap.admitted != live.len() {
+                return Err(format!(
+                    "admitted {} != {} live tickets — a release was lost or doubled",
+                    snap.admitted,
+                    live.len()
+                ));
+            }
+            if snap.capacity < quota_hot + quota_bg {
+                return Err(format!(
+                    "capacity {} below Σ quotas {} — reservations no longer honorable",
+                    snap.capacity,
+                    quota_hot + quota_bg
+                ));
+            }
+        }
+        drop(live);
+        let snap = ctl.snapshot();
+        if snap.admitted != 0 {
+            return Err(format!("{} tickets leaked after dropping all", snap.admitted));
         }
         Ok(())
     });

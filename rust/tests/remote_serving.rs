@@ -46,6 +46,7 @@ fn start_remote(executor_threads: usize, max_batch: usize) -> (Arc<Server>, NetS
         batch_queue_capacity: 8,
         executor_threads,
         kernel_threads: 0,
+        ..Default::default()
     };
     let server = Arc::new(
         Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap(),
@@ -190,6 +191,7 @@ fn full_admission_queue_returns_busy_and_nothing_hangs() {
         batch_queue_capacity: 1,
         executor_threads: 1,
         kernel_threads: 0,
+        ..Default::default()
     };
     let server = Arc::new(Server::start(cfg, || Ok(Stall)).unwrap());
     let net = NetServer::start(
@@ -284,6 +286,7 @@ fn reactor_single_io_thread_serves_256_connections_in_order() {
         batch_queue_capacity: 16,
         executor_threads: 2,
         kernel_threads: 0,
+        ..Default::default()
     };
     let server = Arc::new(
         Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap(),

@@ -65,6 +65,7 @@ fn start_shard() -> (Arc<Server>, NetServer, String) {
         batch_queue_capacity: 8,
         executor_threads: 2,
         kernel_threads: 0,
+        ..Default::default()
     };
     let server = Arc::new(
         Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap(),
@@ -192,6 +193,7 @@ where
         batch_queue_capacity: 8,
         executor_threads: 1,
         kernel_threads: 0,
+        ..Default::default()
     };
     let server = Arc::new(Server::start(cfg, factory).unwrap());
     let net = NetServer::start(
