@@ -49,6 +49,13 @@ pub enum ModelSpec {
     /// The full MNIST TensorNet of `nn::zoo`:
     /// `TT(4^5/4^5, rank) -> ReLU -> FC(1024 -> 10)`.
     MnistTensorNet { rank: usize, seed: u64 },
+    /// The conv-MNIST net of `nn::zoo`: a TT-format convolution (Garipov
+    /// reshape) over the 1x32x32 input, then `ReLU -> FC(2048 -> 10)` —
+    /// a second FLOP/byte profile for the whole serving stack.
+    ConvMnist { rank: usize, seed: u64 },
+    /// A bare block-term layer `W = Σ_b A_b G_b B_b` applied as
+    /// `y = x Wᵀ + bias` (BT-Nets) — the third weight-storage family.
+    BtLayer { n_out: usize, n_in: usize, blocks: usize, rank: usize, seed: u64 },
     /// A trained model persisted by `runtime::Checkpoint` — the lifecycle
     /// endpoint: whatever `tensornet train --save` / `tensornet compress`
     /// wrote is served as-is.  Dims are captured at registration time
@@ -64,6 +71,8 @@ impl ModelSpec {
             ModelSpec::TtLayer { ns, .. } => ns.iter().product(),
             ModelSpec::DenseLayer { n_in, .. } => *n_in,
             ModelSpec::MnistTensorNet { .. } => 1024,
+            ModelSpec::ConvMnist { .. } => 1024,
+            ModelSpec::BtLayer { n_in, .. } => *n_in,
             ModelSpec::Checkpoint { n_in, .. } => *n_in,
         }
     }
@@ -74,6 +83,8 @@ impl ModelSpec {
             ModelSpec::TtLayer { ms, .. } => ms.iter().product(),
             ModelSpec::DenseLayer { n_out, .. } => *n_out,
             ModelSpec::MnistTensorNet { .. } => 10,
+            ModelSpec::ConvMnist { .. } => 10,
+            ModelSpec::BtLayer { n_out, .. } => *n_out,
             ModelSpec::Checkpoint { n_out, .. } => *n_out,
         }
     }
@@ -94,6 +105,15 @@ impl ModelSpec {
             ModelSpec::MnistTensorNet { rank, seed } => {
                 let net = crate::nn::mnist_tensornet(*rank, &mut Rng::new(*seed))?;
                 Ok(NativeModel::Net(net))
+            }
+            ModelSpec::ConvMnist { rank, seed } => {
+                let net = crate::nn::mnist_tt_convnet(*rank, &mut Rng::new(*seed))?;
+                Ok(NativeModel::Net(net))
+            }
+            ModelSpec::BtLayer { n_out, n_in, blocks, rank, seed } => {
+                let bt =
+                    crate::nn::BtLinear::new(*n_out, *n_in, *blocks, *rank, &mut Rng::new(*seed))?;
+                Ok(NativeModel::Loaded(Box::new(bt)))
             }
             ModelSpec::Checkpoint { dir, .. } => {
                 Ok(NativeModel::Loaded(Checkpoint::load(Path::new(dir))?.build()?))
@@ -125,9 +145,11 @@ impl ModelRegistry {
 
     /// The stock serving lineup at the paper's Table-3 MNIST geometry:
     ///
-    /// * `tt_layer`  — TT 1024x1024 (4^5 modes, rank 8), in/out 1024
-    /// * `fc_mnist`  — dense 1024x1024 counterpart, in/out 1024
-    /// * `mnist_net` — full MNIST TensorNet, in 1024 / out 10
+    /// * `tt_layer`   — TT 1024x1024 (4^5 modes, rank 8), in/out 1024
+    /// * `fc_mnist`   — dense 1024x1024 counterpart, in/out 1024
+    /// * `mnist_net`  — full MNIST TensorNet, in 1024 / out 10
+    /// * `conv_mnist` — TT-conv MNIST net (Garipov reshape), in 1024 / out 10
+    /// * `bt_layer`   — block-term 1024x1024 (4 blocks, rank 8), in/out 1024
     pub fn standard() -> Self {
         let mut r = ModelRegistry::new();
         r.register(
@@ -136,6 +158,11 @@ impl ModelRegistry {
         );
         r.register("fc_mnist", ModelSpec::DenseLayer { n_out: 1024, n_in: 1024, seed: 0x7e50_0002 });
         r.register("mnist_net", ModelSpec::MnistTensorNet { rank: 8, seed: 0x7e50_0003 });
+        r.register("conv_mnist", ModelSpec::ConvMnist { rank: 4, seed: 0x7e50_0004 });
+        r.register(
+            "bt_layer",
+            ModelSpec::BtLayer { n_out: 1024, n_in: 1024, blocks: 4, rank: 8, seed: 0x7e50_0005 },
+        );
         r
     }
 
@@ -304,12 +331,43 @@ mod tests {
     #[test]
     fn standard_registry_has_the_serving_lineup() {
         let r = ModelRegistry::standard();
-        assert_eq!(r.names(), vec!["fc_mnist", "mnist_net", "tt_layer"]);
+        assert_eq!(
+            r.names(),
+            vec!["bt_layer", "conv_mnist", "fc_mnist", "mnist_net", "tt_layer"]
+        );
         assert_eq!(r.input_dim("tt_layer").unwrap(), 1024);
         assert_eq!(r.input_dim("fc_mnist").unwrap(), 1024);
         assert_eq!(r.input_dim("mnist_net").unwrap(), 1024);
+        assert_eq!(r.input_dim("conv_mnist").unwrap(), 1024);
+        assert_eq!(r.input_dim("bt_layer").unwrap(), 1024);
         assert_eq!(r.spec("tt_layer").unwrap().output_dim(), 1024);
         assert_eq!(r.spec("mnist_net").unwrap().output_dim(), 10);
+        assert_eq!(r.spec("conv_mnist").unwrap().output_dim(), 10);
+        assert_eq!(r.spec("bt_layer").unwrap().output_dim(), 1024);
+    }
+
+    #[test]
+    fn conv_and_bt_specs_execute_bitwise_vs_in_process_builds() {
+        let mut exec = NativeExecutor::new(ModelRegistry::standard());
+        let mut rng = Rng::new(77);
+        let x: Vec<f32> = (0..2 * 1024).map(|_| rng.normal_f32(1.0)).collect();
+
+        let (y, od) = exec.execute("conv_mnist", x.clone(), 2).unwrap();
+        assert_eq!(od, 10);
+        let mut net = crate::nn::mnist_tt_convnet(4, &mut Rng::new(0x7e50_0004)).unwrap();
+        let want = net
+            .forward(&Tensor::from_vec(&[2, 1024], x.clone()).unwrap(), false)
+            .unwrap();
+        assert_eq!(y, want.data());
+
+        let (y, od) = exec.execute("bt_layer", x.clone(), 2).unwrap();
+        assert_eq!(od, 1024);
+        let mut bt =
+            crate::nn::BtLinear::new(1024, 1024, 4, 8, &mut Rng::new(0x7e50_0005)).unwrap();
+        let want = bt
+            .forward(&Tensor::from_vec(&[2, 1024], x).unwrap(), false)
+            .unwrap();
+        assert_eq!(y, want.data());
     }
 
     #[test]

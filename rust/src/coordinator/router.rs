@@ -63,7 +63,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -131,6 +131,11 @@ struct ShardInfo {
     busy: Counter,
     /// link-death events (each fails over its in-flight requests)
     failovers: Counter,
+    /// the shard's most recent `retry_after_ms` backoff hint (0 = none);
+    /// set on every Busy/Quota reply, cleared when the shard completes a
+    /// request again — forwarded sheds carry the max over a model's
+    /// placed replicas so clients don't retry into a still-backed-up set
+    retry_hint_ms: AtomicU32,
     /// latest polled `StatsReply`, for the merged downstream stats
     last_poll: Mutex<Option<RemoteStats>>,
 }
@@ -383,8 +388,15 @@ impl ShardLink {
     }
 
     /// Pull one [`READ_CHUNK`] off the link and settle every reply it
-    /// completes, strictly head-of-queue.
-    fn pump_reads(&mut self, progress: &mut bool, stats: &RouterStats) {
+    /// completes, strictly head-of-queue.  `shards`/`placement` feed the
+    /// cross-replica retry-hint lookup on shed replies.
+    fn pump_reads(
+        &mut self,
+        progress: &mut bool,
+        stats: &RouterStats,
+        shards: &[Arc<ShardInfo>],
+        placement: &BTreeMap<String, Vec<usize>>,
+    ) {
         let mut chunk = [0u8; READ_CHUNK];
         let read = match self.io.as_mut() {
             Some(io) => io.stream.read(&mut chunk),
@@ -400,7 +412,14 @@ impl ShardLink {
                 loop {
                     match io.decoder.next_frame() {
                         Ok(Some(frame)) => {
-                            if let Err(why) = settle(&mut io.pending, &self.shard, frame, stats) {
+                            if let Err(why) = settle(
+                                &mut io.pending,
+                                &self.shard,
+                                frame,
+                                stats,
+                                shards,
+                                placement,
+                            ) {
                                 failure = Some(why);
                                 break;
                             }
@@ -468,11 +487,15 @@ impl ShardLink {
 
 /// Match one shard reply against the head of the link's in-flight
 /// queue; returns the failure reason if the shard broke protocol.
+/// `shards`/`placement` let a forwarded shed carry the max backoff hint
+/// over the model's placed replicas.
 fn settle(
     pending: &mut VecDeque<UpEntry>,
     shard: &ShardInfo,
     frame: Frame,
     stats: &RouterStats,
+    shards: &[Arc<ShardInfo>],
+    placement: &BTreeMap<String, Vec<usize>>,
 ) -> std::result::Result<(), String> {
     match pending.pop_front() {
         None => Err(format!("unsolicited {} with nothing in flight", frame.kind())),
@@ -518,6 +541,9 @@ fn settle(
                     }
                     shard.in_flight.fetch_sub(1, Ordering::Relaxed);
                     shard.completed.inc();
+                    // the shard is admitting work again — a stale backoff
+                    // hint must not keep inflating forwarded sheds
+                    shard.retry_hint_ms.store(0, Ordering::Relaxed);
                     stats.completed.inc();
                     stats.model(&model).completed.inc();
                     slot.borrow_mut().replace(Frame::InferOk {
@@ -536,23 +562,39 @@ fn settle(
                         return Err(reorder(pending, &f, up_id, down_id, model, slot));
                     }
                     shard.in_flight.fetch_sub(1, Ordering::Relaxed);
-                    match code {
-                        // both shed kinds are retryable backpressure,
-                        // not failures; the reply (with the shard's
-                        // retry hint) passes through untouched so the
-                        // client sees the same typed signal it would
-                        // against the shard directly
+                    let retry_after_ms = match code {
+                        // both shed kinds are retryable backpressure, not
+                        // failures.  The forwarded hint is the max over
+                        // the model's placed replicas' latest hints, not
+                        // just this shard's: the client's retry will be
+                        // dispatched least-loaded over the SAME candidate
+                        // set, so backing off less than the slowest-
+                        // recovering replica advertises just bounces the
+                        // retry off another saturated candidate
                         ErrCode::Busy | ErrCode::Quota => {
                             shard.busy.inc();
                             stats.busy.inc();
                             stats.model(&model).busy.inc();
+                            shard.retry_hint_ms.store(retry_after_ms, Ordering::Relaxed);
+                            placement
+                                .get(&model)
+                                .and_then(|placed| {
+                                    placed
+                                        .iter()
+                                        .filter_map(|&i| shards.get(i))
+                                        .map(|s| s.retry_hint_ms.load(Ordering::Relaxed))
+                                        .max()
+                                })
+                                .unwrap_or(retry_after_ms)
+                                .max(retry_after_ms)
                         }
                         _ => {
                             shard.errors.inc();
                             stats.errors.inc();
                             stats.model(&model).errors.inc();
+                            retry_after_ms
                         }
-                    }
+                    };
                     slot.borrow_mut().replace(Frame::InferErr {
                         id: down_id,
                         code,
@@ -998,6 +1040,7 @@ impl ShardRouter {
                     errors: Counter::new(),
                     busy: Counter::new(),
                     failovers: Counter::new(),
+                    retry_hint_ms: AtomicU32::new(0),
                     last_poll: Mutex::new(None),
                 })
             })
@@ -1261,7 +1304,7 @@ fn io_loop(
                 link.send_poll();
             }
             link.pump_writes(&mut progress, &stats);
-            link.pump_reads(&mut progress, &stats);
+            link.pump_reads(&mut progress, &stats, &shards, &placement);
         }
 
         // downstream: read + dispatch (fills link wbufs), settle slots
@@ -1363,6 +1406,7 @@ mod tests {
             errors: Counter::new(),
             busy: Counter::new(),
             failovers: Counter::new(),
+            retry_hint_ms: AtomicU32::new(0),
             last_poll: Mutex::new(Some(RemoteStats {
                 completed: 9,
                 rejected: 0,
@@ -1396,21 +1440,29 @@ mod tests {
         assert_eq!((b.completed, b.batches, b.shed), (3, 0, 0));
     }
 
-    #[test]
-    fn settle_fills_slots_in_order_and_rewrites_ids() {
-        let stats = RouterStats::default();
-        let shard = Arc::new(ShardInfo {
-            addr: "x:1".into(),
-            models: vec!["m".into()],
+    /// A test shard with all-zero counters.
+    fn test_shard(addr: &str, models: &[&str], in_flight: u64) -> Arc<ShardInfo> {
+        Arc::new(ShardInfo {
+            addr: addr.into(),
+            models: models.iter().map(|m| m.to_string()).collect(),
             healthy: AtomicBool::new(true),
-            in_flight: AtomicU64::new(2),
+            in_flight: AtomicU64::new(in_flight),
             forwarded: Counter::new(),
             completed: Counter::new(),
             errors: Counter::new(),
             busy: Counter::new(),
             failovers: Counter::new(),
+            retry_hint_ms: AtomicU32::new(0),
             last_poll: Mutex::new(None),
-        });
+        })
+    }
+
+    #[test]
+    fn settle_fills_slots_in_order_and_rewrites_ids() {
+        let stats = RouterStats::default();
+        let shard = test_shard("x:1", &["m"], 2);
+        let placement: BTreeMap<String, Vec<usize>> = [("m".to_string(), vec![0])].into();
+        let shards = [shard.clone()];
         let s1: Slot = Rc::new(RefCell::new(None));
         let s2: Slot = Rc::new(RefCell::new(None));
         let mut pending = VecDeque::new();
@@ -1431,6 +1483,8 @@ mod tests {
             &shard,
             Frame::InferOk { id: 1, queue_us: 5, exec_us: 6, batch_size: 1, output: vec![1.0] },
             &stats,
+            &shards,
+            &placement,
         )
         .unwrap();
         match s1.borrow().as_ref() {
@@ -1445,6 +1499,8 @@ mod tests {
             &shard,
             Frame::InferErr { id: 2, code: ErrCode::Busy, message: "full".into(), retry_after_ms: 9 },
             &stats,
+            &shards,
+            &placement,
         )
         .unwrap();
         match s2.borrow().as_ref() {
@@ -1465,18 +1521,7 @@ mod tests {
     #[test]
     fn settle_rejects_out_of_order_ids_without_losing_the_entry() {
         let stats = RouterStats::default();
-        let shard = Arc::new(ShardInfo {
-            addr: "x:1".into(),
-            models: vec![],
-            healthy: AtomicBool::new(true),
-            in_flight: AtomicU64::new(1),
-            forwarded: Counter::new(),
-            completed: Counter::new(),
-            errors: Counter::new(),
-            busy: Counter::new(),
-            failovers: Counter::new(),
-            last_poll: Mutex::new(None),
-        });
+        let shard = test_shard("x:1", &[], 1);
         let slot: Slot = Rc::new(RefCell::new(None));
         let mut pending = VecDeque::new();
         pending.push_back(UpEntry::Infer { up_id: 7, down_id: 1, model: "m".into(), slot });
@@ -1485,10 +1530,78 @@ mod tests {
             &shard,
             Frame::InferOk { id: 8, queue_us: 0, exec_us: 0, batch_size: 1, output: vec![] },
             &stats,
+            &[shard.clone()],
+            &BTreeMap::new(),
         )
         .unwrap_err();
         assert!(err.contains("out-of-order"), "{err}");
         // the entry is back at the head so fail() can error its slot
         assert_eq!(pending.len(), 1, "mismatched entry must be reinstated for failover");
+    }
+
+    #[test]
+    fn forwarded_sheds_carry_the_max_retry_hint_over_placed_replicas() {
+        let stats = RouterStats::default();
+        let s0 = test_shard("x:1", &["m"], 0);
+        let s1 = test_shard("x:2", &["m"], 0);
+        let shards = [s0.clone(), s1.clone()];
+        let placement: BTreeMap<String, Vec<usize>> = [("m".to_string(), vec![0, 1])].into();
+
+        // replica 1 shed earlier and advertised a 12ms backoff
+        s1.retry_hint_ms.store(12, Ordering::Relaxed);
+
+        // replica 0 sheds with a 5ms hint: the forwarded reply carries
+        // the max over both placed replicas, not just the answering one
+        let slot: Slot = Rc::new(RefCell::new(None));
+        let mut pending = VecDeque::new();
+        pending.push_back(UpEntry::Infer { up_id: 1, down_id: 7, model: "m".into(), slot: slot.clone() });
+        s0.in_flight.fetch_add(1, Ordering::Relaxed);
+        settle(
+            &mut pending,
+            &s0,
+            Frame::InferErr { id: 1, code: ErrCode::Busy, message: "full".into(), retry_after_ms: 5 },
+            &stats,
+            &shards,
+            &placement,
+        )
+        .unwrap();
+        match slot.borrow().as_ref() {
+            Some(Frame::InferErr { retry_after_ms, .. }) => assert_eq!(*retry_after_ms, 12),
+            other => panic!("expected forwarded shed, got {other:?}"),
+        }
+        assert_eq!(s0.retry_hint_ms.load(Ordering::Relaxed), 5, "own hint recorded");
+
+        // replica 1 completes a request: its stale hint clears, so the
+        // next shed forwards replica 0's own 5ms hint
+        let ok_slot: Slot = Rc::new(RefCell::new(None));
+        pending.push_back(UpEntry::Infer { up_id: 9, down_id: 8, model: "m".into(), slot: ok_slot });
+        s1.in_flight.fetch_add(1, Ordering::Relaxed);
+        settle(
+            &mut pending,
+            &s1,
+            Frame::InferOk { id: 9, queue_us: 0, exec_us: 0, batch_size: 1, output: vec![0.0] },
+            &stats,
+            &shards,
+            &placement,
+        )
+        .unwrap();
+        assert_eq!(s1.retry_hint_ms.load(Ordering::Relaxed), 0, "completion clears the hint");
+
+        let slot2: Slot = Rc::new(RefCell::new(None));
+        pending.push_back(UpEntry::Infer { up_id: 2, down_id: 9, model: "m".into(), slot: slot2.clone() });
+        s0.in_flight.fetch_add(1, Ordering::Relaxed);
+        settle(
+            &mut pending,
+            &s0,
+            Frame::InferErr { id: 2, code: ErrCode::Quota, message: "quota".into(), retry_after_ms: 5 },
+            &stats,
+            &shards,
+            &placement,
+        )
+        .unwrap();
+        match slot2.borrow().as_ref() {
+            Some(Frame::InferErr { retry_after_ms, .. }) => assert_eq!(*retry_after_ms, 5),
+            other => panic!("expected forwarded shed, got {other:?}"),
+        }
     }
 }

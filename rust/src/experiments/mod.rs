@@ -18,9 +18,10 @@ pub use hashednet::{run_hashednet, HashedNetRow};
 // so `experiments::tt_classifier`-style paths keep working
 pub use crate::nn::{mnist_fc_baseline, mnist_tensornet, mr_classifier, tt_classifier};
 pub use perf::{
-    bench_coordinator, bench_mixed_serving, bench_native_serving, bench_remote_serving,
-    bench_tt_matvec, bench_ttsvd, default_matvec_cases, drive_clients, drive_mixed_clients,
-    drive_remote_clients, report, run_bench_suite, write_report, MatvecCase, RemoteDrive,
+    bench_conv_serving, bench_coordinator, bench_mixed_serving, bench_native_serving,
+    bench_remote_serving, bench_tt_matvec, bench_ttsvd, default_matvec_cases, drive_clients,
+    drive_mixed_clients, drive_remote_clients, report, run_bench_suite, write_report,
+    MatvecCase, RemoteDrive,
 };
 pub use table2::{run_table2, Table2Row, VggFcGeometry};
 pub use table3::{run_table3, Table3Row};

@@ -470,6 +470,74 @@ pub fn bench_native_serving(
     Ok(entries)
 }
 
+/// New-model-family serving sweep (`conv_tt`): `conv_mnist` (TT-format
+/// convolution via the Garipov reshape), `bt_layer` (block-term
+/// decomposition) and the original `tt_layer` driven one at a time
+/// through the same in-process serving spine at one fixed policy.  One
+/// entry per model with its weight-storage `family` recorded, so the
+/// trajectory reads as relative serving cost across the three
+/// compression families at identical coordination settings — a conv or
+/// BT kernel regression shows up here even when `native_tt` is flat.
+pub fn bench_conv_serving(
+    n_requests: usize,
+    clients: usize,
+    verbose: bool,
+) -> Result<Vec<Json>> {
+    let registry = ModelRegistry::standard();
+    // (model, weight-storage family) — tt_layer rides along as the
+    // cross-family baseline at this sweep's policy
+    let sweep = [("conv_mnist", "tt_conv"), ("bt_layer", "bt"), ("tt_layer", "tt")];
+    let (executor_threads, max_batch) = (2usize, 32usize);
+    let mut entries = Vec::new();
+    for (model, family) in sweep {
+        let dim = registry.input_dim(model)?;
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch, max_delay: Duration::from_micros(500) },
+            queue_capacity: 4096,
+            batch_queue_capacity: 16,
+            executor_threads,
+            kernel_threads: 0,
+            ..Default::default()
+        };
+        let kernel_threads = cfg.effective_kernel_threads();
+        let reg = registry.clone();
+        let server = Server::start(cfg, move || Ok(NativeExecutor::new(reg.clone())))?;
+        // warm the lazily-built model out of the timed region (same
+        // rationale and accounting as the native sweep)
+        server.infer(model, vec![0.0; dim])?;
+        let wall = drive_clients(&server, model, dim, n_requests, clients).max(1e-9);
+        let st = server.stats();
+        let served = st.completed.get().saturating_sub(1); // minus warmup
+        let mut obj = BTreeMap::new();
+        obj.insert("model".to_string(), Json::Str(model.to_string()));
+        obj.insert("family".to_string(), Json::Str(family.to_string()));
+        obj.insert("executor_threads".to_string(), num(executor_threads as f64));
+        obj.insert("kernel_threads".to_string(), num(kernel_threads as f64));
+        obj.insert("simd".to_string(), Json::Str(simd_name().to_string()));
+        obj.insert("max_batch".to_string(), num(max_batch as f64));
+        obj.insert("clients".to_string(), num(clients as f64));
+        obj.insert("completed".to_string(), num(served as f64));
+        obj.insert("errors".to_string(), num(st.errors.get() as f64));
+        obj.insert("rejected".to_string(), num(st.rejected.get() as f64));
+        obj.insert("failed_workers".to_string(), num(st.failed_workers.get() as f64));
+        obj.insert("req_per_s".to_string(), num(served as f64 / wall));
+        obj.insert("mean_batch".to_string(), num(st.mean_batch_size()));
+        obj.insert("p50_us".to_string(), num(st.e2e.quantile_us(0.5)));
+        obj.insert("p99_us".to_string(), num(st.e2e.quantile_us(0.99)));
+        if verbose {
+            println!(
+                "  {model:<12} family={family:<8} {:>9.0} req/s  mean batch {:.1}  p50 {:.0}µs p99 {:.0}µs",
+                served as f64 / wall,
+                st.mean_batch_size(),
+                st.e2e.quantile_us(0.5),
+                st.e2e.quantile_us(0.99),
+            );
+        }
+        entries.push(Json::Obj(obj));
+    }
+    Ok(entries)
+}
+
 /// Mixed-model serving sweep (`mixed_tt`): interleaved
 /// tt_layer/fc_mnist/mnist_net traffic through one server, swept over
 /// (models, clients, max_batch), reporting per-model mean batch size.
@@ -1069,6 +1137,13 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
     let native_requests = if quick { 1_000 } else { 5_000 };
     let native = bench_native_serving(native_requests, clients, verbose)?;
     if verbose {
+        println!("== model-family serving sweep (tt_conv / bt / tt through one policy)");
+    }
+    // smaller count: the conv and BT models do real per-row work (im2col
+    // + TT contraction; three matmuls per block), unlike the bare matvec
+    let conv_requests = if quick { 400 } else { 2_000 };
+    let conv = bench_conv_serving(conv_requests, clients, verbose)?;
+    if verbose {
         println!("== mixed-model serving sweep (models x clients x max_batch, interleaved)");
     }
     let mixed = bench_mixed_serving(native_requests, verbose)?;
@@ -1093,6 +1168,7 @@ pub fn run_bench_suite(quick: bool, out_dir: &Path, verbose: bool) -> Result<Vec
         vec![
             ("entries", coord),
             ("native_tt", native),
+            ("conv_tt", conv),
             ("mixed_tt", mixed),
             ("remote_tt", remote),
             ("sharded_tt", sharded),
@@ -1191,6 +1267,29 @@ mod tests {
             assert_eq!(e.get("failed_workers").unwrap().as_usize(), Some(0));
             // kernel provenance: budget >= 1 always, and the auto split
             // never hands one worker more than the whole machine
+            let kt = e.get("kernel_threads").unwrap().as_usize().unwrap();
+            assert!((1..=num_threads()).contains(&kt), "{kt}");
+            assert!(e.get("simd").unwrap().as_str().is_some());
+        }
+    }
+
+    #[test]
+    fn conv_family_sweep_records_family_provenance() {
+        let entries = bench_conv_serving(12, 3, false).unwrap();
+        assert_eq!(entries.len(), 3);
+        let families: Vec<String> = entries
+            .iter()
+            .map(|e| e.get("family").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(families, vec!["tt_conv", "bt", "tt"], "one entry per storage family");
+        for e in &entries {
+            assert_eq!(e.get("errors").unwrap().as_usize(), Some(0));
+            assert_eq!(e.get("completed").unwrap().as_usize(), Some(12));
+            assert_eq!(e.get("rejected").unwrap().as_usize(), Some(0));
+            assert_eq!(e.get("failed_workers").unwrap().as_usize(), Some(0));
+            assert!(e.get("req_per_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(e.get("model").unwrap().as_str().is_some());
+            // same provenance contract as every serving sweep
             let kt = e.get("kernel_threads").unwrap().as_usize().unwrap();
             assert!((1..=num_threads()).contains(&kt), "{kt}");
             assert!(e.get("simd").unwrap().as_str().is_some());

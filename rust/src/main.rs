@@ -10,13 +10,14 @@
 //! tensornet table2     [--accuracy] [--quick]  Table 2 compression (+proxy)
 //! tensornet table3     [--quick]               Table 3 inference timing
 //! tensornet bench      [--quick] [--out-dir D] perf baseline -> BENCH_*.json
-//! tensornet train      [--model tt|fc] [--rank 8] [--epochs 5]
-//!                      [--save DIR] [--init-from CKPT]
+//! tensornet train      [--model tt|fc|conv|bt] [--rank 8] [--blocks 4]
+//!                      [--epochs 5] [--save DIR] [--init-from CKPT]
 //!                                              train (or fine-tune) on MNIST,
 //!                                              optionally checkpointing
-//! tensornet compress   --from CKPT --to DIR [--rank 8] [--eps 0]
+//! tensornet compress   --from CKPT --to DIR [--family tt|bt|tt-conv]
+//!                      [--rank 8] [--eps 0] [--blocks 4]
 //!                      [--ms 4,4,4,4,4] [--ns 4,4,4,4,4]
-//!                                              TT-SVD a dense checkpoint
+//!                                              SVD-compress a dense checkpoint
 //! tensornet serve      [--backend native|pjrt] [--executor-threads N]
 //!                      [--models DIR]          serve native zoo models,
 //!                      [--listen ADDR]         trained checkpoints, or AOT
@@ -66,7 +67,9 @@ use tensornet::coordinator::{
 use tensornet::data::{global_contrast_normalize, synth_mnist};
 use tensornet::error::Result;
 use tensornet::experiments::*;
-use tensornet::nn::{Layer, SgdConfig, TrainConfig, Trainer};
+use tensornet::nn::{
+    bt_classifier, mnist_convnet, Compression, Layer, SgdConfig, TrainConfig, Trainer,
+};
 use tensornet::runtime::{Checkpoint, Manifest};
 use tensornet::util::bench::print_table;
 use tensornet::util::cli::Args;
@@ -125,10 +128,16 @@ fn print_usage() {
          subcommands:\n\
          \u{20}  fig1 | hashednet | cifar | wide | table2 | table3   experiments\n\
          \u{20}  bench [--quick] [--out-dir DIR]                     perf baseline -> BENCH_*.json\n\
-         \u{20}  train [--model tt|fc] [--rank 8] [--epochs 5]       train (or --init-from CKPT to\n\
-         \u{20}        [--save DIR] [--init-from CKPT]                fine-tune); --save checkpoints\n\
-         \u{20}  compress --from CKPT --to DIR [--rank 8] [--eps 0]  TT-SVD dense checkpoint layers\n\
-         \u{20}        [--ms 4,4,4,4,4] [--ns 4,4,4,4,4]              into a TT checkpoint\n\
+         \u{20}  train [--model tt|fc|conv|bt] [--rank 8]            train (or --init-from CKPT to\n\
+         \u{20}        [--blocks 4] [--epochs 5]                      fine-tune); --save checkpoints;\n\
+         \u{20}        [--save DIR] [--init-from CKPT]                conv = dense conv-MNIST net,\n\
+         \u{20}                                                       bt = block-term 1024x1024 layer\n\
+         \u{20}  compress --from CKPT --to DIR [--rank 8] [--eps 0]  SVD-compress checkpoint layers:\n\
+         \u{20}        [--family tt|bt|tt-conv] [--blocks 4]          tt: dense FC -> TT (TT-SVD),\n\
+         \u{20}        [--ms 4,4,4,4,4] [--ns 4,4,4,4,4]              bt: dense FC -> block-term,\n\
+         \u{20}                                                       tt-conv: conv kernel -> TT via\n\
+         \u{20}                                                       the Garipov reshape; prints a\n\
+         \u{20}                                                       per-layer compression report\n\
          \u{20}  serve [--backend native|pjrt] [--model tt_layer]    serve models behind the batcher\n\
          \u{20}        [--models DIR] [--listen ADDR]                 (native: zoo models or trained\n\
          \u{20}        [--executor-threads N] [--requests 200]        checkpoints from --models DIR;\n\
@@ -298,6 +307,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let rank = args.get_usize("rank", 8)?;
+    let blocks = args.get_usize("blocks", 4)?;
     let epochs = args.get_usize("epochs", 5)?;
     let n_train = args.get_usize("train-samples", 4000)?;
     let n_test = args.get_usize("test-samples", 1000)?;
@@ -312,12 +322,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut net: Box<dyn Layer> = match args.get("init-from") {
         Some(ckpt) => {
             // the architecture comes from the checkpoint — silently
-            // ignoring --model/--rank would make a scripted sweep produce
-            // identical runs that look distinct
-            if args.get("model").is_some() || args.get("rank").is_some() {
+            // ignoring --model/--rank/--blocks would make a scripted sweep
+            // produce identical runs that look distinct
+            if args.get("model").is_some()
+                || args.get("rank").is_some()
+                || args.get("blocks").is_some()
+            {
                 return Err(tensornet::error::Error::Config(
                     "--init-from restores the checkpointed architecture; \
-                     drop --model/--rank (compress chooses the TT rank)"
+                     drop --model/--rank/--blocks (compress chooses the ranks)"
                         .into(),
                 ));
             }
@@ -339,9 +352,23 @@ fn cmd_train(args: &Args) -> Result<()> {
                     println!("== MNIST FC baseline: FC(1024->1024) -> ReLU -> FC(10)");
                     Box::new(mnist_fc_baseline(&mut rng))
                 }
+                "conv" => {
+                    // the dense parent of the conv->TT-conv compress path
+                    println!(
+                        "== MNIST convnet: Conv(1x32x32 -> 8x16x16) -> ReLU -> FC(2048->10)"
+                    );
+                    Box::new(mnist_convnet(&mut rng)?)
+                }
+                "bt" => {
+                    println!(
+                        "== MNIST BT-Net: BT(1024->1024, {blocks} blocks x rank {rank}) \
+                         -> ReLU -> FC(10)"
+                    );
+                    Box::new(bt_classifier(1024, 1024, blocks, rank, 10, &mut rng)?.0)
+                }
                 other => {
                     return Err(tensornet::error::Error::Config(format!(
-                        "--model must be 'tt' or 'fc', got '{other}'"
+                        "--model must be 'tt', 'fc', 'conv' or 'bt', got '{other}'"
                     )))
                 }
             }
@@ -406,36 +433,79 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let to = args.get("to").ok_or_else(|| {
         tensornet::error::Error::Config("compress needs --to <output dir>".into())
     })?;
+    let family = args.get_or("family", "tt");
     let ms = args.get_usize_list("ms", &[4, 4, 4, 4, 4])?;
     let ns = args.get_usize_list("ns", &[4, 4, 4, 4, 4])?;
     let rank = args.get_usize("rank", 8)?;
+    let blocks = args.get_usize("blocks", 4)?;
     let eps = args.get_f64("eps", 0.0)?;
     let max_rank = if rank == 0 { None } else { Some(rank) };
     let m_total: usize = ms.iter().product();
     let n_total: usize = ns.iter().product();
+    let rank_str = if rank == 0 { "none".to_string() } else { rank.to_string() };
 
-    println!(
-        "== compress: TT-SVD every dense {m_total}x{n_total} layer of {from} \
-         (modes {ms:?}x{ns:?}, rank cap {}, eps {eps})",
-        if rank == 0 { "none".to_string() } else { rank.to_string() }
-    );
+    let spec = match family.as_str() {
+        "tt" => {
+            println!(
+                "== compress: TT-SVD every dense {m_total}x{n_total} layer of {from} \
+                 (modes {ms:?}x{ns:?}, rank cap {rank_str}, eps {eps})"
+            );
+            Compression::DenseToTt { ms: ms.clone(), ns: ns.clone(), max_rank, eps }
+        }
+        "bt" => {
+            if rank == 0 {
+                return Err(tensornet::error::Error::Config(
+                    "--family bt needs a positive --rank (the per-block Tucker rank)".into(),
+                ));
+            }
+            println!(
+                "== compress: split every dense {m_total}x{n_total} layer of {from} \
+                 into {blocks} block-terms of rank {rank} (eps {eps})"
+            );
+            Compression::DenseToBt { n_out: m_total, n_in: n_total, blocks, rank, eps }
+        }
+        "tt-conv" => {
+            println!(
+                "== compress: TT-SVD every dense conv kernel of {from} via the \
+                 Garipov reshape (rank cap {rank_str}, eps {eps})"
+            );
+            Compression::ConvToTt { max_rank, eps }
+        }
+        other => {
+            return Err(tensornet::error::Error::Config(format!(
+                "--family must be 'tt', 'bt' or 'tt-conv', got '{other}'"
+            )))
+        }
+    };
     let ck = Checkpoint::load(from)?;
     let dense_values = ck.info.num_values;
-    let (state, converted) = ck.state.compress_dense(&ms, &ns, max_rank, eps)?;
-    if converted == 0 {
+    let (state, report) = ck.state.compress(&spec)?;
+    if report.is_empty() {
         return Err(tensornet::error::Error::Config(format!(
-            "no dense {m_total}x{n_total} layer in {from} — check --ms/--ns \
+            "no layer in {from} matches --family {family} — check the flags \
              against the checkpointed architecture"
         )));
     }
     Checkpoint::save_state(to, &state)?;
-    let tt_values = state.num_values();
+    // per-layer provenance: which layer converted to what, how many stored
+    // values it costs now, and the ranks the tolerance actually achieved
+    println!("per-layer:");
+    for r in &report {
+        println!(
+            "  {:<12} {} -> {:<9} {} -> {} values ({:.1}x)  ranks {:?}",
+            r.path, r.from_kind, r.to_kind, r.from_values, r.to_values, r.ratio(), r.ranks
+        );
+    }
+    let out_values = state.num_values();
     println!(
-        "converted {converted} layer(s): {dense_values} -> {tt_values} stored values \
+        "converted {} layer(s): {dense_values} -> {out_values} stored values \
          ({:.1}x smaller checkpoint)",
-        dense_values as f64 / tt_values as f64
+        report.len(),
+        dense_values as f64 / out_values as f64
     );
-    println!("wrote TT checkpoint to {to}  (fine-tune: tensornet train --init-from {to})");
+    println!(
+        "wrote {family} checkpoint to {to}  (fine-tune: tensornet train --init-from {to})"
+    );
     Ok(())
 }
 

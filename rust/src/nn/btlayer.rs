@@ -1,0 +1,515 @@
+//! Block-term linear layer (BT-Nets, Li et al. 2018): the weight matrix
+//! is a sum of Tucker-2 blocks `W = Σ_b A_b·G_b·B_b` with
+//! `A_b (M x r_b)`, `G_b (r_b x r_b)`, `B_b (r_b x N)` — a different
+//! low-parameter family than TT, trading the TT ranks' chain structure
+//! for a wider, flatter sum of low-rank terms.
+//!
+//! Storage is `Σ_b (M·r_b + r_b² + r_b·N) + M` values against the dense
+//! `M·N + M`; the matvec costs `Σ_b 2·r_b·(M + N + r_b)` FLOPs per row,
+//! all of it riding the shared `Gemm`/SIMD kernels (three skinny GEMMs
+//! per block).  The SVD-based `from_dense` compress path splits the
+//! top-`Σ r_b` singular triplets of the trained dense matrix contiguously
+//! across blocks, so at full rank it is exact — the same
+//! "compress-then-fine-tune" lifecycle the paper runs for TT.
+
+use crate::error::{shape_err, Error, Result};
+use crate::linalg::truncated_svd;
+use crate::nn::layer::Layer;
+use crate::nn::optim::{sgd_update, SgdConfig};
+use crate::nn::state::{import_mismatch, LayerState};
+use crate::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+use crate::util::rng::Rng;
+
+struct BtCache {
+    x: Tensor,
+    /// per-block `(t1 = x·B_bᵀ, t2 = t1·G_bᵀ)`
+    mids: Vec<(Tensor, Tensor)>,
+}
+
+/// A fully-connected layer whose weight matrix is a sum of Tucker-2
+/// blocks (block-term decomposition).
+pub struct BtLinear {
+    n_out: usize,
+    n_in: usize,
+    a: Vec<Tensor>,  // (n_out, r_b)
+    g: Vec<Tensor>,  // (r_b, r_b)
+    bt: Vec<Tensor>, // (r_b, n_in)
+    bias: Tensor,    // (n_out)
+    grad_a: Vec<Tensor>,
+    grad_g: Vec<Tensor>,
+    grad_bt: Vec<Tensor>,
+    grad_bias: Tensor,
+    vel_a: Vec<Tensor>,
+    vel_g: Vec<Tensor>,
+    vel_bt: Vec<Tensor>,
+    vel_bias: Tensor,
+    cache: Option<BtCache>,
+}
+
+/// Shape-check the factor lists; returns `(n_out, n_in)`.
+pub(crate) fn validate_parts(
+    a: &[Tensor],
+    g: &[Tensor],
+    bt: &[Tensor],
+    bias: &Tensor,
+) -> Result<(usize, usize)> {
+    if a.is_empty() || a.len() != g.len() || a.len() != bt.len() {
+        return shape_err(format!(
+            "bt: block counts differ (a {}, g {}, b {})",
+            a.len(),
+            g.len(),
+            bt.len()
+        ));
+    }
+    let first = &a[0];
+    if first.ndim() != 2 {
+        return shape_err(format!("bt: A_0 not a matrix: {:?}", first.shape()));
+    }
+    let n_out = first.shape()[0];
+    if bt[0].ndim() != 2 {
+        return shape_err(format!("bt: B_0 not a matrix: {:?}", bt[0].shape()));
+    }
+    let n_in = bt[0].shape()[1];
+    for k in 0..a.len() {
+        let r = a[k].shape()[1];
+        if r == 0
+            || a[k].shape() != [n_out, r]
+            || g[k].shape() != [r, r]
+            || bt[k].shape() != [r, n_in]
+        {
+            return shape_err(format!(
+                "bt block {k}: A {:?}, G {:?}, B {:?} inconsistent for {n_out}x{n_in}",
+                a[k].shape(),
+                g[k].shape(),
+                bt[k].shape()
+            ));
+        }
+    }
+    if bias.shape() != [n_out] {
+        return shape_err(format!("bt bias {:?}, want ({n_out})", bias.shape()));
+    }
+    Ok((n_out, n_in))
+}
+
+impl BtLinear {
+    /// Gaussian-initialized BT layer with `blocks` equal-rank blocks.
+    /// The per-factor std is chosen so the composed `W` has He-style
+    /// fan-in variance `2/n_in` across the block sum.
+    pub fn new(n_out: usize, n_in: usize, blocks: usize, rank: usize, rng: &mut Rng) -> Result<Self> {
+        if blocks == 0 || rank == 0 || n_out == 0 || n_in == 0 {
+            return shape_err(format!(
+                "bt new: degenerate config {n_out}x{n_in}, blocks {blocks}, rank {rank}"
+            ));
+        }
+        let var = 2.0 / (n_in as f64 * blocks as f64 * (rank * rank) as f64);
+        let std = (var as f32).powf(1.0 / 6.0);
+        let a = (0..blocks).map(|_| Tensor::randn(&[n_out, rank], std, rng)).collect();
+        let g = (0..blocks).map(|_| Tensor::randn(&[rank, rank], std, rng)).collect();
+        let bt = (0..blocks).map(|_| Tensor::randn(&[rank, n_in], std, rng)).collect();
+        Self::from_parts(a, g, bt, Tensor::zeros(&[n_out]))
+    }
+
+    /// Wrap existing factors (e.g. from a checkpoint or `from_dense`).
+    pub fn from_parts(
+        a: Vec<Tensor>,
+        g: Vec<Tensor>,
+        bt: Vec<Tensor>,
+        bias: Tensor,
+    ) -> Result<Self> {
+        let (n_out, n_in) = validate_parts(&a, &g, &bt, &bias)?;
+        let zeros = |ts: &[Tensor]| -> Vec<Tensor> {
+            ts.iter().map(|t| Tensor::zeros(t.shape())).collect()
+        };
+        let (grad_a, grad_g, grad_bt) = (zeros(&a), zeros(&g), zeros(&bt));
+        let (vel_a, vel_g, vel_bt) = (zeros(&a), zeros(&g), zeros(&bt));
+        let grad_bias = Tensor::zeros(bias.shape());
+        let vel_bias = Tensor::zeros(bias.shape());
+        Ok(BtLinear {
+            n_out,
+            n_in,
+            a,
+            g,
+            bt,
+            bias,
+            grad_a,
+            grad_g,
+            grad_bt,
+            grad_bias,
+            vel_a,
+            vel_g,
+            vel_bt,
+            vel_bias,
+            cache: None,
+        })
+    }
+
+    /// SVD-based compression of a trained dense matrix `w (M x N)` into
+    /// `blocks` Tucker-2 blocks of rank ≤ `rank` each: the top
+    /// `blocks·rank` singular triplets (after the relative-Frobenius
+    /// `eps` truncation) are split contiguously across blocks, with
+    /// `G_b = diag(σ)` carrying the spectrum.  Exact when
+    /// `blocks·rank ≥ rank(w)` and `eps = 0`.
+    pub fn from_dense(
+        w: &Tensor,
+        bias: &Tensor,
+        blocks: usize,
+        rank: usize,
+        eps: f64,
+    ) -> Result<Self> {
+        if w.ndim() != 2 {
+            return shape_err(format!("bt from_dense: want 2-D, got {:?}", w.shape()));
+        }
+        if blocks == 0 || rank == 0 {
+            return shape_err(format!("bt from_dense: blocks {blocks}, rank {rank}"));
+        }
+        let delta = eps * w.norm() as f64;
+        let tsvd = truncated_svd(w, Some(blocks * rank), delta)?;
+        let k = tsvd.s.len();
+        let blocks_eff = blocks.min(k); // never materialize empty blocks
+        let mut a = Vec::with_capacity(blocks_eff);
+        let mut g = Vec::with_capacity(blocks_eff);
+        let mut bt = Vec::with_capacity(blocks_eff);
+        let ut = tsvd.u.t2()?; // (k, M): row slices are U column slices
+        for bi in 0..blocks_eff {
+            let c0 = bi * k / blocks_eff;
+            let c1 = (bi + 1) * k / blocks_eff;
+            let r = c1 - c0;
+            a.push(ut.rows(c0, c1)?.t2()?); // (M, r)
+            let mut core = Tensor::zeros(&[r, r]);
+            for (i, &sv) in tsvd.s[c0..c1].iter().enumerate() {
+                core.set(&[i, i], sv);
+            }
+            g.push(core);
+            bt.push(tsvd.vt.rows(c0, c1)?); // (r, N)
+        }
+        Self::from_parts(a, g, bt, bias.clone())
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Per-block Tucker ranks.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.a.iter().map(|t| t.shape()[1]).collect()
+    }
+
+    pub fn bias(&self) -> &Tensor {
+        &self.bias
+    }
+
+    /// Materialize `W = Σ_b A_b·G_b·B_b` (tests / parity checks only).
+    pub fn to_dense(&self) -> Result<Tensor> {
+        let mut w = Tensor::zeros(&[self.n_out, self.n_in]);
+        for k in 0..self.blocks() {
+            let ag = matmul(&self.a[k], &self.g[k])?;
+            w.axpy(1.0, &matmul(&ag, &self.bt[k])?)?;
+        }
+        Ok(w)
+    }
+
+    /// Dense parameter count this layer replaces.
+    pub fn dense_params(&self) -> usize {
+        self.n_out * self.n_in + self.n_out
+    }
+}
+
+impl Layer for BtLinear {
+    fn name(&self) -> String {
+        format!(
+            "BtLinear({}x{}; blocks {}; ranks {:?}; params {})",
+            self.n_out,
+            self.n_in,
+            self.blocks(),
+            self.ranks(),
+            self.num_params()
+        )
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        if x.ndim() != 2 || x.shape()[1] != self.n_in {
+            return shape_err(format!("bt fwd: {:?}, want (B, {})", x.shape(), self.n_in));
+        }
+        let b = x.shape()[0];
+        let mut y = Tensor::zeros(&[b, self.n_out]);
+        let mut mids = Vec::with_capacity(if train { self.blocks() } else { 0 });
+        for k in 0..self.blocks() {
+            // y += x·B_bᵀ·G_bᵀ·A_bᵀ — three skinny GEMMs
+            let t1 = matmul_bt(x, &self.bt[k])?; // (B, r)
+            let t2 = matmul_bt(&t1, &self.g[k])?; // (B, r)
+            y.axpy(1.0, &matmul_bt(&t2, &self.a[k])?)?;
+            if train {
+                mids.push((t1, t2));
+            }
+        }
+        let bias = self.bias.data();
+        for row in y.data_mut().chunks_mut(bias.len()) {
+            for (o, &bb) in row.iter_mut().zip(bias) {
+                *o += bb;
+            }
+        }
+        if train {
+            self.cache = Some(BtCache { x: x.clone(), mids });
+        }
+        Ok(y)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        let cache = self
+            .cache
+            .take()
+            .ok_or_else(|| Error::Numerical("bt backward without forward".into()))?;
+        let b = cache.x.shape()[0];
+        if grad_out.shape() != [b, self.n_out] {
+            return shape_err(format!("bt bwd: grad {:?}", grad_out.shape()));
+        }
+        let gb = self.grad_bias.data_mut();
+        for row in grad_out.data().chunks(self.n_out) {
+            for (acc, &v) in gb.iter_mut().zip(row) {
+                *acc += v;
+            }
+        }
+        let mut dx = Tensor::zeros(&[b, self.n_in]);
+        for k in 0..self.blocks() {
+            let (t1, t2) = &cache.mids[k];
+            // y_b = t2·A_bᵀ  ⇒  dA_b = dYᵀ·t2, dt2 = dY·A_b
+            self.grad_a[k].axpy(1.0, &matmul_at(grad_out, t2)?)?;
+            let dt2 = matmul(grad_out, &self.a[k])?; // (B, r)
+            // t2 = t1·G_bᵀ  ⇒  dG_b = dt2ᵀ·t1, dt1 = dt2·G_b
+            self.grad_g[k].axpy(1.0, &matmul_at(&dt2, t1)?)?;
+            let dt1 = matmul(&dt2, &self.g[k])?; // (B, r)
+            // t1 = x·B_bᵀ  ⇒  dB_b = dt1ᵀ·x, dx += dt1·B_b
+            self.grad_bt[k].axpy(1.0, &matmul_at(&dt1, &cache.x)?)?;
+            dx.axpy(1.0, &matmul(&dt1, &self.bt[k])?)?;
+        }
+        Ok(dx)
+    }
+
+    fn num_params(&self) -> usize {
+        let factors: usize = (0..self.blocks())
+            .map(|k| self.a[k].numel() + self.g[k].numel() + self.bt[k].numel())
+            .sum();
+        factors + self.bias.numel()
+    }
+
+    fn sgd_step(&mut self, cfg: &SgdConfig) -> Result<()> {
+        for k in 0..self.blocks() {
+            sgd_update(&mut self.a[k], &self.grad_a[k], &mut self.vel_a[k], cfg);
+            sgd_update(&mut self.g[k], &self.grad_g[k], &mut self.vel_g[k], cfg);
+            sgd_update(&mut self.bt[k], &self.grad_bt[k], &mut self.vel_bt[k], cfg);
+        }
+        sgd_update(&mut self.bias, &self.grad_bias, &mut self.vel_bias, cfg);
+        self.zero_grads();
+        Ok(())
+    }
+
+    fn zero_grads(&mut self) {
+        for gset in [&mut self.grad_a, &mut self.grad_g, &mut self.grad_bt] {
+            for t in gset.iter_mut() {
+                t.data_mut().fill(0.0);
+            }
+        }
+        self.grad_bias.data_mut().fill(0.0);
+    }
+
+    fn export_state(&self) -> Result<LayerState> {
+        Ok(LayerState::BtLinear {
+            a: self.a.clone(),
+            g: self.g.clone(),
+            bt: self.bt.clone(),
+            bias: self.bias.clone(),
+        })
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::BtLinear { a, g, bt, bias } => {
+                let same = a.len() == self.a.len()
+                    && (0..a.len()).all(|k| {
+                        a[k].shape() == self.a[k].shape()
+                            && g[k].shape() == self.g[k].shape()
+                            && bt[k].shape() == self.bt[k].shape()
+                    })
+                    && bias.shape() == self.bias.shape();
+                if !same {
+                    return Err(Error::Checkpoint(format!(
+                        "bt import: blocks/ranks mismatch (state blocks {}, layer {})",
+                        a.len(),
+                        self.a.len()
+                    )));
+                }
+                *self = BtLinear::from_parts(a, g, bt, bias)?;
+                Ok(())
+            }
+            other => Err(import_mismatch("BtLinear", &other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_matches_dense_reconstruction() {
+        let mut rng = Rng::new(31);
+        let mut l = BtLinear::new(6, 8, 2, 3, &mut rng).unwrap();
+        let x = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let y = l.forward(&x, false).unwrap();
+        let w = l.to_dense().unwrap();
+        let want = matmul_bt(&x, &w).unwrap();
+        for (i, (a, b)) in y.data().iter().zip(want.data()).enumerate() {
+            let bias = l.bias().data()[i % 6];
+            assert!((a - (b + bias)).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {}", b + bias);
+        }
+    }
+
+    #[test]
+    fn train_and_infer_paths_agree() {
+        let mut rng = Rng::new(32);
+        let mut l = BtLinear::new(5, 7, 3, 2, &mut rng).unwrap();
+        let x = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        let yt = l.forward(&x, true).unwrap();
+        let yi = l.forward(&x, false).unwrap();
+        assert_eq!(yt.data(), yi.data());
+    }
+
+    #[test]
+    fn from_dense_is_exact_at_full_rank() {
+        let mut rng = Rng::new(33);
+        let w = Tensor::randn(&[10, 12], 1.0, &mut rng);
+        let bias = Tensor::randn(&[10], 0.1, &mut rng);
+        // blocks·rank = 12 ≥ rank(w) = 10 ⇒ exact up to f32 SVD error
+        let l = BtLinear::from_dense(&w, &bias, 3, 4, 0.0).unwrap();
+        let rec = l.to_dense().unwrap();
+        let mut diff = rec;
+        diff.axpy(-1.0, &w).unwrap();
+        let rel = diff.norm() / w.norm();
+        assert!(rel < 1e-4, "rel {rel}");
+    }
+
+    #[test]
+    fn from_dense_truncates_to_blocks_times_rank() {
+        let mut rng = Rng::new(34);
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let l = BtLinear::from_dense(&w, &Tensor::zeros(&[16]), 2, 3, 0.0).unwrap();
+        assert_eq!(l.blocks(), 2);
+        assert_eq!(l.ranks(), vec![3, 3]);
+        assert!(l.num_params() < l.dense_params());
+    }
+
+    #[test]
+    fn input_gradient_matches_dense_layer() {
+        let mut rng = Rng::new(35);
+        let mut l = BtLinear::new(6, 9, 2, 2, &mut rng).unwrap();
+        let x = Tensor::randn(&[3, 9], 1.0, &mut rng);
+        let gout = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let _ = l.forward(&x, true).unwrap();
+        let dx = l.backward(&gout).unwrap();
+        let w = l.to_dense().unwrap();
+        let want = matmul(&gout, &w).unwrap();
+        for (a, b) in dx.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn factor_gradients_match_finite_differences() {
+        let mut rng = Rng::new(36);
+        let mut l = BtLinear::new(4, 5, 2, 2, &mut rng).unwrap();
+        let x = Tensor::randn(&[2, 5], 1.0, &mut rng);
+        let y = l.forward(&x, true).unwrap();
+        let _ = l.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        let eps = 1e-2f32;
+        let sum_forward = |l: &mut BtLinear, x: &Tensor| -> f32 {
+            l.forward(x, false).unwrap().data().iter().sum()
+        };
+        for k in 0..2 {
+            for (which, grad) in
+                [(0usize, l.grad_a[k].clone()), (1, l.grad_g[k].clone()), (2, l.grad_bt[k].clone())]
+            {
+                let param = match which {
+                    0 => l.a[k].clone(),
+                    1 => l.g[k].clone(),
+                    _ => l.bt[k].clone(),
+                };
+                for &idx in &[0usize, param.numel() - 1] {
+                    let mut bump = |delta: f32, l: &mut BtLinear| -> f32 {
+                        let mut p = param.clone();
+                        p.data_mut()[idx] += delta;
+                        match which {
+                            0 => l.a[k] = p,
+                            1 => l.g[k] = p,
+                            _ => l.bt[k] = p,
+                        }
+                        let s = sum_forward(l, &x);
+                        match which {
+                            0 => l.a[k] = param.clone(),
+                            1 => l.g[k] = param.clone(),
+                            _ => l.bt[k] = param.clone(),
+                        }
+                        s
+                    };
+                    let want = (bump(eps, &mut l) - bump(-eps, &mut l)) / (2.0 * eps);
+                    let got = grad.data()[idx];
+                    assert!(
+                        (got - want).abs() < 2e-2 * (1.0 + want.abs()),
+                        "block {k} factor {which}[{idx}]: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_step_moves_factors_and_clears_grads() {
+        let mut rng = Rng::new(37);
+        let mut l = BtLinear::new(4, 4, 2, 2, &mut rng).unwrap();
+        let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        let y = l.forward(&x, true).unwrap();
+        let _ = l.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        let before = l.a[0].clone();
+        l.sgd_step(&SgdConfig::default()).unwrap();
+        assert_ne!(before, l.a[0]);
+        assert!(l.grad_a.iter().all(|g| g.data().iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn state_roundtrip_is_bitwise_and_mismatches_reject() {
+        let mut rng = Rng::new(38);
+        let mut l = BtLinear::new(6, 8, 2, 3, &mut rng).unwrap();
+        let mut rebuilt = l.export_state().unwrap().build().unwrap();
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        assert_eq!(
+            l.forward(&x, false).unwrap().data(),
+            rebuilt.forward(&x, false).unwrap().data()
+        );
+        // rank mismatch
+        let other = BtLinear::new(6, 8, 2, 2, &mut rng).unwrap().export_state().unwrap();
+        let before = l.a[0].clone();
+        assert!(l.import_state(other).is_err());
+        assert_eq!(before.data(), l.a[0].data());
+        // block-count mismatch
+        let other = BtLinear::new(6, 8, 3, 3, &mut rng).unwrap().export_state().unwrap();
+        assert!(l.import_state(other).is_err());
+        // cross-kind mismatch
+        assert!(l
+            .import_state(LayerState::Relu)
+            .is_err());
+    }
+
+    #[test]
+    fn backward_without_forward_errors() {
+        let mut rng = Rng::new(39);
+        let mut l = BtLinear::new(3, 3, 1, 1, &mut rng).unwrap();
+        assert!(l.backward(&Tensor::zeros(&[1, 3])).is_err());
+    }
+}

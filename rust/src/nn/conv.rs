@@ -1,0 +1,687 @@
+//! Convolutional layers: a dense `Conv2d` and its TT-compressed
+//! counterpart `TtConv` (Garipov et al. 2016, "Ultimate tensorization").
+//!
+//! Both lower the convolution to a GEMM over im2col patch rows
+//! (`tensor::im2col`), so the contraction rides the same `Gemm`/SIMD
+//! kernels — and, for `TtConv`, the same `MatvecScratch` 1-alloc sweep —
+//! as every fully-connected layer.  A conv kernel `(c_out, c_in, kh, kw)`
+//! flattens row-major into the `(c_out, c_in·kh·kw)` matrix whose columns
+//! match the patch layout; `TtConv` stores that matrix in TT format using
+//! the Garipov reshape (output channels factored into `ms`, input
+//! channels × spatial taps into `ns`).
+//!
+//! Layer I/O stays flat 2-D like every other layer: inputs are
+//! `(B, c_in·h·w)` channel-major images, outputs `(B, c_out·ho·wo)` —
+//! which is what the serving executor's row-oriented batch interface
+//! speaks.
+
+use std::fmt;
+
+use crate::error::{shape_err, Error, Result};
+use crate::nn::layer::Layer;
+use crate::nn::optim::SgdConfig;
+use crate::nn::state::{import_mismatch, LayerState};
+use crate::nn::ttlayer::TtLinear;
+use crate::tensor::{col2im, conv_out_dim, im2col, Tensor};
+use crate::tt::{TtMatrix, TtShape};
+use crate::util::rng::Rng;
+
+/// Geometry of a 2-D convolution over channel-major `(C, H, W)` images.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub c_in: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c_out: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        c_in: usize,
+        h: usize,
+        w: usize,
+        c_out: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Result<Self> {
+        let g = ConvGeom { c_in, h, w, c_out, kh, kw, stride, pad };
+        g.validate()?;
+        Ok(g)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.c_in == 0 || self.c_out == 0 {
+            return shape_err(format!("conv geom: zero channels in {self}"));
+        }
+        conv_out_dim(self.h, self.kh, self.stride, self.pad)?;
+        conv_out_dim(self.w, self.kw, self.stride, self.pad)?;
+        Ok(())
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Flat input width `c_in·h·w`.
+    pub fn input_dim(&self) -> usize {
+        self.c_in * self.h * self.w
+    }
+
+    /// Flat output width `c_out·ho·wo`.
+    pub fn output_dim(&self) -> usize {
+        self.c_out * self.out_h() * self.out_w()
+    }
+
+    /// im2col patch width `c_in·kh·kw` — the kernel matrix's column count.
+    pub fn patch_dim(&self) -> usize {
+        self.c_in * self.kh * self.kw
+    }
+
+    /// Dense kernel parameter count (kernel matrix + per-channel bias).
+    pub fn dense_params(&self) -> usize {
+        self.c_out * self.patch_dim() + self.c_out
+    }
+}
+
+impl fmt::Display for ConvGeom {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}x{}x{} -> {}x{}x{}; k{}x{} s{} p{}",
+            self.c_in,
+            self.h,
+            self.w,
+            self.c_out,
+            self.out_h(),
+            self.out_w(),
+            self.kh,
+            self.kw,
+            self.stride,
+            self.pad
+        )
+    }
+}
+
+/// Greedy mode factorization: split `n` into factors, merging adjacent
+/// prime factors while the product stays ≤ 4 (the paper's mode sizes).
+fn factorize_modes(n: usize) -> Vec<usize> {
+    if n <= 1 {
+        return vec![1];
+    }
+    let mut primes = Vec::new();
+    let mut rem = n;
+    let mut p = 2;
+    while p * p <= rem {
+        while rem % p == 0 {
+            primes.push(p);
+            rem /= p;
+        }
+        p += 1;
+    }
+    if rem > 1 {
+        primes.push(rem);
+    }
+    let mut modes: Vec<usize> = Vec::new();
+    for f in primes {
+        match modes.last_mut() {
+            Some(last) if *last * f <= 4 => *last *= f,
+            _ => modes.push(f),
+        }
+    }
+    modes
+}
+
+/// The Garipov reshape for `geom`'s kernel matrix `(c_out, c_in·kh·kw)`:
+/// output channels factor into `ms`, input channels into the leading `ns`
+/// modes with the `kh·kw` spatial taps as the trailing mode.  The two
+/// lists are left-padded with size-1 modes to equal length (TT requires
+/// `ms.len() == ns.len()`).
+pub fn garipov_modes(geom: &ConvGeom) -> (Vec<usize>, Vec<usize>) {
+    let mut ms = factorize_modes(geom.c_out);
+    let mut ns = factorize_modes(geom.c_in);
+    ns.push(geom.kh * geom.kw);
+    while ms.len() < ns.len() {
+        ms.insert(0, 1);
+    }
+    while ns.len() < ms.len() {
+        ns.insert(0, 1);
+    }
+    (ms, ns)
+}
+
+/// Dense 2-D convolution: im2col lowering + one GEMM against the
+/// `(c_out, c_in·kh·kw)` kernel matrix, plus a per-channel bias.
+pub struct Conv2d {
+    geom: ConvGeom,
+    w: Tensor, // (c_out, patch_dim)
+    b: Tensor, // (c_out)
+    grad_w: Tensor,
+    grad_b: Tensor,
+    vel_w: Tensor,
+    vel_b: Tensor,
+    /// batch size + patch matrix cached by the training forward
+    cache: Option<(usize, Tensor)>,
+}
+
+impl Conv2d {
+    /// He-initialized dense conv (fan-in = `c_in·kh·kw`).
+    pub fn new(geom: ConvGeom, rng: &mut Rng) -> Result<Self> {
+        geom.validate()?;
+        let std = (2.0 / geom.patch_dim() as f32).sqrt();
+        let w = Tensor::randn(&[geom.c_out, geom.patch_dim()], std, rng);
+        let b = Tensor::zeros(&[geom.c_out]);
+        Self::from_weights(geom, w, b)
+    }
+
+    /// Wrap an existing kernel matrix `(c_out, c_in·kh·kw)` and bias.
+    pub fn from_weights(geom: ConvGeom, w: Tensor, b: Tensor) -> Result<Self> {
+        geom.validate()?;
+        if w.shape() != [geom.c_out, geom.patch_dim()] {
+            return shape_err(format!(
+                "conv weights {:?}, want ({}, {})",
+                w.shape(),
+                geom.c_out,
+                geom.patch_dim()
+            ));
+        }
+        if b.shape() != [geom.c_out] {
+            return shape_err(format!("conv bias {:?}, want ({})", b.shape(), geom.c_out));
+        }
+        let grad_w = Tensor::zeros(w.shape());
+        let grad_b = Tensor::zeros(b.shape());
+        let vel_w = Tensor::zeros(w.shape());
+        let vel_b = Tensor::zeros(b.shape());
+        Ok(Conv2d { geom, w, b, grad_w, grad_b, vel_w, vel_b, cache: None })
+    }
+
+    pub fn geom(&self) -> &ConvGeom {
+        &self.geom
+    }
+
+    /// The kernel matrix and bias (e.g. for TT-SVD compression).
+    pub fn weights(&self) -> (&Tensor, &Tensor) {
+        (&self.w, &self.b)
+    }
+
+    fn lower(&self, x: &Tensor) -> Result<Tensor> {
+        let g = &self.geom;
+        im2col(x, g.c_in, g.h, g.w, g.kh, g.kw, g.stride, g.pad)
+    }
+}
+
+/// Transpose `(B·Ho·Wo, c_out)` GEMM output into the channel-major flat
+/// layout `(B, c_out·Ho·Wo)` every layer downstream expects.
+fn rows_to_channel_major(y: Tensor, b: usize, c_out: usize, hw: usize) -> Result<Tensor> {
+    y.reshape(&[b, hw, c_out])?.permute(&[0, 2, 1])?.reshape(&[b, c_out * hw])
+}
+
+/// Inverse of [`rows_to_channel_major`] for the backward pass.
+fn channel_major_to_rows(g: &Tensor, b: usize, c_out: usize, hw: usize) -> Result<Tensor> {
+    g.reshaped(&[b, c_out, hw])?.permute(&[0, 2, 1])?.reshape(&[b * hw, c_out])
+}
+
+impl Layer for Conv2d {
+    fn name(&self) -> String {
+        format!("Conv2d({}; params {})", self.geom, self.num_params())
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        if x.ndim() != 2 || x.shape()[1] != self.geom.input_dim() {
+            return shape_err(format!(
+                "conv fwd: {:?}, want (B, {})",
+                x.shape(),
+                self.geom.input_dim()
+            ));
+        }
+        let b = x.shape()[0];
+        let cols = self.lower(x)?; // (B*Ho*Wo, patch)
+        let mut y = crate::tensor::matmul_bt(&cols, &self.w)?; // (B*Ho*Wo, c_out)
+        let bias = self.b.data();
+        for row in y.data_mut().chunks_mut(bias.len()) {
+            for (o, &bb) in row.iter_mut().zip(bias) {
+                *o += bb;
+            }
+        }
+        if train {
+            self.cache = Some((b, cols));
+        }
+        rows_to_channel_major(y, b, self.geom.c_out, self.geom.out_h() * self.geom.out_w())
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        let (b, cols) = self
+            .cache
+            .take()
+            .ok_or_else(|| Error::Numerical("conv backward without forward".into()))?;
+        if grad_out.shape() != [b, self.geom.output_dim()] {
+            return shape_err(format!("conv bwd: grad {:?}", grad_out.shape()));
+        }
+        let g = self.geom;
+        let hw = g.out_h() * g.out_w();
+        let d_rows = channel_major_to_rows(grad_out, b, g.c_out, hw)?; // (B*Ho*Wo, c_out)
+        self.grad_w.axpy(1.0, &crate::tensor::matmul_at(&d_rows, &cols)?)?;
+        let gb = self.grad_b.data_mut();
+        for row in d_rows.data().chunks(g.c_out) {
+            for (acc, &v) in gb.iter_mut().zip(row) {
+                *acc += v;
+            }
+        }
+        let d_cols = crate::tensor::matmul(&d_rows, &self.w)?; // (B*Ho*Wo, patch)
+        col2im(&d_cols, b, g.c_in, g.h, g.w, g.kh, g.kw, g.stride, g.pad)
+    }
+
+    fn num_params(&self) -> usize {
+        self.w.numel() + self.b.numel()
+    }
+
+    fn sgd_step(&mut self, cfg: &SgdConfig) -> Result<()> {
+        crate::nn::optim::sgd_update(&mut self.w, &self.grad_w, &mut self.vel_w, cfg);
+        crate::nn::optim::sgd_update(&mut self.b, &self.grad_b, &mut self.vel_b, cfg);
+        self.zero_grads();
+        Ok(())
+    }
+
+    fn zero_grads(&mut self) {
+        self.grad_w.data_mut().fill(0.0);
+        self.grad_b.data_mut().fill(0.0);
+    }
+
+    fn export_state(&self) -> Result<LayerState> {
+        Ok(LayerState::Conv { geom: self.geom, w: self.w.clone(), b: self.b.clone() })
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::Conv { geom, w, b } if geom == self.geom => {
+                *self = Conv2d::from_weights(geom, w, b)?;
+                Ok(())
+            }
+            LayerState::Conv { geom, .. } => Err(Error::Checkpoint(format!(
+                "conv import: geometry ({geom}) into ({})",
+                self.geom
+            ))),
+            other => Err(import_mismatch("Conv2d", &other)),
+        }
+    }
+}
+
+/// A convolution whose kernel matrix lives in TT format (the Garipov
+/// reshape).  The per-patch linear map is a full [`TtLinear`]
+/// (`patch_dim → c_out`, per-channel bias), so training gradients and the
+/// scratch-buffered inference sweep come from the TT machinery unchanged.
+pub struct TtConv {
+    geom: ConvGeom,
+    inner: TtLinear,
+}
+
+impl TtConv {
+    /// Randomly-initialized TT-conv with the default Garipov mode
+    /// factorization at uniform `rank`.
+    pub fn new(geom: ConvGeom, rank: usize, rng: &mut Rng) -> Result<Self> {
+        let (ms, ns) = garipov_modes(&geom);
+        Self::with_modes(geom, &ms, &ns, rank, rng)
+    }
+
+    /// Randomly-initialized TT-conv with explicit mode factorizations
+    /// (`Π ms = c_out`, `Π ns = c_in·kh·kw`).
+    pub fn with_modes(
+        geom: ConvGeom,
+        ms: &[usize],
+        ns: &[usize],
+        rank: usize,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let shape = TtShape::uniform(ms, ns, rank)?;
+        let inner = TtLinear::new(&shape, rng)?;
+        Self::from_tt(geom, inner)
+    }
+
+    /// Wrap an existing TT kernel (e.g. from TT-SVD or a checkpoint).
+    pub fn from_tt(geom: ConvGeom, inner: TtLinear) -> Result<Self> {
+        geom.validate()?;
+        if inner.n_in() != geom.patch_dim() || inner.n_out() != geom.c_out {
+            return shape_err(format!(
+                "tt-conv: kernel {}x{} doesn't fit geometry ({geom}: {}x{})",
+                inner.n_out(),
+                inner.n_in(),
+                geom.c_out,
+                geom.patch_dim()
+            ));
+        }
+        Ok(TtConv { geom, inner })
+    }
+
+    /// TT-SVD compression of a trained dense kernel matrix
+    /// `w (c_out, c_in·kh·kw)` at the given rank cap / relative tolerance,
+    /// using the Garipov mode factorization.
+    pub fn compress(
+        geom: ConvGeom,
+        w: &Tensor,
+        b: &Tensor,
+        max_rank: Option<usize>,
+        eps: f64,
+    ) -> Result<Self> {
+        let (ms, ns) = garipov_modes(&geom);
+        let tt = TtMatrix::from_dense(w, &ms, &ns, max_rank, eps)?;
+        Self::from_tt(geom, TtLinear::from_tt(tt, b.clone()))
+    }
+
+    pub fn geom(&self) -> &ConvGeom {
+        &self.geom
+    }
+
+    /// The TT kernel (per-patch linear map).
+    pub fn inner(&self) -> &TtLinear {
+        &self.inner
+    }
+}
+
+impl Layer for TtConv {
+    fn name(&self) -> String {
+        format!("TtConv({}; {})", self.geom, self.inner.tt().shape())
+    }
+
+    fn forward(&mut self, x: &Tensor, train: bool) -> Result<Tensor> {
+        if x.ndim() != 2 || x.shape()[1] != self.geom.input_dim() {
+            return shape_err(format!(
+                "tt-conv fwd: {:?}, want (B, {})",
+                x.shape(),
+                self.geom.input_dim()
+            ));
+        }
+        let g = &self.geom;
+        let b = x.shape()[0];
+        let cols = im2col(x, g.c_in, g.h, g.w, g.kh, g.kw, g.stride, g.pad)?;
+        let y = self.inner.forward(&cols, train)?; // (B*Ho*Wo, c_out), bias added
+        rows_to_channel_major(y, b, g.c_out, g.out_h() * g.out_w())
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Result<Tensor> {
+        let g = self.geom;
+        if grad_out.ndim() != 2 || grad_out.shape()[1] != g.output_dim() {
+            return shape_err(format!("tt-conv bwd: grad {:?}", grad_out.shape()));
+        }
+        let b = grad_out.shape()[0];
+        let hw = g.out_h() * g.out_w();
+        let d_rows = channel_major_to_rows(grad_out, b, g.c_out, hw)?;
+        let d_cols = self.inner.backward(&d_rows)?; // (B*Ho*Wo, patch)
+        col2im(&d_cols, b, g.c_in, g.h, g.w, g.kh, g.kw, g.stride, g.pad)
+    }
+
+    fn num_params(&self) -> usize {
+        self.inner.num_params()
+    }
+
+    fn sgd_step(&mut self, cfg: &SgdConfig) -> Result<()> {
+        self.inner.sgd_step(cfg)
+    }
+
+    fn zero_grads(&mut self) {
+        self.inner.zero_grads()
+    }
+
+    fn export_state(&self) -> Result<LayerState> {
+        match self.inner.export_state()? {
+            LayerState::TtLinear { shape, cores, bias } => {
+                Ok(LayerState::TtConv { geom: self.geom, shape, cores, bias })
+            }
+            other => Err(import_mismatch("TtConv(inner)", &other)),
+        }
+    }
+
+    fn import_state(&mut self, state: LayerState) -> Result<()> {
+        match state {
+            LayerState::TtConv { geom, shape, cores, bias } if geom == self.geom => {
+                // delegate shape/rank validation to the TT import; on error
+                // the inner layer is untouched
+                self.inner.import_state(LayerState::TtLinear { shape, cores, bias })
+            }
+            LayerState::TtConv { geom, .. } => Err(Error::Checkpoint(format!(
+                "tt-conv import: geometry ({geom}) into ({})",
+                self.geom
+            ))),
+            other => Err(import_mismatch("TtConv", &other)),
+        }
+    }
+}
+
+/// Dense-conv counterpart builder used by the checkpoint compress walk:
+/// reconstructs a [`Conv2d`] from a conv state (helper for tests/tools).
+pub fn conv_from_state(state: LayerState) -> Result<Conv2d> {
+    match state {
+        LayerState::Conv { geom, w, b } => Conv2d::from_weights(geom, w, b),
+        other => Err(import_mismatch("Conv2d", &other)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_geom() -> ConvGeom {
+        // 2 channels 5x4, 3 output channels, 3x2 kernel, stride 2, pad 1
+        ConvGeom::new(2, 5, 4, 3, 3, 2, 2, 1).unwrap()
+    }
+
+    /// Direct (nested-loop) convolution oracle in the same flat layout.
+    fn naive_conv(g: &ConvGeom, w: &Tensor, b: &Tensor, x: &Tensor) -> Tensor {
+        let bs = x.shape()[0];
+        let (ho, wo) = (g.out_h(), g.out_w());
+        let mut out = Tensor::zeros(&[bs, g.output_dim()]);
+        for bi in 0..bs {
+            for co in 0..g.c_out {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        let mut acc = b.data()[co];
+                        for ci in 0..g.c_in {
+                            for u in 0..g.kh {
+                                for v in 0..g.kw {
+                                    let iy = (oy * g.stride + u) as isize - g.pad as isize;
+                                    let ix = (ox * g.stride + v) as isize - g.pad as isize;
+                                    if iy < 0
+                                        || ix < 0
+                                        || iy >= g.h as isize
+                                        || ix >= g.w as isize
+                                    {
+                                        continue;
+                                    }
+                                    let xi = ci * g.h * g.w + iy as usize * g.w + ix as usize;
+                                    let wi = (ci * g.kh + u) * g.kw + v;
+                                    acc += w.at(&[co, wi]) * x.at(&[bi, xi]);
+                                }
+                            }
+                        }
+                        out.set(&[bi, co * ho * wo + oy * wo + ox], acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dense_conv_matches_naive_oracle() {
+        let g = small_geom();
+        let mut rng = Rng::new(21);
+        let mut layer = Conv2d::new(g, &mut rng).unwrap();
+        // nonzero bias to exercise the broadcast
+        let b = Tensor::randn(&[g.c_out], 0.5, &mut rng);
+        let (w, _) = layer.weights();
+        let w = w.clone();
+        layer = Conv2d::from_weights(g, w.clone(), b.clone()).unwrap();
+        let x = Tensor::randn(&[3, g.input_dim()], 1.0, &mut rng);
+        let got = layer.forward(&x, false).unwrap();
+        let want = naive_conv(&g, &w, &b, &x);
+        assert_eq!(got.shape(), want.shape());
+        for (a, e) in got.data().iter().zip(want.data()) {
+            assert!((a - e).abs() < 1e-4 * (1.0 + e.abs()), "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn conv_input_gradient_matches_finite_differences() {
+        let g = ConvGeom::new(1, 4, 4, 2, 3, 3, 1, 1).unwrap();
+        let mut rng = Rng::new(22);
+        let mut layer = Conv2d::new(g, &mut rng).unwrap();
+        let x = Tensor::randn(&[2, g.input_dim()], 1.0, &mut rng);
+        let y = layer.forward(&x, true).unwrap();
+        let dx = layer.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        let eps = 1e-2f32;
+        for &idx in &[0usize, 5, g.input_dim() - 1] {
+            for bi in 0..2 {
+                let mut xp = x.clone();
+                xp.set(&[bi, idx], x.at(&[bi, idx]) + eps);
+                let mut xm = x.clone();
+                xm.set(&[bi, idx], x.at(&[bi, idx]) - eps);
+                let yp: f32 = layer.forward(&xp, false).unwrap().data().iter().sum();
+                let ym: f32 = layer.forward(&xm, false).unwrap().data().iter().sum();
+                let want = (yp - ym) / (2.0 * eps);
+                let got = dx.at(&[bi, idx]);
+                assert!(
+                    (got - want).abs() < 2e-2 * (1.0 + want.abs()),
+                    "dx[{bi},{idx}]: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_weight_gradient_matches_finite_differences() {
+        let g = ConvGeom::new(1, 3, 3, 2, 2, 2, 1, 0).unwrap();
+        let mut rng = Rng::new(23);
+        let mut layer = Conv2d::new(g, &mut rng).unwrap();
+        let x = Tensor::randn(&[2, g.input_dim()], 1.0, &mut rng);
+        let y = layer.forward(&x, true).unwrap();
+        let _ = layer.backward(&Tensor::filled(y.shape(), 1.0)).unwrap();
+        let (w0, b0) = (layer.w.clone(), layer.b.clone());
+        let eps = 1e-2f32;
+        for &idx in &[0usize, 3, w0.numel() - 1] {
+            let mut wp = w0.clone();
+            wp.data_mut()[idx] += eps;
+            let mut lp = Conv2d::from_weights(g, wp, b0.clone()).unwrap();
+            let yp: f32 = lp.forward(&x, false).unwrap().data().iter().sum();
+            let mut wm = w0.clone();
+            wm.data_mut()[idx] -= eps;
+            let mut lm = Conv2d::from_weights(g, wm, b0.clone()).unwrap();
+            let ym: f32 = lm.forward(&x, false).unwrap().data().iter().sum();
+            let want = (yp - ym) / (2.0 * eps);
+            let got = layer.grad_w.data()[idx];
+            assert!(
+                (got - want).abs() < 2e-2 * (1.0 + want.abs()),
+                "dw[{idx}]: {got} vs {want}"
+            );
+        }
+        // bias gradient: dL/db_c = count of output positions per channel
+        let per_chan = (g.out_h() * g.out_w() * 2) as f32;
+        for c in 0..g.c_out {
+            assert!((layer.grad_b.data()[c] - per_chan).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn garipov_modes_factor_the_kernel_matrix() {
+        let g = ConvGeom::new(8, 16, 16, 16, 3, 3, 1, 1).unwrap();
+        let (ms, ns) = garipov_modes(&g);
+        assert_eq!(ms.len(), ns.len());
+        assert_eq!(ms.iter().product::<usize>(), g.c_out);
+        assert_eq!(ns.iter().product::<usize>(), g.patch_dim());
+        assert_eq!(*ns.last().unwrap(), 9, "spatial taps are the trailing n-mode");
+    }
+
+    #[test]
+    fn full_rank_tt_conv_matches_dense_conv() {
+        // TT-SVD without truncation reproduces the dense kernel, so the
+        // TT-conv forward must match the dense conv to f32 tolerance
+        let g = small_geom();
+        let mut rng = Rng::new(24);
+        let mut dense = Conv2d::new(g, &mut rng).unwrap();
+        let (w, b) = dense.weights();
+        let (w, b) = (w.clone(), b.clone());
+        let mut ttc = TtConv::compress(g, &w, &b, None, 0.0).unwrap();
+        let x = Tensor::randn(&[4, g.input_dim()], 1.0, &mut rng);
+        let want = dense.forward(&x, false).unwrap();
+        let got = ttc.forward(&x, false).unwrap();
+        for (a, e) in got.data().iter().zip(want.data()) {
+            assert!((a - e).abs() < 1e-3 * (1.0 + e.abs()), "{a} vs {e}");
+        }
+        // compression actually reduced stored values at truncated rank
+        let small = TtConv::compress(g, &w, &b, Some(2), 0.0).unwrap();
+        assert!(small.num_params() < g.dense_params());
+    }
+
+    #[test]
+    fn tt_conv_train_and_infer_paths_agree() {
+        let g = small_geom();
+        let mut rng = Rng::new(25);
+        let mut layer = TtConv::new(g, 2, &mut rng).unwrap();
+        let x = Tensor::randn(&[3, g.input_dim()], 1.0, &mut rng);
+        let yt = layer.forward(&x, true).unwrap();
+        let yi = layer.forward(&x, false).unwrap();
+        for (a, b) in yt.data().iter().zip(yi.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tt_conv_input_gradient_matches_dense_equivalent() {
+        let g = small_geom();
+        let mut rng = Rng::new(26);
+        let mut ttc = TtConv::new(g, 3, &mut rng).unwrap();
+        // densify the TT kernel into an equivalent dense conv
+        let w = ttc.inner().tt().to_dense().unwrap();
+        let b = ttc.inner().bias().clone();
+        let mut dense = Conv2d::from_weights(g, w, b).unwrap();
+        let x = Tensor::randn(&[3, g.input_dim()], 1.0, &mut rng);
+        let grad = Tensor::randn(&[3, g.output_dim()], 1.0, &mut rng);
+        let _ = ttc.forward(&x, true).unwrap();
+        let _ = dense.forward(&x, true).unwrap();
+        let got = ttc.backward(&grad).unwrap();
+        let want = dense.backward(&grad).unwrap();
+        for (a, e) in got.data().iter().zip(want.data()) {
+            assert!((a - e).abs() < 1e-3 * (1.0 + e.abs()), "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn conv_state_roundtrips_bitwise_and_rejects_mismatch() {
+        let g = small_geom();
+        let mut rng = Rng::new(27);
+        let mut dense = Conv2d::new(g, &mut rng).unwrap();
+        let mut rebuilt = dense.export_state().unwrap().build().unwrap();
+        let x = Tensor::randn(&[2, g.input_dim()], 1.0, &mut rng);
+        assert_eq!(
+            dense.forward(&x, false).unwrap().data(),
+            rebuilt.forward(&x, false).unwrap().data()
+        );
+
+        let mut ttc = TtConv::new(g, 2, &mut rng).unwrap();
+        let mut tt_rebuilt = ttc.export_state().unwrap().build().unwrap();
+        assert_eq!(
+            ttc.forward(&x, false).unwrap().data(),
+            tt_rebuilt.forward(&x, false).unwrap().data()
+        );
+
+        // geometry mismatch is a hard reject that leaves params unchanged
+        let other_geom = ConvGeom::new(2, 5, 4, 3, 3, 2, 1, 1).unwrap();
+        let other = Conv2d::new(other_geom, &mut rng).unwrap().export_state().unwrap();
+        let before = dense.w.clone();
+        assert!(dense.import_state(other).is_err());
+        assert_eq!(before.data(), dense.w.data());
+        // rank mismatch through the TT inner import
+        let other_tt = TtConv::new(g, 1, &mut rng).unwrap().export_state().unwrap();
+        assert!(ttc.import_state(other_tt).is_err());
+        // cross-kind mismatch
+        assert!(ttc.import_state(dense.export_state().unwrap()).is_err());
+    }
+}

@@ -17,6 +17,8 @@
 //!   `runtime::checkpoint` persists it, `coordinator::native` serves it.
 
 mod activations;
+mod btlayer;
+mod conv;
 mod dense;
 mod frozen;
 mod layer;
@@ -30,6 +32,8 @@ mod ttlayer;
 mod zoo;
 
 pub use activations::{Relu, Sigmoid};
+pub use btlayer::BtLinear;
+pub use conv::{garipov_modes, Conv2d, ConvGeom, TtConv};
 pub use dense::Dense;
 pub use frozen::Frozen;
 pub use layer::Layer;
@@ -37,7 +41,10 @@ pub use loss::{accuracy, SoftmaxXent};
 pub use lowrank::low_rank_pair;
 pub use optim::{sgd_update, SgdConfig};
 pub use sequential::Sequential;
-pub use state::LayerState;
+pub use state::{CompressedLayer, Compression, LayerState};
 pub use trainer::{predict, EvalReport, TrainConfig, TrainHistory, Trainer};
 pub use ttlayer::TtLinear;
-pub use zoo::{mnist_fc_baseline, mnist_tensornet, mr_classifier, tt_classifier};
+pub use zoo::{
+    bt_classifier, conv_geom_mnist, mnist_convnet, mnist_fc_baseline, mnist_tensornet,
+    mnist_tt_convnet, mr_classifier, tt_classifier,
+};

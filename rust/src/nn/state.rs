@@ -15,8 +15,11 @@
 //! the TT-SVD initialization carries no momentum history.
 
 use crate::error::{Error, Result};
+use crate::nn::btlayer::validate_parts;
 use crate::nn::layer::Layer;
-use crate::nn::{Dense, Frozen, Relu, Sequential, Sigmoid, TtLinear};
+use crate::nn::{
+    BtLinear, Conv2d, ConvGeom, Dense, Frozen, Relu, Sequential, Sigmoid, TtConv, TtLinear,
+};
 use crate::tensor::Tensor;
 use crate::tt::{TtMatrix, TtShape};
 
@@ -32,6 +35,14 @@ pub enum LayerState {
     /// [`TtLinear`]: the full [`TtShape`] (modes + per-boundary ranks, so
     /// non-uniform TT-SVD ranks survive), cores `(r0, m, n, r1)`, bias.
     TtLinear { shape: TtShape, cores: Vec<Tensor>, bias: Tensor },
+    /// [`Conv2d`]: geometry + kernel matrix `w (c_out, c_in·kh·kw)` and
+    /// per-channel bias `b (c_out,)`.
+    Conv { geom: ConvGeom, w: Tensor, b: Tensor },
+    /// [`TtConv`]: geometry + the TT-format kernel (Garipov reshape).
+    TtConv { geom: ConvGeom, shape: TtShape, cores: Vec<Tensor>, bias: Tensor },
+    /// [`BtLinear`]: per-block Tucker-2 factors `A_b (out, r_b)`,
+    /// `G_b (r_b, r_b)`, `B_b (r_b, in)`, plus bias `(out,)`.
+    BtLinear { a: Vec<Tensor>, g: Vec<Tensor>, bt: Vec<Tensor>, bias: Tensor },
     /// [`Sequential`]: child states in forward order.
     Stack(Vec<LayerState>),
     /// [`Frozen`]: the wrapped layer's state (restored frozen again).
@@ -48,6 +59,9 @@ impl LayerState {
         match self {
             LayerState::Dense { .. } => "dense",
             LayerState::TtLinear { .. } => "tt_linear",
+            LayerState::Conv { .. } => "conv",
+            LayerState::TtConv { .. } => "tt_conv",
+            LayerState::BtLinear { .. } => "bt_linear",
             LayerState::Stack(_) => "sequential",
             LayerState::Frozen(_) => "frozen",
             LayerState::Relu => "relu",
@@ -61,6 +75,10 @@ impl LayerState {
         match self {
             LayerState::Dense { w, .. } => Some(w.shape()[1]),
             LayerState::TtLinear { shape, .. } => Some(shape.n_total()),
+            LayerState::Conv { geom, .. } | LayerState::TtConv { geom, .. } => {
+                Some(geom.input_dim())
+            }
+            LayerState::BtLinear { bt, .. } => bt.first().map(|t| t.shape()[1]),
             LayerState::Stack(layers) => layers.iter().find_map(|l| l.input_dim()),
             LayerState::Frozen(inner) => inner.input_dim(),
             LayerState::Relu | LayerState::Sigmoid => None,
@@ -72,6 +90,10 @@ impl LayerState {
         match self {
             LayerState::Dense { w, .. } => Some(w.shape()[0]),
             LayerState::TtLinear { shape, .. } => Some(shape.m_total()),
+            LayerState::Conv { geom, .. } | LayerState::TtConv { geom, .. } => {
+                Some(geom.output_dim())
+            }
+            LayerState::BtLinear { a, .. } => a.first().map(|t| t.shape()[0]),
             LayerState::Stack(layers) => layers.iter().rev().find_map(|l| l.output_dim()),
             LayerState::Frozen(inner) => inner.output_dim(),
             LayerState::Relu | LayerState::Sigmoid => None,
@@ -84,8 +106,15 @@ impl LayerState {
     pub fn num_values(&self) -> usize {
         match self {
             LayerState::Dense { w, b } => w.numel() + b.numel(),
-            LayerState::TtLinear { cores, bias, .. } => {
+            LayerState::TtLinear { cores, bias, .. }
+            | LayerState::TtConv { cores, bias, .. } => {
                 cores.iter().map(|c| c.numel()).sum::<usize>() + bias.numel()
+            }
+            LayerState::Conv { w, b, .. } => w.numel() + b.numel(),
+            LayerState::BtLinear { a, g, bt, bias } => {
+                let factors: usize =
+                    [a, g, bt].iter().flat_map(|v| v.iter()).map(|t| t.numel()).sum();
+                factors + bias.numel()
             }
             LayerState::Stack(layers) => layers.iter().map(|l| l.num_values()).sum(),
             LayerState::Frozen(inner) => inner.num_values(),
@@ -110,30 +139,36 @@ impl LayerState {
                 Ok(())
             }
             LayerState::TtLinear { shape, cores, bias } => {
-                if cores.len() != shape.d() {
+                validate_tt_parts(shape, cores, bias)
+            }
+            LayerState::Conv { geom, w, b } => {
+                geom.validate()?;
+                if w.shape() != [geom.c_out, geom.patch_dim()] || b.shape() != [geom.c_out] {
                     return Err(Error::Checkpoint(format!(
-                        "tt state: {} cores for d={}",
-                        cores.len(),
-                        shape.d()
-                    )));
-                }
-                for (k, core) in cores.iter().enumerate() {
-                    if core.shape() != shape.core_shape(k) {
-                        return Err(Error::Checkpoint(format!(
-                            "tt state: core {k} is {:?}, shape says {:?}",
-                            core.shape(),
-                            shape.core_shape(k)
-                        )));
-                    }
-                }
-                if bias.shape() != [shape.m_total()] {
-                    return Err(Error::Checkpoint(format!(
-                        "tt state: bias {:?} for output dim {}",
-                        bias.shape(),
-                        shape.m_total()
+                        "conv state: w {:?} / b {:?} for geometry ({geom})",
+                        w.shape(),
+                        b.shape()
                     )));
                 }
                 Ok(())
+            }
+            LayerState::TtConv { geom, shape, cores, bias } => {
+                geom.validate()?;
+                if shape.m_total() != geom.c_out || shape.n_total() != geom.patch_dim() {
+                    return Err(Error::Checkpoint(format!(
+                        "tt-conv state: kernel {}x{} for geometry ({geom}: {}x{})",
+                        shape.m_total(),
+                        shape.n_total(),
+                        geom.c_out,
+                        geom.patch_dim()
+                    )));
+                }
+                validate_tt_parts(shape, cores, bias)
+            }
+            LayerState::BtLinear { a, g, bt, bias } => {
+                validate_parts(a, g, bt, bias)
+                    .map(|_| ())
+                    .map_err(|e| Error::Checkpoint(format!("bt state: {e}")))
             }
             LayerState::Stack(layers) => layers.iter().try_for_each(|l| l.validate()),
             LayerState::Frozen(inner) => inner.validate(),
@@ -158,6 +193,15 @@ impl LayerState {
                 }
                 Box::new(TtLinear::from_tt(tt, bias))
             }
+            LayerState::Conv { geom, w, b } => Box::new(Conv2d::from_weights(geom, w, b)?),
+            LayerState::TtConv { geom, shape, cores, bias } => {
+                validate_tt_parts(&shape, &cores, &bias)?;
+                let tt = TtMatrix::from_cores(shape, cores)?;
+                Box::new(TtConv::from_tt(geom, TtLinear::from_tt(tt, bias))?)
+            }
+            LayerState::BtLinear { a, g, bt, bias } => {
+                Box::new(BtLinear::from_parts(a, g, bt, bias)?)
+            }
             LayerState::Stack(layers) => {
                 let built = layers
                     .into_iter()
@@ -171,12 +215,11 @@ impl LayerState {
         })
     }
 
-    /// The compress half of the paper's train → compress → fine-tune loop:
-    /// walk the tree and TT-SVD every [`Dense`] whose weight matrix is
-    /// `(Πms x Πns)` into a [`TtLinear`] at the given rank cap / relative
-    /// Frobenius tolerance (`tt::ttsvd`).  Non-matching layers (e.g. the
-    /// final classifier head) pass through untouched.  Returns the
-    /// transformed state and how many layers were converted.
+    /// The compress half of the paper's train → compress → fine-tune loop,
+    /// TT flavor: walk the tree and TT-SVD every [`Dense`] whose weight
+    /// matrix is `(Πms x Πns)` into a [`TtLinear`].  Kept as a thin
+    /// wrapper over the family-generic [`LayerState::compress`]; returns
+    /// the transformed state and how many layers were converted.
     pub fn compress_dense(
         self,
         ms: &[usize],
@@ -184,37 +227,197 @@ impl LayerState {
         max_rank: Option<usize>,
         eps: f64,
     ) -> Result<(LayerState, usize)> {
-        let m_total: usize = ms.iter().product();
-        let n_total: usize = ns.iter().product();
+        let spec = Compression::DenseToTt {
+            ms: ms.to_vec(),
+            ns: ns.to_vec(),
+            max_rank,
+            eps,
+        };
+        let (state, report) = self.compress(&spec)?;
+        Ok((state, report.len()))
+    }
+
+    /// Family-generic compression walk: convert every leaf the `spec`
+    /// targets (FC→TT, FC→BT, or dense-conv→TT-conv), pass everything
+    /// else through untouched, and report one [`CompressedLayer`] per
+    /// conversion (dotted paths match the checkpoint tensor namespace,
+    /// rooted at `model`).
+    pub fn compress(self, spec: &Compression) -> Result<(LayerState, Vec<CompressedLayer>)> {
+        let mut report = Vec::new();
+        let state = self.compress_walk(spec, "model", &mut report)?;
+        Ok((state, report))
+    }
+
+    fn compress_walk(
+        self,
+        spec: &Compression,
+        path: &str,
+        report: &mut Vec<CompressedLayer>,
+    ) -> Result<LayerState> {
         Ok(match self {
-            LayerState::Dense { w, b } if w.shape() == [m_total, n_total] => {
-                let tt = TtMatrix::from_dense(&w, ms, ns, max_rank, eps)?;
-                (
-                    LayerState::TtLinear {
-                        shape: tt.shape().clone(),
-                        cores: tt.cores().to_vec(),
-                        bias: b,
-                    },
-                    1,
-                )
+            LayerState::Dense { w, b } => compress_dense_leaf(w, b, spec, path, report)?,
+            LayerState::Conv { geom, w, b } => {
+                compress_conv_leaf(geom, w, b, spec, path, report)?
             }
             LayerState::Stack(layers) => {
-                let mut converted = 0;
                 let mut out = Vec::with_capacity(layers.len());
-                for l in layers {
-                    let (s, c) = l.compress_dense(ms, ns, max_rank, eps)?;
-                    converted += c;
-                    out.push(s);
+                for (i, l) in layers.into_iter().enumerate() {
+                    out.push(l.compress_walk(spec, &format!("{path}.{i}"), report)?);
                 }
-                (LayerState::Stack(out), converted)
+                LayerState::Stack(out)
             }
-            LayerState::Frozen(inner) => {
-                let (s, c) = inner.compress_dense(ms, ns, max_rank, eps)?;
-                (LayerState::Frozen(Box::new(s)), c)
-            }
-            other => (other, 0),
+            LayerState::Frozen(inner) => LayerState::Frozen(Box::new(
+                inner.compress_walk(spec, &format!("{path}.inner"), report)?,
+            )),
+            other => other,
         })
     }
+}
+
+/// One conversion target for the generalized compress walk
+/// ([`LayerState::compress`]).
+#[derive(Clone, Debug)]
+pub enum Compression {
+    /// [`Dense`] `(Πms x Πns)` → [`TtLinear`] via TT-SVD at the given
+    /// rank cap / relative Frobenius tolerance.
+    DenseToTt { ms: Vec<usize>, ns: Vec<usize>, max_rank: Option<usize>, eps: f64 },
+    /// [`Dense`] `(n_out x n_in)` → [`BtLinear`] via truncated SVD split
+    /// into `blocks` Tucker-2 blocks of rank ≤ `rank`.
+    DenseToBt { n_out: usize, n_in: usize, blocks: usize, rank: usize, eps: f64 },
+    /// Every dense [`Conv2d`] kernel → [`TtConv`] via TT-SVD over the
+    /// Garipov reshape (modes derived from each layer's geometry).
+    ConvToTt { max_rank: Option<usize>, eps: f64 },
+}
+
+/// Per-layer record of one compression conversion — the compression
+/// factor is the paper's headline number, so the CLI prints these.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    /// Dotted path in the checkpoint tensor namespace (e.g. `model.1`).
+    pub path: String,
+    pub from_kind: &'static str,
+    pub to_kind: &'static str,
+    /// Stored f32 values before / after conversion.
+    pub from_values: usize,
+    pub to_values: usize,
+    /// Achieved ranks: TT boundary ranks for TT targets, per-block
+    /// Tucker ranks for BT.
+    pub ranks: Vec<usize>,
+}
+
+impl CompressedLayer {
+    pub fn ratio(&self) -> f64 {
+        self.from_values as f64 / (self.to_values as f64).max(1.0)
+    }
+}
+
+fn compress_dense_leaf(
+    w: Tensor,
+    b: Tensor,
+    spec: &Compression,
+    path: &str,
+    report: &mut Vec<CompressedLayer>,
+) -> Result<LayerState> {
+    let from_values = w.numel() + b.numel();
+    match spec {
+        Compression::DenseToTt { ms, ns, max_rank, eps } => {
+            let m_total: usize = ms.iter().product();
+            let n_total: usize = ns.iter().product();
+            if w.shape() != [m_total, n_total] {
+                return Ok(LayerState::Dense { w, b });
+            }
+            let tt = TtMatrix::from_dense(&w, ms, ns, *max_rank, *eps)?;
+            let state = LayerState::TtLinear {
+                shape: tt.shape().clone(),
+                cores: tt.cores().to_vec(),
+                bias: b,
+            };
+            report.push(CompressedLayer {
+                path: path.to_string(),
+                from_kind: "dense",
+                to_kind: "tt_linear",
+                from_values,
+                to_values: state.num_values(),
+                ranks: tt.shape().ranks().to_vec(),
+            });
+            Ok(state)
+        }
+        Compression::DenseToBt { n_out, n_in, blocks, rank, eps } => {
+            if w.shape() != [*n_out, *n_in] {
+                return Ok(LayerState::Dense { w, b });
+            }
+            let bt = BtLinear::from_dense(&w, &b, *blocks, *rank, *eps)?;
+            let ranks = bt.ranks();
+            let state = bt.export_state()?;
+            report.push(CompressedLayer {
+                path: path.to_string(),
+                from_kind: "dense",
+                to_kind: "bt_linear",
+                from_values,
+                to_values: state.num_values(),
+                ranks,
+            });
+            Ok(state)
+        }
+        Compression::ConvToTt { .. } => Ok(LayerState::Dense { w, b }),
+    }
+}
+
+fn compress_conv_leaf(
+    geom: ConvGeom,
+    w: Tensor,
+    b: Tensor,
+    spec: &Compression,
+    path: &str,
+    report: &mut Vec<CompressedLayer>,
+) -> Result<LayerState> {
+    match spec {
+        Compression::ConvToTt { max_rank, eps } => {
+            let from_values = w.numel() + b.numel();
+            let ttc = TtConv::compress(geom, &w, &b, *max_rank, *eps)?;
+            let ranks = ttc.inner().tt().shape().ranks().to_vec();
+            let state = ttc.export_state()?;
+            report.push(CompressedLayer {
+                path: path.to_string(),
+                from_kind: "conv",
+                to_kind: "tt_conv",
+                from_values,
+                to_values: state.num_values(),
+                ranks,
+            });
+            Ok(state)
+        }
+        _ => Ok(LayerState::Conv { geom, w, b }),
+    }
+}
+
+/// Shared TT shape/core/bias consistency checks for the `tt_linear` and
+/// `tt_conv` state kinds.
+fn validate_tt_parts(shape: &TtShape, cores: &[Tensor], bias: &Tensor) -> Result<()> {
+    if cores.len() != shape.d() {
+        return Err(Error::Checkpoint(format!(
+            "tt state: {} cores for d={}",
+            cores.len(),
+            shape.d()
+        )));
+    }
+    for (k, core) in cores.iter().enumerate() {
+        if core.shape() != shape.core_shape(k) {
+            return Err(Error::Checkpoint(format!(
+                "tt state: core {k} is {:?}, shape says {:?}",
+                core.shape(),
+                shape.core_shape(k)
+            )));
+        }
+    }
+    if bias.shape() != [shape.m_total()] {
+        return Err(Error::Checkpoint(format!(
+            "tt state: bias {:?} for output dim {}",
+            bias.shape(),
+            shape.m_total()
+        )));
+    }
+    Ok(())
 }
 
 /// Shorthand for the mismatch error every `import_state` impl raises.
@@ -349,6 +552,87 @@ mod tests {
         let mut rebuilt = tt_state.build().unwrap();
         let y = rebuilt.forward(&Tensor::zeros(&[2, 16]), false).unwrap();
         assert_eq!(y.shape(), &[2, 4]);
+    }
+
+    #[test]
+    fn compress_reports_per_layer_ranks_and_ratio() {
+        let mut rng = Rng::new(40);
+        let net = Sequential::new(vec![
+            Box::new(Dense::new(16, 16, &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(16, 4, &mut rng)),
+        ]);
+        let spec = Compression::DenseToTt {
+            ms: vec![4, 4],
+            ns: vec![4, 4],
+            max_rank: Some(2),
+            eps: 0.0,
+        };
+        let (_, report) = net.export_state().unwrap().compress(&spec).unwrap();
+        assert_eq!(report.len(), 1);
+        let r = &report[0];
+        assert_eq!(r.path, "model.0");
+        assert_eq!((r.from_kind, r.to_kind), ("dense", "tt_linear"));
+        assert_eq!(r.from_values, 16 * 16 + 16);
+        assert!(r.to_values < r.from_values);
+        assert!(r.ratio() > 1.0);
+        assert_eq!(r.ranks.first(), Some(&1));
+        assert!(r.ranks.iter().all(|&x| x <= 2));
+    }
+
+    #[test]
+    fn compress_dense_to_bt_converts_matching_layers_only() {
+        let mut rng = Rng::new(41);
+        let mut net = Sequential::new(vec![
+            Box::new(Dense::new(16, 16, &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(16, 4, &mut rng)),
+        ]);
+        let x = Tensor::randn(&[3, 16], 1.0, &mut rng);
+        let want = net.forward(&x, false).unwrap();
+        // blocks·rank = 16 covers the full spectrum: exact conversion
+        let spec = Compression::DenseToBt { n_out: 16, n_in: 16, blocks: 4, rank: 4, eps: 0.0 };
+        let (state, report) = net.export_state().unwrap().compress(&spec).unwrap();
+        assert_eq!(report.len(), 1, "only the 16x16 layer matches");
+        assert_eq!(report[0].to_kind, "bt_linear");
+        assert_eq!(report[0].ranks, vec![4, 4, 4, 4]);
+        match &state {
+            LayerState::Stack(layers) => {
+                assert_eq!(layers[0].kind(), "bt_linear");
+                assert_eq!(layers[2].kind(), "dense");
+            }
+            other => panic!("expected stack, got {}", other.kind()),
+        }
+        let got = state.build().unwrap().forward(&x, false).unwrap();
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn compress_conv_to_tt_converts_conv_layers() {
+        let mut rng = Rng::new(42);
+        let geom = ConvGeom::new(2, 6, 6, 4, 3, 3, 1, 1).unwrap();
+        let mut net = Sequential::new(vec![
+            Box::new(Conv2d::new(geom, &mut rng).unwrap()),
+            Box::new(Relu::new()),
+            Box::new(Dense::new(geom.output_dim(), 4, &mut rng)),
+        ]);
+        let x = Tensor::randn(&[2, geom.input_dim()], 1.0, &mut rng);
+        let want = net.forward(&x, false).unwrap();
+        let spec = Compression::ConvToTt { max_rank: None, eps: 0.0 };
+        let (state, report) = net.export_state().unwrap().compress(&spec).unwrap();
+        assert_eq!(report.len(), 1, "the dense head is untouched by conv->tt");
+        assert_eq!((report[0].from_kind, report[0].to_kind), ("conv", "tt_conv"));
+        match &state {
+            LayerState::Stack(layers) => assert_eq!(layers[0].kind(), "tt_conv"),
+            other => panic!("expected stack, got {}", other.kind()),
+        }
+        // exact rank: compressed forward reproduces the dense conv net
+        let got = state.build().unwrap().forward(&x, false).unwrap();
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! themselves drive the coordinator.
 
 use crate::error::Result;
-use crate::nn::{low_rank_pair, Dense, Layer, Relu, Sequential, TtLinear};
+use crate::nn::{
+    low_rank_pair, BtLinear, Conv2d, ConvGeom, Dense, Layer, Relu, Sequential, TtConv, TtLinear,
+};
 use crate::tt::TtShape;
 use crate::util::rng::Rng;
 
@@ -65,6 +67,59 @@ pub fn mnist_tensornet(rank: usize, rng: &mut Rng) -> Result<Sequential> {
     Ok(tt_classifier(&[4; 5], &[4; 5], rank, 10, rng)?.0)
 }
 
+/// The conv-MNIST geometry shared by the dense and TT conv nets: the
+/// 1024-wide MNIST input viewed as one 32x32 channel, convolved with 8
+/// 3x3 filters at stride 2 / pad 1 → `8x16x16 = 2048` features.
+pub fn conv_geom_mnist() -> ConvGeom {
+    ConvGeom { c_in: 1, h: 32, w: 32, c_out: 8, kh: 3, kw: 3, stride: 2, pad: 1 }
+}
+
+/// Dense conv-MNIST net: `Conv(1x32x32 -> 8x16x16) -> ReLU -> FC(2048 -> 10)`
+/// — the trainable parent of the TT-conv compression path (Garipov et
+/// al. 2016 run the same conv-then-compress loop at CIFAR scale).
+pub fn mnist_convnet(rng: &mut Rng) -> Result<Sequential> {
+    let geom = conv_geom_mnist();
+    let head_in = geom.output_dim();
+    Ok(Sequential::new(vec![
+        Box::new(Conv2d::new(geom, rng)?),
+        Box::new(Relu::new()),
+        Box::new(Dense::new(head_in, 10, rng)),
+    ]))
+}
+
+/// TT-conv-MNIST net: the same geometry with the conv kernel stored in
+/// TT format (Garipov reshape) at uniform `rank`.
+pub fn mnist_tt_convnet(rank: usize, rng: &mut Rng) -> Result<Sequential> {
+    let geom = conv_geom_mnist();
+    let head_in = geom.output_dim();
+    Ok(Sequential::new(vec![
+        Box::new(TtConv::new(geom, rank, rng)?),
+        Box::new(Relu::new()),
+        Box::new(Dense::new(head_in, 10, rng)),
+    ]))
+}
+
+/// `BT(n_in -> n_hidden; blocks x rank) -> ReLU -> FC(n_hidden -> classes)`
+/// — the block-term counterpart of [`tt_classifier`] (BT-Nets, Li et
+/// al. 2018).
+pub fn bt_classifier(
+    n_in: usize,
+    n_hidden: usize,
+    blocks: usize,
+    rank: usize,
+    n_classes: usize,
+    rng: &mut Rng,
+) -> Result<(Sequential, usize)> {
+    let bt = BtLinear::new(n_hidden, n_in, blocks, rank, rng)?;
+    let layer1_params = bt.num_params();
+    let net = Sequential::new(vec![
+        Box::new(bt),
+        Box::new(Relu::new()),
+        Box::new(Dense::new(n_hidden, n_classes, rng)),
+    ]);
+    Ok((net, layer1_params))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +149,29 @@ mod tests {
             .forward(&crate::tensor::Tensor::zeros(&[2, 1024]), false)
             .unwrap();
         assert_eq!(y.shape(), &[2, 10]);
+    }
+
+    #[test]
+    fn conv_nets_map_1024_to_10() {
+        let mut rng = Rng::new(4);
+        let geom = conv_geom_mnist();
+        assert_eq!(geom.input_dim(), 1024);
+        assert_eq!(geom.output_dim(), 2048);
+        let mut dense = mnist_convnet(&mut rng).unwrap();
+        let mut tt = mnist_tt_convnet(2, &mut rng).unwrap();
+        let x = crate::tensor::Tensor::randn(&[2, 1024], 1.0, &mut rng);
+        assert_eq!(dense.forward(&x, false).unwrap().shape(), &[2, 10]);
+        assert_eq!(tt.forward(&x, false).unwrap().shape(), &[2, 10]);
+        // at rank 2 the TT kernel stores fewer values than the dense kernel
+        assert!(tt.num_params() < dense.num_params());
+    }
+
+    #[test]
+    fn bt_classifier_param_accounting() {
+        let mut rng = Rng::new(5);
+        let (net, l1) = bt_classifier(1024, 1024, 4, 8, 10, &mut rng).unwrap();
+        // 4 blocks x (1024*8 + 8*8 + 8*1024) + 1024 bias
+        assert_eq!(l1, 4 * (1024 * 8 + 64 + 8 * 1024) + 1024);
+        assert_eq!(net.num_params(), l1 + 1024 * 10 + 10);
     }
 }

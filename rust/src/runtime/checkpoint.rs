@@ -25,7 +25,7 @@
 //! model ([`Checkpoint::peek`]).
 
 use crate::error::{Error, Result};
-use crate::nn::{Layer, LayerState};
+use crate::nn::{ConvGeom, Layer, LayerState};
 use crate::runtime::artifact::Manifest;
 use crate::tensor::Tensor;
 use crate::tt::TtShape;
@@ -256,16 +256,30 @@ fn state_to_json(state: &LayerState, prefix: &str, blob: &mut BlobBuilder) -> Js
             node.insert("b".to_string(), Json::Str(bn));
         }
         LayerState::TtLinear { shape, cores, bias } => {
-            node.insert("ms".to_string(), usize_arr(shape.ms()));
-            node.insert("ns".to_string(), usize_arr(shape.ns()));
-            node.insert("ranks".to_string(), usize_arr(shape.ranks()));
-            let mut names = Vec::with_capacity(cores.len());
-            for (k, core) in cores.iter().enumerate() {
-                let cn = format!("{prefix}.core{k}");
-                blob.push(&cn, core);
-                names.push(Json::Str(cn));
+            push_tt_kernel(&mut node, shape, cores, bias, prefix, blob);
+        }
+        LayerState::Conv { geom, w, b } => {
+            geom_to_json(&mut node, geom);
+            let (wn, bn) = (format!("{prefix}.w"), format!("{prefix}.b"));
+            blob.push(&wn, w);
+            blob.push(&bn, b);
+            node.insert("w".to_string(), Json::Str(wn));
+            node.insert("b".to_string(), Json::Str(bn));
+        }
+        LayerState::TtConv { geom, shape, cores, bias } => {
+            geom_to_json(&mut node, geom);
+            push_tt_kernel(&mut node, shape, cores, bias, prefix, blob);
+        }
+        LayerState::BtLinear { a, g, bt, bias } => {
+            for (key, factors) in [("a", a), ("g", g), ("bt", bt)] {
+                let mut names = Vec::with_capacity(factors.len());
+                for (k, t) in factors.iter().enumerate() {
+                    let tn = format!("{prefix}.block{k}.{key}");
+                    blob.push(&tn, t);
+                    names.push(Json::Str(tn));
+                }
+                node.insert(key.to_string(), Json::Arr(names));
             }
-            node.insert("cores".to_string(), Json::Arr(names));
             let bn = format!("{prefix}.bias");
             blob.push(&bn, bias);
             node.insert("bias".to_string(), Json::Str(bn));
@@ -302,18 +316,24 @@ fn state_from_json(j: &Json, tensors: &mut BTreeMap<String, Tensor>) -> Result<L
             b: take_tensor(j.req("b")?, tensors)?,
         }),
         "tt_linear" => {
-            let ms = usize_list(j.req("ms")?)?;
-            let ns = usize_list(j.req("ns")?)?;
-            let ranks = usize_list(j.req("ranks")?)?;
-            let shape = TtShape::new(&ms, &ns, &ranks)?;
-            let cores = j
-                .req("cores")?
-                .as_arr()
-                .ok_or_else(|| Error::Checkpoint("'cores' not an array".into()))?
-                .iter()
-                .map(|n| take_tensor(n, tensors))
-                .collect::<Result<Vec<_>>>()?;
-            Ok(LayerState::TtLinear { shape, cores, bias: take_tensor(j.req("bias")?, tensors)? })
+            let (shape, cores, bias) = tt_kernel_from_json(j, tensors)?;
+            Ok(LayerState::TtLinear { shape, cores, bias })
+        }
+        "conv" => Ok(LayerState::Conv {
+            geom: geom_from_json(j)?,
+            w: take_tensor(j.req("w")?, tensors)?,
+            b: take_tensor(j.req("b")?, tensors)?,
+        }),
+        "tt_conv" => {
+            let geom = geom_from_json(j)?;
+            let (shape, cores, bias) = tt_kernel_from_json(j, tensors)?;
+            Ok(LayerState::TtConv { geom, shape, cores, bias })
+        }
+        "bt_linear" => {
+            let a = tensor_list(j, "a", tensors)?;
+            let g = tensor_list(j, "g", tensors)?;
+            let bt = tensor_list(j, "bt", tensors)?;
+            Ok(LayerState::BtLinear { a, g, bt, bias: take_tensor(j.req("bias")?, tensors)? })
         }
         "sequential" => Ok(LayerState::Stack(
             j.req("layers")?
@@ -331,6 +351,87 @@ fn state_from_json(j: &Json, tensors: &mut BTreeMap<String, Tensor>) -> Result<L
         "sigmoid" => Ok(LayerState::Sigmoid),
         other => Err(Error::Checkpoint(format!("unknown layer kind '{other}'"))),
     }
+}
+
+/// Serialize a TT kernel (shape arrays + named cores + bias) into `node` —
+/// shared by the `tt_linear` and `tt_conv` kinds.
+fn push_tt_kernel(
+    node: &mut BTreeMap<String, Json>,
+    shape: &TtShape,
+    cores: &[Tensor],
+    bias: &Tensor,
+    prefix: &str,
+    blob: &mut BlobBuilder,
+) {
+    node.insert("ms".to_string(), usize_arr(shape.ms()));
+    node.insert("ns".to_string(), usize_arr(shape.ns()));
+    node.insert("ranks".to_string(), usize_arr(shape.ranks()));
+    let mut names = Vec::with_capacity(cores.len());
+    for (k, core) in cores.iter().enumerate() {
+        let cn = format!("{prefix}.core{k}");
+        blob.push(&cn, core);
+        names.push(Json::Str(cn));
+    }
+    node.insert("cores".to_string(), Json::Arr(names));
+    let bn = format!("{prefix}.bias");
+    blob.push(&bn, bias);
+    node.insert("bias".to_string(), Json::Str(bn));
+}
+
+/// Inverse of [`push_tt_kernel`].
+fn tt_kernel_from_json(
+    j: &Json,
+    tensors: &mut BTreeMap<String, Tensor>,
+) -> Result<(TtShape, Vec<Tensor>, Tensor)> {
+    let ms = usize_list(j.req("ms")?)?;
+    let ns = usize_list(j.req("ns")?)?;
+    let ranks = usize_list(j.req("ranks")?)?;
+    let shape = TtShape::new(&ms, &ns, &ranks)?;
+    let cores = tensor_list(j, "cores", tensors)?;
+    Ok((shape, cores, take_tensor(j.req("bias")?, tensors)?))
+}
+
+/// Resolve an array of tensor-name references under `key`.
+fn tensor_list(
+    j: &Json,
+    key: &str,
+    tensors: &mut BTreeMap<String, Tensor>,
+) -> Result<Vec<Tensor>> {
+    j.req(key)?
+        .as_arr()
+        .ok_or_else(|| Error::Checkpoint(format!("'{key}' not an array")))?
+        .iter()
+        .map(|n| take_tensor(n, tensors))
+        .collect()
+}
+
+/// Conv geometry scalars, flattened into the layer node.
+fn geom_to_json(node: &mut BTreeMap<String, Json>, geom: &ConvGeom) {
+    for (key, v) in [
+        ("c_in", geom.c_in),
+        ("h", geom.h),
+        ("w_in", geom.w),
+        ("c_out", geom.c_out),
+        ("kh", geom.kh),
+        ("kw", geom.kw),
+        ("stride", geom.stride),
+        ("pad", geom.pad),
+    ] {
+        node.insert(key.to_string(), Json::Num(v as f64));
+    }
+}
+
+fn geom_from_json(j: &Json) -> Result<ConvGeom> {
+    ConvGeom::new(
+        req_usize(j, "c_in")?,
+        req_usize(j, "h")?,
+        req_usize(j, "w_in")?,
+        req_usize(j, "c_out")?,
+        req_usize(j, "kh")?,
+        req_usize(j, "kw")?,
+        req_usize(j, "stride")?,
+        req_usize(j, "pad")?,
+    )
 }
 
 fn take_tensor(name: &Json, tensors: &mut BTreeMap<String, Tensor>) -> Result<Tensor> {
@@ -440,6 +541,40 @@ mod tests {
 
         let mut rebuilt = ck.build().unwrap();
         let x = Tensor::randn(&[3, 6], 1.0, &mut Rng::new(2));
+        let want = net.forward(&x, false).unwrap();
+        let got = rebuilt.forward(&x, false).unwrap();
+        assert_eq!(want.data(), got.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn conv_and_bt_kinds_roundtrip_bitwise() {
+        use crate::nn::{BtLinear, Conv2d, ConvGeom, TtConv};
+        let dir = tmpdir("families");
+        let mut rng = Rng::new(11);
+        let geom = ConvGeom::new(2, 6, 6, 4, 3, 3, 2, 1).unwrap();
+        let mut net = Sequential::new(vec![
+            Box::new(Conv2d::new(geom, &mut rng).unwrap()),
+            Box::new(Relu::new()),
+            Box::new(TtConv::new(
+                ConvGeom::new(4, 3, 3, 4, 3, 3, 1, 1).unwrap(),
+                2,
+                &mut rng,
+            )
+            .unwrap()),
+            Box::new(BtLinear::new(8, 36, 2, 3, &mut rng).unwrap()),
+        ]);
+        Checkpoint::save(&dir, &net).unwrap();
+        let ck = Checkpoint::load(&dir).unwrap();
+        assert_eq!(ck.info.input_dim, geom.input_dim());
+        assert_eq!(ck.info.output_dim, 8);
+        // every family's tensors land under their tree paths
+        let weights = Manifest::load(&dir).unwrap().load_weights(GROUP).unwrap();
+        assert!(weights.contains_key("model.0.w"));
+        assert!(weights.contains_key("model.2.core0"));
+        assert!(weights.contains_key("model.3.block1.g"));
+        let mut rebuilt = ck.build().unwrap();
+        let x = Tensor::randn(&[2, geom.input_dim()], 1.0, &mut Rng::new(12));
         let want = net.forward(&x, false).unwrap();
         let got = rebuilt.forward(&x, false).unwrap();
         assert_eq!(want.data(), got.data());

@@ -1,0 +1,215 @@
+//! im2col / col2im lowering for convolutions (Garipov et al. 2016, §3:
+//! a conv is a GEMM over patch rows once the input is unrolled).
+//!
+//! Layout conventions (row-major everywhere, matching the rest of the
+//! tensor module):
+//!   * an image batch is `(B, C*H*W)` with channel-major samples, i.e.
+//!     sample index `c*(H*W) + y*W + x`;
+//!   * the unrolled patch matrix is `(B*Ho*Wo, C*kh*kw)` with row index
+//!     `(b*Ho + oy)*Wo + ox` and column index `(c*kh + u)*kw + v`.
+//!
+//! With that column order, a conv kernel `(c_out, c_in, kh, kw)` flattens
+//! row-major into a `(c_out, c_in*kh*kw)` matrix whose columns line up
+//! with the patch columns — the conv is then `cols · Wᵀ`, riding the same
+//! `Gemm`/SIMD kernels as every dense layer.
+
+use crate::error::{shape_err, Result};
+use crate::tensor::Tensor;
+
+/// Output spatial extent of a 1-D convolution: `(n + 2*pad - k)/stride + 1`.
+pub fn conv_out_dim(n: usize, k: usize, stride: usize, pad: usize) -> Result<usize> {
+    if k == 0 || stride == 0 {
+        return shape_err(format!("conv_out_dim: zero kernel ({k}) or stride ({stride})"));
+    }
+    if n + 2 * pad < k {
+        return shape_err(format!(
+            "conv_out_dim: kernel {k} larger than padded input {n}+2*{pad}"
+        ));
+    }
+    Ok((n + 2 * pad - k) / stride + 1)
+}
+
+/// Unroll `x (B, C*H*W)` into the patch matrix `(B*Ho*Wo, C*kh*kw)`.
+/// Out-of-bounds taps (from zero padding) contribute zeros.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &Tensor,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<Tensor> {
+    if x.ndim() != 2 || x.shape()[1] != c * h * w {
+        return shape_err(format!(
+            "im2col: want (B, {}), got {:?}",
+            c * h * w,
+            x.shape()
+        ));
+    }
+    let b = x.shape()[0];
+    let ho = conv_out_dim(h, kh, stride, pad)?;
+    let wo = conv_out_dim(w, kw, stride, pad)?;
+    let patch = c * kh * kw;
+    let mut out = vec![0.0f32; b * ho * wo * patch];
+    let xs = x.data();
+    for bi in 0..b {
+        let sample = &xs[bi * c * h * w..(bi + 1) * c * h * w];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((bi * ho + oy) * wo + ox) * patch;
+                for ci in 0..c {
+                    let chan = &sample[ci * h * w..(ci + 1) * h * w];
+                    for u in 0..kh {
+                        let iy = (oy * stride + u) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue; // padding row: stays zero
+                        }
+                        let src = iy as usize * w;
+                        let dst = row + (ci * kh + u) * kw;
+                        for v in 0..kw {
+                            let ix = (ox * stride + v) as isize - pad as isize;
+                            if ix >= 0 && ix < w as isize {
+                                out[dst + v] = chan[src + ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[b * ho * wo, patch], out)
+}
+
+/// Adjoint of [`im2col`]: scatter-add the patch-matrix gradient
+/// `cols (B*Ho*Wo, C*kh*kw)` back onto the image layout `(B, C*H*W)`.
+/// Taps that fell in the zero padding are discarded.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im(
+    cols: &Tensor,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<Tensor> {
+    let ho = conv_out_dim(h, kh, stride, pad)?;
+    let wo = conv_out_dim(w, kw, stride, pad)?;
+    let patch = c * kh * kw;
+    if cols.ndim() != 2 || cols.shape() != [b * ho * wo, patch] {
+        return shape_err(format!(
+            "col2im: want ({}, {}), got {:?}",
+            b * ho * wo,
+            patch,
+            cols.shape()
+        ));
+    }
+    let mut out = vec![0.0f32; b * c * h * w];
+    let cs = cols.data();
+    for bi in 0..b {
+        let sample = &mut out[bi * c * h * w..(bi + 1) * c * h * w];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((bi * ho + oy) * wo + ox) * patch;
+                for ci in 0..c {
+                    let chan = &mut sample[ci * h * w..(ci + 1) * h * w];
+                    for u in 0..kh {
+                        let iy = (oy * stride + u) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let dst = iy as usize * w;
+                        let src = row + (ci * kh + u) * kw;
+                        for v in 0..kw {
+                            let ix = (ox * stride + v) as isize - pad as isize;
+                            if ix >= 0 && ix < w as isize {
+                                chan[dst + ix as usize] += cs[src + v];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[b, c * h * w], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn out_dim_formula() {
+        assert_eq!(conv_out_dim(32, 3, 2, 1).unwrap(), 16);
+        assert_eq!(conv_out_dim(5, 3, 1, 0).unwrap(), 3);
+        assert_eq!(conv_out_dim(4, 1, 1, 0).unwrap(), 4);
+        assert!(conv_out_dim(2, 5, 1, 0).is_err());
+        assert!(conv_out_dim(4, 3, 0, 0).is_err());
+    }
+
+    #[test]
+    fn identity_kernel_reproduces_input() {
+        // 1x1 kernel, stride 1, no padding: im2col is the identity on
+        // each sample up to a (spatial, channel) transpose of the layout
+        let mut rng = Rng::new(3);
+        let (c, h, w) = (2, 3, 4);
+        let x = Tensor::randn(&[2, c * h * w], 1.0, &mut rng);
+        let cols = im2col(&x, c, h, w, 1, 1, 1, 0).unwrap();
+        assert_eq!(cols.shape(), [2 * h * w, c]);
+        for bi in 0..2 {
+            for y in 0..h {
+                for xx in 0..w {
+                    for ci in 0..c {
+                        assert_eq!(
+                            cols.at(&[(bi * h + y) * w + xx, ci]),
+                            x.at(&[bi, ci * h * w + y * w + xx])
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padding_taps_are_zero() {
+        let x = Tensor::filled(&[1, 4], 1.0); // 1 channel, 2x2, all ones
+        let cols = im2col(&x, 1, 2, 2, 3, 3, 1, 1).unwrap();
+        assert_eq!(cols.shape(), [4, 9]);
+        // top-left output: only taps (1,1),(1,2),(2,1),(2,2) land in-bounds
+        let r = cols.row(0);
+        let want = [0.0, 0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0];
+        assert_eq!(r, want);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y — the defining
+        // property the conv backward pass relies on
+        let mut rng = Rng::new(7);
+        let (b, c, h, w, kh, kw, stride, pad) = (2, 3, 5, 4, 3, 2, 2, 1);
+        let x = Tensor::randn(&[b, c * h * w], 1.0, &mut rng);
+        let cols = im2col(&x, c, h, w, kh, kw, stride, pad).unwrap();
+        let y = Tensor::randn(cols.shape(), 1.0, &mut rng);
+        let back = col2im(&y, b, c, h, w, kh, kw, stride, pad).unwrap();
+        let lhs = cols.dot(&y).unwrap() as f64;
+        let rhs = x.dot(&back).unwrap() as f64;
+        assert!(
+            (lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()),
+            "adjoint identity violated: {lhs} vs {rhs}"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let x = Tensor::zeros(&[2, 10]);
+        assert!(im2col(&x, 1, 3, 3, 2, 2, 1, 0).is_err()); // 10 != 9
+        let cols = Tensor::zeros(&[3, 4]);
+        assert!(col2im(&cols, 1, 1, 3, 3, 2, 2, 1, 0).is_err());
+    }
+}

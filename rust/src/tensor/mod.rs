@@ -7,11 +7,13 @@
 //! enough to reason about and optimize.
 
 mod dense;
+mod im2col;
 mod matmul;
 mod reshape;
 pub mod simd;
 
 pub use dense::Tensor;
+pub use im2col::{col2im, conv_out_dim, im2col};
 pub use matmul::{matmul, matmul_at, matmul_bt, matvec, Gemm};
 pub use reshape::{linear_index, multi_index, strides_of};
 pub use simd::{kernels, simd_name, Kernels};

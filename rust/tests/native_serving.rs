@@ -9,6 +9,7 @@ use std::time::Duration;
 use tensornet::coordinator::{
     BatchPolicy, ModelRegistry, ModelSpec, NativeExecutor, Server, ServerConfig,
 };
+use tensornet::nn::{mnist_tt_convnet, BtLinear, Layer};
 use tensornet::tensor::Tensor;
 use tensornet::tt::{TtMatrix, TtShape};
 use tensornet::util::rng::Rng;
@@ -121,7 +122,7 @@ fn unknown_model_errors_and_server_stays_healthy() {
 }
 
 #[test]
-fn standard_registry_serves_all_three_models() {
+fn standard_registry_serves_all_five_models() {
     let registry = ModelRegistry::standard();
     let cfg = ServerConfig {
         policy: BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) },
@@ -131,12 +132,69 @@ fn standard_registry_serves_all_three_models() {
     let server =
         Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap();
     let mut rng = Rng::new(9);
-    for (model, out_dim) in [("tt_layer", 1024usize), ("fc_mnist", 1024), ("mnist_net", 10)] {
+    for (model, out_dim) in [
+        ("tt_layer", 1024usize),
+        ("fc_mnist", 1024),
+        ("mnist_net", 10),
+        ("conv_mnist", 10),
+        ("bt_layer", 1024),
+    ] {
         for _ in 0..3 {
             let x: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
             let resp = server.infer(model, x).unwrap();
             assert_eq!(resp.output.len(), out_dim, "{model}");
             assert!(resp.output.iter().all(|v| v.is_finite()), "{model}");
+        }
+    }
+    assert_eq!(server.stats().errors.get(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn served_conv_and_bt_outputs_bitwise_match_in_process_builds() {
+    // the registry's seeds are public contract: rebuilding conv_mnist and
+    // bt_layer in-process from the same seeds and driving the same rows
+    // through the batcher -> pool -> executor spine must agree bitwise
+    // (every layer's forward is row-independent, so batch assembly under
+    // concurrent load cannot perturb per-row results)
+    let registry = ModelRegistry::standard();
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(5) },
+        executor_threads: 2,
+        ..Default::default()
+    };
+    let server =
+        Server::start(cfg, move || Ok(NativeExecutor::new(registry.clone()))).unwrap();
+    let mut conv = mnist_tt_convnet(4, &mut Rng::new(0x7e50_0004)).unwrap();
+    let mut bt = BtLinear::new(1024, 1024, 4, 8, &mut Rng::new(0x7e50_0005)).unwrap();
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Rng::new(7000 + c);
+                for i in 0..10 {
+                    let x: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
+                    let model = if i % 2 == 0 { "conv_mnist" } else { "bt_layer" };
+                    let resp = server.infer(model, x).unwrap();
+                    let want = if i % 2 == 0 { 10 } else { 1024 };
+                    assert_eq!(resp.output.len(), want, "client {c} request {i} ({model})");
+                }
+            });
+        }
+    });
+    // deterministic single-row oracle sweep against the same live server
+    let mut rng = Rng::new(0xC0_0F);
+    for i in 0..6 {
+        let x: Vec<f32> = (0..1024).map(|_| rng.normal_f32(1.0)).collect();
+        let xt = Tensor::from_vec(&[1, 1024], x.clone()).unwrap();
+        if i % 2 == 0 {
+            let want = conv.forward(&xt, false).unwrap();
+            let resp = server.infer("conv_mnist", x).unwrap();
+            assert_eq!(resp.output, want.data(), "conv_mnist row {i} not bitwise-equal");
+        } else {
+            let want = bt.forward(&xt, false).unwrap();
+            let resp = server.infer("bt_layer", x).unwrap();
+            assert_eq!(resp.output, want.data(), "bt_layer row {i} not bitwise-equal");
         }
     }
     assert_eq!(server.stats().errors.get(), 0);

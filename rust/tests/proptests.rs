@@ -5,7 +5,7 @@
 use tensornet::coordinator::wire::{ErrCode, Frame, FrameDecoder, ModelInfo, ModelStatsEntry};
 use tensornet::coordinator::{choose_variant, BatchAssembler, BatchPolicy};
 use tensornet::linalg::{qr_mat, svd_mat, Mat};
-use tensornet::nn::{Layer, LayerState, TtLinear};
+use tensornet::nn::{BtLinear, ConvGeom, Layer, LayerState, TtConv, TtLinear};
 use tensornet::runtime::Checkpoint;
 use tensornet::tensor::simd::{detected_kernels, scalar_kernels};
 use tensornet::tensor::{matmul, matmul_at, matmul_bt, Tensor};
@@ -257,6 +257,172 @@ fn prop_checkpoint_roundtrip_bitwise_for_random_tt_shapes() {
         Ok(())
     });
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Random but always-valid conv geometry: kernel never exceeds the
+/// (unpadded) input, so `conv_out_dim` accepts every draw.
+fn random_conv_geom(rng: &mut Rng) -> ConvGeom {
+    let h = gen::int(rng, 3, 6);
+    let w = gen::int(rng, 3, 6);
+    ConvGeom::new(
+        gen::int(rng, 1, 3),       // c_in
+        h,
+        w,
+        gen::int(rng, 1, 4),       // c_out
+        gen::int(rng, 1, h.min(3)), // kh
+        gen::int(rng, 1, w.min(3)), // kw
+        gen::int(rng, 1, 2),       // stride
+        gen::int(rng, 0, 1),       // pad
+    )
+    .unwrap()
+}
+
+fn bitwise_eq(a: &Tensor, b: &Tensor) -> bool {
+    a.shape() == b.shape() && a.data() == b.data()
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_bitwise_for_random_tt_conv_states() {
+    // the conv counterpart of the TtLinear roundtrip above: geometry,
+    // TT shape, every core and the bias must survive save -> load
+    // bitwise for arbitrary valid geometries and ranks
+    let dir = std::env::temp_dir()
+        .join(format!("tensornet_prop_ckpt_ttconv_{}", std::process::id()));
+    check(cfg(25), "ckpt-ttconv-roundtrip", |rng| {
+        let geom = random_conv_geom(rng);
+        let rank = gen::int(rng, 1, 3);
+        let layer = TtConv::new(geom, rank, rng).map_err(|e| e.to_string())?;
+        Checkpoint::save(&dir, &layer).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&dir).map_err(|e| e.to_string())?;
+        match (&back.state, &layer.export_state().map_err(|e| e.to_string())?) {
+            (
+                LayerState::TtConv { geom: g2, shape: s2, cores: c2, bias: b2 },
+                LayerState::TtConv { geom: g1, shape: s1, cores: c1, bias: b1 },
+            ) => {
+                if g1 != g2 {
+                    return Err(format!("geometry changed: ({g1}) -> ({g2})"));
+                }
+                if s1 != s2 {
+                    return Err(format!("tt shape changed: {s1} -> {s2}"));
+                }
+                for (k, (a, b)) in c1.iter().zip(c2).enumerate() {
+                    if !bitwise_eq(a, b) {
+                        return Err(format!("core {k} not bitwise-identical"));
+                    }
+                }
+                if b1.data() != b2.data() {
+                    return Err("bias not bitwise-identical".into());
+                }
+            }
+            _ => return Err("state kind changed across the roundtrip".into()),
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_bitwise_for_random_bt_states() {
+    // every block factor (A, G, B) and the bias must survive save ->
+    // load bitwise for arbitrary widths, block counts and ranks
+    let dir = std::env::temp_dir()
+        .join(format!("tensornet_prop_ckpt_bt_{}", std::process::id()));
+    check(cfg(25), "ckpt-bt-roundtrip", |rng| {
+        let n_out = gen::int(rng, 1, 10);
+        let n_in = gen::int(rng, 1, 10);
+        let blocks = gen::int(rng, 1, 3);
+        let rank = gen::int(rng, 1, 3);
+        let layer = BtLinear::new(n_out, n_in, blocks, rank, rng).map_err(|e| e.to_string())?;
+        Checkpoint::save(&dir, &layer).map_err(|e| e.to_string())?;
+        let back = Checkpoint::load(&dir).map_err(|e| e.to_string())?;
+        match (&back.state, &layer.export_state().map_err(|e| e.to_string())?) {
+            (
+                LayerState::BtLinear { a: a2, g: g2, bt: t2, bias: b2 },
+                LayerState::BtLinear { a: a1, g: g1, bt: t1, bias: b1 },
+            ) => {
+                if a1.len() != a2.len() {
+                    return Err(format!("block count changed: {} -> {}", a1.len(), a2.len()));
+                }
+                for k in 0..a1.len() {
+                    if !bitwise_eq(&a1[k], &a2[k])
+                        || !bitwise_eq(&g1[k], &g2[k])
+                        || !bitwise_eq(&t1[k], &t2[k])
+                    {
+                        return Err(format!("block {k} factors not bitwise-identical"));
+                    }
+                }
+                if b1.data() != b2.data() {
+                    return Err("bias not bitwise-identical".into());
+                }
+            }
+            _ => return Err("state kind changed across the roundtrip".into()),
+        }
+        Ok(())
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_conv_and_bt_imports_hard_reject_shape_mismatches() {
+    // a loaded state whose ranks / block counts / geometry disagree with
+    // the receiving layer must be rejected with an error AND leave the
+    // layer's parameters bitwise-untouched — never a partial import
+    check(cfg(25), "import-mismatch", |rng| {
+        // TT-conv: same geometry, different uniform rank
+        let geom = random_conv_geom(rng);
+        let rank = gen::int(rng, 1, 3);
+        let mut ttc = TtConv::new(geom, rank, rng).map_err(|e| e.to_string())?;
+        let other = TtConv::new(geom, rank + 1, rng)
+            .map_err(|e| e.to_string())?
+            .export_state()
+            .map_err(|e| e.to_string())?;
+        let before = ttc.export_state().map_err(|e| e.to_string())?;
+        if ttc.import_state(other).is_ok() {
+            return Err(format!("tt-conv accepted rank {} into rank {rank}", rank + 1));
+        }
+        // geometry mismatch (stride flipped) is also a hard reject
+        let mut geom2 = geom;
+        geom2.stride = if geom.stride == 1 { 2 } else { 1 };
+        let other_geom = TtConv::new(geom2, rank, rng)
+            .map_err(|e| e.to_string())?
+            .export_state()
+            .map_err(|e| e.to_string())?;
+        if ttc.import_state(other_geom).is_ok() {
+            return Err("tt-conv accepted a state with different geometry".into());
+        }
+        let after = ttc.export_state().map_err(|e| e.to_string())?;
+        match (&before, &after) {
+            (
+                LayerState::TtConv { cores: c1, bias: b1, .. },
+                LayerState::TtConv { cores: c2, bias: b2, .. },
+            ) => {
+                if c1.iter().zip(c2).any(|(a, b)| !bitwise_eq(a, b)) || b1.data() != b2.data() {
+                    return Err("rejected import mutated the tt-conv layer".into());
+                }
+            }
+            _ => return Err("tt-conv state kind drifted".into()),
+        }
+
+        // BT: rank and block-count mismatches
+        let (n_out, n_in) = (gen::int(rng, 2, 8), gen::int(rng, 2, 8));
+        let (blocks, brank) = (gen::int(rng, 1, 3), gen::int(rng, 1, 3));
+        let mut bt = BtLinear::new(n_out, n_in, blocks, brank, rng).map_err(|e| e.to_string())?;
+        let wrong_rank = BtLinear::new(n_out, n_in, blocks, brank + 1, rng)
+            .map_err(|e| e.to_string())?
+            .export_state()
+            .map_err(|e| e.to_string())?;
+        if bt.import_state(wrong_rank).is_ok() {
+            return Err(format!("bt accepted rank {} into rank {brank}", brank + 1));
+        }
+        let wrong_blocks = BtLinear::new(n_out, n_in, blocks + 1, brank, rng)
+            .map_err(|e| e.to_string())?
+            .export_state()
+            .map_err(|e| e.to_string())?;
+        if bt.import_state(wrong_blocks).is_ok() {
+            return Err(format!("bt accepted {} blocks into {blocks}", blocks + 1));
+        }
+        Ok(())
+    });
 }
 
 #[test]
